@@ -1,0 +1,30 @@
+//! Schedule autotuning on the real YOLOv7-tiny workload (Figure 5 in
+//! miniature): per-layer default-vs-tuned cycles on the paper's
+//! accelerator configuration.
+
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::passes::replace_activations;
+use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+fn main() {
+    let size: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(320);
+    let mut g = yolov7_tiny(size, ModelVariant::Base, 80);
+    replace_activations(&mut g);
+    let cfg = GemminiConfig::ours_zcu102();
+    println!("tuning YOLOv7-tiny @{size} on Gemmini 32x32 @150 MHz…");
+    let t = tune_graph(&cfg, &g, 4);
+    println!("{:<14} {:>12} {:>12} {:>8}", "layer", "default", "tuned", "speedup");
+    for l in &t.layers {
+        println!(
+            "{:<14} {:>12} {:>12} {:>7.2}x",
+            l.label, l.result.default_cycles, l.result.best_cycles, l.result.speedup()
+        );
+    }
+    println!(
+        "\nmean conv improvement: {:.1}%  |  layers improved: {:.0}%  |  model latency {:.2} ms",
+        t.conv_improvement() * 100.0,
+        t.fraction_improved() * 100.0,
+        t.latency_s(&cfg, true) * 1e3
+    );
+}

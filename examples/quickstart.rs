@@ -1,0 +1,37 @@
+//! Quickstart: build the detector, run one scene through the float and
+//! quantized graphs, print detections vs ground truth.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use gemmini_edge::dataset::detector::{build_detector, default_weights, NUM_CLASSES};
+use gemmini_edge::dataset::scenes::{validation_set, SceneConfig};
+use gemmini_edge::ir::Interpreter;
+use gemmini_edge::passes::{quantize_graph, QuantizeOptions};
+use gemmini_edge::postproc::nms::{decode_and_nms, NmsConfig};
+
+fn main() {
+    let weights = default_weights();
+    let g = build_detector(96, &weights);
+    println!("graph `{}`: {} nodes, {:.1}k params, {:.3} GOP",
+        g.name, g.nodes.len(), g.param_count() as f64 / 1e3, g.gops());
+
+    let scenes = validation_set(&SceneConfig { size: 96, ..Default::default() }, 3, 2024);
+    let calib = vec![vec![scenes[0].image.clone()]];
+    let q = quantize_graph(&g, &calib, &QuantizeOptions { fp16_scale: true, fixed_point_requant: true });
+
+    let nms = NmsConfig::default();
+    for (i, sc) in scenes.iter().enumerate() {
+        let float_out = Interpreter::new(&g).run(&[sc.image.clone()]);
+        let int8_out = Interpreter::new(&q).run(&[sc.image.clone()]);
+        let fd = decode_and_nms(&float_out[0].f, NUM_CLASSES, &nms);
+        let qd = decode_and_nms(&int8_out[0].f, NUM_CLASSES, &nms);
+        println!("scene {i}: {} objects | float {} dets | int8 {} dets",
+            sc.truths.len(), fd.len(), qd.len());
+        for d in qd.iter().take(4) {
+            println!("  int8 det: class {} score {:.2} at ({:.2},{:.2}) size {:.2}",
+                d.class, d.score, d.bbox.cx, d.bbox.cy, d.bbox.w);
+        }
+    }
+}

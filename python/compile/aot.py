@@ -1,0 +1,121 @@
+"""AOT compile path: lower the quantized TinyBlobNet main part to HLO text.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+The lowered function is ``forward_int8`` with the trained + calibrated +
+quantized weights **baked in as constants**: the Rust runtime feeds one
+f32 image and gets the dequantized head map back. Python never runs at
+request time. The float tail (box decode + NMS) lives in Rust
+(``postproc``), matching the paper's PS/PL partitioning.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def load_params(path):
+    with open(path) as f:
+        data = json.load(f)
+    params = []
+    for layer in data["layers"]:
+        w = jnp.array(np.array(layer["w"], np.float32).reshape(layer["shape"]))
+        b = jnp.array(np.array(layer["b"], np.float32))
+        params.append((w, b))
+    return params
+
+
+def build_quantized(params, seed=123, calib_scenes=6):
+    rng = np.random.default_rng(seed)
+    images = [jnp.array(train.render_scene(rng)[0])[None] for _ in range(calib_scenes)]
+    ranges = model.calibrate(params, images)
+    qp = model.quantize_params(params, ranges)
+    return qp, ranges
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--weights", default="../artifacts/detector_weights.json")
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--size", type=int, default=96)
+    args = ap.parse_args()
+
+    if not os.path.exists(args.weights):
+        raise SystemExit(
+            f"{args.weights} missing — run `python -m compile.train` first "
+            "(the Makefile artifacts target does this)"
+        )
+    params = load_params(args.weights)
+    qp, ranges = build_quantized(params)
+
+    spec = jax.ShapeDtypeStruct((1, args.size, args.size, 3), jnp.float32)
+    # Weights enter as *runtime parameters* (quantized integer values
+    # carried in f32, converted to int8/int32 in-graph): the xla_extension
+    # 0.5.1 HLO text parser zeroes int8/int32 literal constants, and jax
+    # constant-folds any convert-of-constant back to an int8 literal — so
+    # constants cannot carry the weights (bisection log: EXPERIMENTS.md
+    # §Artifact-bringup). The Rust executor feeds them once per load.
+    wspecs = []
+    wvalues = []
+    for layer in qp["layers"]:
+        wq = np.asarray(layer["wq"], np.float32)
+        bq = np.asarray(layer["bq"], np.float32)
+        wspecs.append(jax.ShapeDtypeStruct(wq.shape, jnp.float32))
+        wspecs.append(jax.ShapeDtypeStruct(bq.shape, jnp.float32))
+        wvalues.append(wq)
+        wvalues.append(bq)
+
+    def fn(x, *flat_w):
+        qp_rt = {"input_scale": qp["input_scale"], "layers": []}
+        for i, layer in enumerate(qp["layers"]):
+            qp_rt["layers"].append(
+                {
+                    "wq": flat_w[2 * i],
+                    "bq": flat_w[2 * i + 1],
+                    "requant": layer["requant"],
+                    "out_scale": layer["out_scale"],
+                    "q6": layer["q6"],
+                }
+            )
+        return (model.forward_int8(qp_rt, x, flat_grid=True),)
+
+    lowered = jax.jit(fn).lower(spec, *wspecs)
+    text = to_hlo_text(lowered)
+    with open(args.out, "w") as f:
+        f.write(text)
+    meta = {
+        "input": [1, args.size, args.size, 3],
+        "output": [1, args.size // 8, args.size // 8, model.HEAD_CHANNELS],
+        "num_anchors": model.NUM_ANCHORS,
+        "num_classes": model.NUM_CLASSES,
+        "calibration_ranges": [float(r) for r in ranges],
+        "param_shapes": [list(w.shape) for w in wvalues],
+    }
+    with open(args.out.replace(".hlo.txt", ".meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    params = {"params": [[float(v) for v in w.reshape(-1)] for w in wvalues]}
+    with open(args.out.replace(".hlo.txt", ".params.json"), "w") as f:
+        json.dump(params, f)
+    print(f"wrote {len(text)} chars to {args.out} (+ params)")
+
+
+if __name__ == "__main__":
+    main()

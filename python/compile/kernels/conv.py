@@ -1,0 +1,53 @@
+"""Quantized conv = im2col + the weight-stationary GEMM kernel.
+
+This is exactly how the paper's TVM integration lowers convolutions to
+Gemmini RISC instructions: gather patches, tiled matmul, requantize on the
+way out (Section IV-C). The im2col gather happens in jnp (it lowers to
+cheap XLA slicing/reshapes and fuses); the arithmetic hot-spot is the
+Pallas kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .gemm_ws import gemm_ws
+
+
+def im2col(x, kernel: int, stride: int):
+    """NHWC int8 [1,H,W,C] -> int8 [OH*OW, k*k*C] patch matrix (SAME pad)."""
+    n, h, w, c = x.shape
+    assert n == 1
+    pad = kernel // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kernel) // stride + 1
+    ow = (w + 2 * pad - kernel) // stride + 1
+    cols = []
+    for ky in range(kernel):
+        for kx in range(kernel):
+            sl = jax.lax.slice(
+                xp,
+                (0, ky, kx, 0),
+                (1, ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(sl.reshape(oh * ow, c))
+    return jnp.concatenate(cols, axis=1), oh, ow
+
+
+def conv2d_int8(x, w, bias_i32, *, stride: int, scale: float, act: str, q6: int, flat_grid: bool = False):
+    """Quantized NHWC conv.
+
+    x: int8[1,H,W,C]; w: int8[oc,kh,kw,ic] (IR layout); bias int32[oc].
+    Returns int8[1,OH,OW,oc].
+    """
+    oc, kh, kw, ic = w.shape
+    # Accept f32-typed quantized weights and convert in-graph: int8/int32
+    # *literal constants* are zeroed by the xla_extension 0.5.1 HLO text
+    # parser the Rust runtime uses (found by bisection, see EXPERIMENTS.md
+    # §Artifact-bringup); f32 constants + a convert op round-trip fine.
+    w = w.astype(jnp.int8)
+    bias_i32 = bias_i32.astype(jnp.int32)
+    a, oh, ow = im2col(x, kh, stride)                      # (M, K)
+    b = jnp.transpose(w.reshape(oc, kh * kw * ic))         # (K, N)
+    out = gemm_ws(a, b, bias_i32, scale=scale, act=act, q6=q6, flat_grid=flat_grid)
+    return out.reshape(1, oh, ow, oc)

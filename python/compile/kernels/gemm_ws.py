@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: weight-stationary int8 tiled GEMM with fused
+requantization + ReLU6 — the Gemmini compute hot-spot re-thought for the
+TPU programming model (DESIGN.md §Hardware-Adaptation).
+
+Mapping from the paper's FPGA design:
+
+- Gemmini's ``dim×dim`` weight-stationary systolic array → the MXU-shaped
+  ``(TM, TN)`` output tile with int8 operands and int32 accumulation
+  (``preferred_element_type=jnp.int32``), fed at full width — the same
+  "keep the multiplier busy with narrow ints" idea as DSP packing.
+- The Load controller's scratchpad double-buffering (mvin ahead of
+  compute) → the Pallas grid pipeline: BlockSpec index maps stream
+  ``(TM, K)`` A-slabs while the ``(K, TN)`` B-slab stays resident across
+  the M-dimension of the grid (grid order ``(n, m)`` makes B the invariant
+  operand — weight-stationary).
+- Gemmini's mvout scale+activation path → the fused ``* scale`` +
+  ``clip(0, q6)`` epilogue.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; correctness is validated against ``ref.py`` by pytest and
+the real-TPU performance story is argued from VMEM footprint + MXU
+utilization in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes mirror the paper's 32×32 PE array (Table III "Ours").
+TM = 32
+TN = 32
+
+
+def _gemm_kernel(a_ref, b_ref, bias_ref, o_ref, *, scale: float, act: str, q6: int):
+    """One (TM, TN) output tile: full-K int8 dot + requantize epilogue."""
+    a = a_ref[...].astype(jnp.int32)  # (TM, K)
+    b = b_ref[...].astype(jnp.int32)  # (K, TN)
+    acc = jax.lax.dot_general(
+        a,
+        b,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc = acc + bias_ref[...].astype(jnp.int32)  # (1, TN) broadcast
+    scaled = jnp.round(acc.astype(jnp.float32) * scale).astype(jnp.int32)
+    if act == "relu6":
+        scaled = jnp.clip(scaled, 0, q6)
+    elif act == "relu":
+        scaled = jnp.clip(scaled, 0, 127)
+    else:
+        scaled = jnp.clip(scaled, -128, 127)
+    o_ref[...] = scaled.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "act", "q6", "flat_grid"))
+def gemm_ws(a, b, bias, *, scale: float, act: str = "none", q6: int = 127, flat_grid: bool = False):
+    """Quantized GEMM: ``C = requant(A @ B + bias)``.
+
+    a: int8[M, K], b: int8[K, N], bias: int32[N] -> int8[M, N].
+    M and N are padded to the tile grid; K is kept whole per tile (the
+    accumulator never leaves VMEM, like Gemmini's on-chip accumulator).
+
+    ``flat_grid=True`` unrolls the tile grid at the JAX level (one
+    single-block pallas_call per tile, assembled with concatenate) instead
+    of using a Pallas grid. The computation is identical; the AOT path
+    needs it because xla_extension 0.5.1 (the runtime the Rust side links)
+    miscompiles the while-loop + dynamic-update-slice form that interpret
+    mode lowers multi-step grids to (found by bisection — see
+    EXPERIMENTS.md §Artifact-bringup).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+    mp = -(-m // TM) * TM
+    np_ = -(-n // TN) * TN
+    # jnp.pad (an XLA Pad op) rather than .at[].set (a Scatter): the
+    # xla_extension 0.5.1 runtime the Rust side links against miscompiles
+    # the scatter form of this padding (verified by bisection; see
+    # EXPERIMENTS.md §Artifact-bringup).
+    a_pad = jnp.pad(a, ((0, mp - m), (0, 0)))
+    b_pad = jnp.pad(b, ((0, 0), (0, np_ - n)))
+    bias_pad = jnp.pad(bias, (0, np_ - n)).reshape(1, np_)
+
+    kernel = functools.partial(_gemm_kernel, scale=scale, act=act, q6=q6)
+    if flat_grid:
+        rows = []
+        for mi in range(mp // TM):
+            cols = []
+            for ni in range(np_ // TN):
+                tile = pl.pallas_call(
+                    kernel,
+                    out_shape=jax.ShapeDtypeStruct((TM, TN), jnp.int8),
+                    interpret=True,
+                )(
+                    jax.lax.slice(a_pad, (mi * TM, 0), ((mi + 1) * TM, k)),
+                    jax.lax.slice(b_pad, (0, ni * TN), (k, (ni + 1) * TN)),
+                    jax.lax.slice(bias_pad, (0, ni * TN), (1, (ni + 1) * TN)),
+                )
+                cols.append(tile)
+            rows.append(cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1))
+        out = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
+        return out[:m, :n]
+    out = pl.pallas_call(
+        kernel,
+        grid=(np_ // TN, mp // TM),  # n outer, m inner: B stays resident (WS)
+        in_specs=[
+            pl.BlockSpec((TM, k), lambda n_, m_: (m_, 0)),
+            pl.BlockSpec((k, TN), lambda n_, m_: (0, n_)),
+            pl.BlockSpec((1, TN), lambda n_, m_: (0, n_)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda n_, m_: (m_, n_)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int8),
+        interpret=True,
+    )(a_pad, b_pad, bias_pad)
+    return out[:m, :n]
+
+
+def vmem_bytes(k: int) -> int:
+    """VMEM footprint of one grid step (DESIGN.md §Perf): A slab + B slab +
+    bias + int32 accumulator + int8 out tile."""
+    return TM * k + k * TN + 4 * TN + 4 * TM * TN + TM * TN

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the pytest correctness
+anchor — every kernel change is validated against these)."""
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, bias, *, scale: float, act: str = "none", q6: int = 127):
+    """Reference int8 GEMM + requantize, no tiling tricks."""
+    acc = a.astype(jnp.int32) @ b.astype(jnp.int32) + bias.astype(jnp.int32)[None, :]
+    scaled = jnp.round(acc.astype(jnp.float32) * scale).astype(jnp.int32)
+    if act == "relu6":
+        scaled = jnp.clip(scaled, 0, q6)
+    elif act == "relu":
+        scaled = jnp.clip(scaled, 0, 127)
+    else:
+        scaled = jnp.clip(scaled, -128, 127)
+    return scaled.astype(jnp.int8)
+
+
+def conv_ref_f32(x, w, b, *, stride: int, act: str = "relu6"):
+    """Float NHWC conv reference (``w``: [oc, kh, kw, ic], SAME padding) —
+    the training-time forward and the oracle for the quantized conv."""
+    import jax
+
+    kh = w.shape[1]
+    pad = kh // 2
+    out = jax.lax.conv_general_dilated(
+        x,
+        jnp.transpose(w, (1, 2, 3, 0)),  # -> HWIO
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b[None, None, None, :]
+    if act == "relu6":
+        out = jnp.clip(out, 0.0, 6.0)
+    elif act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out

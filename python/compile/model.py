@@ -1,0 +1,132 @@
+"""L2: the TinyBlobNet detector in JAX.
+
+Two forwards over the same parameters:
+
+- ``forward_f32`` — float NHWC forward used by build-time training
+  (``train.py``) and as the numerics oracle;
+- ``forward_int8`` — the deployed quantized main part: per-tensor symmetric
+  int8 (the paper's TFLite choice, Section IV-B4), every conv running
+  through the L1 Pallas weight-stationary GEMM kernel. ``aot.py`` lowers
+  this function to the HLO artifact the Rust runtime executes — Python is
+  never on the request path.
+
+Architecture mirrors ``rust/src/dataset/detector.rs`` exactly:
+conv(16,5,s2) → conv(32,3,s2) → conv(32,3,s2) → head 1×1 to
+``A*(5+C) = 18`` channels; box decoding + NMS (the float tail) stay on the
+PS side (Rust), matching the paper's partitioning.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv import conv2d_int8
+from .kernels.ref import conv_ref_f32
+
+NUM_CLASSES = 4
+NUM_ANCHORS = 2
+LAYERS = [(16, 5, 2), (32, 3, 2), (32, 3, 2)]
+HEAD_CHANNELS = NUM_ANCHORS * (5 + NUM_CLASSES)
+
+
+def init_params(key, seed_scale=0.1):
+    """Random-init parameters: list of (w[oc,kh,kw,ic], b[oc])."""
+    params = []
+    ic = 3
+    for oc, k, _s in LAYERS:
+        key, k1 = jax.random.split(key)
+        w = jax.random.normal(k1, (oc, k, k, ic)) * seed_scale / (k * k * ic) ** 0.5 * 4
+        params.append((w, jnp.zeros((oc,))))
+        ic = oc
+    key, k1 = jax.random.split(key)
+    w = jax.random.normal(k1, (HEAD_CHANNELS, 1, 1, ic)) * 0.05
+    b = jnp.zeros((HEAD_CHANNELS,))
+    # negative objectness prior
+    b = b.at[4::5 + NUM_CLASSES].set(-3.0)
+    params.append((w, b))
+    return params
+
+
+def forward_f32(params, x):
+    """Float forward: x f32[1,S,S,3] -> raw head map f32[1,gh,gw,18]."""
+    h = x
+    for (w, b), (_oc, _k, s) in zip(params[:-1], LAYERS):
+        h = conv_ref_f32(h, w, b, stride=s, act="relu6")
+    w, b = params[-1]
+    return conv_ref_f32(h, w, b, stride=1, act="none")
+
+
+# ---------------- quantization (per-tensor symmetric) ----------------
+
+def _absmax_scale(v, qmax=127.0):
+    return jnp.maximum(jnp.max(jnp.abs(v)), 1e-6) / qmax
+
+
+def quantize_params(params, act_ranges):
+    """Quantize weights + fold activation scales.
+
+    ``act_ranges``: list of per-layer output absmax (from calibration),
+    index 0 = input absmax. Returns a dict with int8 weights, int32
+    biases and the requant scale per layer (Gemmini's mvout scale).
+    """
+    qp = {"layers": []}
+    in_scale = act_ranges[0] / 127.0
+    for i, (w, b) in enumerate(params):
+        w_scale = float(_absmax_scale(w))
+        wq = jnp.clip(jnp.round(w / w_scale), -127, 127).astype(jnp.int8)
+        acc_scale = in_scale * w_scale
+        bq = jnp.round(b / acc_scale).astype(jnp.int32)
+        out_scale = act_ranges[i + 1] / 127.0
+        qp["layers"].append(
+            {
+                "wq": wq,
+                "bq": bq,
+                "requant": float(acc_scale / out_scale),
+                "out_scale": float(out_scale),
+                "q6": int(max(1, min(127, round(6.0 / out_scale)))),
+            }
+        )
+        in_scale = out_scale
+    qp["input_scale"] = float(act_ranges[0] / 127.0)
+    return qp
+
+
+def calibrate(params, images):
+    """Run float forward over calibration images; collect absmax per
+    activation (input + each layer output)."""
+    ranges = [max(float(jnp.max(jnp.abs(img))) for img in images)]
+    n = len(params)
+    for li in range(n):
+        mx = 0.0
+        for img in images:
+            h = img
+            for i2 in range(li + 1):
+                w, b = params[i2]
+                s = LAYERS[i2][2] if i2 < len(LAYERS) else 1
+                act = "relu6" if i2 < n - 1 else "none"
+                h = conv_ref_f32(h, w, b, stride=s, act=act)
+            mx = max(mx, float(jnp.max(jnp.abs(h))))
+        ranges.append(max(mx, 1e-6))
+    return ranges
+
+
+def forward_int8(qp, x, flat_grid=False):
+    """Deployed main part: f32 image in, f32 (dequantized) head map out.
+    All convs run on the Pallas kernel in int8. ``flat_grid`` — see
+    ``kernels.gemm_ws`` (required for the AOT artifact)."""
+    in_scale = qp["input_scale"]
+    h = jnp.clip(jnp.round(x / in_scale), -128, 127).astype(jnp.int8)
+    n = len(qp["layers"])
+    for i, layer in enumerate(qp["layers"]):
+        s = LAYERS[i][2] if i < len(LAYERS) else 1
+        act = "relu6" if i < n - 1 else "none"
+        h = conv2d_int8(
+            h,
+            layer["wq"].astype(jnp.float32) if flat_grid else layer["wq"],
+            layer["bq"].astype(jnp.float32) if flat_grid else layer["bq"],
+            stride=s,
+            scale=layer["requant"],
+            act=act,
+            q6=layer["q6"],
+            flat_grid=flat_grid,
+        )
+    return h.astype(jnp.float32) * qp["layers"][-1]["out_scale"]

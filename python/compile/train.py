@@ -1,0 +1,199 @@
+"""Build-time training of TinyBlobNet on synthetic blob scenes.
+
+A few hundred Adam steps (hand-rolled — no optax in this environment) on
+procedurally generated scenes, matching `rust/src/dataset/scenes.rs`
+semantics (disc / square / diamond / ring over a noisy background).
+Exports `artifacts/detector_weights.json` — the weights the Rust IR
+experiments load — then `aot.py` bakes the quantized model into the HLO
+artifact.
+
+Loss: YOLO-style single-scale — BCE objectness per (cell, anchor) +
+smooth-L1 box regression + CE class loss on matched anchors. Decoding
+constants (anchor ladder 2.5·(a+1) grid cells) mirror `ir::interp`.
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+
+SIZE = 96
+GRID = SIZE // 8
+ANCHORS = np.array([2.5 * (a + 1) for a in range(model.NUM_ANCHORS)])  # grid cells
+PER = 5 + model.NUM_CLASSES
+
+
+def render_scene(rng: np.random.Generator):
+    """Port of rust `render_scene` (identical semantics, independent RNG)."""
+    s = SIZE
+    lum = np.clip(
+        rng.uniform(0.08, 0.18)
+        + rng.uniform(-0.1, 0.1) * np.linspace(0, 1, s)[None, :]
+        + rng.uniform(-0.1, 0.1) * np.linspace(0, 1, s)[:, None]
+        + rng.normal(0, 0.04, (s, s)),
+        0.0,
+        1.0,
+    ).astype(np.float32)
+    truths = []
+    for _ in range(rng.integers(1, 4)):
+        cls = int(rng.integers(0, 4))
+        r_frac = rng.uniform(0.04, 0.14)
+        r = r_frac * s
+        cx = rng.uniform(r_frac + 0.02, 0.98 - r_frac) * s
+        cy = rng.uniform(r_frac + 0.02, 0.98 - r_frac) * s
+        v = rng.uniform(0.55, 0.95)
+        yy, xx = np.mgrid[0:s, 0:s]
+        dx, dy = xx - cx, yy - cy
+        if cls == 0:
+            m = dx * dx + dy * dy <= r * r
+        elif cls == 1:
+            m = (np.abs(dx) <= r * 0.9) & (np.abs(dy) <= r * 0.9)
+        elif cls == 2:
+            m = np.abs(dx) + np.abs(dy) <= r * 1.1
+        else:
+            d2 = dx * dx + dy * dy
+            m = (d2 <= r * r) & (d2 >= (0.55 * r) ** 2)
+        lum[m] = v
+        truths.append((cx / s, cy / s, 2 * r / s, 2 * r / s, cls))
+    img = np.repeat(lum[:, :, None], 3, axis=2)
+    return img, truths
+
+
+def make_targets(truths):
+    """Assignment: responsible cell + closest anchor per ground truth."""
+    tobj = np.zeros((GRID, GRID, model.NUM_ANCHORS), np.float32)
+    tbox = np.zeros((GRID, GRID, model.NUM_ANCHORS, 4), np.float32)
+    tcls = np.zeros((GRID, GRID, model.NUM_ANCHORS), np.int32)
+    mask = np.zeros((GRID, GRID, model.NUM_ANCHORS), np.float32)
+    logit = lambda p: float(np.log(p / (1 - p)))
+    for cx, cy, w, h, cls in truths:
+        gx, gy = min(int(cx * GRID), GRID - 1), min(int(cy * GRID), GRID - 1)
+        # Anchor choice: the one whose representable range (0.25..1.25)·a
+        # covers the target best (sigmoid target closest to mid-range).
+        svals = w * GRID / ANCHORS - 0.25
+        a = int(np.argmin(np.abs(svals - 0.5)))
+        tobj[gy, gx, a] = 1.0
+        mask[gy, gx, a] = 1.0
+        tcls[gy, gx, a] = cls
+        fx, fy = cx * GRID - gx, cy * GRID - gy
+        sw = np.clip(w * GRID / ANCHORS[a] - 0.25, 0.02, 0.98)
+        sh = np.clip(h * GRID / ANCHORS[a] - 0.25, 0.02, 0.98)
+        tbox[gy, gx, a] = [
+            logit(np.clip(fx, 0.02, 0.98)),
+            logit(np.clip(fy, 0.02, 0.98)),
+            logit(sw),
+            logit(sh),
+        ]
+    return tobj, tbox, tcls, mask
+
+
+def batch(rng, n):
+    imgs, tobjs, tboxes, tclss, masks = [], [], [], [], []
+    for _ in range(n):
+        img, truths = render_scene(rng)
+        to, tb, tc, m = make_targets(truths)
+        imgs.append(img)
+        tobjs.append(to)
+        tboxes.append(tb)
+        tclss.append(tc)
+        masks.append(m)
+    return (
+        jnp.array(np.stack(imgs)),
+        jnp.array(np.stack(tobjs)),
+        jnp.array(np.stack(tboxes)),
+        jnp.array(np.stack(tclss)),
+        jnp.array(np.stack(masks)),
+    )
+
+
+def loss_fn(params, imgs, tobj, tbox, tcls, mask):
+    def single(img):
+        return model.forward_f32(params, img[None])[0]
+
+    raw = jax.vmap(single)(imgs)  # (B, G, G, 18)
+    b = raw.shape[0]
+    raw = raw.reshape(b, GRID, GRID, model.NUM_ANCHORS, PER)
+    pobj = raw[..., 4]
+    # BCE with logits (objectness), positives upweighted.
+    bce = jnp.maximum(pobj, 0) - pobj * tobj + jnp.log1p(jnp.exp(-jnp.abs(pobj)))
+    obj_loss = jnp.mean(bce * (1.0 + 9.0 * tobj))
+    # Box regression (smooth L1 on raw logits) on matched anchors.
+    diff = raw[..., :4] - tbox
+    sl1 = jnp.where(jnp.abs(diff) < 1, 0.5 * diff * diff, jnp.abs(diff) - 0.5)
+    box_loss = jnp.sum(sl1 * mask[..., None]) / (jnp.sum(mask) * 4 + 1e-6)
+    # Class BCE on matched anchors.
+    pcls = raw[..., 5:]
+    onehot = jax.nn.one_hot(tcls, model.NUM_CLASSES)
+    cbce = jnp.maximum(pcls, 0) - pcls * onehot + jnp.log1p(jnp.exp(-jnp.abs(pcls)))
+    cls_loss = jnp.sum(cbce * mask[..., None]) / (jnp.sum(mask) * model.NUM_CLASSES + 1e-6)
+    return obj_loss + 2.0 * box_loss + cls_loss
+
+
+def adam_init(params):
+    z = lambda p: [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in p]
+    return z(params), z(params)
+
+
+def train(steps=300, batch_size=8, lr=3e-3, seed=0, log_every=50):
+    rng = np.random.default_rng(seed)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    m_state, v_state = adam_init(params)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    history = []
+    for step in range(1, steps + 1):
+        imgs, tobj, tbox, tcls, mask = batch(rng, batch_size)
+        loss, grads = grad_fn(params, imgs, tobj, tbox, tcls, mask)
+        new_params, new_m, new_v = [], [], []
+        for (w, b), (gw, gb), (mw, mb), (vw, vb) in zip(params, grads, m_state, v_state):
+            upd = []
+            for p, g, m_, v_ in ((w, gw, mw, vw), (b, gb, mb, vb)):
+                m_ = b1 * m_ + (1 - b1) * g
+                v_ = b2 * v_ + (1 - b2) * g * g
+                mhat = m_ / (1 - b1**step)
+                vhat = v_ / (1 - b2**step)
+                upd.append((p - lr * mhat / (jnp.sqrt(vhat) + eps), m_, v_))
+            new_params.append((upd[0][0], upd[1][0]))
+            new_m.append((upd[0][1], upd[1][1]))
+            new_v.append((upd[0][2], upd[1][2]))
+        params, m_state, v_state = new_params, new_m, new_v
+        history.append(float(loss))
+        if step % log_every == 0 or step == 1:
+            print(f"step {step:4d} loss {float(loss):.4f}")
+    return params, history
+
+
+def export_weights(params, path):
+    layers = []
+    for w, b in params:
+        layers.append(
+            {
+                "shape": list(w.shape),
+                "w": [round(float(v), 6) for v in np.asarray(w).reshape(-1)],
+                "b": [round(float(v), 6) for v in np.asarray(b).reshape(-1)],
+            }
+        )
+    with open(path, "w") as f:
+        json.dump({"layers": layers}, f)
+    print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--out", default="../artifacts/detector_weights.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    params, history = train(steps=args.steps, seed=args.seed)
+    export_weights(params, args.out)
+    hist_path = args.out.rsplit(".json", 1)[0] + "_history.json"
+    with open(hist_path, "w") as f:
+        json.dump({"loss": history}, f)
+
+
+if __name__ == "__main__":
+    main()

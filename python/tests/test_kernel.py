@@ -1,0 +1,120 @@
+"""L1 correctness: Pallas weight-stationary GEMM vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, scales and activations; assert exact equality
+(int8 outputs — the kernel must be bit-faithful to the reference)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from compile.kernels.gemm_ws import gemm_ws, TM, TN, vmem_bytes
+from compile.kernels.ref import gemm_ref
+from compile.kernels.conv import conv2d_int8, im2col
+
+
+def rand_int8(rng, shape):
+    return jnp.array(rng.integers(-128, 128, shape, dtype=np.int64).astype(np.int8))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    n=st.integers(1, 70),
+    k=st.integers(1, 96),
+    scale=st.floats(1e-4, 1.0),
+    act=st.sampled_from(["none", "relu", "relu6"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_matches_ref(m, n, k, scale, act, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_int8(rng, (m, k))
+    b = rand_int8(rng, (k, n))
+    bias = jnp.array(rng.integers(-1000, 1000, (n,), dtype=np.int64).astype(np.int32))
+    got = gemm_ws(a, b, bias, scale=scale, act=act, q6=100)
+    want = gemm_ref(a, b, bias, scale=scale, act=act, q6=100)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gemm_exact_tile_boundary():
+    rng = np.random.default_rng(0)
+    for m, n in [(TM, TN), (TM + 1, TN + 1), (TM - 1, TN - 1), (2 * TM, 2 * TN)]:
+        a = rand_int8(rng, (m, 48))
+        b = rand_int8(rng, (48, n))
+        bias = jnp.zeros((n,), jnp.int32)
+        got = gemm_ws(a, b, bias, scale=0.01, act="relu6", q6=80)
+        want = gemm_ref(a, b, bias, scale=0.01, act="relu6", q6=80)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_relu6_clamps_at_q6():
+    a = jnp.full((4, 8), 100, jnp.int8)
+    b = jnp.full((8, 4), 100, jnp.int8)
+    bias = jnp.zeros((4,), jnp.int32)
+    out = gemm_ws(a, b, bias, scale=1.0, act="relu6", q6=42)
+    assert int(jnp.max(out)) == 42
+
+
+def test_saturation_without_act():
+    a = jnp.full((2, 4), 127, jnp.int8)
+    b = jnp.full((4, 2), 127, jnp.int8)
+    bias = jnp.zeros((2,), jnp.int32)
+    out = gemm_ws(a, b, bias, scale=1.0, act="none", q6=127)
+    assert int(jnp.max(out)) == 127
+    out2 = gemm_ws(a, -b, bias, scale=1.0, act="none", q6=127)
+    assert int(jnp.min(out2)) == -128
+
+
+def test_im2col_geometry():
+    x = jnp.arange(1 * 4 * 4 * 2, dtype=jnp.int8).reshape(1, 4, 4, 2)
+    cols, oh, ow = im2col(x, kernel=3, stride=1)
+    assert (oh, ow) == (4, 4)
+    assert cols.shape == (16, 18)
+    # Centre patch (1,1) centre element equals x[0,1,1,:].
+    patch = cols[5]  # patch index 1*4+1
+    centre = patch[4 * 2 : 4 * 2 + 2]  # kernel pos (1,1)
+    np.testing.assert_array_equal(np.asarray(centre), np.asarray(x[0, 1, 1]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(6, 14),
+    ic=st.integers(1, 5),
+    oc=st.integers(1, 9),
+    kernel=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_int8_matches_dequantized_ref(h, ic, oc, kernel, stride, seed):
+    """conv2d_int8 == quantize(conv_f32(dequantized inputs)) when the
+    requant scale maps exactly (acc domain -> out domain)."""
+    rng = np.random.default_rng(seed)
+    x = rand_int8(rng, (1, h, h, ic))
+    w = jnp.array(rng.integers(-20, 21, (oc, kernel, kernel, ic), dtype=np.int64).astype(np.int8))
+    bias = jnp.array(rng.integers(-50, 51, (oc,), dtype=np.int64).astype(np.int32))
+    out = conv2d_int8(x, w, bias, stride=stride, scale=0.05, act="none", q6=127)
+    # direct int32 conv reference
+    pad = kernel // 2
+    xp = np.pad(np.asarray(x, np.int32)[0], ((pad, pad), (pad, pad), (0, 0)))
+    ohh = (h + 2 * pad - kernel) // stride + 1
+    want = np.zeros((ohh, ohh, oc), np.int32)
+    wn = np.asarray(w, np.int32)
+    for oy in range(ohh):
+        for ox in range(ohh):
+            for o in range(oc):
+                acc = int(bias[o])
+                for ky in range(kernel):
+                    for kx in range(kernel):
+                        acc += int(
+                            (xp[oy * stride + ky, ox * stride + kx] * wn[o, ky, kx]).sum()
+                        )
+                want[oy, ox, o] = np.clip(np.round(acc * 0.05), -128, 127)
+    np.testing.assert_array_equal(np.asarray(out)[0], want.astype(np.int8))
+
+
+def test_vmem_budget_documented():
+    # 32×32 tiles with K ≤ 1024 stay well under 1 MiB of VMEM.
+    assert vmem_bytes(1024) < 1 << 20

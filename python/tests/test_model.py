@@ -1,0 +1,100 @@
+"""L2 correctness: quantized forward vs float forward; shapes; AOT lowering."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from compile import model, train
+from compile.aot import to_hlo_text
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def test_forward_shapes(params):
+    x = jnp.zeros((1, 96, 96, 3))
+    out = model.forward_f32(params, x)
+    assert out.shape == (1, 12, 12, model.HEAD_CHANNELS)
+
+
+def test_quantized_close_to_float(params):
+    rng = np.random.default_rng(1)
+    img = jnp.array(train.render_scene(rng)[0])[None]
+    ranges = model.calibrate(params, [img])
+    qp = model.quantize_params(params, ranges)
+    f = model.forward_f32(params, img)
+    q = model.forward_int8(qp, img)
+    scale = float(jnp.max(jnp.abs(f))) + 1e-6
+    err = float(jnp.max(jnp.abs(f - q))) / scale
+    assert err < 0.06, f"relative int8 error {err}"
+
+
+def test_quantized_not_identical(params):
+    rng = np.random.default_rng(2)
+    img = jnp.array(train.render_scene(rng)[0])[None]
+    ranges = model.calibrate(params, [img])
+    qp = model.quantize_params(params, ranges)
+    f = model.forward_f32(params, img)
+    q = model.forward_int8(qp, img)
+    assert not np.array_equal(np.asarray(f), np.asarray(q))
+
+
+def test_calibration_ranges_monotone_structure(params):
+    rng = np.random.default_rng(3)
+    imgs = [jnp.array(train.render_scene(rng)[0])[None] for _ in range(2)]
+    ranges = model.calibrate(params, imgs)
+    assert len(ranges) == len(params) + 1
+    assert all(r > 0 for r in ranges)
+    # hidden activations are ReLU6-clamped
+    for r in ranges[1:-1]:
+        assert r <= 6.0 + 1e-5
+
+
+def test_training_reduces_loss():
+    p, history = train.train(steps=30, batch_size=4, log_every=1000)
+    first = np.mean(history[:5])
+    last = np.mean(history[-5:])
+    assert last < first, f"{first} -> {last}"
+
+
+def test_targets_roundtrip_through_decode():
+    """make_targets must invert the rust/ir decode convention."""
+    truths = [(0.5, 0.5, 0.3, 0.3, 1)]
+    tobj, tbox, tcls, mask = train.make_targets(truths)
+    gy, gx, a = np.argwhere(mask > 0)[0]
+    tx, ty, tw, th = tbox[gy, gx, a]
+    sig = lambda v: 1 / (1 + np.exp(-v))
+    cx = (gx + sig(tx)) / train.GRID
+    cy = (gy + sig(ty)) / train.GRID
+    w = train.ANCHORS[a] * (0.25 + sig(tw)) / train.GRID
+    assert abs(cx - 0.5) < 0.02 and abs(cy - 0.5) < 0.02
+    assert abs(w - 0.3) < 0.03
+
+
+def test_aot_lowering_emits_hlo(params, tmp_path):
+    rng = np.random.default_rng(4)
+    imgs = [jnp.array(train.render_scene(rng)[0])[None]]
+    ranges = model.calibrate(params, imgs)
+    qp = model.quantize_params(params, ranges)
+    spec = jax.ShapeDtypeStruct((1, 96, 96, 3), jnp.float32)
+    lowered = jax.jit(lambda x: (model.forward_int8(qp, x),)).lower(spec)
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[1,96,96,3]" in text
+    assert "f32[1,12,12,18]" in text
+
+
+def test_export_import_weights(tmp_path, params):
+    out = str(tmp_path / "w.json")
+    train.export_weights(params, out)
+    with open(out) as f:
+        data = json.load(f)
+    assert len(data["layers"]) == 4
+    assert data["layers"][0]["shape"] == [16, 5, 5, 3]

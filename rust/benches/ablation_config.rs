@@ -1,0 +1,68 @@
+//! Ablation over the paper's Table III configuration changes: which of
+//! the individual hardware modifications (array size, ports, read delay,
+//! in-flight window, DSP packing, fp16 scaling) buys how much latency,
+//! frequency and resource headroom. This is the design-space argument
+//! behind Section III-A, made explicit.
+
+use gemmini_edge::fpga::resources::{gemmini_resources, Board};
+use gemmini_edge::fpga::timing::achievable_frequency;
+use gemmini_edge::gemmini::config::{Dataflow, GemminiConfig, ScaleDtype};
+use gemmini_edge::passes::replace_activations;
+use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+fn measure(label: &str, cfg: &GemminiConfig) {
+    let mut c = cfg.clone();
+    c.clock_mhz = achievable_frequency(&c, Board::Zcu102);
+    let mut g = yolov7_tiny(160, ModelVariant::Base, 80);
+    replace_activations(&mut g);
+    let t = tune_graph(&c, &g, 2);
+    let r = gemmini_resources(&c, Board::Zcu102, label);
+    println!(
+        "{label:<28} {:>4.0} MHz  conv {:>7.1} ms  DSP {:>4}  LUT {:>6}  fits={}",
+        c.clock_mhz,
+        t.tuned_conv_cycles() as f64 / (c.clock_mhz * 1e3),
+        r.dsp,
+        r.lut,
+        r.fits()
+    );
+}
+
+fn main() {
+    println!("== Ablation: Table III knobs, YOLOv7-tiny @160, tuned ==");
+    let ours = GemminiConfig::ours_zcu102();
+    measure("ours (all changes)", &ours);
+
+    let mut no_pack = ours.clone();
+    no_pack.dsp_packing = false;
+    measure("- DSP packing", &no_pack);
+
+    let mut shallow = ours.clone();
+    shallow.scratchpad_read_delay = 4;
+    measure("- deep read pipeline", &shallow);
+
+    let mut one_port = ours.clone();
+    one_port.scratchpad_ports = 1;
+    measure("- second scratchpad port", &one_port);
+
+    let mut small_flight = ours.clone();
+    small_flight.max_in_flight = 16;
+    measure("- wide in-flight window", &small_flight);
+
+    let mut fp32 = ours.clone();
+    fp32.scale_dtype = ScaleDtype::F32;
+    measure("- fp16 scaling", &fp32);
+
+    let mut small = ours.clone();
+    small.dim = 16;
+    small.scratchpad_kib = 256;
+    small.accumulator_kib = 64;
+    measure("- 32x32 array (use 16x16)", &small);
+
+    let mut both_df = ours.clone();
+    both_df.dataflow = Dataflow::Both;
+    measure("- WS-only dataflow", &both_df);
+
+    measure("original (none)", &GemminiConfig::original_zcu102());
+    println!("\nEach row removes ONE change from 'ours'; latency at the achievable clock.");
+}

@@ -1,0 +1,28 @@
+//! Shared helpers for the experiment harnesses (each bench is a
+//! harness=false binary; this file is `#[path]`-included).
+
+use gemmini_edge::dataset::detector::{build_detector, default_weights};
+use gemmini_edge::dataset::scenes::{validation_set, Scene, SceneConfig};
+use gemmini_edge::ir::interp::Value;
+use gemmini_edge::ir::Graph;
+
+pub const VAL_SEED: u64 = 20240710;
+
+/// Standard validation set for the accuracy experiments.
+pub fn val_scenes(size: usize, n: usize) -> Vec<Scene> {
+    validation_set(&SceneConfig { size, ..Default::default() }, n, VAL_SEED)
+}
+
+/// Calibration batches from scenes.
+pub fn calib_from(scenes: &[Scene], n: usize) -> Vec<Vec<Value>> {
+    scenes.iter().take(n).map(|s| vec![s.image.clone()]).collect()
+}
+
+/// The trained (or analytic-fallback) detector at a size.
+pub fn detector(size: usize) -> Graph {
+    build_detector(size, &default_weights())
+}
+
+pub fn hr() {
+    println!("{}", "-".repeat(78));
+}

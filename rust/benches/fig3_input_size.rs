@@ -1,0 +1,28 @@
+//! Figure 3: mAP vs input image size. Scenes rendered at 192px are
+//! re-fed to detectors built at smaller sizes; mAP falls as resolution
+//! drops (the paper picks 480 of 640 where mAP is still stable).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::*;
+use gemmini_edge::dataset::detector::evaluate_detector;
+use gemmini_edge::postproc::nms::NmsConfig;
+use gemmini_edge::report::series;
+
+fn main() {
+    // The paper evaluates a model trained at full resolution on shrinking
+    // input sizes (640 → 160, picking 480). Our detector's native size is
+    // 96 px; we sweep downward from there.
+    let scenes = val_scenes(96, 16);
+    let nms = NmsConfig::default();
+    let mut points = Vec::new();
+    for size in [32usize, 40, 48, 56, 64, 72, 80, 88, 96] {
+        let g = detector(size);
+        let map = evaluate_detector(&g, &scenes, &nms);
+        let gop = g.gops();
+        points.push((format!("{size}px ({gop:.3} GOP)"), map * 100.0));
+    }
+    println!("{}", series("Figure 3: mAP vs input size", "input", "mAP[%]", &points));
+    println!("paper shape: mAP stable down to mid sizes, then degrades; GOP scales ~size².");
+}

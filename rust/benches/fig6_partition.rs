@@ -1,0 +1,50 @@
+//! Figure 6: executing each part of the model on PS vs PL — the four
+//! placements, showing mixed deployment (main on PL, post on PS) wins.
+
+use gemmini_edge::fpga::resources::Board;
+use gemmini_edge::fpga::zynq::ZynqSoc;
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::ir::graph::WeightData;
+use gemmini_edge::ir::interp::Value;
+use gemmini_edge::partition::{all_placements, partition_graph};
+use gemmini_edge::passes::{quantize_graph, replace_activations, QuantizeOptions};
+use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::util::Rng;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+fn main() {
+    let size: usize = std::env::var("FIG6_SIZE").ok().and_then(|v| v.parse().ok()).unwrap_or(480);
+    let mut rng = Rng::new(3);
+    let mut g = yolov7_tiny(size, ModelVariant::Base, 80);
+    replace_activations(&mut g);
+    for w in g.weights.values_mut() {
+        if let WeightData::F32(v) = w {
+            for x in v.iter_mut() {
+                *x = rng.normal() as f32 * 0.03;
+            }
+        }
+    }
+    let calib = vec![vec![Value::new(
+        vec![1, size, size, 3],
+        (0..size * size * 3).map(|_| rng.f64() as f32).collect(),
+    )]];
+    let q = quantize_graph(&g, &calib, &QuantizeOptions { fp16_scale: true, fixed_point_requant: true });
+    let cfg = GemminiConfig::ours_zcu102();
+    let tuning = tune_graph(&cfg, &q, 2);
+    let main_pl_s = tuning.latency_s(&cfg, true);
+    let part = partition_graph(&q);
+    let soc = ZynqSoc::new(Board::Zcu102);
+    println!("== Figure 6: placement latency, YOLOv7-tiny @{size} ==");
+    println!("main part: {:.2} GOP | post: {:.4} GFLOP | boundary {:.0} KiB", part.main_gop, part.tail_gflop, part.boundary_bytes as f64 / 1024.0);
+    for p in all_placements(&part, &soc, &cfg, main_pl_s) {
+        println!(
+            "{:<22} total {:>8.2} ms  (main {:>8.2} + post {:>8.2} + xfer {:>6.3})",
+            p.label(),
+            p.total_s() * 1e3,
+            p.main_s * 1e3,
+            p.post_s * 1e3,
+            p.transfer_s * 1e3
+        );
+    }
+    println!("\npaper: mixed (main=PL, post=PS) is fastest; transfer over ACP negligible.");
+}

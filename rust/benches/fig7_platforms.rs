@@ -1,0 +1,34 @@
+//! Figure 7: end-to-end latency of our platform vs other hardware.
+
+use gemmini_edge::baselines;
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::passes::replace_activations;
+use gemmini_edge::report::series;
+use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+fn main() {
+    let size: usize = std::env::var("F7_SIZE").ok().and_then(|v| v.parse().ok()).unwrap_or(480);
+    let trials: usize = std::env::var("F7_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    println!("== Figure 7: latency comparison @{size}px ==");
+    for v in ModelVariant::all() {
+        let mut g = yolov7_tiny(size, v, 80);
+        replace_activations(&mut g);
+        let gop = g.gops();
+        let mut points: Vec<(String, f64)> = baselines::all_baselines()
+            .iter()
+            .map(|p| (p.name.to_string(), p.latency_s(gop) * 1e3))
+            .collect();
+        for (label, cfg, k) in [
+            ("ZCU102-Gemmini (Original)", GemminiConfig::original_zcu102(), 0usize),
+            ("ZCU102-Gemmini (Ours)", GemminiConfig::ours_zcu102(), trials),
+            ("ZCU111-Gemmini (Ours)", GemminiConfig::ours_zcu111(), trials),
+        ] {
+            let t = tune_graph(&cfg, &g, k);
+            points.push((label.to_string(), t.latency_s(&cfg, k > 0) * 1e3));
+        }
+        points.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        println!("{}", series(v.label(), "platform", "latency [ms]", &points));
+    }
+    println!("paper shape: Gemmini (ours) beats all embedded platforms; GTX1080 server GPU is the only faster device.");
+}

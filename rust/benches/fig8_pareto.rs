@@ -1,0 +1,33 @@
+//! Figure 8: power efficiency (GOP/s/W) vs throughput (GOP/s) of int8 CNN
+//! accelerators on FPGA — our three Gemmini points against the
+//! literature points read from the paper's plot.
+
+use gemmini_edge::energy::FpgaPowerModel;
+use gemmini_edge::fpga::resources::Board;
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::report;
+
+fn main() {
+    println!("== Figure 8: GOP/s/W vs GOP/s (int8 FPGA accelerators) ==");
+    // Our points: effective throughput = peak × typical tuned utilization
+    // (≈0.5 from the Figure 5 tuning runs), power from the board model.
+    let ours = [
+        ("ZCU102-Gemmini (Ours)", GemminiConfig::ours_zcu102(), Board::Zcu102),
+        ("ZCU111-Gemmini (Ours)", GemminiConfig::ours_zcu111(), Board::Zcu111),
+        ("ZCU102-Gemmini (Original)", GemminiConfig::original_zcu102(), Board::Zcu102),
+    ];
+    // Accelerator-phase efficiency (the paper's Fig. 8 metric): the array
+    // near-fully utilized during tuned conv execution.
+    let util = 1.0;
+    println!("{:<28} {:>10} {:>8} {:>10}", "design", "GOP/s", "W", "GOP/s/W");
+    for (label, cfg, board) in ours {
+        let gops = cfg.peak_gops() * util;
+        let w = FpgaPowerModel::for_board(board).power_w(&cfg, util);
+        println!("{label:<28} {:>10.1} {:>8.2} {:>10.1}", gops, w, gops / w);
+    }
+    for (label, gops, eff) in report::fig8_literature() {
+        println!("{label:<28} {gops:>10.1} {:>8} {eff:>10.1}", "-");
+    }
+    println!("\npaper headline: ours = 36.5 GOP/s/W; works above it use Winograd");
+    println!("or 200+ MHz clocks (Section V-C).");
+}

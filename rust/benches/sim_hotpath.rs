@@ -1,0 +1,65 @@
+//! Microbenchmark of the L3 hot paths (used by the §Perf pass):
+//! simulator instruction throughput and tuner cost-model throughput.
+
+use std::time::Instant;
+
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::gemmini::isa::Activation;
+use gemmini_edge::gemmini::memory::DramAllocator;
+use gemmini_edge::gemmini::sim::Simulator;
+use gemmini_edge::scheduler::codegen::{alloc_buffers, lower_risc, ConvGeom};
+use gemmini_edge::scheduler::cost_model::estimate_risc;
+use gemmini_edge::scheduler::space::{enumerate, RiscSchedule};
+
+fn main() {
+    let cfg = GemminiConfig::ours_zcu102();
+    // A Yolo mid-layer: 60×60 spatial, 3×3×128→128.
+    let geom = ConvGeom {
+        m: 3600,
+        n: 128,
+        k: 1152,
+        kernel: 3,
+        scale: 0.01,
+        activation: Activation::Relu6 { qmax: 100 },
+        bias: true,
+        label: "mid".into(),
+    };
+    let mut alloc = DramAllocator::new(1 << 29);
+    let bufs = alloc_buffers(&geom, &mut alloc);
+    let sched = RiscSchedule {
+        mb: 4,
+        double_buffer_a: true,
+        double_buffer_b: true,
+        order: gemmini_edge::scheduler::space::LoopOrder::NOuter,
+    };
+    let stream = lower_risc(&cfg, &geom, &bufs, &sched);
+    println!("stream: {} instructions", stream.len());
+
+    for round in 0..3 {
+        let mut sim = Simulator::new(cfg.clone(), 1 << 29);
+        let t0 = Instant::now();
+        let r = sim.run(&stream);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "round {round}: simulated {} instrs in {:.1} ms -> {:.2} M instr/s (cycles {})",
+            r.instrs,
+            dt * 1e3,
+            r.instrs as f64 / dt / 1e6,
+            r.cycles
+        );
+    }
+
+    let space = enumerate(&cfg, geom.kt(cfg.dim), geom.nt(cfg.dim));
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    let iters = 20_000;
+    for i in 0..iters {
+        acc += estimate_risc(&cfg, &geom, &space[i % space.len()]);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "cost model: {:.2} M estimates/s (checksum {:.1})",
+        iters as f64 / dt / 1e6,
+        acc / 1e9
+    );
+}

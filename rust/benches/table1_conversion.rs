@@ -1,0 +1,64 @@
+//! Table I: mAP across the framework-conversion chain for the three model
+//! versions (base, ~40 % pruned, ~88 % pruned).
+//!
+//! Substitution (DESIGN.md §2): the detector is the trained TinyBlobNet on
+//! the synthetic benchmark; the conversion chain applies each framework
+//! transition's mechanistic transformation; no fine-tuning after pruning.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::*;
+use gemmini_edge::dataset::detector::evaluate_detector;
+use gemmini_edge::passes::{convert, prune_step, Framework};
+use gemmini_edge::postproc::nms::NmsConfig;
+
+fn main() {
+    let scenes = val_scenes(96, 16);
+    let calib = calib_from(&scenes, 3);
+    let nms = NmsConfig::default();
+
+    let base = detector(96);
+    let baseline_params = base.param_count();
+    // Iterative pruning to the two paper sparsities.
+    let mut p40 = base.clone();
+    while 1.0 - p40.param_count() as f64 / baseline_params as f64 <= 0.40 {
+        let (next, r) = prune_step(&p40, 0.08, baseline_params);
+        p40 = next;
+        if r.removed_filters == 0 {
+            break;
+        }
+    }
+    let mut p88 = p40.clone();
+    while 1.0 - p88.param_count() as f64 / baseline_params as f64 <= 0.80 {
+        let (next, r) = prune_step(&p88, 0.12, baseline_params);
+        p88 = next;
+        if r.removed_filters == 0 {
+            break;
+        }
+    }
+    let sparsity = |g: &gemmini_edge::ir::Graph| {
+        1.0 - g.param_count() as f64 / baseline_params as f64
+    };
+    println!(
+        "variants: base | pruned {:.0}% | pruned {:.0}%",
+        sparsity(&p40) * 100.0,
+        sparsity(&p88) * 100.0
+    );
+
+    println!(
+        "\n== Table I: mAP[%] across frameworks (synthetic benchmark) ==\n{:<18} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "model", "PyTorch", "ONNX", "TF", "TFL-f32", "TFL-f16", "TFL-int8", "TVM"
+    );
+    for (label, g) in [("base", &base), ("pruned-40", &p40), ("pruned-88", &p88)] {
+        let mut row = format!("{label:<18}");
+        for fw in Framework::chain() {
+            let converted = convert(g, fw, Some(&calib));
+            let map = evaluate_detector(&converted, &scenes, &nms);
+            row += &format!(" {:>8.1}", map * 100.0);
+        }
+        println!("{row}");
+    }
+    println!("\npaper (YOLOv7-tiny/COCO): 33.1 32.2 32.2 32.2 32.1 29.6 29.2");
+    println!("shape to match: exact ONNX→TFL-f32 plateau, drop at int8, small drop at TVM.");
+}

@@ -1,0 +1,16 @@
+//! Table II: resource consumption of the implemented FPGA accelerators.
+//! Regenerates every row from the analytic resource model and prints the
+//! paper's values alongside.
+
+use gemmini_edge::fpga::resources::table2_rows;
+use gemmini_edge::report;
+
+fn main() {
+    println!("== Table II: resource consumption (model) ==");
+    print!("{}", report::table2(&table2_rows()));
+    println!("\npaper:");
+    println!("| Gemmini (Original) | ZCU102 | 100 | 133376 | 103026 | 613.0 |    0 | 441 |  11181 |");
+    println!("| Gemmini (Ours)     | ZCU102 | 150 | 150596 | 122028 | 693.0 |    0 | 652 |  11225 |");
+    println!("| Gemmini (Ours)     | ZCU111 | 167 | 156413 | 134787 | 321.5 |   78 | 652 |  13064 |");
+    println!("| VTA (Ours)         | ZCU111 | 100 |  37616 |  10924 |  70.0 |   12 |   0 |   2982 |");
+}

@@ -1,0 +1,46 @@
+//! Table IV: energy per inference + efficiency, 6 platforms × 3 models.
+
+use gemmini_edge::baselines;
+use gemmini_edge::energy::{EnergyReport, FpgaPowerModel};
+use gemmini_edge::fpga::resources::Board;
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::passes::replace_activations;
+use gemmini_edge::report::table4;
+use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+fn main() {
+    let size: usize = std::env::var("T4_SIZE").ok().and_then(|v| v.parse().ok()).unwrap_or(480);
+    let trials: usize = std::env::var("T4_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let mut rows: Vec<EnergyReport> = Vec::new();
+    let gemmini_rows = [
+        ("ZCU102-Gemmini (Original)", GemminiConfig::original_zcu102(), Board::Zcu102, 0usize),
+        ("ZCU102-Gemmini (Ours)", GemminiConfig::ours_zcu102(), Board::Zcu102, trials),
+        ("ZCU111-Gemmini (Ours)", GemminiConfig::ours_zcu111(), Board::Zcu111, trials),
+    ];
+    for v in ModelVariant::all() {
+        let mut g = yolov7_tiny(size, v, 80);
+        replace_activations(&mut g);
+        let gop = g.gops();
+        for p in baselines::all_baselines() {
+            if p.name.contains("Raspberry") || p.name.contains("PS") {
+                continue; // Table IV only includes power-metered platforms
+            }
+            rows.push(p.energy(v.label(), gop));
+        }
+        for (label, cfg, board, k) in &gemmini_rows {
+            let t = tune_graph(cfg, &g, *k);
+            let lat = t.latency_s(cfg, *k > 0);
+            let util = {
+                let macs: u64 = t.layers.iter().map(|l| l.geom.macs()).sum();
+                (macs as f64 / (t.total_cycles(*k > 0) as f64 * cfg.peak_macs_per_cycle() as f64)).clamp(0.0, 1.0)
+            };
+            let power = FpgaPowerModel::for_board(*board).power_w(cfg, util);
+            rows.push(EnergyReport::new(label, v.label(), lat, power, gop));
+        }
+    }
+    println!("== Table IV: energy per inference @{size}px ==");
+    print!("{}", table4(&rows));
+    println!("\npaper (base model): GTX1080 4.58 J/1.68 | Xavier 1.89/4.06 | ZCU102-orig 0.98/7.89 |");
+    println!("ZCU102-ours 0.28/27.8 | ZCU111 0.36/21.4 | VTA 1.89/4.07");
+}

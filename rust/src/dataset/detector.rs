@@ -1,0 +1,388 @@
+//! The proxy detector ("TinyBlobNet"): a YOLO-style single-scale CNN over
+//! the synthetic scenes.
+//!
+//! Weights come from the build-time JAX training run (`python -m
+//! compile.train`, exported to `artifacts/detector_weights.json`) or from
+//! an analytic template construction good enough for unit tests. The same
+//! architecture is defined in `python/compile/model.py` — the AOT HLO the
+//! Rust runtime executes is lowered from there, and an integration test
+//! cross-checks the two.
+
+use std::collections::HashMap;
+
+use crate::ir::interp::{Interpreter, Value};
+use crate::ir::{ActivationKind, Graph, GraphBuilder, PaddingMode};
+use crate::postproc::map::mean_average_precision;
+use crate::postproc::nms::{decode_and_nms, NmsConfig};
+use crate::util::json::Json;
+
+use super::scenes::Scene;
+
+/// Object classes in the synthetic benchmark.
+pub const NUM_CLASSES: usize = 4;
+/// Anchors per cell (sizes 2.5 and 5 grid cells — see `ir::interp`).
+pub const NUM_ANCHORS: usize = 2;
+/// Detector layer channel plan: (out_c, kernel, stride).
+pub const LAYERS: [(usize, usize, usize); 3] = [(16, 5, 2), (32, 3, 2), (32, 3, 2)];
+
+/// Head channels.
+pub fn head_channels() -> usize {
+    NUM_ANCHORS * (5 + NUM_CLASSES)
+}
+
+/// One conv layer's weights.
+#[derive(Debug, Clone)]
+pub struct ConvWeights {
+    /// `[oc, kh, kw, ic]` row-major.
+    pub shape: [usize; 4],
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// All detector weights (3 backbone convs + head).
+#[derive(Debug, Clone)]
+pub struct DetectorWeights {
+    pub convs: Vec<ConvWeights>,
+}
+
+impl DetectorWeights {
+    /// Parse from the JSON emitted by `python/compile/train.py`.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let j = Json::parse(text)?;
+        let layers = j.get("layers").and_then(|l| l.as_arr()).ok_or("missing layers")?;
+        let mut convs = Vec::new();
+        for l in layers {
+            let shape_v = l.get("shape").and_then(|s| s.as_arr()).ok_or("missing shape")?;
+            if shape_v.len() != 4 {
+                return Err("shape must be rank 4".into());
+            }
+            let mut shape = [0usize; 4];
+            for (i, s) in shape_v.iter().enumerate() {
+                shape[i] = s.as_f64().ok_or("bad shape entry")? as usize;
+            }
+            let w: Vec<f32> = l
+                .get("w")
+                .and_then(|w| w.as_arr())
+                .ok_or("missing w")?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                .collect();
+            let b: Vec<f32> = l
+                .get("b")
+                .and_then(|b| b.as_arr())
+                .ok_or("missing b")?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                .collect();
+            if w.len() != shape.iter().product::<usize>() || b.len() != shape[0] {
+                return Err(format!("weight sizes inconsistent with shape {shape:?}"));
+            }
+            convs.push(ConvWeights { shape, w, b });
+        }
+        if convs.len() != LAYERS.len() + 1 {
+            return Err(format!("expected {} conv layers, got {}", LAYERS.len() + 1, convs.len()));
+        }
+        Ok(Self { convs })
+    }
+
+    /// Load from `artifacts/detector_weights.json` if present.
+    pub fn load(path: &str) -> Option<Self> {
+        let text = std::fs::read_to_string(path).ok()?;
+        Self::from_json(&text).ok()
+    }
+
+    /// Analytic template weights: layer-1 centre-surround + edge filters,
+    /// energy aggregation, and a hand-set head. Detects bright compact
+    /// objects well enough for unit tests and as a training-free fallback.
+    pub fn analytic() -> Self {
+        let mut convs = Vec::new();
+        // ---- conv1: 16 × 5×5×3 ----
+        let (oc1, k1, ic1) = (16usize, 5usize, 3usize);
+        let mut w1 = vec![0f32; oc1 * k1 * k1 * ic1];
+        let mut set1 = |o: usize, y: usize, x: usize, v: f32| {
+            for c in 0..ic1 {
+                w1[((o * k1 + y) * k1 + x) * ic1 + c] = v / ic1 as f32;
+            }
+        };
+        for o in 0..oc1 {
+            for y in 0..k1 {
+                for x in 0..k1 {
+                    let dy = y as f32 - 2.0;
+                    let dx = x as f32 - 2.0;
+                    let r2 = dx * dx + dy * dy;
+                    let v = match o % 8 {
+                        // centre-surround (blob) at two scales
+                        0 => (-r2 / 1.5).exp() - 0.45 * (-r2 / 6.0).exp(),
+                        1 => (-r2 / 3.0).exp() - 0.55 * (-r2 / 10.0).exp(),
+                        // oriented edges
+                        2 => dx / 2.0 * (-r2 / 4.0).exp(),
+                        3 => dy / 2.0 * (-r2 / 4.0).exp(),
+                        4 => (dx + dy) / 2.8 * (-r2 / 4.0).exp(),
+                        5 => (dx - dy) / 2.8 * (-r2 / 4.0).exp(),
+                        // ring (inverted centre)
+                        6 => (-(r2 - 4.0).abs() / 1.5).exp() - 0.5 * (-r2 / 1.0).exp(),
+                        // brightness
+                        _ => 0.15,
+                    };
+                    set1(o, y, x, v * 1.4);
+                }
+            }
+        }
+        convs.push(ConvWeights { shape: [oc1, k1, k1, ic1], w: w1, b: vec![-0.12; oc1] });
+
+        // ---- conv2: 32 × 3×3×16: spatial max-ish aggregation ----
+        let (oc2, k2, ic2) = (32usize, 3usize, 16usize);
+        let mut w2 = vec![0f32; oc2 * k2 * k2 * ic2];
+        for o in 0..oc2 {
+            let src = o % ic2;
+            for y in 0..k2 {
+                for x in 0..k2 {
+                    let centre = if y == 1 && x == 1 { 0.5 } else { 0.1 };
+                    w2[((o * k2 + y) * k2 + x) * ic2 + src] = centre;
+                }
+            }
+        }
+        convs.push(ConvWeights { shape: [oc2, k2, k2, ic2], w: w2, b: vec![0.0; oc2] });
+
+        // ---- conv3: 32 × 3×3×32: pass-through aggregation ----
+        let (oc3, k3, ic3) = (32usize, 3usize, 32usize);
+        let mut w3 = vec![0f32; oc3 * k3 * k3 * ic3];
+        for o in 0..oc3 {
+            for y in 0..k3 {
+                for x in 0..k3 {
+                    let v = if y == 1 && x == 1 { 0.6 } else { 0.05 };
+                    w3[((o * k3 + y) * k3 + x) * ic3 + o] = v;
+                }
+            }
+        }
+        convs.push(ConvWeights { shape: [oc3, k3, k3, ic3], w: w3, b: vec![0.0; oc3] });
+
+        // ---- head: A*(5+C) × 1×1×32 ----
+        let hc = head_channels();
+        let mut wh = vec![0f32; hc * oc3];
+        let mut bh = vec![0f32; hc];
+        let per = 5 + NUM_CLASSES;
+        for a in 0..NUM_ANCHORS {
+            let base = a * per;
+            // tx, ty biases 0 (center of cell); tw/th 0 (anchor default).
+            // objectness: blob channels (0,1 mod 8) positive, brightness
+            // assists; strong negative bias so empty cells stay silent.
+            for src in 0..oc3 {
+                let f = src % 8;
+                let v = match f {
+                    0 | 1 => 2.2,
+                    7 => 0.6,
+                    _ => 0.0,
+                };
+                wh[(base + 4) * oc3 + src] = v;
+            }
+            bh[base + 4] = -3.0;
+            // classes: disc ← blob & !edge; square ← H/V edges; diamond ←
+            // diagonal edges; ring ← ring filter.
+            let class_w: [(usize, &[(usize, f32)]); 4] = [
+                (0, &[(0, 2.0), (1, 1.2), (2, -1.0), (3, -1.0), (6, -1.5)]),
+                (1, &[(2, 1.8), (3, 1.8), (4, -1.2), (5, -1.2)]),
+                (2, &[(4, 1.8), (5, 1.8), (2, -1.2), (3, -1.2)]),
+                (3, &[(6, 2.5), (0, -1.5)]),
+            ];
+            for (cls, taps) in class_w {
+                for &(f, v) in taps {
+                    // taps apply to every source channel with that filter id
+                    for src in 0..oc3 {
+                        if src % 8 == f {
+                            wh[(base + 5 + cls) * oc3 + src] += v / (oc3 / 8) as f32;
+                        }
+                    }
+                }
+                bh[base + 5 + cls] = -0.5;
+            }
+        }
+        convs.push(ConvWeights { shape: [hc, 1, 1, oc3], w: wh, b: bh });
+        Self { convs }
+    }
+}
+
+/// Build the detector graph at a given input size (must be ÷8).
+pub fn build_detector(input_size: usize, weights: &DetectorWeights) -> Graph {
+    assert_eq!(input_size % 8, 0, "input size must be divisible by 8");
+    assert_eq!(weights.convs.len(), LAYERS.len() + 1);
+    let mut b = GraphBuilder::new(format!("tinyblobnet@{input_size}"));
+    let mut x = b.input("image", vec![1, input_size, input_size, 3]);
+    for (i, &(oc, k, s)) in LAYERS.iter().enumerate() {
+        let cw = &weights.convs[i];
+        assert_eq!(cw.shape[0], oc, "layer {i} channel mismatch");
+        x = b.conv2d(
+            x,
+            oc,
+            k,
+            s,
+            PaddingMode::Same,
+            ActivationKind::Relu6,
+            Some(cw.w.clone()),
+            Some(cw.b.clone()),
+        );
+    }
+    let hw = &weights.convs[LAYERS.len()];
+    let head = b.conv2d(
+        x,
+        head_channels(),
+        1,
+        1,
+        PaddingMode::Valid,
+        ActivationKind::None,
+        Some(hw.w.clone()),
+        Some(hw.b.clone()),
+    );
+    let d = b.box_decode(head, NUM_ANCHORS, NUM_CLASSES);
+    b.finish(&[d])
+}
+
+/// Run a detector graph over scenes and compute mAP@0.5.
+/// Scenes are rescaled to the graph's input size if needed.
+pub fn evaluate_detector(g: &Graph, scenes: &[Scene], nms_cfg: &NmsConfig) -> f64 {
+    evaluate_detector_opts(g, scenes, nms_cfg, false)
+}
+
+/// As [`evaluate_detector`], optionally class-agnostic (localization-only
+/// mAP — used with the analytic template weights, which localize well but
+/// classify crudely; the trained weights use the full metric).
+pub fn evaluate_detector_opts(
+    g: &Graph,
+    scenes: &[Scene],
+    nms_cfg: &NmsConfig,
+    class_agnostic: bool,
+) -> f64 {
+    evaluate_detector_iou(g, scenes, nms_cfg, class_agnostic, 0.5)
+}
+
+/// As [`evaluate_detector_opts`] with an explicit matching-IoU threshold.
+pub fn evaluate_detector_iou(
+    g: &Graph,
+    scenes: &[Scene],
+    nms_cfg: &NmsConfig,
+    class_agnostic: bool,
+    iou_thr: f32,
+) -> f64 {
+    let size = g.node(g.inputs[0]).output.shape[1];
+    let interp = Interpreter::new(g);
+    let mut dets = Vec::with_capacity(scenes.len());
+    let mut gts = Vec::with_capacity(scenes.len());
+    for sc in scenes {
+        let input: Value = if sc.image.shape[1] == size {
+            sc.image.clone()
+        } else {
+            super::scenes::rescale_scene(sc, sc.image.shape[1], size).image
+        };
+        let outs = interp.run(&[input]);
+        let mut cands = Vec::new();
+        for o in &outs {
+            cands.extend(decode_and_nms(&o.f, NUM_CLASSES, nms_cfg));
+        }
+        let mut truths = sc.truths.clone();
+        if class_agnostic {
+            for c in cands.iter_mut() {
+                c.class = 0;
+            }
+            for t in truths.iter_mut() {
+                t.class = 0;
+            }
+            // Re-run class-aware NMS collapsed to one class.
+            cands = crate::postproc::nms::nms(cands, nms_cfg);
+        }
+        dets.push(cands);
+        gts.push(truths);
+    }
+    let classes = if class_agnostic { 1 } else { NUM_CLASSES };
+    mean_average_precision(&dets, &gts, classes, iou_thr)
+}
+
+/// Calibration inputs for quantization, drawn from scenes.
+pub fn calibration_batches(scenes: &[Scene], size: usize, n: usize) -> Vec<Vec<Value>> {
+    scenes
+        .iter()
+        .take(n)
+        .map(|sc| {
+            let v = if sc.image.shape[1] == size {
+                sc.image.clone()
+            } else {
+                super::scenes::rescale_scene(sc, sc.image.shape[1], size).image
+            };
+            vec![v]
+        })
+        .collect()
+}
+
+/// Convenience: weights from artifacts when trained, else analytic.
+pub fn default_weights() -> DetectorWeights {
+    DetectorWeights::load("artifacts/detector_weights.json")
+        .unwrap_or_else(DetectorWeights::analytic)
+}
+
+#[allow(dead_code)]
+fn _unused(_: &HashMap<(), ()>) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::scenes::{validation_set, SceneConfig};
+
+    #[test]
+    fn detector_builds_and_runs() {
+        let w = DetectorWeights::analytic();
+        let g = build_detector(96, &w);
+        assert!(g.validate().is_ok());
+        let scenes = validation_set(&SceneConfig { size: 96, ..Default::default() }, 2, 1);
+        let out = Interpreter::new(&g).run(&[scenes[0].image.clone()]);
+        let cells = (96 / 8) * (96 / 8);
+        assert_eq!(out[0].shape, vec![1, cells * NUM_ANCHORS, 5 + NUM_CLASSES]);
+    }
+
+    #[test]
+    fn analytic_detector_beats_chance() {
+        let w = DetectorWeights::analytic();
+        let g = build_detector(96, &w);
+        let scenes = validation_set(
+            &SceneConfig { size: 96, noise: 0.02, min_objects: 1, max_objects: 2, ..Default::default() },
+            12,
+            42,
+        );
+        let map = evaluate_detector_iou(
+            &g,
+            &scenes,
+            &NmsConfig { score_threshold: 0.3, iou_threshold: 0.2, ..Default::default() },
+            true,
+            0.3,
+        );
+        // Template weights are no trained YOLO (the build-time JAX run
+        // provides those); they must localize far better than random.
+        assert!(map > 0.1, "analytic localization mAP@0.3 {map}");
+    }
+
+    #[test]
+    fn weights_json_roundtrip() {
+        let w = DetectorWeights::analytic();
+        // serialize by hand
+        let layers: Vec<Json> = w
+            .convs
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("shape", Json::Arr(c.shape.iter().map(|&s| Json::Num(s as f64)).collect())),
+                    ("w", Json::Arr(c.w.iter().map(|&v| Json::Num(v as f64)).collect())),
+                    ("b", Json::Arr(c.b.iter().map(|&v| Json::Num(v as f64)).collect())),
+                ])
+            })
+            .collect();
+        let text = Json::obj(vec![("layers", Json::Arr(layers))]).dump();
+        let back = DetectorWeights::from_json(&text).unwrap();
+        assert_eq!(back.convs.len(), w.convs.len());
+        assert_eq!(back.convs[0].w.len(), w.convs[0].w.len());
+        assert!((back.convs[0].w[0] - w.convs[0].w[0]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rejects_malformed_json() {
+        assert!(DetectorWeights::from_json("{}").is_err());
+        assert!(DetectorWeights::from_json(r#"{"layers":[{"shape":[1,1,1],"w":[],"b":[]}]}"#).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic detection benchmark (the COCO stand-in — DESIGN.md §2).
+//!
+//! The paper's accuracy experiments (Table I, Figures 3/4) measure mAP of
+//! YOLOv7-tiny on COCO; we have neither the trained weights nor the
+//! dataset, so we build the closest controllable equivalent: procedurally
+//! generated scenes of geometric objects with exact ground truth
+//! ([`scenes`]), detected by a small YOLO-style CNN ([`detector`]) whose
+//! weights come from the build-time JAX training run (`make artifacts`)
+//! or an analytic template fallback. Quantization, pruning and input-size
+//! reduction act on this detector through the same information-loss
+//! mechanisms that degrade YOLOv7 — which is what the experiments measure.
+
+pub mod detector;
+pub mod scenes;
+
+pub use detector::{build_detector, DetectorWeights, NUM_CLASSES};
+pub use scenes::{render_scene, Scene, SceneConfig};

@@ -1,0 +1,18 @@
+//! FPGA mapping models (Section III-A of the paper).
+//!
+//! The paper's hardware contribution is making Gemmini *fit and go fast* on
+//! Xilinx UltraScale+ parts: mapping PEs onto DSP48E2 slices, packing two
+//! int8 weight multiplies per DSP, disabling unused modules, and narrowing
+//! the output-scaling datatype. We cannot run Vivado here, so this module
+//! provides an **analytic resource and timing model** calibrated against
+//! the paper's own Table II — detailed enough that the resource deltas
+//! (packing halves DSP usage; bigger arrays raise LUT/FF/BRAM) follow from
+//! the same arithmetic the paper argues with.
+
+pub mod dsp_packing;
+pub mod resources;
+pub mod timing;
+pub mod zynq;
+
+pub use resources::{Board, ResourceReport};
+pub use zynq::ZynqSoc;

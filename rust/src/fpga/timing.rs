@@ -1,0 +1,98 @@
+//! Frequency model: which clock a configuration closes timing at.
+//!
+//! The paper's modifications raise the Gemmini clock from 100 MHz to
+//! 150 MHz on the ZCU102 (167 MHz on the faster ZCU111 speed grade):
+//! mapping PE multiplies onto DSP48E2 hard blocks shortens the critical
+//! path, and the deeper scratchpad read pipeline (Table III: read delay
+//! 4 → 8) breaks the SRAM-to-array path.
+
+use super::resources::Board;
+use crate::gemmini::config::{GemminiConfig, ScaleDtype};
+
+/// Critical-path estimate in ns for the configuration's slowest stage.
+pub fn critical_path_ns(cfg: &GemminiConfig) -> f64 {
+    // LUT-fabric int8 multiply + accumulate chain: ~9 ns. A DSP48E2 does
+    // the same multiply in its hard block: ~4.4 ns including routing.
+    let pe_path: f64 = if cfg.dsp_packing { 4.4 } else { 9.0 };
+    // Scratchpad read: an N-stage pipeline divides the SRAM+routing delay.
+    // 4 stages leave ~10 ns on a big array's fan-out; 8 stages ~5.2 ns.
+    let fanout_penalty = (cfg.dim as f64 / 16.0).sqrt();
+    let sp_path = 36.0 * fanout_penalty / cfg.scratchpad_read_delay as f64;
+    // fp32 scaling pipeline is long unless narrowed to fp16.
+    let scale_path = match cfg.scale_dtype {
+        ScaleDtype::F32 => 9.5,
+        ScaleDtype::F16 => 5.5,
+    };
+    pe_path.max(sp_path).max(scale_path)
+}
+
+/// Achievable clock in MHz, quantized to the PLL steps the boards use.
+pub fn achievable_frequency(cfg: &GemminiConfig, board: Board) -> f64 {
+    // ZCU111 (RFSoC, -2 speed grade) is ~11% faster than ZCU102 (-2).
+    let grade = match board {
+        Board::Zcu102 => 1.0,
+        Board::Zcu111 => 1.11,
+    };
+    let f = 1000.0 / critical_path_ns(cfg) * grade;
+    // Snap down to the nearest step the paper's designs used.
+    let steps = [50.0, 75.0, 100.0, 125.0, 150.0, 167.0, 200.0, 242.0];
+    let mut best = steps[0];
+    for &s in &steps {
+        if s <= f + 1e-9 {
+            best = s;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn original_closes_at_100() {
+        let f = achievable_frequency(&GemminiConfig::original_zcu102(), Board::Zcu102);
+        assert_eq!(f, 100.0);
+    }
+
+    #[test]
+    fn ours_closes_at_150_on_zcu102() {
+        let f = achievable_frequency(&GemminiConfig::ours_zcu102(), Board::Zcu102);
+        assert_eq!(f, 150.0);
+    }
+
+    #[test]
+    fn ours_closes_at_167_on_zcu111() {
+        let f = achievable_frequency(&GemminiConfig::ours_zcu111(), Board::Zcu111);
+        assert_eq!(f, 167.0);
+    }
+
+    #[test]
+    fn shallow_pipeline_blocks_high_clock_on_big_array() {
+        // A 32×32 array with the default 4-deep read pipeline can't reach
+        // 150 MHz — the paper's read-delay increase is what unlocks it.
+        let mut cfg = GemminiConfig::ours_zcu102();
+        cfg.scratchpad_read_delay = 4;
+        let f = achievable_frequency(&cfg, Board::Zcu102);
+        assert!(f < 150.0, "got {f}");
+    }
+
+    #[test]
+    fn fp32_scaler_limits_clock() {
+        let mut cfg = GemminiConfig::ours_zcu102();
+        cfg.scale_dtype = ScaleDtype::F32;
+        let f = achievable_frequency(&cfg, Board::Zcu102);
+        assert!(f < 150.0, "got {f}");
+    }
+
+    #[test]
+    fn config_frequencies_consistent_with_table2() {
+        // The frequencies baked into the configs match the timing model.
+        let c102 = GemminiConfig::ours_zcu102();
+        assert_eq!(achievable_frequency(&c102, Board::Zcu102), c102.clock_mhz);
+        let c111 = GemminiConfig::ours_zcu111();
+        assert_eq!(achievable_frequency(&c111, Board::Zcu111), c111.clock_mhz);
+        let orig = GemminiConfig::original_zcu102();
+        assert_eq!(achievable_frequency(&orig, Board::Zcu102), orig.clock_mhz);
+    }
+}

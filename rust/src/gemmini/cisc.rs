@@ -1,0 +1,400 @@
+//! CISC-type instruction expansion.
+//!
+//! Gemmini's `LOOP_WS` / `LOOP_CONV` instructions run hardcoded state
+//! machines that internally issue the same mvin/preload/compute/mvout
+//! micro-ops a programmer could issue manually (Section III of the paper).
+//! The FSM's schedule is *fixed*: single-buffered tile loops with a
+//! conservative m→n→k order and one accumulator tile. That fixed schedule
+//! is exactly what the paper's AutoTVM pass beats by ~50 % on most layers
+//! (Section V-A) — the tuned RISC streams in
+//! [`crate::scheduler::codegen`] double-buffer and reorder loops instead.
+
+use super::config::GemminiConfig;
+use super::isa::{Activation, Instr, MvinDst};
+use super::memory::Dram;
+
+/// Geometry of a GEMM in DRAM: `C[m×n] = A[m×k] · B[k×n] (+ bias[n])`.
+/// `A` row-major with stride `k`, `B` row-major with stride `n` (int8),
+/// bias int32 with `n` entries, `C` row-major int8 with stride `n`.
+#[derive(Debug, Clone)]
+pub struct GemmGeometry {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub a_addr: usize,
+    pub b_addr: usize,
+    pub bias_addr: Option<usize>,
+    pub c_addr: usize,
+    pub scale: f32,
+    pub activation: Activation,
+    /// DMA requests per A-tile load (1 for contiguous matmul operands;
+    /// `kernel` for conv, modelling the FSM's per-kernel-row gather).
+    pub a_frag: usize,
+}
+
+/// Expand one CISC instruction into RISC micro-ops.
+pub fn expand(cfg: &GemminiConfig, ins: &Instr, out: &mut Vec<Instr>) {
+    match ins {
+        Instr::LoopWs { m, n, k, a_addr, b_addr, bias_addr, c_addr, scale, activation } => {
+            expand_gemm(
+                cfg,
+                &GemmGeometry {
+                    m: *m,
+                    n: *n,
+                    k: *k,
+                    a_addr: *a_addr,
+                    b_addr: *b_addr,
+                    bias_addr: *bias_addr,
+                    c_addr: *c_addr,
+                    scale: *scale,
+                    activation: *activation,
+                    a_frag: 1,
+                },
+                out,
+            );
+        }
+        Instr::LoopConv {
+            in_h,
+            in_w,
+            in_c,
+            out_c,
+            kernel,
+            stride,
+            padding,
+            w_addr,
+            bias_addr,
+            out_addr,
+            im2col_addr,
+            scale,
+            activation,
+            ..
+        } => {
+            let (oh, ow) = conv_out_dims(*in_h, *in_w, *kernel, *stride, *padding);
+            expand_gemm(
+                cfg,
+                &GemmGeometry {
+                    m: oh * ow,
+                    n: *out_c,
+                    k: kernel * kernel * in_c,
+                    a_addr: *im2col_addr,
+                    b_addr: *w_addr,
+                    bias_addr: *bias_addr,
+                    c_addr: *out_addr,
+                    scale: *scale,
+                    activation: *activation,
+                    a_frag: *kernel,
+                },
+                out,
+            );
+        }
+        _ => out.push(ins.clone()),
+    }
+}
+
+/// Output spatial dims of a convolution.
+pub fn conv_out_dims(in_h: usize, in_w: usize, kernel: usize, stride: usize, padding: usize) -> (usize, usize) {
+    (
+        (in_h + 2 * padding - kernel) / stride + 1,
+        (in_w + 2 * padding - kernel) / stride + 1,
+    )
+}
+
+/// The fixed CISC schedule: m→n→k tile loop with **no cross-tile reuse**
+/// (A reloaded per n-tile, B reloaded per (m,n,k) tile) — but with the
+/// double-buffered overlap the hardware FSM provides (its Load and
+/// Execute controllers run decoupled over two scratchpad banks and two
+/// accumulator tiles). What the tuner later adds is *reuse*, not overlap.
+fn expand_gemm(cfg: &GemminiConfig, g: &GemmGeometry, out: &mut Vec<Instr>) {
+    let dim = cfg.dim;
+    let mt = g.m.div_ceil(dim);
+    let nt = g.n.div_ceil(dim);
+    let kt = g.k.div_ceil(dim);
+
+    out.push(Instr::ConfigEx { acc_shift: 0 });
+    out.push(Instr::ConfigSt { scale: g.scale, activation: g.activation });
+
+    let mut iter = 0usize; // rotates the A/B scratchpad banks
+    for mi in 0..mt {
+        let m_eff = dim.min(g.m - mi * dim);
+        for ni in 0..nt {
+            let n_eff = dim.min(g.n - ni * dim);
+            let with_bias = g.bias_addr.is_some();
+            let acc_tile = (mi * nt + ni) % 2; // two acc tiles in flight
+            let acc_row = acc_tile * dim;
+            if let Some(bias) = g.bias_addr {
+                // Broadcast the bias row over all m_eff accumulator rows
+                // (stride 0: the same n-segment re-read per row).
+                out.push(Instr::Mvin {
+                    dram_addr: bias + ni * dim * 4,
+                    dst: MvinDst::Accumulator { row: acc_row },
+                    rows: m_eff,
+                    cols: n_eff,
+                    stride_bytes: 0,
+                });
+            }
+            for ki in 0..kt {
+                let k_eff = dim.min(g.k - ki * dim);
+                let a_buf = (iter % 2) * 2 * dim;
+                let b_buf = a_buf + dim;
+                iter += 1;
+                // A tile: split into `a_frag` chunks to model the conv
+                // FSM's per-kernel-row gather.
+                let frag = g.a_frag.clamp(1, m_eff);
+                let chunk = m_eff.div_ceil(frag);
+                let mut r0 = 0usize;
+                while r0 < m_eff {
+                    let rows = chunk.min(m_eff - r0);
+                    out.push(Instr::Mvin {
+                        dram_addr: g.a_addr + (mi * dim + r0) * g.k + ki * dim,
+                        dst: MvinDst::Scratchpad { row: a_buf + r0 },
+                        rows,
+                        cols: k_eff,
+                        stride_bytes: g.k,
+                    });
+                    r0 += rows;
+                }
+                // B tile (k_eff × n_eff).
+                out.push(Instr::Mvin {
+                    dram_addr: g.b_addr + (ki * dim) * g.n + ni * dim,
+                    dst: MvinDst::Scratchpad { row: b_buf },
+                    rows: k_eff,
+                    cols: n_eff,
+                    stride_bytes: g.n,
+                });
+                out.push(Instr::Preload {
+                    b_row: b_buf,
+                    acc_row,
+                    accumulate: ki > 0 || with_bias,
+                });
+                out.push(Instr::Compute { a_row: a_buf, rows: m_eff, cols: k_eff });
+            }
+            out.push(Instr::Mvout {
+                acc_row,
+                dram_addr: g.c_addr + (mi * dim) * g.n + ni * dim,
+                rows: m_eff,
+                cols: n_eff,
+                stride_bytes: g.n,
+            });
+        }
+    }
+    out.push(Instr::Flush);
+}
+
+/// Stage the im2col matrix for a `LoopConv` into DRAM (functional mode).
+/// Layout: `M×K` row-major at `im2col_addr` with `M = oh·ow`,
+/// `K = kernel²·in_c`; padding pixels are zero.
+pub fn stage_im2col(dram: &mut Dram, ins: &Instr) {
+    let Instr::LoopConv {
+        in_h, in_w, in_c, kernel, stride, padding, in_addr, im2col_addr, ..
+    } = *ins
+    else {
+        panic!("stage_im2col expects LoopConv");
+    };
+    let (oh, ow) = conv_out_dims(in_h, in_w, kernel, stride, padding);
+    let kk = kernel * kernel * in_c;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let patch = oy * ow + ox;
+            for kh in 0..kernel {
+                for kw in 0..kernel {
+                    let iy = (oy * stride + kh) as isize - padding as isize;
+                    let ix = (ox * stride + kw) as isize - padding as isize;
+                    let dst = im2col_addr + patch * kk + (kh * kernel + kw) * in_c;
+                    if iy < 0 || ix < 0 || iy >= in_h as isize || ix >= in_w as isize {
+                        for c in 0..in_c {
+                            dram.write_i8(dst + c, 0);
+                        }
+                    } else {
+                        let src = in_addr + ((iy as usize) * in_w + ix as usize) * in_c;
+                        for c in 0..in_c {
+                            let v = dram.read_i8(src + c);
+                            dram.write_i8(dst + c, v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Bytes needed for a conv's staged im2col buffer.
+pub fn im2col_bytes(in_h: usize, in_w: usize, in_c: usize, kernel: usize, stride: usize, padding: usize) -> usize {
+    let (oh, ow) = conv_out_dims(in_h, in_w, kernel, stride, padding);
+    oh * ow * kernel * kernel * in_c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemmini::sim::Simulator;
+
+    fn cfg4() -> GemminiConfig {
+        GemminiConfig { dim: 4, scratchpad_kib: 8, accumulator_kib: 4, ..GemminiConfig::original_zcu102() }
+    }
+
+    /// Software int8 GEMM reference with requantization.
+    fn ref_gemm(
+        a: &[i8],
+        b: &[i8],
+        bias: Option<&[i32]>,
+        m: usize,
+        n: usize,
+        k: usize,
+        scale: f32,
+        act: Activation,
+    ) -> Vec<i8> {
+        let mut c = vec![0i8; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut accv: i32 = bias.map(|b| b[j]).unwrap_or(0);
+                for x in 0..k {
+                    accv += a[i * k + x] as i32 * b[x * n + j] as i32;
+                }
+                let scaled = (accv as f32 * scale).round() as i32;
+                c[i * n + j] = match act {
+                    Activation::None => scaled.clamp(-128, 127) as i8,
+                    Activation::Relu => scaled.clamp(0, 127) as i8,
+                    Activation::Relu6 { qmax } => scaled.clamp(0, qmax as i32) as i8,
+                };
+            }
+        }
+        c
+    }
+
+    fn run_cisc_gemm(m: usize, n: usize, k: usize, bias: bool, scale: f32, act: Activation) {
+        let cfg = cfg4();
+        let mut sim = Simulator::new_functional(cfg, 1 << 20);
+        let a: Vec<i8> = (0..m * k).map(|i| ((i * 13 + 7) % 11) as i8 - 5).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| ((i * 5 + 1) % 9) as i8 - 4).collect();
+        let bias_v: Vec<i32> = (0..n).map(|i| (i as i32 % 7) - 3).collect();
+        let (a_addr, b_addr, c_addr, bias_addr) = (0usize, 4096usize, 8192usize, 12288usize);
+        sim.dram.write_i8_matrix(a_addr, &a, m, k, k);
+        sim.dram.write_i8_matrix(b_addr, &b, k, n, n);
+        if bias {
+            sim.dram.write_i32_matrix(bias_addr, &bias_v, 1, n, 0);
+        }
+        let stream = vec![Instr::LoopWs {
+            m,
+            n,
+            k,
+            a_addr,
+            b_addr,
+            bias_addr: bias.then_some(bias_addr),
+            c_addr,
+            scale,
+            activation: act,
+        }];
+        let res = sim.run(&stream);
+        assert!(res.cycles > 0);
+        let got = sim.dram.read_i8_matrix(c_addr, m, n, n);
+        let want = ref_gemm(&a, &b, bias.then_some(&bias_v[..]), m, n, k, scale, act);
+        assert_eq!(got, want, "m={m} n={n} k={k} bias={bias}");
+    }
+
+    #[test]
+    fn cisc_gemm_square_tiles() {
+        run_cisc_gemm(8, 8, 8, false, 1.0, Activation::None);
+    }
+
+    #[test]
+    fn cisc_gemm_ragged_edges() {
+        run_cisc_gemm(7, 5, 9, false, 1.0, Activation::None);
+        run_cisc_gemm(3, 3, 3, false, 1.0, Activation::None);
+        run_cisc_gemm(13, 6, 10, false, 1.0, Activation::None);
+    }
+
+    #[test]
+    fn cisc_gemm_with_bias_and_scale() {
+        run_cisc_gemm(8, 8, 8, true, 0.5, Activation::None);
+        run_cisc_gemm(6, 7, 5, true, 0.25, Activation::Relu);
+    }
+
+    #[test]
+    fn cisc_gemm_relu6() {
+        run_cisc_gemm(8, 4, 12, true, 0.125, Activation::Relu6 { qmax: 20 });
+    }
+
+    #[test]
+    fn cisc_conv_matches_direct_reference() {
+        // 6×6×3 input, 2 output channels, 3×3 kernel, stride 1, pad 1.
+        let (ih, iw, ic, oc, k, s, p) = (6usize, 6usize, 3usize, 2usize, 3usize, 1usize, 1usize);
+        let (oh, ow) = conv_out_dims(ih, iw, k, s, p);
+        let cfg = cfg4();
+        let mut sim = Simulator::new_functional(cfg, 1 << 20);
+        let input: Vec<i8> = (0..ih * iw * ic).map(|i| ((i * 7 + 3) % 13) as i8 - 6).collect();
+        // Weights in GEMM layout: K×N where K = k*k*ic, N = oc.
+        let kk = k * k * ic;
+        let w: Vec<i8> = (0..kk * oc).map(|i| ((i * 11 + 5) % 7) as i8 - 3).collect();
+        let (in_addr, w_addr, out_addr, im_addr) = (0usize, 8192usize, 16384usize, 32768usize);
+        sim.dram.write_i8_matrix(in_addr, &input, ih * iw, ic, ic);
+        sim.dram.write_i8_matrix(w_addr, &w, kk, oc, oc);
+        let conv = Instr::LoopConv {
+            batch: 1,
+            in_h: ih,
+            in_w: iw,
+            in_c: ic,
+            out_c: oc,
+            kernel: k,
+            stride: s,
+            padding: p,
+            in_addr,
+            w_addr,
+            bias_addr: None,
+            out_addr,
+            im2col_addr: im_addr,
+            scale: 1.0,
+            activation: Activation::None,
+        };
+        sim.run(&[conv]);
+        let got = sim.dram.read_i8_matrix(out_addr, oh * ow, oc, oc);
+        // Direct conv reference.
+        let mut want = vec![0i8; oh * ow * oc];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for n in 0..oc {
+                    let mut acc = 0i32;
+                    for kh in 0..k {
+                        for kw in 0..k {
+                            let iy = (oy * s + kh) as isize - p as isize;
+                            let ix = (ox * s + kw) as isize - p as isize;
+                            if iy < 0 || ix < 0 || iy >= ih as isize || ix >= iw as isize {
+                                continue;
+                            }
+                            for c in 0..ic {
+                                let xv = input[((iy as usize) * iw + ix as usize) * ic + c] as i32;
+                                let wv = w[((kh * k + kw) * ic + c) * oc + n] as i32;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    want[(oy * ow + ox) * oc + n] = acc.clamp(-128, 127) as i8;
+                }
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn expansion_instruction_count_scales_with_tiles() {
+        let cfg = cfg4();
+        let mut small = Vec::new();
+        expand(
+            &cfg,
+            &Instr::LoopWs { m: 4, n: 4, k: 4, a_addr: 0, b_addr: 0, bias_addr: None, c_addr: 0, scale: 1.0, activation: Activation::None },
+            &mut small,
+        );
+        let mut big = Vec::new();
+        expand(
+            &cfg,
+            &Instr::LoopWs { m: 16, n: 16, k: 16, a_addr: 0, b_addr: 0, bias_addr: None, c_addr: 0, scale: 1.0, activation: Activation::None },
+            &mut big,
+        );
+        assert!(big.len() > 10 * small.len() / 2, "{} vs {}", big.len(), small.len());
+    }
+
+    #[test]
+    fn im2col_bytes_geometry() {
+        // 4×4, k3 s1 p1 -> 16 patches × 9·c
+        assert_eq!(im2col_bytes(4, 4, 2, 3, 1, 1), 16 * 18);
+    }
+}

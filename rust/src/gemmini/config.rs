@@ -1,0 +1,249 @@
+//! Gemmini configuration parameters (Table III of the paper).
+
+
+/// Systolic-array dataflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    /// Weight stationary only (the paper's choice — Table III "Ours").
+    WeightStationary,
+    /// Output stationary only.
+    OutputStationary,
+    /// Hardware supports both (default Gemmini; costs extra resources).
+    Both,
+}
+
+/// Datatype of the output-scaling factor applied on accumulator read-out.
+/// Section III-A: the paper narrows this from float32 to float16 to save
+/// FPGA resources "without appreciating any degradation".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDtype {
+    F32,
+    F16,
+}
+
+/// Full accelerator configuration. Defaults mirror Gemmini's defaults;
+/// [`GemminiConfig::ours`] mirrors the paper's Table III column "Ours".
+#[derive(Debug, Clone, PartialEq)]
+pub struct GemminiConfig {
+    /// PE array is `dim × dim` (Table III "PEs": 16×16 default, 32×32 ours).
+    pub dim: usize,
+    pub dataflow: Dataflow,
+    /// Scratchpad capacity in KiB (256 default, 512 ours).
+    pub scratchpad_kib: usize,
+    /// Accumulator capacity in KiB (64 default, 128 ours).
+    pub accumulator_kib: usize,
+    /// Scratchpad ports (1 default, 2 ours — enables simultaneous
+    /// Load-controller writes and Execute-controller reads).
+    pub scratchpad_ports: usize,
+    /// Scratchpad read pipeline delay in cycles (4 default, 8 ours — the
+    /// deeper pipeline is what lets the FPGA design close timing at a
+    /// higher clock).
+    pub scratchpad_read_delay: usize,
+    /// Bits retained at the spatial-array output (20 default, 18 ours).
+    pub spatial_output_bits: usize,
+    /// Maximum in-flight memory requests (16 default, 32 ours).
+    pub max_in_flight: usize,
+    /// Input element width in bits (8 throughout the paper).
+    pub input_bits: usize,
+    /// Accumulator element width in bits.
+    pub acc_bits: usize,
+    /// Output-scaling factor datatype (Section III-A).
+    pub scale_dtype: ScaleDtype,
+    /// Optional Gemmini modules the paper disables for YOLO-type networks
+    /// (Section III-A): normalization (transformers), transposer, virtual
+    /// address translation, kernel dilation.
+    pub has_normalization: bool,
+    pub has_transposer: bool,
+    pub has_virtual_addr: bool,
+    pub has_dilation: bool,
+    /// DSP-packing applied (two int8 weight multiplies per DSP48E2,
+    /// Section III-A / Figure 1).
+    pub dsp_packing: bool,
+    /// Clock frequency the configuration closes timing at, MHz
+    /// (Table II: 100 MHz original on ZCU102, 150 ours, 167 on ZCU111).
+    pub clock_mhz: f64,
+    /// Effective DDR bandwidth to the PS memory, GB/s. This is a property
+    /// of the PS-side DDR controller, *not* of the PL clock — a faster
+    /// accelerator clock does not buy more memory bandwidth (why the
+    /// paper's 6× peak uplift yields only a 1.6× default-schedule speedup:
+    /// both designs share the same DDR).
+    pub ddr_gbs: f64,
+    /// DRAM round-trip latency in cycles at this clock.
+    pub dram_latency: usize,
+}
+
+impl GemminiConfig {
+    /// The original, unmodified Gemmini configuration as deployed on the
+    /// ZCU102 baseline (Tables II & III, rows "Default"/"Original").
+    pub fn original_zcu102() -> Self {
+        Self {
+            dim: 16,
+            dataflow: Dataflow::Both,
+            scratchpad_kib: 256,
+            accumulator_kib: 64,
+            scratchpad_ports: 1,
+            scratchpad_read_delay: 4,
+            spatial_output_bits: 20,
+            max_in_flight: 16,
+            input_bits: 8,
+            acc_bits: 32,
+            scale_dtype: ScaleDtype::F32,
+            has_normalization: true,
+            has_transposer: true,
+            has_virtual_addr: true,
+            has_dilation: true,
+            dsp_packing: false,
+            clock_mhz: 100.0,
+            ddr_gbs: 2.4,
+            dram_latency: 40,
+        }
+    }
+
+    /// The paper's optimized configuration on the ZCU102 (Table III "Ours").
+    pub fn ours_zcu102() -> Self {
+        Self {
+            dim: 32,
+            dataflow: Dataflow::WeightStationary,
+            scratchpad_kib: 512,
+            accumulator_kib: 128,
+            scratchpad_ports: 2,
+            scratchpad_read_delay: 8,
+            spatial_output_bits: 18,
+            max_in_flight: 32,
+            input_bits: 8,
+            acc_bits: 32,
+            scale_dtype: ScaleDtype::F16,
+            has_normalization: false,
+            has_transposer: false,
+            has_virtual_addr: false,
+            has_dilation: false,
+            dsp_packing: true,
+            clock_mhz: 150.0,
+            ddr_gbs: 2.4,
+            dram_latency: 40,
+        }
+    }
+
+    /// The paper's configuration on the ZCU111 (Table II row 3: same
+    /// architecture, URAM-backed scratchpad, 167 MHz).
+    pub fn ours_zcu111() -> Self {
+        Self { clock_mhz: 167.0, ..Self::ours_zcu102() }
+    }
+
+    /// Scratchpad geometry: rows of `dim` int8 elements.
+    pub fn scratchpad_rows(&self) -> usize {
+        self.scratchpad_kib * 1024 / (self.dim * self.input_bits / 8)
+    }
+
+    /// Accumulator geometry: rows of `dim` int32 elements.
+    pub fn accumulator_rows(&self) -> usize {
+        self.accumulator_kib * 1024 / (self.dim * self.acc_bits / 8)
+    }
+
+    /// DMA bus bytes per accelerator cycle (DDR bandwidth ÷ clock).
+    pub fn bus_bytes_per_cycle(&self) -> usize {
+        ((self.ddr_gbs * 1e3 / self.clock_mhz).round() as usize).max(1)
+    }
+
+    /// Peak MACs per cycle (the whole PE array active).
+    pub fn peak_macs_per_cycle(&self) -> usize {
+        self.dim * self.dim
+    }
+
+    /// Peak throughput in GOP/s (2 ops per MAC).
+    pub fn peak_gops(&self) -> f64 {
+        (2 * self.peak_macs_per_cycle()) as f64 * self.clock_mhz * 1e6 / 1e9
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.dim.is_power_of_two() {
+            return Err(format!("dim {} must be a power of two", self.dim));
+        }
+        if self.scratchpad_rows() < 8 * self.dim {
+            return Err("scratchpad too small for double buffering".into());
+        }
+        if self.accumulator_rows() < self.dim {
+            return Err("accumulator smaller than one tile".into());
+        }
+        if self.max_in_flight == 0 || self.scratchpad_ports == 0 {
+            return Err("degenerate resource counts".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for GemminiConfig {
+    fn default() -> Self {
+        Self::original_zcu102()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_default_column() {
+        let c = GemminiConfig::original_zcu102();
+        assert_eq!(c.dim, 16);
+        assert_eq!(c.dataflow, Dataflow::Both);
+        assert_eq!(c.scratchpad_kib, 256);
+        assert_eq!(c.accumulator_kib, 64);
+        assert_eq!(c.scratchpad_ports, 1);
+        assert_eq!(c.scratchpad_read_delay, 4);
+        assert_eq!(c.spatial_output_bits, 20);
+        assert_eq!(c.max_in_flight, 16);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn table3_ours_column() {
+        let c = GemminiConfig::ours_zcu102();
+        assert_eq!(c.dim, 32);
+        assert_eq!(c.dataflow, Dataflow::WeightStationary);
+        assert_eq!(c.scratchpad_kib, 512);
+        assert_eq!(c.accumulator_kib, 128);
+        assert_eq!(c.scratchpad_ports, 2);
+        assert_eq!(c.scratchpad_read_delay, 8);
+        assert_eq!(c.spatial_output_bits, 18);
+        assert_eq!(c.max_in_flight, 32);
+        assert!(c.dsp_packing);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn ours_has_4x_pes_of_original() {
+        let orig = GemminiConfig::original_zcu102();
+        let ours = GemminiConfig::ours_zcu102();
+        assert_eq!(ours.peak_macs_per_cycle(), 4 * orig.peak_macs_per_cycle());
+    }
+
+    #[test]
+    fn scratchpad_geometry() {
+        let c = GemminiConfig::original_zcu102();
+        // 256 KiB / 16 B per row = 16384 rows.
+        assert_eq!(c.scratchpad_rows(), 16384);
+        // 64 KiB / 64 B per acc row = 1024 rows.
+        assert_eq!(c.accumulator_rows(), 1024);
+    }
+
+    #[test]
+    fn peak_gops_scales_with_clock_and_dim() {
+        let orig = GemminiConfig::original_zcu102();
+        let ours = GemminiConfig::ours_zcu102();
+        // 4× PEs × 1.5× clock = 6× peak.
+        let ratio = ours.peak_gops() / orig.peak_gops();
+        assert!((ratio - 6.0).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = GemminiConfig::original_zcu102();
+        c.dim = 17;
+        assert!(c.validate().is_err());
+        let mut c = GemminiConfig::original_zcu102();
+        c.scratchpad_kib = 1;
+        assert!(c.validate().is_err());
+    }
+}

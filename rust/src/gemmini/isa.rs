@@ -1,0 +1,192 @@
+//! The Gemmini instruction set as modelled by the simulator.
+//!
+//! Two instruction families (Section III of the paper):
+//!
+//! - **RISC-type**: fine-grained `mvin` / `preload` / `compute` / `mvout`
+//!   intrinsics giving full control over data movement and the systolic
+//!   array — the instructions the schedule tuner re-orders;
+//! - **CISC-type**: `LOOP_WS` (tiled matmul) and `LOOP_CONV` state machines
+//!   that expand to a fixed internal schedule (see [`super::cisc`]).
+//!
+//! Addresses: DRAM addresses are plain byte addresses into the simulated
+//! [`super::memory::Dram`]. Scratchpad/accumulator addresses are *row*
+//! indices (a row holds `dim` elements), mirroring Gemmini's local address
+//! space where the accumulator is distinguished by a high bit — here by
+//! [`MvinDst`] / explicit fields instead.
+
+
+/// Sentinel `b_row` for [`Instr::Preload`]: keep the currently-loaded
+/// weight tile (no systolic refill).
+pub const REUSE_WEIGHTS: usize = usize::MAX;
+
+/// Activation applied on accumulator read-out (mvout path). Gemmini
+/// supports only ReLU-family activations here (Section IV-B2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    /// Clamped ReLU with a quantized upper bound: after the output scale is
+    /// applied, values clamp to `[0, qmax]` where `qmax = round(6.0 /
+    /// output_scale)` (ReLU6 in the quantized domain).
+    Relu6 { qmax: i8 },
+}
+
+/// Destination memory of an `mvin`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MvinDst {
+    /// Scratchpad row address (int8 rows).
+    Scratchpad { row: usize },
+    /// Accumulator row address (int32 rows) — used to preload bias.
+    Accumulator { row: usize },
+}
+
+/// One Gemmini instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instr {
+    /// Configure the Execute pipeline: systolic-array mode + output shift.
+    ConfigEx {
+        /// Right-shift applied inside the PE chain (we fold into scale).
+        acc_shift: u32,
+    },
+    /// Configure the Store pipeline: output scale factor + activation.
+    ConfigSt { scale: f32, activation: Activation },
+    /// Load `rows × cols` int8 elements from DRAM into scratchpad or
+    /// int32 elements into the accumulator (Load controller).
+    Mvin { dram_addr: usize, dst: MvinDst, rows: usize, cols: usize, stride_bytes: usize },
+    /// Preload a `dim × dim` weight tile from scratchpad into the PE array
+    /// (Execute controller; WS dataflow). `acc_row` selects the output
+    /// accumulator tile of subsequent `Compute`s; `accumulate` keeps the
+    /// existing partial sums. `b_row == REUSE_WEIGHTS` re-targets the
+    /// accumulator without refilling the array (Gemmini's
+    /// `compute.accumulated` path — weights stay resident).
+    Preload { b_row: usize, acc_row: usize, accumulate: bool },
+    /// Stream `rows` scratchpad rows (the A operand) through the loaded
+    /// weight tile, adding into the preloaded accumulator tile
+    /// (Execute controller). `cols` ≤ dim is the effective K width.
+    Compute { a_row: usize, rows: usize, cols: usize },
+    /// Store `rows × cols` elements from accumulator to DRAM, applying the
+    /// configured scale + activation and narrowing to int8
+    /// (Store controller).
+    Mvout { acc_row: usize, dram_addr: usize, rows: usize, cols: usize, stride_bytes: usize },
+    /// Drain all pipelines (fence).
+    Flush,
+    /// CISC: hardware tiled-matmul FSM over DRAM operands
+    /// (`C[m×n] = A[m×k] · B[k×n] + bias`), fixed internal schedule.
+    LoopWs {
+        m: usize,
+        n: usize,
+        k: usize,
+        a_addr: usize,
+        b_addr: usize,
+        bias_addr: Option<usize>,
+        c_addr: usize,
+        scale: f32,
+        activation: Activation,
+    },
+    /// CISC: hardware conv FSM. The real FSM gathers im2col patches from
+    /// the feature map on the fly; the simulator stages the im2col matrix
+    /// at `im2col_addr` (functional mode) and charges the gather cost as
+    /// fragmented DMA requests (one per kernel row per tile).
+    LoopConv {
+        batch: usize,
+        in_h: usize,
+        in_w: usize,
+        in_c: usize,
+        out_c: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        in_addr: usize,
+        w_addr: usize,
+        bias_addr: Option<usize>,
+        out_addr: usize,
+        im2col_addr: usize,
+        scale: f32,
+        activation: Activation,
+    },
+}
+
+impl Instr {
+    /// Which controller queue the instruction is dispatched to.
+    pub fn controller(&self) -> Controller {
+        match self {
+            Instr::Mvin { .. } => Controller::Load,
+            Instr::Preload { .. } | Instr::Compute { .. } | Instr::ConfigEx { .. } => {
+                Controller::Execute
+            }
+            Instr::Mvout { .. } | Instr::ConfigSt { .. } => Controller::Store,
+            Instr::Flush | Instr::LoopWs { .. } | Instr::LoopConv { .. } => Controller::Front,
+        }
+    }
+
+    /// Short mnemonic for traces.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::ConfigEx { .. } => "config_ex",
+            Instr::ConfigSt { .. } => "config_st",
+            Instr::Mvin { .. } => "mvin",
+            Instr::Preload { .. } => "preload",
+            Instr::Compute { .. } => "compute",
+            Instr::Mvout { .. } => "mvout",
+            Instr::Flush => "flush",
+            Instr::LoopWs { .. } => "loop_ws",
+            Instr::LoopConv { .. } => "loop_conv",
+        }
+    }
+
+    /// True for CISC-type instructions (Section III: hardcoded FSMs).
+    pub fn is_cisc(&self) -> bool {
+        matches!(self, Instr::LoopWs { .. } | Instr::LoopConv { .. })
+    }
+}
+
+/// The three decoupled controllers plus the front-end (CISC FSMs expand at
+/// the front-end before dispatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Controller {
+    Load,
+    Execute,
+    Store,
+    Front,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn controller_dispatch() {
+        let mvin = Instr::Mvin {
+            dram_addr: 0,
+            dst: MvinDst::Scratchpad { row: 0 },
+            rows: 16,
+            cols: 16,
+            stride_bytes: 16,
+        };
+        assert_eq!(mvin.controller(), Controller::Load);
+        assert_eq!(Instr::Preload { b_row: 0, acc_row: 0, accumulate: false }.controller(), Controller::Execute);
+        assert_eq!(
+            Instr::Mvout { acc_row: 0, dram_addr: 0, rows: 16, cols: 16, stride_bytes: 16 }
+                .controller(),
+            Controller::Store
+        );
+        assert_eq!(Instr::Flush.controller(), Controller::Front);
+    }
+
+    #[test]
+    fn cisc_detection() {
+        assert!(Instr::LoopWs {
+            m: 1,
+            n: 1,
+            k: 1,
+            a_addr: 0,
+            b_addr: 0,
+            bias_addr: None,
+            c_addr: 0,
+            scale: 1.0,
+            activation: Activation::None
+        }
+        .is_cisc());
+        assert!(!Instr::Flush.is_cisc());
+    }
+}

@@ -1,0 +1,140 @@
+//! Simulated external memory (the Zynq PS DDR as seen by the accelerator).
+
+/// Byte-addressable DRAM with separate typed views for int8 tensors and
+/// int32 accumulator/bias data. A real Gemmini sees one address space; we
+/// keep one byte array and read/write typed values little-endian.
+#[derive(Debug, Clone)]
+pub struct Dram {
+    bytes: Vec<u8>,
+}
+
+impl Dram {
+    pub fn new(size: usize) -> Self {
+        Self { bytes: vec![0; size] }
+    }
+
+    pub fn size(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn read_i8(&self, addr: usize) -> i8 {
+        self.bytes[addr] as i8
+    }
+
+    pub fn write_i8(&mut self, addr: usize, v: i8) {
+        self.bytes[addr] = v as u8;
+    }
+
+    pub fn read_i32(&self, addr: usize) -> i32 {
+        i32::from_le_bytes(self.bytes[addr..addr + 4].try_into().unwrap())
+    }
+
+    pub fn write_i32(&mut self, addr: usize, v: i32) {
+        self.bytes[addr..addr + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Bulk-write an int8 matrix row-major with a row stride in bytes.
+    pub fn write_i8_matrix(&mut self, addr: usize, data: &[i8], rows: usize, cols: usize, stride: usize) {
+        assert_eq!(data.len(), rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                self.write_i8(addr + r * stride + c, data[r * cols + c]);
+            }
+        }
+    }
+
+    /// Bulk-read an int8 matrix.
+    pub fn read_i8_matrix(&self, addr: usize, rows: usize, cols: usize, stride: usize) -> Vec<i8> {
+        let mut out = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                out.push(self.read_i8(addr + r * stride + c));
+            }
+        }
+        out
+    }
+
+    /// Bulk-write an int32 matrix (bias / accumulator data).
+    pub fn write_i32_matrix(&mut self, addr: usize, data: &[i32], rows: usize, cols: usize, stride: usize) {
+        assert_eq!(data.len(), rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                self.write_i32(addr + r * stride + c * 4, data[r * cols + c]);
+            }
+        }
+    }
+}
+
+/// Bump allocator over a [`Dram`] — the coordinator uses it to lay out
+/// tensors before generating instruction streams.
+#[derive(Debug, Clone)]
+pub struct DramAllocator {
+    next: usize,
+    size: usize,
+}
+
+impl DramAllocator {
+    pub fn new(size: usize) -> Self {
+        Self { next: 64, size } // keep address 0 unused
+    }
+
+    /// Allocate `bytes`, 64-byte aligned. Panics on exhaustion (simulation
+    /// configuration error, not a runtime condition).
+    pub fn alloc(&mut self, bytes: usize) -> usize {
+        let addr = (self.next + 63) & !63;
+        assert!(addr + bytes <= self.size, "simulated DRAM exhausted");
+        self.next = addr + bytes;
+        addr
+    }
+
+    pub fn used(&self) -> usize {
+        self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i8_roundtrip() {
+        let mut d = Dram::new(1024);
+        d.write_i8(10, -5);
+        assert_eq!(d.read_i8(10), -5);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let mut d = Dram::new(1024);
+        d.write_i32(100, -123456);
+        assert_eq!(d.read_i32(100), -123456);
+    }
+
+    #[test]
+    fn matrix_stride_respected() {
+        let mut d = Dram::new(1024);
+        let m = vec![1i8, 2, 3, 4, 5, 6];
+        d.write_i8_matrix(0, &m, 2, 3, 10);
+        assert_eq!(d.read_i8(0), 1);
+        assert_eq!(d.read_i8(2), 3);
+        assert_eq!(d.read_i8(10), 4);
+        assert_eq!(d.read_i8_matrix(0, 2, 3, 10), m);
+    }
+
+    #[test]
+    fn allocator_aligns() {
+        let mut a = DramAllocator::new(4096);
+        let x = a.alloc(10);
+        let y = a.alloc(10);
+        assert_eq!(x % 64, 0);
+        assert_eq!(y % 64, 0);
+        assert!(y >= x + 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn allocator_exhaustion_panics() {
+        let mut a = DramAllocator::new(128);
+        a.alloc(200);
+    }
+}

@@ -1,0 +1,38 @@
+//! Cycle-approximate, functionally-correct simulator of the Gemmini
+//! accelerator (Genc et al., DAC 2021) — the substrate the paper deploys on
+//! FPGA and that we cannot synthesize here (DESIGN.md §2).
+//!
+//! Modelled structure (Section III of the paper):
+//!
+//! - three **decoupled controllers** — *Load* (DRAM→scratchpad mvin),
+//!   *Execute* (scratchpad→systolic array→accumulator) and *Store*
+//!   (accumulator→DRAM mvout with output scaling) — each with its own
+//!   in-order queue, overlapping through ROB-style dependency tracking on
+//!   scratchpad/accumulator/DRAM regions;
+//! - a banked **scratchpad** and a separate **accumulator** memory;
+//! - a **weight-stationary** `dim × dim` PE array (Table III: the paper
+//!   fixes WS dataflow);
+//! - a DMA engine with a bounded number of in-flight requests;
+//! - **CISC-type instructions** (hardcoded tiled-matmul/conv state machines
+//!   with a fixed, conservative schedule) and **RISC-type instructions**
+//!   (mvin/preload/compute/mvout) that the schedule tuner re-orders
+//!   (Sections II, IV-C).
+//!
+//! The simulator is *functional* as well as timed: RISC programs actually
+//! move bytes and multiply int8 matrices, so the codegen in
+//! [`crate::scheduler::codegen`] is property-tested against a pure software
+//! reference.
+
+pub mod cisc;
+pub mod config;
+pub mod isa;
+pub mod memory;
+pub mod pe_array;
+pub mod scratchpad;
+pub mod sim;
+pub mod trace;
+
+pub use config::{Dataflow, GemminiConfig};
+pub use isa::{Activation, Instr, MvinDst};
+pub use memory::Dram;
+pub use sim::{SimResult, Simulator};

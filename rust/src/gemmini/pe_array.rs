@@ -1,0 +1,144 @@
+//! The weight-stationary systolic PE array.
+//!
+//! Functional model: a `dim × dim` tile of int8 weights is preloaded; int8
+//! activation rows stream through, producing int32 partial sums per row.
+//! Timing model: preload costs `dim` cycles (the weight column shift-in);
+//! a compute of `r` rows costs `r` issue cycles plus a pipeline drain of
+//! `dim + scratchpad_read_delay` cycles (amortized away when computes are
+//! back-to-back — the simulator accounts drain only at dependency
+//! boundaries).
+
+use super::config::GemminiConfig;
+
+/// Systolic array state: the currently-loaded weight tile.
+#[derive(Debug, Clone)]
+pub struct PeArray {
+    pub dim: usize,
+    /// Weight tile, row-major `dim × dim`. B[k][n].
+    weights: Vec<i8>,
+    /// Saturation bound from `spatial_output_bits` (Table III: the paper
+    /// narrows the spatial-array output from 20 to 18 bits; partial sums
+    /// wider than that clip).
+    out_max: i32,
+    out_min: i32,
+}
+
+impl PeArray {
+    pub fn new(cfg: &GemminiConfig) -> Self {
+        let bits = cfg.spatial_output_bits.min(31);
+        let out_max = (1i64 << (bits - 1)) as i32 - 1;
+        Self { dim: cfg.dim, weights: vec![0; cfg.dim * cfg.dim], out_max, out_min: -out_max - 1 }
+    }
+
+    /// Preload a weight tile (rows = K direction, cols = N direction).
+    pub fn preload(&mut self, tile: &[i8]) {
+        assert_eq!(tile.len(), self.dim * self.dim);
+        self.weights.copy_from_slice(tile);
+    }
+
+    /// Stream one activation row (length `k_eff` ≤ dim) through the array:
+    /// out[n] = Σ_k a[k] · B[k][n], saturated to the spatial output width.
+    pub fn compute_row(&self, a: &[i8], k_eff: usize) -> Vec<i32> {
+        let mut out = vec![0i32; self.dim];
+        for k in 0..k_eff.min(self.dim).min(a.len()) {
+            let av = a[k] as i32;
+            if av == 0 {
+                continue;
+            }
+            let wrow = &self.weights[k * self.dim..(k + 1) * self.dim];
+            for (n, &w) in wrow.iter().enumerate() {
+                out[n] = out[n].saturating_add(av * w as i32);
+            }
+        }
+        for v in out.iter_mut() {
+            *v = (*v).clamp(self.out_min, self.out_max);
+        }
+        out
+    }
+
+    /// Cycles for a preload.
+    pub fn preload_cycles(&self) -> usize {
+        self.dim
+    }
+
+    /// Issue cycles for an `r`-row compute (drain handled by the simulator).
+    pub fn compute_issue_cycles(&self, rows: usize) -> usize {
+        rows.max(1)
+    }
+
+    /// Pipeline depth (drain cost at dependency boundaries).
+    pub fn drain_cycles(&self, cfg: &GemminiConfig) -> usize {
+        self.dim + cfg.scratchpad_read_delay
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GemminiConfig {
+        GemminiConfig::original_zcu102()
+    }
+
+    #[test]
+    fn identity_weight_passthrough() {
+        let c = cfg();
+        let mut pe = PeArray::new(&c);
+        let mut id = vec![0i8; c.dim * c.dim];
+        for i in 0..c.dim {
+            id[i * c.dim + i] = 1;
+        }
+        pe.preload(&id);
+        let a: Vec<i8> = (0..c.dim as i8).collect();
+        let out = pe.compute_row(&a, c.dim);
+        for i in 0..c.dim {
+            assert_eq!(out[i], i as i32);
+        }
+    }
+
+    #[test]
+    fn matmul_row_matches_reference() {
+        let c = cfg();
+        let mut pe = PeArray::new(&c);
+        let dim = c.dim;
+        let tile: Vec<i8> = (0..dim * dim).map(|i| ((i * 7 + 3) % 17) as i8 - 8).collect();
+        pe.preload(&tile);
+        let a: Vec<i8> = (0..dim).map(|i| ((i * 5) % 11) as i8 - 5).collect();
+        let out = pe.compute_row(&a, dim);
+        for n in 0..dim {
+            let expect: i32 =
+                (0..dim).map(|k| a[k] as i32 * tile[k * dim + n] as i32).sum();
+            assert_eq!(out[n], expect);
+        }
+    }
+
+    #[test]
+    fn partial_k_ignores_tail() {
+        let c = cfg();
+        let mut pe = PeArray::new(&c);
+        pe.preload(&vec![1i8; c.dim * c.dim]);
+        let a = vec![1i8; c.dim];
+        let out = pe.compute_row(&a, 4); // only first 4 of K
+        assert!(out.iter().all(|&v| v == 4));
+    }
+
+    #[test]
+    fn output_saturates_at_spatial_bits() {
+        let mut c = cfg();
+        c.spatial_output_bits = 10; // tiny range: ±511
+        let mut pe = PeArray::new(&c);
+        pe.preload(&vec![127i8; c.dim * c.dim]);
+        let a = vec![127i8; c.dim];
+        let out = pe.compute_row(&a, c.dim);
+        assert!(out.iter().all(|&v| v == 511), "{:?}", &out[..4]);
+    }
+
+    #[test]
+    fn timing_model_shape() {
+        let c = cfg();
+        let pe = PeArray::new(&c);
+        assert_eq!(pe.preload_cycles(), 16);
+        assert_eq!(pe.compute_issue_cycles(16), 16);
+        assert_eq!(pe.drain_cycles(&c), 16 + 4);
+    }
+}

@@ -1,0 +1,132 @@
+//! Scratchpad and accumulator memories.
+//!
+//! The scratchpad holds int8 rows of `dim` elements; the accumulator holds
+//! int32 rows of `dim` elements. Both are row-addressed, matching Gemmini's
+//! local address space.
+
+use super::config::GemminiConfig;
+
+/// The int8 scratchpad.
+#[derive(Debug, Clone)]
+pub struct Scratchpad {
+    pub dim: usize,
+    rows: Vec<i8>,
+    num_rows: usize,
+}
+
+impl Scratchpad {
+    pub fn new(cfg: &GemminiConfig) -> Self {
+        let num_rows = cfg.scratchpad_rows();
+        Self { dim: cfg.dim, rows: vec![0; num_rows * cfg.dim], num_rows }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.num_rows
+    }
+
+    pub fn write_row(&mut self, row: usize, data: &[i8]) {
+        assert!(row < self.num_rows, "scratchpad row {row} out of range");
+        assert!(data.len() <= self.dim);
+        let base = row * self.dim;
+        self.rows[base..base + data.len()].copy_from_slice(data);
+        // zero-fill the remainder (hardware mvin pads partial rows)
+        for i in data.len()..self.dim {
+            self.rows[base + i] = 0;
+        }
+    }
+
+    pub fn read_row(&self, row: usize) -> &[i8] {
+        assert!(row < self.num_rows, "scratchpad row {row} out of range");
+        &self.rows[row * self.dim..(row + 1) * self.dim]
+    }
+}
+
+/// The int32 accumulator.
+#[derive(Debug, Clone)]
+pub struct Accumulator {
+    pub dim: usize,
+    rows: Vec<i32>,
+    num_rows: usize,
+}
+
+impl Accumulator {
+    pub fn new(cfg: &GemminiConfig) -> Self {
+        let num_rows = cfg.accumulator_rows();
+        Self { dim: cfg.dim, rows: vec![0; num_rows * cfg.dim], num_rows }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.num_rows
+    }
+
+    /// Overwrite a row.
+    pub fn set_row(&mut self, row: usize, data: &[i32]) {
+        assert!(row < self.num_rows, "accumulator row {row} out of range");
+        let base = row * self.dim;
+        for (i, &v) in data.iter().enumerate() {
+            self.rows[base + i] = v;
+        }
+        for i in data.len()..self.dim {
+            self.rows[base + i] = 0;
+        }
+    }
+
+    /// Add into a row (the accumulate path).
+    pub fn add_row(&mut self, row: usize, data: &[i32]) {
+        assert!(row < self.num_rows, "accumulator row {row} out of range");
+        let base = row * self.dim;
+        for (i, &v) in data.iter().enumerate() {
+            self.rows[base + i] = self.rows[base + i].wrapping_add(v);
+        }
+    }
+
+    pub fn read_row(&self, row: usize) -> &[i32] {
+        assert!(row < self.num_rows, "accumulator row {row} out of range");
+        &self.rows[row * self.dim..(row + 1) * self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemmini::config::GemminiConfig;
+
+    #[test]
+    fn scratchpad_partial_row_zero_fills() {
+        let cfg = GemminiConfig::original_zcu102();
+        let mut sp = Scratchpad::new(&cfg);
+        sp.write_row(3, &[1, 2, 3]);
+        let r = sp.read_row(3);
+        assert_eq!(&r[..3], &[1, 2, 3]);
+        assert!(r[3..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn accumulator_accumulate_vs_set() {
+        let cfg = GemminiConfig::original_zcu102();
+        let mut acc = Accumulator::new(&cfg);
+        acc.set_row(0, &[10; 16]);
+        acc.add_row(0, &[5; 16]);
+        assert!(acc.read_row(0).iter().all(|&v| v == 15));
+        acc.set_row(0, &[1; 16]);
+        assert!(acc.read_row(0).iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn scratchpad_bounds_checked() {
+        let cfg = GemminiConfig::original_zcu102();
+        let mut sp = Scratchpad::new(&cfg);
+        let n = sp.num_rows();
+        sp.write_row(n, &[0]);
+    }
+
+    #[test]
+    fn capacities_match_config() {
+        let cfg = GemminiConfig::ours_zcu102();
+        let sp = Scratchpad::new(&cfg);
+        let acc = Accumulator::new(&cfg);
+        assert_eq!(sp.num_rows(), cfg.scratchpad_rows());
+        assert_eq!(acc.num_rows(), cfg.accumulator_rows());
+    }
+}

@@ -1,0 +1,85 @@
+//! Instruction-stream statistics for reports and debugging.
+
+use std::collections::BTreeMap;
+
+use super::isa::Instr;
+
+/// Histogram of mnemonics plus aggregate byte counts for a stream.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub counts: BTreeMap<&'static str, usize>,
+    pub mvin_bytes: usize,
+    pub mvout_bytes: usize,
+    pub compute_rows: usize,
+}
+
+impl StreamStats {
+    pub fn of(stream: &[Instr]) -> Self {
+        let mut s = Self::default();
+        for ins in stream {
+            *s.counts.entry(ins.mnemonic()).or_insert(0) += 1;
+            match ins {
+                Instr::Mvin { rows, cols, dst, .. } => {
+                    let elem = match dst {
+                        super::isa::MvinDst::Scratchpad { .. } => 1,
+                        super::isa::MvinDst::Accumulator { .. } => 4,
+                    };
+                    s.mvin_bytes += rows * cols * elem;
+                }
+                Instr::Mvout { rows, cols, .. } => s.mvout_bytes += rows * cols,
+                Instr::Compute { rows, .. } => s.compute_rows += rows,
+                _ => {}
+            }
+        }
+        s
+    }
+
+    pub fn total(&self) -> usize {
+        self.counts.values().sum()
+    }
+
+    /// Arithmetic intensity proxy: compute rows per mvin byte.
+    pub fn reuse(&self) -> f64 {
+        if self.mvin_bytes == 0 {
+            return 0.0;
+        }
+        self.compute_rows as f64 / self.mvin_bytes as f64
+    }
+}
+
+impl std::fmt::Display for StreamStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} instrs [", self.total())?;
+        for (i, (k, v)) in self.counts.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{k}:{v}")?;
+        }
+        write!(f, "] in={}B out={}B", self.mvin_bytes, self.mvout_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemmini::isa::{Activation, MvinDst};
+
+    #[test]
+    fn stats_count_stream() {
+        let stream = vec![
+            Instr::ConfigSt { scale: 1.0, activation: Activation::None },
+            Instr::Mvin { dram_addr: 0, dst: MvinDst::Scratchpad { row: 0 }, rows: 4, cols: 4, stride_bytes: 4 },
+            Instr::Compute { a_row: 0, rows: 4, cols: 4 },
+            Instr::Mvout { acc_row: 0, dram_addr: 0, rows: 4, cols: 4, stride_bytes: 4 },
+        ];
+        let s = StreamStats::of(&stream);
+        assert_eq!(s.total(), 4);
+        assert_eq!(s.mvin_bytes, 16);
+        assert_eq!(s.mvout_bytes, 16);
+        assert_eq!(s.compute_rows, 4);
+        assert!(s.reuse() > 0.0);
+        let disp = s.to_string();
+        assert!(disp.contains("mvin:1"));
+    }
+}

@@ -1,0 +1,280 @@
+//! Ergonomic graph construction with shape inference.
+//!
+//! Builds NHWC graphs (the layout Gemmini consumes). The YOLOv7-tiny
+//! workload definition in [`crate::workload`] and the synthetic detector in
+//! [`crate::dataset`] are both constructed through this builder.
+
+use super::dtype::DType;
+use super::graph::{Graph, NodeId, WeightData};
+use super::layout::Layout;
+use super::op::{ActivationKind, BinaryKind, Op, PaddingMode};
+use super::tensor::TensorMeta;
+
+/// Builder over a [`Graph`] that infers output shapes.
+pub struct GraphBuilder {
+    pub graph: Graph,
+    counter: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { graph: Graph::new(name), counter: 0 }
+    }
+
+    fn fresh(&mut self, prefix: &str) -> String {
+        self.counter += 1;
+        format!("{prefix}_{}", self.counter)
+    }
+
+    /// Shape of a node's output (panics if id invalid).
+    pub fn shape(&self, id: NodeId) -> &[usize] {
+        &self.graph.node(id).output.shape
+    }
+
+    /// Declare an NHWC float input.
+    pub fn input(&mut self, name: &str, shape: Vec<usize>) -> NodeId {
+        let layout = if shape.len() == 4 { Layout::NHWC } else { Layout::Flat };
+        let id =
+            self.graph.push(Op::Input, vec![], TensorMeta::new(name, shape, DType::Float32, layout));
+        self.graph.inputs.push(id);
+        id
+    }
+
+    /// Add a float constant with explicit data.
+    pub fn constant(&mut self, shape: Vec<usize>, data: Vec<f32>) -> NodeId {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "const shape/data mismatch");
+        let name = self.fresh("const");
+        let layout = if shape.len() == 4 { Layout::NHWC } else { Layout::Flat };
+        let id =
+            self.graph.push(Op::Const, vec![], TensorMeta::new(name, shape, DType::Float32, layout));
+        self.graph.weights.insert(id, WeightData::F32(data));
+        id
+    }
+
+    /// Conv2d with weights `[oc, kh, kw, ic]`; infers NHWC output shape.
+    /// Weight data must be supplied (use zeros for workload-only graphs).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        &mut self,
+        input: NodeId,
+        out_channels: usize,
+        kernel: usize,
+        stride: usize,
+        padding: PaddingMode,
+        activation: ActivationKind,
+        weights: Option<Vec<f32>>,
+        bias: Option<Vec<f32>>,
+    ) -> NodeId {
+        let in_shape = self.shape(input).to_vec();
+        assert_eq!(in_shape.len(), 4, "conv2d input must be 4-D NHWC");
+        let (n, h, w, ic) = (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+        let pad_total = padding.total(kernel);
+        let oh = (h + pad_total - kernel) / stride + 1;
+        let ow = (w + pad_total - kernel) / stride + 1;
+
+        let wnumel = out_channels * kernel * kernel * ic;
+        let wdata = weights.unwrap_or_else(|| vec![0.0; wnumel]);
+        assert_eq!(wdata.len(), wnumel, "conv weight size mismatch");
+        let wid = self.constant(vec![out_channels, kernel, kernel, ic], wdata);
+
+        let mut inputs = vec![input, wid];
+        let has_bias = bias.is_some();
+        if let Some(b) = bias {
+            assert_eq!(b.len(), out_channels, "bias size mismatch");
+            let bid = self.constant(vec![out_channels], b);
+            inputs.push(bid);
+        }
+        let name = self.fresh("conv");
+        self.graph.push(
+            Op::Conv2d { out_channels, kernel, stride, padding, activation, bias: has_bias },
+            inputs,
+            TensorMeta::new(name, vec![n, oh, ow, out_channels], DType::Float32, Layout::NHWC),
+        )
+    }
+
+    /// Max pooling; infers output shape.
+    pub fn maxpool(&mut self, input: NodeId, kernel: usize, stride: usize) -> NodeId {
+        let s = self.shape(input).to_vec();
+        let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
+        let oh = (h - kernel) / stride + 1;
+        let ow = (w - kernel) / stride + 1;
+        let name = self.fresh("pool");
+        self.graph.push(
+            Op::MaxPool2d { kernel, stride, padding: PaddingMode::Valid },
+            vec![input],
+            TensorMeta::new(name, vec![n, oh, ow, c], DType::Float32, Layout::NHWC),
+        )
+    }
+
+    /// Nearest-neighbour upsample.
+    pub fn upsample(&mut self, input: NodeId, factor: usize) -> NodeId {
+        let s = self.shape(input).to_vec();
+        let name = self.fresh("up");
+        self.graph.push(
+            Op::Upsample { factor, mode: Default::default() },
+            vec![input],
+            TensorMeta::new(
+                name,
+                vec![s[0], s[1] * factor, s[2] * factor, s[3]],
+                DType::Float32,
+                Layout::NHWC,
+            ),
+        )
+    }
+
+    /// Channel concat (NHWC axis 3).
+    pub fn concat(&mut self, inputs: &[NodeId]) -> NodeId {
+        assert!(inputs.len() >= 2);
+        let first = self.shape(inputs[0]).to_vec();
+        let mut c = 0usize;
+        for &i in inputs {
+            let s = self.shape(i);
+            assert_eq!(&s[..3], &first[..3], "concat spatial mismatch");
+            c += s[3];
+        }
+        let name = self.fresh("cat");
+        self.graph.push(
+            Op::Concat,
+            inputs.to_vec(),
+            TensorMeta::new(name, vec![first[0], first[1], first[2], c], DType::Float32, Layout::NHWC),
+        )
+    }
+
+    /// Dense layer over a flattened input.
+    pub fn dense(
+        &mut self,
+        input: NodeId,
+        out_features: usize,
+        activation: ActivationKind,
+        weights: Option<Vec<f32>>,
+    ) -> NodeId {
+        let in_features: usize = self.shape(input).iter().product::<usize>()
+            / self.shape(input)[0].max(1);
+        let n = self.shape(input)[0];
+        let wnumel = out_features * in_features;
+        let wdata = weights.unwrap_or_else(|| vec![0.0; wnumel]);
+        assert_eq!(wdata.len(), wnumel);
+        let wid = self.constant(vec![out_features, in_features], wdata);
+        let name = self.fresh("dense");
+        self.graph.push(
+            Op::Dense { out_features, activation, bias: false },
+            vec![input, wid],
+            TensorMeta::new(name, vec![n, out_features], DType::Float32, Layout::Flat),
+        )
+    }
+
+    /// Standalone activation node.
+    pub fn activation(&mut self, input: NodeId, kind: ActivationKind) -> NodeId {
+        let meta = self.graph.node(input).output.clone();
+        let name = self.fresh("act");
+        self.graph.push(
+            Op::Activation { kind },
+            vec![input],
+            TensorMeta::new(name, meta.shape, meta.dtype, meta.layout),
+        )
+    }
+
+    /// Elementwise binary op (shapes must match).
+    pub fn binary(&mut self, kind: BinaryKind, a: NodeId, b: NodeId) -> NodeId {
+        assert_eq!(self.shape(a), self.shape(b), "binary shape mismatch");
+        let meta = self.graph.node(a).output.clone();
+        let name = self.fresh("bin");
+        self.graph.push(
+            Op::Binary { kind },
+            vec![a, b],
+            TensorMeta::new(name, meta.shape, meta.dtype, meta.layout),
+        )
+    }
+
+    /// Decode head output into box candidates (float tail).
+    pub fn box_decode(&mut self, input: NodeId, num_anchors: usize, num_classes: usize) -> NodeId {
+        let s = self.shape(input).to_vec();
+        let cells = s[1] * s[2];
+        let name = self.fresh("decode");
+        self.graph.push(
+            Op::BoxDecode { num_anchors, num_classes },
+            vec![input],
+            TensorMeta::new(
+                name,
+                vec![s[0], cells * num_anchors, 5 + num_classes],
+                DType::Float32,
+                Layout::Flat,
+            ),
+        )
+    }
+
+    /// Mark graph outputs and return the finished graph.
+    pub fn finish(mut self, outputs: &[NodeId]) -> Graph {
+        self.graph.outputs = outputs.to_vec();
+        self.graph.validate().expect("builder produced invalid graph");
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_inference_same_padding() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 480, 480, 3]);
+        let c = b.conv2d(x, 32, 3, 2, PaddingMode::Same, ActivationKind::Relu6, None, None);
+        assert_eq!(b.shape(c), &[1, 240, 240, 32]);
+    }
+
+    #[test]
+    fn conv_shape_inference_1x1() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 60, 60, 128]);
+        let c = b.conv2d(x, 64, 1, 1, PaddingMode::Valid, ActivationKind::None, None, None);
+        assert_eq!(b.shape(c), &[1, 60, 60, 64]);
+    }
+
+    #[test]
+    fn pool_and_upsample_roundtrip() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 64, 64, 16]);
+        let p = b.maxpool(x, 2, 2);
+        assert_eq!(b.shape(p), &[1, 32, 32, 16]);
+        let u = b.upsample(p, 2);
+        assert_eq!(b.shape(u), &[1, 64, 64, 16]);
+    }
+
+    #[test]
+    fn concat_channels() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 8, 8, 16]);
+        let y = b.conv2d(x, 32, 1, 1, PaddingMode::Valid, ActivationKind::None, None, None);
+        let z = b.concat(&[x, y]);
+        assert_eq!(b.shape(z), &[1, 8, 8, 48]);
+    }
+
+    #[test]
+    #[should_panic(expected = "concat spatial mismatch")]
+    fn concat_rejects_spatial_mismatch() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 8, 8, 16]);
+        let p = b.maxpool(x, 2, 2);
+        b.concat(&[x, p]);
+    }
+
+    #[test]
+    fn finish_validates() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 16, 16, 3]);
+        let c = b.conv2d(x, 8, 3, 1, PaddingMode::Same, ActivationKind::Relu, None, None);
+        let g = b.finish(&[c]);
+        assert_eq!(g.outputs.len(), 1);
+        assert!(g.validate().is_ok());
+        assert!(g.gops() > 0.0);
+    }
+
+    #[test]
+    fn box_decode_shape() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 15, 15, 39]);
+        let d = b.box_decode(x, 3, 8);
+        assert_eq!(b.shape(d), &[1, 15 * 15 * 3, 13]);
+    }
+}

@@ -1,0 +1,95 @@
+//! Element datatypes.
+//!
+//! The paper's partitioning criterion (Section IV-D) is *datatype*: the int8
+//! main part runs on the accelerator (PL), the float32 NMS-prep part on the
+//! ARM cores (PS). `DType` therefore carries everything the partitioner and
+//! the quantizer need.
+
+
+/// Element type of a tensor in the IR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 8-bit signed integer — Gemmini's native input type.
+    Int8,
+    /// 32-bit signed integer — Gemmini's accumulator type.
+    Int32,
+    /// IEEE half precision — used by our reduced output-scaling module
+    /// (Section III-A: scale factor narrowed from float32 to float16).
+    Float16,
+    /// IEEE single precision — the NMS post-processing part.
+    Float32,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::Int8 => 1,
+            DType::Float16 => 2,
+            DType::Int32 | DType::Float32 => 4,
+        }
+    }
+
+    /// True for integer types (accelerator-eligible in the paper's flow).
+    pub fn is_integer(self) -> bool {
+        matches!(self, DType::Int8 | DType::Int32)
+    }
+
+    /// True for floating-point types (PS-only in the paper's flow).
+    pub fn is_float(self) -> bool {
+        !self.is_integer()
+    }
+
+    /// Representable range for integer types, as (min, max).
+    pub fn int_range(self) -> Option<(i64, i64)> {
+        match self {
+            DType::Int8 => Some((-128, 127)),
+            DType::Int32 => Some((i32::MIN as i64, i32::MAX as i64)),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            DType::Int8 => "int8",
+            DType::Int32 => "int32",
+            DType::Float16 => "float16",
+            DType::Float32 => "float32",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::Int8.size_bytes(), 1);
+        assert_eq!(DType::Float16.size_bytes(), 2);
+        assert_eq!(DType::Int32.size_bytes(), 4);
+        assert_eq!(DType::Float32.size_bytes(), 4);
+    }
+
+    #[test]
+    fn integer_classification_partitions_types() {
+        for d in [DType::Int8, DType::Int32, DType::Float16, DType::Float32] {
+            assert_ne!(d.is_integer(), d.is_float());
+        }
+    }
+
+    #[test]
+    fn int8_range() {
+        assert_eq!(DType::Int8.int_range(), Some((-128, 127)));
+        assert_eq!(DType::Float32.int_range(), None);
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(DType::Int8.to_string(), "int8");
+        assert_eq!(DType::Float16.to_string(), "float16");
+    }
+}

@@ -1,0 +1,290 @@
+//! The operator graph.
+//!
+//! A flat arena of nodes; each node consumes tensors produced by earlier
+//! nodes (SSA-ish, one output per node). Weight payloads are stored
+//! out-of-band so passes can rewrite structure cheaply.
+
+use std::collections::HashMap;
+
+
+use super::op::Op;
+use super::tensor::TensorMeta;
+
+/// Node index in the graph arena.
+pub type NodeId = usize;
+/// A tensor is identified by the node that produces it.
+pub type TensorId = usize;
+
+/// Weight payload for a `Const` node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WeightData {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+impl WeightData {
+    pub fn len(&self) -> usize {
+        match self {
+            WeightData::F32(v) => v.len(),
+            WeightData::I8(v) => v.len(),
+            WeightData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            WeightData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i8(&self) -> Option<&[i8]> {
+        match self {
+            WeightData::I8(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One operator instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+    /// Producer nodes of each input tensor, in positional order.
+    pub inputs: Vec<TensorId>,
+    /// Metadata of the single output tensor.
+    pub output: TensorMeta,
+}
+
+/// An operator graph plus out-of-band weights.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Graph input node ids, in signature order.
+    pub inputs: Vec<NodeId>,
+    /// Graph output node ids, in signature order.
+    pub outputs: Vec<NodeId>,
+    /// Weight payloads keyed by Const node id.
+    pub weights: HashMap<NodeId, WeightData>,
+    /// Requantization arithmetic: `false` = float multiplier (TFLite
+    /// reference / Gemmini fp scaling), `true` = TVM-style fixed-point
+    /// (int32 multiplier + rounding shift). The framework-conversion pass
+    /// flips this at the TVM import step (Table I's last column).
+    pub requant_fixed_point: bool,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), ..Default::default() }
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id]
+    }
+
+    /// Append a node; returns its id.
+    pub fn push(&mut self, op: Op, inputs: Vec<TensorId>, output: TensorMeta) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, op, inputs, output });
+        id
+    }
+
+    /// Consumers of each node's output tensor.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Count nodes matching a predicate.
+    pub fn count<F: Fn(&Node) -> bool>(&self, f: F) -> usize {
+        self.nodes.iter().filter(|n| f(n)).count()
+    }
+
+    /// Total parameter count (elements across all Const weights).
+    pub fn param_count(&self) -> usize {
+        self.weights.values().map(|w| w.len()).sum()
+    }
+
+    /// Giga-operations per inference (MACs*2 for conv/dense), the paper's
+    /// GOP unit for efficiency numbers.
+    pub fn gops(&self) -> f64 {
+        let mut macs = 0u64;
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv2d { kernel, .. } => {
+                    // output: NHWC. in_c from weight input shape [oc,kh,kw,ic].
+                    let w = self.node(n.inputs[1]);
+                    let ic = *w.output.shape.last().unwrap_or(&0);
+                    let out_spatial: usize = n.output.shape[1] * n.output.shape[2];
+                    let oc = n.output.shape[3];
+                    macs += (out_spatial * oc * kernel * kernel * ic) as u64;
+                }
+                Op::Dense { out_features, .. } => {
+                    let w = self.node(n.inputs[1]);
+                    let inf = *w.output.shape.last().unwrap_or(&0);
+                    macs += (*out_features * inf) as u64;
+                }
+                _ => {}
+            }
+        }
+        (macs * 2) as f64 / 1e9
+    }
+
+    /// Validate structural invariants: input indices in range and acyclic
+    /// (inputs reference strictly earlier nodes — the arena is topological
+    /// by construction).
+    pub fn validate(&self) -> Result<(), String> {
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                if i >= self.nodes.len() {
+                    return Err(format!("node {} references missing tensor {}", n.id, i));
+                }
+                if i >= n.id {
+                    return Err(format!("node {} references non-earlier tensor {}", n.id, i));
+                }
+            }
+            match &n.op {
+                Op::Const => {
+                    if !self.weights.contains_key(&n.id) {
+                        return Err(format!("const node {} has no weight payload", n.id));
+                    }
+                    let w = &self.weights[&n.id];
+                    if w.len() != n.output.numel() {
+                        return Err(format!(
+                            "const node {} payload len {} != shape numel {}",
+                            n.id,
+                            w.len(),
+                            n.output.numel()
+                        ));
+                    }
+                }
+                Op::Conv2d { .. } | Op::Dense { .. } => {
+                    if n.inputs.len() < 2 {
+                        return Err(format!("node {} ({}) missing weight input", n.id, n.op.mnemonic()));
+                    }
+                }
+                Op::Concat => {
+                    if n.inputs.len() < 2 {
+                        return Err(format!("concat node {} has <2 inputs", n.id));
+                    }
+                }
+                _ => {}
+            }
+        }
+        for &o in &self.outputs {
+            if o >= self.nodes.len() {
+                return Err(format!("graph output {} out of range", o));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, Layout};
+
+    fn meta(name: &str, shape: Vec<usize>) -> TensorMeta {
+        TensorMeta::new(name, shape, DType::Float32, Layout::NHWC)
+    }
+
+    #[test]
+    fn push_and_validate() {
+        let mut g = Graph::new("t");
+        let a = g.push(Op::Input, vec![], meta("a", vec![1, 4, 4, 3]));
+        g.inputs.push(a);
+        let w = g.push(Op::Const, vec![], meta("w", vec![8, 3, 3, 3]));
+        g.weights.insert(w, WeightData::F32(vec![0.0; 8 * 3 * 3 * 3]));
+        let c = g.push(
+            Op::Conv2d {
+                out_channels: 8,
+                kernel: 3,
+                stride: 1,
+                padding: crate::ir::PaddingMode::Same,
+                activation: crate::ir::ActivationKind::Relu,
+                bias: false,
+            },
+            vec![a, w],
+            meta("c", vec![1, 4, 4, 8]),
+        );
+        g.outputs.push(c);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.param_count(), 8 * 27);
+    }
+
+    #[test]
+    fn validate_catches_bad_const() {
+        let mut g = Graph::new("t");
+        let w = g.push(Op::Const, vec![], meta("w", vec![4]));
+        g.weights.insert(w, WeightData::F32(vec![0.0; 3])); // wrong len
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_forward_reference() {
+        let mut g = Graph::new("t");
+        // Manually construct a node referencing a later tensor.
+        g.nodes.push(Node {
+            id: 0,
+            op: Op::Reshape,
+            inputs: vec![1],
+            output: meta("x", vec![1]),
+        });
+        g.nodes.push(Node { id: 1, op: Op::Input, inputs: vec![], output: meta("y", vec![1]) });
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn gops_counts_conv_macs() {
+        let mut g = Graph::new("t");
+        let a = g.push(Op::Input, vec![], meta("a", vec![1, 10, 10, 16]));
+        let w = g.push(Op::Const, vec![], meta("w", vec![32, 3, 3, 16]));
+        g.weights.insert(w, WeightData::F32(vec![0.0; 32 * 9 * 16]));
+        let _c = g.push(
+            Op::Conv2d {
+                out_channels: 32,
+                kernel: 3,
+                stride: 1,
+                padding: crate::ir::PaddingMode::Same,
+                activation: crate::ir::ActivationKind::None,
+                bias: false,
+            },
+            vec![a, w],
+            meta("c", vec![1, 10, 10, 32]),
+        );
+        // 10*10 spatial * 32 oc * 3*3*16 * 2
+        let expect = (100 * 32 * 9 * 16 * 2) as f64 / 1e9;
+        assert!((g.gops() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn consumers_tracks_fanout() {
+        let mut g = Graph::new("t");
+        let a = g.push(Op::Input, vec![], meta("a", vec![1, 4, 4, 8]));
+        let p1 = g.push(
+            Op::MaxPool2d { kernel: 2, stride: 2, padding: crate::ir::PaddingMode::Valid },
+            vec![a],
+            meta("p1", vec![1, 2, 2, 8]),
+        );
+        let p2 = g.push(Op::Upsample { factor: 2, mode: Default::default() }, vec![a], meta("p2", vec![1, 8, 8, 8]));
+        let cons = g.consumers();
+        assert_eq!(cons[a], vec![p1, p2]);
+    }
+}

@@ -1,0 +1,640 @@
+//! Reference graph interpreter (float and quantized-int8 execution).
+//!
+//! Plays the role of the TVM runtime in the paper's workflow: executes IR
+//! graphs directly so the pass pipeline (quantization calibration, pruning
+//! evaluation, framework-conversion validation — Table I, Figures 3/4) can
+//! measure real accuracy. The int8 path mirrors Gemmini's arithmetic
+//! exactly: int8 × int8 → int32 accumulate, single f32 (or f16-rounded)
+//! requantization multiplier, ReLU clamped in the quantized domain.
+
+use std::collections::HashMap;
+
+use super::dtype::DType;
+use super::graph::{Graph, NodeId, WeightData};
+use super::op::{ActivationKind, BinaryKind, Op};
+use super::tensor::QuantParams;
+
+/// A runtime tensor: f32 storage with NHWC/flat shapes. Quantized tensors
+/// keep their int8 payload alongside the dequantized view so int8 chains
+/// stay bit-exact.
+#[derive(Debug, Clone)]
+pub struct Value {
+    pub shape: Vec<usize>,
+    pub f: Vec<f32>,
+    /// Present when this value is a quantized tensor.
+    pub q: Option<(Vec<i8>, QuantParams)>,
+}
+
+impl Value {
+    pub fn new(shape: Vec<usize>, f: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), f.len());
+        Self { shape, f, q: None }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.f.len()
+    }
+}
+
+/// Interpreter over a graph. Holds no state between calls except the graph
+/// and pre-quantized weights cache.
+pub struct Interpreter<'g> {
+    pub graph: &'g Graph,
+}
+
+impl<'g> Interpreter<'g> {
+    pub fn new(graph: &'g Graph) -> Self {
+        Self { graph }
+    }
+
+    /// Run the graph on the given inputs (one per graph input, NHWC f32).
+    /// Returns the output values in graph-output order.
+    pub fn run(&self, inputs: &[Value]) -> Vec<Value> {
+        assert_eq!(inputs.len(), self.graph.inputs.len(), "input arity mismatch");
+        let mut env: HashMap<NodeId, Value> = HashMap::new();
+        for (i, &id) in self.graph.inputs.iter().enumerate() {
+            env.insert(id, inputs[i].clone());
+        }
+        for n in &self.graph.nodes {
+            if env.contains_key(&n.id) {
+                continue; // graph input
+            }
+            let v = self.quantize_if_int8(n.id, self.eval(n.id, &env));
+            env.insert(n.id, v);
+        }
+        self.graph.outputs.iter().map(|o| env[o].clone()).collect()
+    }
+
+    /// Run and also record every intermediate activation's (min, max) —
+    /// the calibration pass for post-training quantization.
+    pub fn run_calibrated(&self, inputs: &[Value]) -> (Vec<Value>, HashMap<NodeId, (f32, f32)>) {
+        let mut env: HashMap<NodeId, Value> = HashMap::new();
+        let mut ranges = HashMap::new();
+        for (i, &id) in self.graph.inputs.iter().enumerate() {
+            env.insert(id, inputs[i].clone());
+        }
+        for n in &self.graph.nodes {
+            if !env.contains_key(&n.id) {
+                let v = self.quantize_if_int8(n.id, self.eval(n.id, &env));
+                env.insert(n.id, v);
+            }
+            let v = &env[&n.id];
+            if !v.f.is_empty() {
+                let mn = v.f.iter().copied().fold(f32::INFINITY, f32::min);
+                let mx = v.f.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                ranges.insert(n.id, (mn, mx));
+            }
+        }
+        (self.graph.outputs.iter().map(|o| env[o].clone()).collect(), ranges)
+    }
+
+    /// Int8-region shuffle ops (pool/upsample/concat/reshape) produce exact
+    /// int8-grid values; attach the quantized payload so downstream int8
+    /// convs stay bit-exact. Concat with differing input scales requantizes
+    /// to the node's own scale — exactly what the deployed graph does.
+    fn quantize_if_int8(&self, id: NodeId, mut v: Value) -> Value {
+        let n = self.graph.node(id);
+        if v.q.is_none() && n.output.dtype == DType::Int8 {
+            if let Some(qp) = n.output.quant {
+                let q: Vec<i8> = v.f.iter().map(|&x| qp.quantize(x)).collect();
+                v.f = q.iter().map(|&x| qp.dequantize(x)).collect();
+                v.q = Some((q, qp));
+            }
+        }
+        v
+    }
+
+    fn weights_f32(&self, id: NodeId) -> Vec<f32> {
+        match &self.graph.weights[&id] {
+            WeightData::F32(v) => v.clone(),
+            WeightData::I8(v) => {
+                let q = self.graph.node(id).output.quant.expect("int8 weight without quant");
+                v.iter().map(|&x| q.dequantize(x)).collect()
+            }
+            WeightData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    fn eval(&self, id: NodeId, env: &HashMap<NodeId, Value>) -> Value {
+        let n = self.graph.node(id);
+        let out_shape = n.output.shape.clone();
+        match &n.op {
+            Op::Input => panic!("unbound input {id}"),
+            Op::Const => {
+                let f = self.weights_f32(id);
+                let mut v = Value::new(out_shape, f);
+                if let (WeightData::I8(q), Some(qp)) =
+                    (&self.graph.weights[&id], n.output.quant)
+                {
+                    v.q = Some((q.clone(), qp));
+                }
+                v
+            }
+            Op::Conv2d { kernel, stride, padding, activation, bias, .. } => {
+                let x = &env[&n.inputs[0]];
+                let w = &env[&n.inputs[1]];
+                let b = if *bias { Some(&env[&n.inputs[2]]) } else { None };
+                let quantized = n.output.dtype == DType::Int8;
+                if quantized {
+                    self.conv_int8(n.id, x, w, b, *kernel, *stride, padding.begin(*kernel), *activation, &out_shape)
+                } else {
+                    conv_f32(x, w, b, *kernel, *stride, padding.begin(*kernel), *activation, &out_shape)
+                }
+            }
+            Op::Dense { activation, bias, .. } => {
+                let x = &env[&n.inputs[0]];
+                let w = &env[&n.inputs[1]];
+                let b = if *bias { Some(&env[&n.inputs[2]]) } else { None };
+                dense_f32(x, w, b, *activation, &out_shape)
+            }
+            Op::MaxPool2d { kernel, stride, .. } => {
+                let x = &env[&n.inputs[0]];
+                maxpool_f32(x, *kernel, *stride, &out_shape)
+            }
+            Op::Upsample { factor, mode } => upsample_f32(&env[&n.inputs[0]], *factor, *mode, &out_shape),
+            Op::Concat => {
+                let vals: Vec<&Value> = n.inputs.iter().map(|i| &env[i]).collect();
+                concat_channels(&vals, &out_shape)
+            }
+            Op::Activation { kind } => {
+                let x = &env[&n.inputs[0]];
+                Value::new(out_shape, x.f.iter().map(|&v| kind.apply(v)).collect())
+            }
+            Op::Quantize => {
+                let x = &env[&n.inputs[0]];
+                let qp = n.output.quant.expect("quantize without params");
+                let q: Vec<i8> = x.f.iter().map(|&v| qp.quantize(v)).collect();
+                let f: Vec<f32> = q.iter().map(|&v| qp.dequantize(v)).collect();
+                Value { shape: out_shape, f, q: Some((q, qp)) }
+            }
+            Op::Dequantize => {
+                let x = &env[&n.inputs[0]];
+                Value::new(out_shape, x.f.clone())
+            }
+            Op::Binary { kind } => {
+                let a = &env[&n.inputs[0]];
+                let b = &env[&n.inputs[1]];
+                let f = a
+                    .f
+                    .iter()
+                    .zip(&b.f)
+                    .map(|(&x, &y)| match kind {
+                        BinaryKind::Add => x + y,
+                        BinaryKind::Mul => x * y,
+                        BinaryKind::Sub => x - y,
+                    })
+                    .collect();
+                Value::new(out_shape, f)
+            }
+            Op::Reshape => {
+                let x = &env[&n.inputs[0]];
+                Value::new(out_shape, x.f.clone())
+            }
+            Op::Transpose { perm } => transpose(&env[&n.inputs[0]], perm, &out_shape),
+            Op::BoxDecode { num_anchors, num_classes } => {
+                box_decode(&env[&n.inputs[0]], *num_anchors, *num_classes, &out_shape)
+            }
+        }
+    }
+
+    /// Quantized conv: int8 inputs/weights, int32 accumulate, requantize
+    /// with the layer's output scale (Gemmini mvout semantics).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_int8(
+        &self,
+        id: NodeId,
+        x: &Value,
+        w: &Value,
+        b: Option<&Value>,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        act: ActivationKind,
+        out_shape: &[usize],
+    ) -> Value {
+        let (xq, xqp) = x.q.as_ref().expect("int8 conv needs quantized input");
+        let (wq, wqp) = w.q.as_ref().expect("int8 conv needs quantized weights");
+        let oqp = self.graph.node(id).output.quant.expect("int8 conv needs output quant");
+        let (h, wi, ic) = (x.shape[1], x.shape[2], x.shape[3]);
+        let (oh, ow, oc) = (out_shape[1], out_shape[2], out_shape[3]);
+        // bias is stored as f32; fold to int32 in the conv's accumulator
+        // scale (x_scale * w_scale), as TFLite/Gemmini do.
+        let acc_scale = xqp.effective_scale() * wqp.effective_scale();
+        let bias_i32: Vec<i32> = match b {
+            Some(bv) => bv.f.iter().map(|&v| (v / acc_scale).round() as i32).collect(),
+            None => vec![0; oc],
+        };
+        let requant = acc_scale / oqp.effective_scale();
+        // TVM lowers requantize to a fixed-point multiply: q31 multiplier +
+        // rounding right-shift. Bit-exact differences vs the float path are
+        // what the paper's TFLite→TVM column measures.
+        let fixed_point = self.graph.requant_fixed_point;
+        let (q31_mult, q31_shift) = to_q31(requant);
+        let q6 = (6.0 / oqp.effective_scale()).round().clamp(0.0, 127.0) as i32;
+        let mut qout = vec![0i8; oh * ow * oc];
+        let mut fout = vec![0f32; oh * ow * oc];
+        let xzp = xqp.zero_point;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for n_ in 0..oc {
+                    let mut acc: i32 = bias_i32[n_];
+                    for kh in 0..kernel {
+                        let iy = (oy * stride + kh) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kw in 0..kernel {
+                            let ix = (ox * stride + kw) as isize - pad as isize;
+                            if ix < 0 || ix >= wi as isize {
+                                continue;
+                            }
+                            let xbase = ((iy as usize) * wi + ix as usize) * ic;
+                            let wbase = ((n_ * kernel + kh) * kernel + kw) * ic;
+                            for c in 0..ic {
+                                let xv = xq[xbase + c] as i32 - xzp;
+                                let wv = wq[wbase + c] as i32;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    let scaled = if fixed_point {
+                        fixed_point_mul(acc, q31_mult, q31_shift)
+                    } else {
+                        (acc as f32 * requant).round() as i32
+                    };
+                    let qv = match act {
+                        ActivationKind::Relu6 => scaled.clamp(0, q6),
+                        ActivationKind::Relu => scaled.clamp(0, 127),
+                        _ => scaled.clamp(-128, 127),
+                    } as i8;
+                    let idx = (oy * ow + ox) * oc + n_;
+                    qout[idx] = qv;
+                    fout[idx] = oqp.dequantize(qv);
+                }
+            }
+        }
+        Value { shape: out_shape.to_vec(), f: fout, q: Some((qout, oqp)) }
+    }
+}
+
+/// Decompose a positive real multiplier into (q31 mantissa, right shift):
+/// `x ≈ m · 2^-31 · 2^shift` with `m` in `[2^30, 2^31)`.
+fn to_q31(x: f32) -> (i64, i32) {
+    if x <= 0.0 {
+        return (0, 0);
+    }
+    let mut shift = 0i32;
+    let mut v = x as f64;
+    while v < 0.5 {
+        v *= 2.0;
+        shift -= 1;
+    }
+    while v >= 1.0 {
+        v /= 2.0;
+        shift += 1;
+    }
+    ((v * (1i64 << 31) as f64).round() as i64, shift)
+}
+
+/// TVM-style saturating rounding doubling-free fixed-point multiply.
+fn fixed_point_mul(acc: i32, m: i64, shift: i32) -> i32 {
+    let prod = acc as i64 * m; // fits in i64 for |acc| < 2^31
+    let total_shift = 31 - shift;
+    if total_shift <= 0 {
+        return (prod << (-total_shift)).clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+    }
+    let round = 1i64 << (total_shift - 1);
+    ((prod + round) >> total_shift) as i32
+}
+
+// ---- float reference kernels ----
+
+#[allow(clippy::too_many_arguments)]
+fn conv_f32(
+    x: &Value,
+    w: &Value,
+    b: Option<&Value>,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+    act: ActivationKind,
+    out_shape: &[usize],
+) -> Value {
+    let (h, wi, ic) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow, oc) = (out_shape[1], out_shape[2], out_shape[3]);
+    let mut out = vec![0f32; oh * ow * oc];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for n in 0..oc {
+                let mut acc = b.map(|bv| bv.f[n]).unwrap_or(0.0);
+                for kh in 0..kernel {
+                    let iy = (oy * stride + kh) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kw in 0..kernel {
+                        let ix = (ox * stride + kw) as isize - pad as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        let xbase = ((iy as usize) * wi + ix as usize) * ic;
+                        let wbase = ((n * kernel + kh) * kernel + kw) * ic;
+                        for c in 0..ic {
+                            acc += x.f[xbase + c] * w.f[wbase + c];
+                        }
+                    }
+                }
+                out[(oy * ow + ox) * oc + n] = act.apply(acc);
+            }
+        }
+    }
+    Value::new(out_shape.to_vec(), out)
+}
+
+fn dense_f32(
+    x: &Value,
+    w: &Value,
+    b: Option<&Value>,
+    act: ActivationKind,
+    out_shape: &[usize],
+) -> Value {
+    let batch = x.shape[0];
+    let inf = x.numel() / batch;
+    let outf = out_shape[1];
+    let mut out = vec![0f32; batch * outf];
+    for bi in 0..batch {
+        for o in 0..outf {
+            let mut acc = b.map(|bv| bv.f[o]).unwrap_or(0.0);
+            for i in 0..inf {
+                acc += x.f[bi * inf + i] * w.f[o * inf + i];
+            }
+            out[bi * outf + o] = act.apply(acc);
+        }
+    }
+    Value::new(out_shape.to_vec(), out)
+}
+
+fn maxpool_f32(x: &Value, kernel: usize, stride: usize, out_shape: &[usize]) -> Value {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (out_shape[1], out_shape[2]);
+    let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for kh in 0..kernel {
+                for kw in 0..kernel {
+                    let iy = oy * stride + kh;
+                    let ix = ox * stride + kw;
+                    if iy >= h || ix >= w {
+                        continue;
+                    }
+                    for ch in 0..c {
+                        let v = x.f[(iy * w + ix) * c + ch];
+                        let o = &mut out[(oy * ow + ox) * c + ch];
+                        if v > *o {
+                            *o = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Value::new(out_shape.to_vec(), out)
+}
+
+fn upsample_f32(x: &Value, factor: usize, mode: crate::ir::op::UpsampleMode, out_shape: &[usize]) -> Value {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (out_shape[1], out_shape[2]);
+    let mut out = vec![0f32; oh * ow * c];
+    // ONNX Resize half-pixel nearest: src = round_half_even((d+0.5)/f - 0.5).
+    let half_pixel = |d: usize| -> usize {
+        let s = (d as f32 + 0.5) / factor as f32 - 0.5;
+        let r = s.round_ties_even();
+        (r.max(0.0)) as usize
+    };
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let (iy, ix) = match mode {
+                crate::ir::op::UpsampleMode::Replicate => (oy / factor, ox / factor),
+                crate::ir::op::UpsampleMode::OnnxHalfPixel => (half_pixel(oy), half_pixel(ox)),
+            };
+            let iy = iy.min(h - 1);
+            let ix = ix.min(w - 1);
+            for ch in 0..c {
+                out[(oy * ow + ox) * c + ch] = x.f[(iy * w + ix) * c + ch];
+            }
+        }
+    }
+    Value::new(out_shape.to_vec(), out)
+}
+
+fn concat_channels(vals: &[&Value], out_shape: &[usize]) -> Value {
+    let (h, w) = (out_shape[1], out_shape[2]);
+    let oc = out_shape[3];
+    let mut out = vec![0f32; h * w * oc];
+    for y in 0..h {
+        for x in 0..w {
+            let mut co = 0usize;
+            for v in vals {
+                let c = v.shape[3];
+                let src = (y * w + x) * c;
+                let dst = (y * w + x) * oc + co;
+                out[dst..dst + c].copy_from_slice(&v.f[src..src + c]);
+                co += c;
+            }
+        }
+    }
+    Value::new(out_shape.to_vec(), out)
+}
+
+fn transpose(x: &Value, perm: &[usize], out_shape: &[usize]) -> Value {
+    assert_eq!(x.shape.len(), perm.len());
+    let in_shape = &x.shape;
+    let rank = perm.len();
+    let mut in_strides = vec![1usize; rank];
+    for i in (0..rank - 1).rev() {
+        in_strides[i] = in_strides[i + 1] * in_shape[i + 1];
+    }
+    let mut out = vec![0f32; x.numel()];
+    let mut idx = vec![0usize; rank];
+    for (o, slot) in out.iter_mut().enumerate() {
+        // decompose o into out coords
+        let mut rem = o;
+        for i in 0..rank {
+            let stride: usize = out_shape[i + 1..].iter().product();
+            idx[i] = rem / stride;
+            rem %= stride;
+        }
+        let mut src = 0usize;
+        for i in 0..rank {
+            src += idx[i] * in_strides[perm[i]];
+        }
+        *slot = x.f[src];
+    }
+    Value::new(out_shape.to_vec(), out)
+}
+
+/// Decode raw YOLO-style head output into candidate boxes:
+/// out[cell·anchor] = [cx, cy, w, h, obj, class scores…], all after
+/// sigmoid/exp transforms. Anchor sizes are a fixed ladder per head.
+fn box_decode(x: &Value, num_anchors: usize, num_classes: usize, out_shape: &[usize]) -> Value {
+    let (gh, gw, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let per = 5 + num_classes;
+    assert!(c >= num_anchors * per, "head channels {c} < {num_anchors}×{per}");
+    let sigmoid = |v: f32| 1.0 / (1.0 + (-v).exp());
+    let mut out = vec![0f32; out_shape.iter().product()];
+    let mut o = 0usize;
+    for gy in 0..gh {
+        for gx in 0..gw {
+            for a in 0..num_anchors {
+                let base = (gy * gw + gx) * c + a * per;
+                let anchor = 2.5 * (a + 1) as f32; // anchor ladder in grid units
+                let tx = x.f[base];
+                let ty = x.f[base + 1];
+                let tw = x.f[base + 2];
+                let th = x.f[base + 3];
+                let tobj = x.f[base + 4];
+                out[o] = (gx as f32 + sigmoid(tx)) / gw as f32; // cx in [0,1]
+                out[o + 1] = (gy as f32 + sigmoid(ty)) / gh as f32;
+                out[o + 2] = anchor * (0.25 + sigmoid(tw)) / gw as f32;
+                out[o + 3] = anchor * (0.25 + sigmoid(th)) / gh as f32;
+                out[o + 4] = sigmoid(tobj);
+                for cl in 0..num_classes {
+                    out[o + 5 + cl] = sigmoid(x.f[base + 5 + cl]);
+                }
+                o += per;
+            }
+        }
+    }
+    Value::new(out_shape.to_vec(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{GraphBuilder, PaddingMode};
+
+    #[test]
+    fn conv_identity_kernel() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 3, 3, 1]);
+        // 1×1 conv with weight 2.0: output = 2x.
+        let c = b.conv2d(x, 1, 1, 1, PaddingMode::Valid, ActivationKind::None, Some(vec![2.0]), None);
+        let g = b.finish(&[c]);
+        let out = Interpreter::new(&g)
+            .run(&[Value::new(vec![1, 3, 3, 1], (1..=9).map(|v| v as f32).collect())]);
+        assert_eq!(out[0].f, (1..=9).map(|v| 2.0 * v as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn conv_3x3_sum_kernel_with_padding() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 3, 3, 1]);
+        let c = b.conv2d(x, 1, 3, 1, PaddingMode::Same, ActivationKind::None, Some(vec![1.0; 9]), None);
+        let g = b.finish(&[c]);
+        let out =
+            Interpreter::new(&g).run(&[Value::new(vec![1, 3, 3, 1], vec![1.0; 9])]);
+        // Center pixel sees all 9 ones; corner sees 4.
+        assert_eq!(out[0].f[4], 9.0);
+        assert_eq!(out[0].f[0], 4.0);
+    }
+
+    #[test]
+    fn conv_bias_and_relu6() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 1, 1, 1]);
+        let c = b.conv2d(
+            x,
+            2,
+            1,
+            1,
+            PaddingMode::Valid,
+            ActivationKind::Relu6,
+            Some(vec![1.0, -1.0]),
+            Some(vec![10.0, 0.5]),
+        );
+        let g = b.finish(&[c]);
+        let out = Interpreter::new(&g).run(&[Value::new(vec![1, 1, 1, 1], vec![3.0])]);
+        assert_eq!(out[0].f, vec![6.0, 0.0]); // 13→6 clamp, -2.5→0
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 2, 2, 1]);
+        let p = b.maxpool(x, 2, 2);
+        let g = b.finish(&[p]);
+        let out = Interpreter::new(&g)
+            .run(&[Value::new(vec![1, 2, 2, 1], vec![1.0, 5.0, 3.0, 2.0])]);
+        assert_eq!(out[0].f, vec![5.0]);
+    }
+
+    #[test]
+    fn upsample_replicates() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 1, 2, 1]);
+        let u = b.upsample(x, 2);
+        let g = b.finish(&[u]);
+        let out = Interpreter::new(&g).run(&[Value::new(vec![1, 1, 2, 1], vec![1.0, 2.0])]);
+        assert_eq!(out[0].f, vec![1.0, 1.0, 2.0, 2.0, 1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn concat_interleaves_channels() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 1, 2, 1]);
+        let y = b.input("y", vec![1, 1, 2, 1]);
+        let c = b.concat(&[x, y]);
+        let g = b.finish(&[c]);
+        let out = Interpreter::new(&g).run(&[
+            Value::new(vec![1, 1, 2, 1], vec![1.0, 2.0]),
+            Value::new(vec![1, 1, 2, 1], vec![10.0, 20.0]),
+        ]);
+        assert_eq!(out[0].f, vec![1.0, 10.0, 2.0, 20.0]);
+    }
+
+    #[test]
+    fn calibration_collects_ranges() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 2, 2, 1]);
+        let c = b.conv2d(x, 1, 1, 1, PaddingMode::Valid, ActivationKind::Relu, Some(vec![-1.0]), None);
+        let g = b.finish(&[c]);
+        let (_, ranges) = Interpreter::new(&g)
+            .run_calibrated(&[Value::new(vec![1, 2, 2, 1], vec![1.0, -2.0, 3.0, 0.0])]);
+        let (mn, mx) = ranges[&g.inputs[0]];
+        assert_eq!((mn, mx), (-2.0, 3.0));
+        let (omn, omx) = ranges[&g.outputs[0]];
+        assert_eq!((omn, omx), (0.0, 2.0)); // relu(-x)
+    }
+
+    #[test]
+    fn box_decode_outputs_normalized() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 2, 2, 2 * 9]);
+        let d = b.box_decode(x, 2, 4);
+        let g = b.finish(&[d]);
+        let out = Interpreter::new(&g)
+            .run(&[Value::new(vec![1, 2, 2, 18], vec![0.0; 2 * 2 * 18])]);
+        // All sigmoid(0) = 0.5; cx of cell (0,0) = 0.5/2 = 0.25.
+        assert_eq!(out[0].shape, vec![1, 8, 9]);
+        assert!((out[0].f[0] - 0.25).abs() < 1e-6);
+        assert!((out[0].f[4] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transpose_nhwc_to_nchw() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 1, 2, 3]);
+        let shape = vec![1, 3, 1, 2];
+        let name = "tr".to_string();
+        let t = b.graph.push(
+            Op::Transpose { perm: vec![0, 3, 1, 2] },
+            vec![x],
+            crate::ir::TensorMeta::new(name, shape, crate::ir::DType::Float32, crate::ir::Layout::NCHW),
+        );
+        let g = b.finish(&[t]);
+        let out = Interpreter::new(&g)
+            .run(&[Value::new(vec![1, 1, 2, 3], vec![1., 2., 3., 4., 5., 6.])]);
+        // NHWC [[1,2,3],[4,5,6]] -> NCHW channels [[1,4],[2,5],[3,6]]
+        assert_eq!(out[0].f, vec![1., 4., 2., 5., 3., 6.]);
+    }
+}

@@ -1,0 +1,77 @@
+//! Tensor data layouts.
+//!
+//! The paper's conversion chain (Section IV-B4) exists partly to move the
+//! model from NCHW (PyTorch/ONNX) to NHWC (TFLite / Gemmini's expected
+//! activation layout). We model layouts explicitly so the
+//! [`crate::passes::layout_convert`] pass has something real to do.
+
+
+/// Activation tensor layout for 4-D tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Batch, channels, height, width — PyTorch / ONNX convention.
+    NCHW,
+    /// Batch, height, width, channels — TFLite / Gemmini convention.
+    NHWC,
+    /// Non-spatial tensors (weights of dense layers, 1-D/2-D tensors).
+    Flat,
+}
+
+impl Layout {
+    /// Permutation mapping logical NCHW axes to this layout's axis order.
+    /// Returns indices such that `shape_in_layout[i] = nchw_shape[perm[i]]`.
+    pub fn perm_from_nchw(self) -> [usize; 4] {
+        match self {
+            Layout::NCHW => [0, 1, 2, 3],
+            Layout::NHWC => [0, 2, 3, 1],
+            Layout::Flat => [0, 1, 2, 3],
+        }
+    }
+
+    /// Reorder a shape given in NCHW into this layout.
+    pub fn shape_from_nchw(self, nchw: [usize; 4]) -> [usize; 4] {
+        let p = self.perm_from_nchw();
+        [nchw[p[0]], nchw[p[1]], nchw[p[2]], nchw[p[3]]]
+    }
+
+    /// Recover an NCHW shape from a shape given in this layout.
+    pub fn shape_to_nchw(self, shape: [usize; 4]) -> [usize; 4] {
+        let p = self.perm_from_nchw();
+        let mut out = [0usize; 4];
+        for (i, &axis) in p.iter().enumerate() {
+            out[axis] = shape[i];
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Layout::NCHW => "NCHW",
+            Layout::NHWC => "NHWC",
+            Layout::Flat => "flat",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nhwc_shape_roundtrip() {
+        let nchw = [1, 32, 480, 640];
+        let nhwc = Layout::NHWC.shape_from_nchw(nchw);
+        assert_eq!(nhwc, [1, 480, 640, 32]);
+        assert_eq!(Layout::NHWC.shape_to_nchw(nhwc), nchw);
+    }
+
+    #[test]
+    fn nchw_identity() {
+        let s = [2, 3, 4, 5];
+        assert_eq!(Layout::NCHW.shape_from_nchw(s), s);
+        assert_eq!(Layout::NCHW.shape_to_nchw(s), s);
+    }
+}

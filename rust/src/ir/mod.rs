@@ -1,0 +1,26 @@
+//! Neural-network graph IR.
+//!
+//! This is the substrate the deployment workflow (Section IV of the paper)
+//! operates on: an operator graph with typed tensors, explicit layouts and
+//! quantization parameters. It plays the role TVM's Relay graph plays in the
+//! paper: the pass pipeline in [`crate::passes`] rewrites it, the partitioner
+//! in [`crate::partition`] splits it by dtype, and the scheduler in
+//! [`crate::scheduler`] lowers its conv/pool/resize/concat nodes to Gemmini
+//! instruction streams.
+
+pub mod builder;
+pub mod dtype;
+pub mod graph;
+pub mod interp;
+pub mod layout;
+pub mod op;
+pub mod tensor;
+pub mod topo;
+
+pub use builder::GraphBuilder;
+pub use dtype::DType;
+pub use graph::{Graph, Node, NodeId, TensorId};
+pub use interp::{Interpreter, Value};
+pub use layout::Layout;
+pub use op::{ActivationKind, Op, PaddingMode, UpsampleMode};
+pub use tensor::{QuantParams, TensorMeta};

@@ -1,0 +1,273 @@
+//! Operator set.
+//!
+//! Covers everything YOLOv7-tiny needs (Section IV-A): conv, maxpool,
+//! resize/upsample, concat and dense layers — the set the paper's expanded
+//! TVM integration offloads via RISC-type instructions (Section IV-C) —
+//! plus the float ops of the NMS-preparation tail and the explicit
+//! quantize/dequantize boundary ops the partitioner keys on.
+
+
+/// Activation functions. Gemmini can only fuse ReLU-family activations
+/// (Section IV-B2: LeakyReLU is *not* supported and would fall back to the
+/// scalar CPU, hence the paper's ReLU6 replacement).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ActivationKind {
+    None,
+    Relu,
+    Relu6,
+    /// LeakyReLU(alpha) — unsupported by the accelerator; the activation
+    /// pass replaces it.
+    LeakyRelu(f32),
+    /// SiLU/Swish — present in full YOLOv7; unsupported by the accelerator.
+    Silu,
+    Sigmoid,
+}
+
+impl ActivationKind {
+    /// Whether Gemmini can apply this activation inside the accumulator
+    /// read-out path (i.e. for free, fused with the layer).
+    pub fn accelerator_fusable(self) -> bool {
+        matches!(self, ActivationKind::None | ActivationKind::Relu | ActivationKind::Relu6)
+    }
+
+    /// Apply the activation to a real value (reference semantics used by
+    /// the interpreter and tests).
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            ActivationKind::None => x,
+            ActivationKind::Relu => x.max(0.0),
+            ActivationKind::Relu6 => x.clamp(0.0, 6.0),
+            ActivationKind::LeakyRelu(a) => {
+                if x >= 0.0 {
+                    x
+                } else {
+                    a * x
+                }
+            }
+            ActivationKind::Silu => x / (1.0 + (-x).exp()),
+            ActivationKind::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        }
+    }
+}
+
+/// Spatial padding specification for conv/pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaddingMode {
+    /// Explicit symmetric padding (pixels on each side).
+    Explicit(usize),
+    /// SAME padding, split symmetrically (PyTorch convention).
+    Same,
+    /// SAME padding with the asymmetric begin/end split some exporters
+    /// emit for strided convs (all `kernel-1` pixels on the end side).
+    /// Output shape matches `Same`; the sampling grid shifts — the
+    /// operator-reimplementation difference behind the paper's
+    /// PyTorch→ONNX mAP drop (Table I).
+    SameAsym,
+    /// No padding.
+    Valid,
+}
+
+impl PaddingMode {
+    /// Total padding across both sides of one spatial axis.
+    pub fn total(self, kernel: usize) -> usize {
+        match self {
+            PaddingMode::Explicit(p) => 2 * p,
+            PaddingMode::Same | PaddingMode::SameAsym => kernel - 1,
+            PaddingMode::Valid => 0,
+        }
+    }
+
+    /// Padding before the first pixel (the sampling offset).
+    pub fn begin(self, kernel: usize) -> usize {
+        match self {
+            PaddingMode::Explicit(p) => p,
+            PaddingMode::Same => kernel / 2,
+            PaddingMode::SameAsym => 0,
+            PaddingMode::Valid => 0,
+        }
+    }
+
+    /// Resolve to pad-per-side for a given kernel size (odd kernels).
+    /// Kept for symmetric callers (the Gemmini conv FSM).
+    pub fn resolve(self, kernel: usize) -> usize {
+        self.begin(kernel)
+    }
+}
+
+/// Nearest-neighbour sampling convention for `Upsample`.
+///
+/// PyTorch's `nn.Upsample(scale_factor=2)` replicates source pixels
+/// (`src = dst / 2`); ONNX `Resize` with the default half-pixel coordinate
+/// transform samples `src = round((dst + 0.5) / f - 0.5)`, which shifts the
+/// grid by half a pixel. The paper observes a small mAP drop at the
+/// PyTorch→ONNX step (Table I) caused by exactly this kind of operator
+/// re-implementation difference; the conversion pass flips this mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum UpsampleMode {
+    /// Pixel replication (PyTorch nearest).
+    #[default]
+    Replicate,
+    /// ONNX Resize half-pixel nearest (round-half-to-even).
+    OnnxHalfPixel,
+}
+
+/// Elementwise binary ops (float tail of the model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinaryKind {
+    Add,
+    Mul,
+    Sub,
+}
+
+/// Graph operators.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input,
+    /// Constant/weight tensor (payload lives out-of-band in `Graph::weights`).
+    Const,
+    /// 2-D convolution. Weights layout: `[out_c, kh, kw, in_c]` (HWIO-ish,
+    /// matching the NHWC activation layout Gemmini consumes).
+    Conv2d {
+        out_channels: usize,
+        kernel: usize,
+        stride: usize,
+        padding: PaddingMode,
+        /// Fused activation (post-bias).
+        activation: ActivationKind,
+        /// Whether a bias vector is present.
+        bias: bool,
+    },
+    /// Fully connected layer: `[out_features, in_features]` weights.
+    Dense { out_features: usize, activation: ActivationKind, bias: bool },
+    /// Max pooling.
+    MaxPool2d { kernel: usize, stride: usize, padding: PaddingMode },
+    /// Nearest-neighbour upsample by an integer factor (YOLO FPN path;
+    /// the "resize" layer the paper adds RISC-type support for).
+    Upsample { factor: usize, mode: UpsampleMode },
+    /// Channel-axis concatenation (the op that makes YOLOv7 pruning hard,
+    /// Section IV-B3).
+    Concat,
+    /// Standalone activation node (used before activation-fusion pass).
+    Activation { kind: ActivationKind },
+    /// float -> int8 quantize boundary.
+    Quantize,
+    /// int8 -> float dequantize boundary.
+    Dequantize,
+    /// Elementwise binary op (float tail).
+    Binary { kind: BinaryKind },
+    /// Reshape to the node's output shape.
+    Reshape,
+    /// Generic transpose (layout conversion materialization).
+    Transpose { perm: Vec<usize> },
+    /// Decode raw head outputs into box candidates (float tail; feeds NMS).
+    BoxDecode { num_anchors: usize, num_classes: usize },
+}
+
+impl Op {
+    /// Short mnemonic for reports and traces.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Const => "const",
+            Op::Conv2d { .. } => "conv2d",
+            Op::Dense { .. } => "dense",
+            Op::MaxPool2d { .. } => "maxpool2d",
+            Op::Upsample { .. } => "upsample",
+            Op::Concat => "concat",
+            Op::Activation { .. } => "activation",
+            Op::Quantize => "quantize",
+            Op::Dequantize => "dequantize",
+            Op::Binary { .. } => "binary",
+            Op::Reshape => "reshape",
+            Op::Transpose { .. } => "transpose",
+            Op::BoxDecode { .. } => "box_decode",
+        }
+    }
+
+    /// Whether the paper's expanded TVM integration can offload this op to
+    /// Gemmini (Section IV-C: convolutions, max pooling, resize, concat and
+    /// dense layers via RISC-type instructions).
+    pub fn accelerator_offloadable(&self) -> bool {
+        match self {
+            Op::Conv2d { activation, .. } | Op::Dense { activation, .. } => {
+                activation.accelerator_fusable()
+            }
+            Op::MaxPool2d { .. } | Op::Upsample { .. } | Op::Concat => true,
+            _ => false,
+        }
+    }
+
+    /// Whether this op is a compute-heavy tensor op (vs. a cheap shuffle).
+    pub fn is_heavy(&self) -> bool {
+        matches!(self, Op::Conv2d { .. } | Op::Dense { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaky_relu_not_fusable_relu6_is() {
+        assert!(!ActivationKind::LeakyRelu(0.1).accelerator_fusable());
+        assert!(!ActivationKind::Silu.accelerator_fusable());
+        assert!(ActivationKind::Relu6.accelerator_fusable());
+        assert!(ActivationKind::Relu.accelerator_fusable());
+    }
+
+    #[test]
+    fn activation_semantics() {
+        assert_eq!(ActivationKind::Relu.apply(-1.0), 0.0);
+        assert_eq!(ActivationKind::Relu6.apply(10.0), 6.0);
+        assert_eq!(ActivationKind::Relu6.apply(3.0), 3.0);
+        assert!((ActivationKind::LeakyRelu(0.1).apply(-2.0) + 0.2).abs() < 1e-6);
+        assert!((ActivationKind::Sigmoid.apply(0.0) - 0.5).abs() < 1e-6);
+        let s = ActivationKind::Silu.apply(1.0);
+        assert!((s - 1.0 / (1.0 + (-1.0f32).exp())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn padding_resolution() {
+        assert_eq!(PaddingMode::Same.resolve(3), 1);
+        assert_eq!(PaddingMode::Same.resolve(5), 2);
+        assert_eq!(PaddingMode::Valid.resolve(3), 0);
+        assert_eq!(PaddingMode::Explicit(2).resolve(3), 2);
+        // Asym keeps the output size (same total) but shifts sampling.
+        assert_eq!(PaddingMode::SameAsym.total(3), PaddingMode::Same.total(3));
+        assert_eq!(PaddingMode::SameAsym.begin(3), 0);
+        assert_eq!(PaddingMode::Same.begin(3), 1);
+    }
+
+    #[test]
+    fn conv_with_leaky_not_offloadable() {
+        let conv = Op::Conv2d {
+            out_channels: 32,
+            kernel: 3,
+            stride: 1,
+            padding: PaddingMode::Same,
+            activation: ActivationKind::LeakyRelu(0.1),
+            bias: true,
+        };
+        assert!(!conv.accelerator_offloadable());
+        let conv6 = Op::Conv2d {
+            out_channels: 32,
+            kernel: 3,
+            stride: 1,
+            padding: PaddingMode::Same,
+            activation: ActivationKind::Relu6,
+            bias: true,
+        };
+        assert!(conv6.accelerator_offloadable());
+    }
+
+    #[test]
+    fn offloadable_set_matches_paper() {
+        assert!(Op::MaxPool2d { kernel: 2, stride: 2, padding: PaddingMode::Valid }
+            .accelerator_offloadable());
+        assert!(Op::Upsample { factor: 2, mode: UpsampleMode::Replicate }.accelerator_offloadable());
+        assert!(Op::Concat.accelerator_offloadable());
+        assert!(!Op::Quantize.accelerator_offloadable());
+        assert!(!Op::BoxDecode { num_anchors: 3, num_classes: 8 }.accelerator_offloadable());
+    }
+}

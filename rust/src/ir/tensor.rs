@@ -1,0 +1,225 @@
+//! Tensor metadata: shape, dtype, layout, quantization parameters.
+
+
+use super::dtype::DType;
+use super::layout::Layout;
+
+/// Per-tensor quantization parameters (TFLite-style affine quantization,
+/// Section IV-B4: the paper deliberately chooses *per-tensor* over
+/// per-channel for ease of deployment on Gemmini).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Real value = scale * (quantized - zero_point).
+    pub scale: f32,
+    pub zero_point: i32,
+    /// Whether the scale is stored as fp16 in hardware (Section III-A:
+    /// we narrowed Gemmini's output-scaling module from fp32 to fp16).
+    pub fp16_scale: bool,
+}
+
+impl QuantParams {
+    pub fn new(scale: f32, zero_point: i32) -> Self {
+        Self { scale, zero_point, fp16_scale: false }
+    }
+
+    /// The scale as the hardware would apply it: optionally rounded through
+    /// fp16 (Section III-A optimization).
+    pub fn effective_scale(&self) -> f32 {
+        if self.fp16_scale {
+            f16_round(self.scale)
+        } else {
+            self.scale
+        }
+    }
+
+    /// Quantize a real value to int8 with this tensor's parameters.
+    pub fn quantize(&self, x: f32) -> i8 {
+        let q = (x / self.effective_scale()).round() as i32 + self.zero_point;
+        q.clamp(-128, 127) as i8
+    }
+
+    /// Dequantize an int8 value back to real.
+    pub fn dequantize(&self, q: i8) -> f32 {
+        self.effective_scale() * (q as i32 - self.zero_point) as f32
+    }
+}
+
+/// Round an f32 through IEEE binary16 and back (round-to-nearest-even).
+/// Used to model the fp16 output-scaling module.
+pub fn f16_round(x: f32) -> f32 {
+    // Convert f32 -> f16 bits -> f32 without external crates.
+    let bits = x.to_bits();
+    let sign = (bits >> 16) & 0x8000;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let mut frac = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN
+        let h = sign | 0x7c00 | if frac != 0 { 0x200 } else { 0 };
+        return f16_bits_to_f32(h as u16);
+    }
+    exp -= 127;
+    if exp > 15 {
+        return f16_bits_to_f32((sign | 0x7c00) as u16); // overflow -> inf
+    }
+    if exp >= -14 {
+        // Normal half. Round mantissa from 23 to 10 bits (RNE).
+        let shift = 13;
+        let round_bit = 1u32 << (shift - 1);
+        let sticky = frac & (round_bit - 1);
+        let mut h_frac = frac >> shift;
+        if (frac & round_bit) != 0 && (sticky != 0 || (h_frac & 1) != 0) {
+            h_frac += 1;
+        }
+        let mut h_exp = (exp + 15) as u32;
+        if h_frac == 0x400 {
+            h_frac = 0;
+            h_exp += 1;
+            if h_exp >= 0x1f {
+                return f16_bits_to_f32((sign | 0x7c00) as u16);
+            }
+        }
+        return f16_bits_to_f32((sign | (h_exp << 10) | h_frac) as u16);
+    }
+    // Subnormal half.
+    if exp < -24 {
+        return f16_bits_to_f32(sign as u16); // underflow -> signed zero
+    }
+    frac |= 0x0080_0000; // implicit leading 1
+    // m = frac24 * 2^(exp+1): drop (-1 - exp) bits (subnormal halves hold
+    // value m * 2^-24 with frac24 the 24-bit mantissa incl. implicit 1).
+    let shift = ((-1 - exp) as u32).min(31);
+    let round_bit = 1u32 << (shift - 1);
+    let sticky = frac & (round_bit - 1);
+    let mut h_frac = frac >> shift;
+    if (frac & round_bit) != 0 && (sticky != 0 || (h_frac & 1) != 0) {
+        h_frac += 1;
+    }
+    f16_bits_to_f32((sign | h_frac) as u16)
+}
+
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            f &= 0x3ff;
+            sign | (((127 - 15 + e + 2) as u32) << 23) | (f << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Static metadata for one tensor in the graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    /// Shape in the tensor's own layout.
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub layout: Layout,
+    /// Present iff dtype is an integer type produced by quantization.
+    pub quant: Option<QuantParams>,
+}
+
+impl TensorMeta {
+    pub fn new(name: impl Into<String>, shape: Vec<usize>, dtype: DType, layout: Layout) -> Self {
+        Self { name: name.into(), shape, dtype, layout, quant: None }
+    }
+
+    pub fn with_quant(mut self, q: QuantParams) -> Self {
+        self.quant = Some(q);
+        self
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Total size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_roundtrip_exact_grid() {
+        let q = QuantParams::new(0.5, 0);
+        assert_eq!(q.quantize(1.0), 2);
+        assert_eq!(q.dequantize(2), 1.0);
+        assert_eq!(q.quantize(100.0), 127); // saturates
+        assert_eq!(q.quantize(-100.0), -128);
+    }
+
+    #[test]
+    fn quant_zero_point_shift() {
+        let q = QuantParams::new(0.1, 10);
+        assert_eq!(q.quantize(0.0), 10);
+        assert!((q.dequantize(10)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f16_round_exact_values() {
+        // Values exactly representable in fp16 are unchanged.
+        for v in [0.0f32, 1.0, -2.5, 0.125, 65504.0] {
+            assert_eq!(f16_round(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_round_loses_precision() {
+        // 1/3 is not representable; fp16 has ~3 decimal digits.
+        let r = f16_round(1.0 / 3.0);
+        assert!(r != 1.0 / 3.0);
+        assert!((r - 1.0 / 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn f16_round_overflow_underflow() {
+        assert!(f16_round(1e6).is_infinite());
+        assert_eq!(f16_round(1e-10), 0.0);
+        assert_eq!(f16_round(-1e-10), -0.0);
+    }
+
+    #[test]
+    fn f16_subnormal() {
+        // Smallest positive fp16 subnormal is 2^-24 ≈ 5.96e-8.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(f16_round(tiny), tiny);
+    }
+
+    #[test]
+    fn fp16_scale_changes_effective_scale() {
+        let mut q = QuantParams::new(1.0 / 3.0, 0);
+        let full = q.effective_scale();
+        q.fp16_scale = true;
+        let half = q.effective_scale();
+        assert_ne!(full, half);
+        assert!((full - half).abs() / full < 1e-3); // small relative error
+    }
+
+    #[test]
+    fn tensor_meta_sizes() {
+        let t = TensorMeta::new("x", vec![1, 480, 480, 3], DType::Int8, Layout::NHWC);
+        assert_eq!(t.numel(), 480 * 480 * 3);
+        assert_eq!(t.size_bytes(), 480 * 480 * 3);
+    }
+}

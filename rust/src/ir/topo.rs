@@ -1,0 +1,151 @@
+//! Graph traversal utilities.
+//!
+//! The arena in [`super::graph::Graph`] is topological by construction, but
+//! passes that delete or bypass nodes need reachability and re-compaction.
+
+use std::collections::HashMap;
+
+use super::graph::{Graph, NodeId};
+use super::op::Op;
+
+/// Nodes reachable (backwards) from the graph outputs.
+pub fn live_set(g: &Graph) -> Vec<bool> {
+    let mut live = vec![false; g.nodes.len()];
+    let mut stack: Vec<NodeId> = g.outputs.clone();
+    while let Some(id) = stack.pop() {
+        if live[id] {
+            continue;
+        }
+        live[id] = true;
+        stack.extend(g.nodes[id].inputs.iter().copied());
+    }
+    live
+}
+
+/// Remove dead nodes (unreachable from outputs), re-indexing the arena.
+/// Returns the old->new id mapping.
+pub fn dce(g: &mut Graph) -> HashMap<NodeId, NodeId> {
+    let live = live_set(g);
+    let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+    let mut new_nodes = Vec::with_capacity(g.nodes.len());
+    for n in g.nodes.drain(..) {
+        if live[n.id] {
+            let new_id = new_nodes.len();
+            remap.insert(n.id, new_id);
+            let mut n = n;
+            n.id = new_id;
+            n.inputs = n.inputs.iter().map(|i| remap[i]).collect();
+            new_nodes.push(n);
+        }
+    }
+    g.nodes = new_nodes;
+    g.inputs.retain(|i| remap.contains_key(i));
+    for i in g.inputs.iter_mut() {
+        *i = remap[i];
+    }
+    for o in g.outputs.iter_mut() {
+        *o = remap[o];
+    }
+    g.weights = g
+        .weights
+        .drain()
+        .filter_map(|(k, v)| remap.get(&k).map(|&nk| (nk, v)))
+        .collect();
+    remap
+}
+
+/// Execution order of the compute nodes (skipping Input/Const), i.e. the
+/// order the coordinator dispatches layers.
+pub fn schedule_order(g: &Graph) -> Vec<NodeId> {
+    g.nodes
+        .iter()
+        .filter(|n| !matches!(n.op, Op::Input | Op::Const))
+        .map(|n| n.id)
+        .collect()
+}
+
+/// Depth (longest path from any graph input) per node — used by reports to
+/// show the critical path of the partitioned model.
+pub fn depths(g: &Graph) -> Vec<usize> {
+    let mut d = vec![0usize; g.nodes.len()];
+    for n in &g.nodes {
+        let max_in = n.inputs.iter().map(|&i| d[i] + 1).max().unwrap_or(0);
+        d[n.id] = max_in;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, Layout, TensorMeta};
+
+    fn meta(name: &str) -> TensorMeta {
+        TensorMeta::new(name, vec![1], DType::Float32, Layout::Flat)
+    }
+
+    fn chain(n: usize) -> Graph {
+        let mut g = Graph::new("chain");
+        let mut prev = g.push(Op::Input, vec![], meta("in"));
+        g.inputs.push(prev);
+        for i in 0..n {
+            prev = g.push(Op::Reshape, vec![prev], meta(&format!("r{i}")));
+        }
+        g.outputs.push(prev);
+        g
+    }
+
+    #[test]
+    fn live_set_marks_chain() {
+        let g = chain(3);
+        assert!(live_set(&g).iter().all(|&b| b));
+    }
+
+    #[test]
+    fn dce_removes_dangling() {
+        let mut g = chain(2);
+        // Add a dead branch.
+        let dead = g.push(Op::Reshape, vec![g.inputs[0]], meta("dead"));
+        let _dead2 = g.push(Op::Reshape, vec![dead], meta("dead2"));
+        assert_eq!(g.nodes.len(), 5);
+        dce(&mut g);
+        assert_eq!(g.nodes.len(), 3);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn dce_preserves_weights() {
+        let mut g = Graph::new("t");
+        let a = g.push(Op::Input, vec![], meta("a"));
+        g.inputs.push(a);
+        let w = g.push(Op::Const, vec![], meta("w"));
+        g.weights.insert(w, crate::ir::graph::WeightData::F32(vec![1.0]));
+        let d = g.push(
+            Op::Dense { out_features: 1, activation: crate::ir::ActivationKind::None, bias: false },
+            vec![a, w],
+            meta("d"),
+        );
+        g.outputs.push(d);
+        // dead const
+        let dw = g.push(Op::Const, vec![], meta("dw"));
+        g.weights.insert(dw, crate::ir::graph::WeightData::F32(vec![2.0]));
+        dce(&mut g);
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.weights.len(), 1);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn depths_longest_path() {
+        let g = chain(4);
+        let d = depths(&g);
+        assert_eq!(d[g.outputs[0]], 4);
+    }
+
+    #[test]
+    fn schedule_order_skips_inputs_consts() {
+        let g = chain(3);
+        let order = schedule_order(&g);
+        assert_eq!(order.len(), 3);
+    }
+}

@@ -1,0 +1,50 @@
+//! # gemmini-edge
+//!
+//! Reproduction of *"Efficient Edge AI: Deploying Convolutional Neural
+//! Networks on FPGA with the Gemmini Accelerator"* (Peccia et al., 2024) as
+//! a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate contains:
+//!
+//! - [`ir`] — the operator-graph IR the deployment workflow rewrites
+//!   (the role TVM's Relay plays in the paper);
+//! - [`workload`] — the exact YOLOv7-tiny layer trace (58 convolutions)
+//!   at arbitrary input sizes, plus pruned variants;
+//! - [`gemmini`] — a cycle-approximate simulator of the Gemmini accelerator
+//!   (decoupled Load/Execute/Store controllers, scratchpad, accumulator,
+//!   weight-stationary PE array, CISC FSMs and RISC instruction streams);
+//! - [`fpga`] — analytic FPGA resource/timing models incl. DSP packing
+//!   (Section III-A);
+//! - [`passes`] — the model-optimization chain (Section IV-B): activation
+//!   replacement, quantization, pruning, layout and framework conversion;
+//! - [`scheduler`] — the AutoTVM-analogue schedule tuner + Gemmini codegen
+//!   (Sections IV-C, V-A);
+//! - [`partition`] — dtype-based PS/PL model partitioning (Section IV-D);
+//! - [`energy`] / [`baselines`] — platform power/latency models used by the
+//!   cross-hardware comparison (Table IV, Figures 7/8);
+//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas artifacts
+//!   (Python never on the request path);
+//! - [`postproc`] — box decoding, NMS and COCO-style mAP;
+//! - [`dataset`] — synthetic blob-detection benchmark with exact ground
+//!   truth (stands in for COCO, see DESIGN.md §2);
+//! - [`pipeline`] / [`tracking`] — the Section VI traffic-monitoring case
+//!   study (pub/sub pipeline + GM-PHD tracker);
+//! - [`report`] — renderers that print each paper table/figure.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod dataset;
+pub mod energy;
+pub mod fpga;
+pub mod gemmini;
+pub mod ir;
+pub mod partition;
+pub mod passes;
+pub mod pipeline;
+pub mod postproc;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod tracking;
+pub mod util;
+pub mod workload;

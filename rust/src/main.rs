@@ -1,0 +1,116 @@
+//! `repro` — CLI for the gemmini-edge reproduction.
+//!
+//! Subcommands (hand-rolled arg parsing; clap is unavailable offline):
+//!
+//! ```text
+//! repro report table2|table3          print paper tables from the models
+//! repro deploy [--size N] [--trials K]  run the full workflow on the detector
+//! repro infer [--hlo PATH]            run the AOT artifact on a scene (PJRT)
+//! repro tune [--size N] [--variant base|p40|p88] [--trials K]
+//! ```
+
+use gemmini_edge::coordinator::{deploy, DeployOptions};
+use gemmini_edge::dataset::detector::{build_detector, default_weights};
+use gemmini_edge::dataset::scenes::{validation_set, SceneConfig};
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::ir::interp::Value;
+use gemmini_edge::postproc::nms::{decode_and_nms, NmsConfig};
+use gemmini_edge::report;
+use gemmini_edge::runtime::Executor;
+use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+fn arg_val(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("report") => match args.get(1).map(String::as_str) {
+            Some("table2") => {
+                print!("{}", report::table2(&gemmini_edge::fpga::resources::table2_rows()));
+            }
+            Some("table3") => {
+                print!(
+                    "{}",
+                    report::table3(
+                        &GemminiConfig::original_zcu102(),
+                        &GemminiConfig::ours_zcu102()
+                    )
+                );
+            }
+            _ => eprintln!("usage: repro report table2|table3"),
+        },
+        Some("deploy") => {
+            let size: usize =
+                arg_val(&args, "--size").and_then(|v| v.parse().ok()).unwrap_or(96);
+            let trials: usize =
+                arg_val(&args, "--trials").and_then(|v| v.parse().ok()).unwrap_or(4);
+            let w = default_weights();
+            let g = build_detector(size, &w);
+            let scenes = validation_set(&SceneConfig { size, ..Default::default() }, 24, 7);
+            let calib: Vec<Vec<Value>> =
+                scenes.iter().take(4).map(|s| vec![s.image.clone()]).collect();
+            let opts = DeployOptions { measure_k: trials, ..Default::default() };
+            let r = deploy(&g, &calib, &scenes, &opts);
+            println!("deployed detector @{size}px");
+            println!("  mAP@0.5           : {:.3}", r.map.unwrap_or(0.0));
+            println!("  latency (tuned)   : {:.3} ms ({:.1} FPS)", r.latency_s * 1e3, r.fps());
+            println!("  latency (default) : {:.3} ms", r.default_latency_s * 1e3);
+            println!("  energy            : {:.4} J ({:.1} GOP/s/W)", r.energy.energy_j, r.energy.efficiency());
+            for p in &r.placements {
+                println!("  placement {:<18}: {:.3} ms", p.label(), p.total_s() * 1e3);
+            }
+        }
+        Some("infer") => {
+            let hlo = arg_val(&args, "--hlo").unwrap_or_else(|| "artifacts/model.hlo.txt".into());
+            let exe = Executor::load(&hlo)?;
+            let size = exe.meta.input_shape[1];
+            let scenes = validation_set(&SceneConfig { size, ..Default::default() }, 1, 99);
+            let t0 = std::time::Instant::now();
+            let head = exe.run(&scenes[0].image)?;
+            let dt = t0.elapsed();
+            // Decode via the IR op semantics (single-scale head).
+            let g = {
+                let mut b = gemmini_edge::ir::GraphBuilder::new("decode");
+                let x = b.input("head", head.shape.clone());
+                let d = b.box_decode(x, exe.meta.num_anchors, exe.meta.num_classes);
+                b.finish(&[d])
+            };
+            let boxes = gemmini_edge::ir::Interpreter::new(&g).run(&[head]);
+            let dets = decode_and_nms(&boxes[0].f, exe.meta.num_classes, &NmsConfig::default());
+            println!("PJRT inference: {:.2} ms, {} detections", dt.as_secs_f64() * 1e3, dets.len());
+            for d in dets.iter().take(8) {
+                println!("  class {} score {:.2} at ({:.2},{:.2})", d.class, d.score, d.bbox.cx, d.bbox.cy);
+            }
+            println!("ground truth: {} objects", scenes[0].truths.len());
+        }
+        Some("tune") => {
+            let size: usize =
+                arg_val(&args, "--size").and_then(|v| v.parse().ok()).unwrap_or(160);
+            let trials: usize =
+                arg_val(&args, "--trials").and_then(|v| v.parse().ok()).unwrap_or(4);
+            let variant = match arg_val(&args, "--variant").as_deref() {
+                Some("p40") => ModelVariant::Pruned40,
+                Some("p88") => ModelVariant::Pruned88,
+                _ => ModelVariant::Base,
+            };
+            let mut g = yolov7_tiny(size, variant, 80);
+            gemmini_edge::passes::replace_activations(&mut g);
+            let cfg = GemminiConfig::ours_zcu102();
+            let t = tune_graph(&cfg, &g, trials);
+            println!("{}", t.to_json().dump());
+            println!(
+                "# conv improvement {:.1}% | layers improved {:.0}% | latency {:.1} ms",
+                t.conv_improvement() * 100.0,
+                t.fraction_improved() * 100.0,
+                t.latency_s(&cfg, true) * 1e3
+            );
+        }
+        _ => {
+            eprintln!("usage: repro <report|deploy|infer|tune> [options]");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,245 @@
+//! Dtype-based model partitioning (Sections IV-D and V-B, Figure 6).
+//!
+//! After quantization the graph has two clearly distinct parts: the int8
+//! "main part" (accelerator-eligible) and the float NMS-preparation tail.
+//! The partitioner splits on the Quantize/Dequantize boundary — exactly
+//! the paper's criterion ("separating the model into two parts based on
+//! the data type used on each of them") — and the placement evaluator
+//! prices each of the four (main, post) × (PS, PL) placements, including
+//! the shared-memory transfer over the ACP port.
+
+use crate::fpga::zynq::ZynqSoc;
+use crate::gemmini::config::GemminiConfig;
+use crate::ir::{DType, Graph, NodeId, Op};
+
+/// Result of splitting a quantized graph.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Nodes of the int8 main part (including Quantize boundary nodes).
+    pub main: Vec<NodeId>,
+    /// Nodes of the float tail (Dequantize onwards).
+    pub tail: Vec<NodeId>,
+    /// Bytes crossing the boundary per inference (the head tensors).
+    pub boundary_bytes: usize,
+    /// GOP of the main part, GFLOP of the tail.
+    pub main_gop: f64,
+    pub tail_gflop: f64,
+}
+
+/// Split a quantized graph by datatype.
+pub fn partition_graph(g: &Graph) -> Partition {
+    let mut main = Vec::new();
+    let mut tail = Vec::new();
+    let mut boundary_bytes = 0usize;
+    for n in &g.nodes {
+        if matches!(n.op, Op::Input | Op::Const) {
+            continue;
+        }
+        let is_int8 = n.output.dtype == DType::Int8 || matches!(n.op, Op::Quantize);
+        if is_int8 {
+            main.push(n.id);
+        } else {
+            tail.push(n.id);
+            if matches!(n.op, Op::Dequantize) {
+                boundary_bytes += g.node(n.inputs[0]).output.size_bytes();
+            }
+        }
+    }
+    // Main GOP: conv/dense MACs in the int8 region ×2.
+    let mut macs = 0u64;
+    for &id in &main {
+        let n = g.node(id);
+        if let Op::Conv2d { kernel, .. } = &n.op {
+            let ic = *g.node(n.inputs[1]).output.shape.last().unwrap();
+            macs += (n.output.shape[1] * n.output.shape[2] * n.output.shape[3]
+                * kernel
+                * kernel
+                * ic) as u64;
+        }
+    }
+    // Tail GFLOP: decode + NMS arithmetic on the candidate boxes.
+    let mut boxes = 0usize;
+    let mut classes = 1usize;
+    for &id in &tail {
+        if let Op::BoxDecode { num_classes, .. } = g.node(id).op {
+            boxes += g.node(id).output.shape[1];
+            classes = num_classes;
+        }
+    }
+    Partition {
+        main,
+        tail,
+        boundary_bytes,
+        main_gop: macs as f64 * 2.0 / 1e9,
+        tail_gflop: crate::postproc::nms::postproc_gflop(boxes, classes),
+    }
+}
+
+/// Where a part runs (Figure 6's axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    /// ARM cores (Processing System).
+    Ps,
+    /// FPGA fabric: the accelerator for int8 work, the RocketCore scalar
+    /// for float work (Gemmini cannot run the tail's ops).
+    Pl,
+}
+
+/// Latency breakdown of one placement.
+#[derive(Debug, Clone)]
+pub struct PlacementLatency {
+    pub main: Side,
+    pub post: Side,
+    pub main_s: f64,
+    pub post_s: f64,
+    pub transfer_s: f64,
+}
+
+impl PlacementLatency {
+    pub fn total_s(&self) -> f64 {
+        self.main_s + self.post_s + self.transfer_s
+    }
+
+    pub fn label(&self) -> String {
+        let s = |x: Side| match x {
+            Side::Ps => "PS",
+            Side::Pl => "PL",
+        };
+        format!("main={} post={}", s(self.main), s(self.post))
+    }
+}
+
+/// RocketCore scalar float throughput (GFLOP/s): an in-order core at the
+/// PL clock doing unvectorized float math — why running the tail "on the
+/// PL takes a lot of time" (Section V-B).
+fn rocket_gflops(cfg: &GemminiConfig) -> f64 {
+    0.10 * cfg.clock_mhz / 100.0
+}
+
+/// Price one placement. `main_pl_s` is the tuned accelerator latency of
+/// the main part (from the scheduler) — the other three cells derive from
+/// the SoC model.
+pub fn evaluate_placement(
+    p: &Partition,
+    soc: &ZynqSoc,
+    cfg: &GemminiConfig,
+    main_pl_s: f64,
+    main: Side,
+    post: Side,
+) -> PlacementLatency {
+    let main_s = match main {
+        Side::Pl => main_pl_s,
+        Side::Ps => soc.ps_int8_seconds(p.main_gop, 4),
+    };
+    let post_s = match post {
+        Side::Ps => soc.ps_float_seconds(p.tail_gflop, 1),
+        Side::Pl => p.tail_gflop / rocket_gflops(cfg),
+    };
+    // Transfer only when the two parts run on different sides.
+    let transfer_s =
+        if main != post { soc.transfer_seconds(p.boundary_bytes) } else { 0.0 };
+    PlacementLatency { main, post, main_s, post_s, transfer_s }
+}
+
+/// All four placements, best-first (the Figure 6 bars).
+pub fn all_placements(
+    p: &Partition,
+    soc: &ZynqSoc,
+    cfg: &GemminiConfig,
+    main_pl_s: f64,
+) -> Vec<PlacementLatency> {
+    let mut v: Vec<PlacementLatency> = [
+        (Side::Pl, Side::Ps),
+        (Side::Pl, Side::Pl),
+        (Side::Ps, Side::Ps),
+        (Side::Ps, Side::Pl),
+    ]
+    .iter()
+    .map(|&(m, q)| evaluate_placement(p, soc, cfg, main_pl_s, m, q))
+    .collect();
+    v.sort_by(|a, b| a.total_s().partial_cmp(&b.total_s()).unwrap());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::resources::Board;
+    use crate::ir::graph::WeightData;
+    use crate::ir::interp::Value;
+    use crate::passes::{quantize_graph, replace_activations, QuantizeOptions};
+    use crate::util::Rng;
+    use crate::workload::{yolov7_tiny, ModelVariant};
+
+    fn quantized_yolo() -> Graph {
+        let mut rng = Rng::new(11);
+        let mut g = yolov7_tiny(160, ModelVariant::Pruned88, 4);
+        replace_activations(&mut g);
+        for w in g.weights.values_mut() {
+            if let WeightData::F32(v) = w {
+                for x in v.iter_mut() {
+                    *x = rng.normal() as f32 * 0.05;
+                }
+            }
+        }
+        let input = Value::new(
+            vec![1, 160, 160, 3],
+            (0..160 * 160 * 3).map(|_| rng.f64() as f32).collect(),
+        );
+        quantize_graph(&g, &[vec![input]], &QuantizeOptions::default())
+    }
+
+    #[test]
+    fn split_is_clean_and_complete() {
+        let q = quantized_yolo();
+        let p = partition_graph(&q);
+        // Main holds all 58 convs; tail holds the 3 decodes.
+        let convs_in_main = p
+            .main
+            .iter()
+            .filter(|&&id| matches!(q.node(id).op, Op::Conv2d { .. }))
+            .count();
+        assert_eq!(convs_in_main, 58);
+        let decodes_in_tail = p
+            .tail
+            .iter()
+            .filter(|&&id| matches!(q.node(id).op, Op::BoxDecode { .. }))
+            .count();
+        assert_eq!(decodes_in_tail, 3);
+        assert!(p.boundary_bytes > 0);
+        assert!(p.main_gop > 0.0);
+        assert!(p.tail_gflop > 0.0);
+        // Main part dominates compute (paper's premise).
+        assert!(p.main_gop > 10.0 * p.tail_gflop);
+    }
+
+    #[test]
+    fn mixed_placement_wins_figure6() {
+        let q = quantized_yolo();
+        let p = partition_graph(&q);
+        let soc = ZynqSoc::new(Board::Zcu102);
+        let cfg = GemminiConfig::ours_zcu102();
+        // Tuned accelerator latency: ~100 GOP/s effective on the main part
+        // (the tuner's typical outcome for this config).
+        let main_pl_s = p.main_gop / 100.0;
+        let placements = all_placements(&p, &soc, &cfg, main_pl_s);
+        // Best: main on PL, post on PS (the paper's mixed deployment).
+        assert_eq!(placements[0].main, Side::Pl);
+        assert_eq!(placements[0].post, Side::Ps);
+        // Worst for the post-processing: PL (scalar RocketCore).
+        let pl_pl = placements.iter().find(|p| p.main == Side::Pl && p.post == Side::Pl).unwrap();
+        let pl_ps = &placements[0];
+        assert!(pl_pl.post_s > 5.0 * pl_ps.post_s);
+    }
+
+    #[test]
+    fn transfer_cost_negligible() {
+        // Paper: "the cost is negligible and can be ignored".
+        let q = quantized_yolo();
+        let p = partition_graph(&q);
+        let soc = ZynqSoc::new(Board::Zcu102);
+        let cfg = GemminiConfig::ours_zcu102();
+        let best = &all_placements(&p, &soc, &cfg, p.main_gop / 100.0)[0];
+        assert!(best.transfer_s < 0.02 * best.total_s(), "{best:?}");
+    }
+}

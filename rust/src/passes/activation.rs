@@ -1,0 +1,74 @@
+//! Activation replacement pass (Section IV-B2).
+//!
+//! Gemmini cannot fuse LeakyReLU (or SiLU): those layers would fall back to
+//! the scalar RISC-V core and dominate latency. The paper replaces every
+//! LeakyReLU with ReLU6 (and fine-tunes; we apply the structural rewrite —
+//! the accuracy effect is measured by the Table I harness on the detector).
+
+use crate::ir::{ActivationKind, Graph, Op};
+
+/// Replace all accelerator-unfusable activations with ReLU6.
+/// Returns the number of activations replaced.
+pub fn replace_activations(g: &mut Graph) -> usize {
+    let mut replaced = 0;
+    for n in g.nodes.iter_mut() {
+        match &mut n.op {
+            Op::Conv2d { activation, .. } | Op::Dense { activation, .. } => {
+                if !activation.accelerator_fusable() {
+                    *activation = ActivationKind::Relu6;
+                    replaced += 1;
+                }
+            }
+            Op::Activation { kind } => {
+                if !kind.accelerator_fusable() {
+                    *kind = ActivationKind::Relu6;
+                    replaced += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    replaced
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{yolov7_tiny, ModelVariant};
+
+    #[test]
+    fn replaces_all_leaky_relus_in_yolov7_tiny() {
+        let mut g = yolov7_tiny(480, ModelVariant::Base, 80);
+        let n = replace_activations(&mut g);
+        assert_eq!(n, 55, "all 55 LeakyReLU convs replaced");
+        let remaining = g.count(|n| {
+            matches!(n.op, Op::Conv2d { activation, .. } if !activation.accelerator_fusable())
+        });
+        assert_eq!(remaining, 0);
+        // Detect convs keep ActivationKind::None.
+        let none = g.count(
+            |n| matches!(n.op, Op::Conv2d { activation: ActivationKind::None, .. }),
+        );
+        assert_eq!(none, 3);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut g = yolov7_tiny(320, ModelVariant::Base, 8);
+        replace_activations(&mut g);
+        assert_eq!(replace_activations(&mut g), 0);
+    }
+
+    #[test]
+    fn graph_still_valid_and_offloadable() {
+        let mut g = yolov7_tiny(320, ModelVariant::Base, 8);
+        replace_activations(&mut g);
+        assert!(g.validate().is_ok());
+        // Every conv is now accelerator-offloadable.
+        for n in &g.nodes {
+            if matches!(n.op, Op::Conv2d { .. }) {
+                assert!(n.op.accelerator_offloadable(), "{}", n.output.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! The model-optimization chain (Section IV-B of the paper).
+//!
+//! Each pass rewrites the IR graph the way the paper's workflow does:
+//!
+//! 1. [`activation`] — LeakyReLU → ReLU6 replacement (IV-B2);
+//! 2. [`prune`] — iterative, concat-aware structured filter pruning (IV-B3);
+//! 3. [`conversion`] — the framework-conversion chain PyTorch → ONNX → TF →
+//!    TFLite(f32/f16/int8) → TVM with each step's characteristic numeric
+//!    transformation (IV-B4, Table I);
+//! 4. [`quantize`] — TFLite-style per-tensor int8 post-training
+//!    quantization with real calibration (IV-B4).
+
+pub mod activation;
+pub mod conversion;
+pub mod prune;
+pub mod quantize;
+
+pub use activation::replace_activations;
+pub use conversion::{convert, Framework};
+pub use prune::{prune_step, sparsity, PruneReport};
+pub use quantize::{quantize_graph, QuantizeOptions};

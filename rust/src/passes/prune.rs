@@ -1,0 +1,365 @@
+//! Iterative structured filter pruning (Section IV-B3, Figure 4).
+//!
+//! Follows the paper's approach ([21]: Pavlitska et al., IJCNN 2024):
+//! concatenation-heavy architectures like YOLOv7 need a **connectivity
+//! graph** so that removing a filter from a conv consistently removes the
+//! corresponding input-channel slice from every consumer — including
+//! consumers reached through concat nodes, where channel indices shift.
+//!
+//! Each call to [`prune_step`] is one iteration: rank all prunable filters
+//! by normalized L1 importance, remove the lowest `fraction`, and rebuild
+//! the graph with remapped weights. The paper fine-tunes between
+//! iterations; we do not (no training loop in the Rust runtime — DESIGN.md
+//! §2), so our Figure 4 mAP curve degrades faster at extreme sparsity,
+//! which EXPERIMENTS.md notes.
+
+use std::collections::HashMap;
+
+use crate::ir::graph::WeightData;
+use crate::ir::{Graph, NodeId, Op, TensorMeta};
+
+/// Result of one pruning iteration.
+#[derive(Debug, Clone)]
+pub struct PruneReport {
+    pub removed_filters: usize,
+    pub kept_filters: usize,
+    /// Parameter sparsity of the new graph relative to `baseline_params`.
+    pub param_sparsity: f64,
+}
+
+/// Parameter sparsity of `pruned` relative to `orig`.
+pub fn sparsity(orig: &Graph, pruned: &Graph) -> f64 {
+    1.0 - pruned.param_count() as f64 / orig.param_count() as f64
+}
+
+/// Channel-mask type: `true` = channel kept.
+type Mask = Vec<bool>;
+
+/// One pruning iteration: remove the `fraction` least-important filters
+/// across all prunable convolutions. `baseline_params` is the original
+/// (iteration-0) parameter count used for the sparsity report.
+pub fn prune_step(g: &Graph, fraction: f64, baseline_params: usize) -> (Graph, PruneReport) {
+    assert!((0.0..1.0).contains(&fraction));
+    // ---- protected convs: those feeding BoxDecode (detection heads). ----
+    let consumers = g.consumers();
+    let mut protected = vec![false; g.nodes.len()];
+    for n in &g.nodes {
+        if matches!(n.op, Op::BoxDecode { .. }) {
+            protected[n.inputs[0]] = true;
+        }
+    }
+
+    // ---- collect filter importances. ----
+    struct Filter {
+        conv: NodeId,
+        idx: usize,
+        importance: f64,
+    }
+    let mut filters: Vec<Filter> = Vec::new();
+    let mut conv_oc: HashMap<NodeId, usize> = HashMap::new();
+    for n in &g.nodes {
+        let Op::Conv2d { out_channels, kernel, .. } = n.op else { continue };
+        conv_oc.insert(n.id, out_channels);
+        if protected[n.id] || out_channels <= 8 {
+            continue;
+        }
+        let w = g.weights[&n.inputs[1]].as_f32().expect("float weights for pruning");
+        let per = kernel * kernel * w.len() / (out_channels * kernel * kernel);
+        let fsz = w.len() / out_channels;
+        let _ = per;
+        // L1 per filter, normalized by the layer mean so layers compete
+        // fairly (the per-iteration layer/rate selection of [21]).
+        let l1: Vec<f64> = (0..out_channels)
+            .map(|o| w[o * fsz..(o + 1) * fsz].iter().map(|v| v.abs() as f64).sum())
+            .collect();
+        let mean = l1.iter().sum::<f64>() / out_channels as f64;
+        for (idx, &v) in l1.iter().enumerate() {
+            filters.push(Filter { conv: n.id, idx, importance: v / mean.max(1e-12) });
+        }
+    }
+
+    // ---- pick victims globally, respecting per-conv floors. ----
+    filters.sort_by(|a, b| a.importance.partial_cmp(&b.importance).unwrap());
+    let to_remove = (filters.len() as f64 * fraction).round() as usize;
+    let mut removed_per_conv: HashMap<NodeId, usize> = HashMap::new();
+    let mut victim: HashMap<(NodeId, usize), bool> = HashMap::new();
+    let mut removed = 0usize;
+    for f in &filters {
+        if removed >= to_remove {
+            break;
+        }
+        let oc = conv_oc[&f.conv];
+        let r = removed_per_conv.entry(f.conv).or_insert(0);
+        // Keep at least 8 filters per conv (systolic-array granularity).
+        if oc - *r <= 8 {
+            continue;
+        }
+        *r += 1;
+        victim.insert((f.conv, f.idx), true);
+        removed += 1;
+    }
+
+    // ---- compute output-channel masks. ----
+    let mut masks: Vec<Mask> = vec![Vec::new(); g.nodes.len()];
+    for n in &g.nodes {
+        masks[n.id] = match &n.op {
+            Op::Input => vec![true; *n.output.shape.last().unwrap()],
+            Op::Const => Vec::new(),
+            Op::Conv2d { out_channels, .. } => (0..*out_channels)
+                .map(|o| !victim.contains_key(&(n.id, o)))
+                .collect(),
+            Op::MaxPool2d { .. } | Op::Upsample { .. } | Op::Activation { .. } | Op::Quantize | Op::Dequantize | Op::Reshape => {
+                masks[n.inputs[0]].clone()
+            }
+            Op::Concat => {
+                let mut m = Vec::new();
+                for &i in &n.inputs {
+                    m.extend_from_slice(&masks[i]);
+                }
+                m
+            }
+            _ => vec![true; *n.output.shape.last().unwrap_or(&1)],
+        };
+    }
+    let _ = consumers;
+
+    // ---- rebuild with filtered weights. ----
+    let mut out = Graph::new(g.name.clone());
+    out.requant_fixed_point = g.requant_fixed_point;
+    let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+    for n in &g.nodes {
+        match &n.op {
+            Op::Input => {
+                let id = out.push(Op::Input, vec![], n.output.clone());
+                out.inputs.push(id);
+                remap.insert(n.id, id);
+            }
+            Op::Const => {
+                // Emitted at the consuming conv (weights) or copied when
+                // referenced by non-conv ops.
+                continue;
+            }
+            Op::Conv2d { kernel, stride, padding, activation, bias, .. } => {
+                let in_mask = &masks[n.inputs[0]];
+                let out_mask = &masks[n.id];
+                let old_w = g.weights[&g.node(n.inputs[1]).id].as_f32().unwrap();
+                let old_shape = &g.node(n.inputs[1]).output.shape; // [oc,kh,kw,ic]
+                let (oc, kh, kw, ic) = (old_shape[0], old_shape[1], old_shape[2], old_shape[3]);
+                assert_eq!(in_mask.len(), ic, "in-mask/ic mismatch at {}", n.output.name);
+                let kept_in: Vec<usize> =
+                    (0..ic).filter(|&c| in_mask[c]).collect();
+                let kept_out: Vec<usize> =
+                    (0..oc).filter(|&o| out_mask[o]).collect();
+                let mut w = Vec::with_capacity(kept_out.len() * kh * kw * kept_in.len());
+                for &o in &kept_out {
+                    for y in 0..kh {
+                        for x in 0..kw {
+                            for &c in &kept_in {
+                                w.push(old_w[((o * kh + y) * kw + x) * ic + c]);
+                            }
+                        }
+                    }
+                }
+                let wmeta = TensorMeta::new(
+                    format!("{}_w", n.output.name),
+                    vec![kept_out.len(), kh, kw, kept_in.len()],
+                    g.node(n.inputs[1]).output.dtype,
+                    g.node(n.inputs[1]).output.layout,
+                );
+                let wid = out.push(Op::Const, vec![], wmeta);
+                out.weights.insert(wid, WeightData::F32(w));
+                let mut inputs = vec![remap[&n.inputs[0]], wid];
+                if *bias {
+                    let old_b = g.weights[&g.node(n.inputs[2]).id].as_f32().unwrap();
+                    let b: Vec<f32> = kept_out.iter().map(|&o| old_b[o]).collect();
+                    let bmeta = TensorMeta::new(
+                        format!("{}_b", n.output.name),
+                        vec![kept_out.len()],
+                        g.node(n.inputs[2]).output.dtype,
+                        g.node(n.inputs[2]).output.layout,
+                    );
+                    let bid = out.push(Op::Const, vec![], bmeta);
+                    out.weights.insert(bid, WeightData::F32(b));
+                    inputs.push(bid);
+                }
+                let mut meta = n.output.clone();
+                *meta.shape.last_mut().unwrap() = kept_out.len();
+                let id = out.push(
+                    Op::Conv2d {
+                        out_channels: kept_out.len(),
+                        kernel: *kernel,
+                        stride: *stride,
+                        padding: *padding,
+                        activation: *activation,
+                        bias: *bias,
+                    },
+                    inputs,
+                    meta,
+                );
+                remap.insert(n.id, id);
+            }
+            op => {
+                let inputs: Vec<NodeId> = n
+                    .inputs
+                    .iter()
+                    .map(|&i| {
+                        if let Some(&r) = remap.get(&i) {
+                            r
+                        } else {
+                            // A const consumed by a non-conv op: copy it.
+                            let c = out.push(Op::Const, vec![], g.node(i).output.clone());
+                            out.weights.insert(c, g.weights[&i].clone());
+                            remap.insert(i, c);
+                            c
+                        }
+                    })
+                    .collect();
+                let mut meta = n.output.clone();
+                if meta.shape.len() == 4 {
+                    *meta.shape.last_mut().unwrap() = masks[n.id].iter().filter(|&&b| b).count();
+                }
+                let id = out.push(op.clone(), inputs, meta);
+                remap.insert(n.id, id);
+            }
+        }
+    }
+    out.outputs = g.outputs.iter().map(|o| remap[o]).collect();
+    crate::ir::topo::dce(&mut out);
+    out.validate().expect("prune produced invalid graph");
+    let kept = out
+        .nodes
+        .iter()
+        .filter_map(|n| match n.op {
+            Op::Conv2d { out_channels, .. } => Some(out_channels),
+            _ => None,
+        })
+        .sum();
+    let report = PruneReport {
+        removed_filters: removed,
+        kept_filters: kept,
+        param_sparsity: 1.0 - out.param_count() as f64 / baseline_params as f64,
+    };
+    (out, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::interp::{Interpreter, Value};
+    use crate::ir::{ActivationKind, GraphBuilder, PaddingMode};
+    use crate::util::Rng;
+
+    /// Concat-heavy test net (mini-ELAN).
+    fn elan_net(seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut b = GraphBuilder::new("elan");
+        let x = b.input("x", vec![1, 8, 8, 3]);
+        let mut w = |n: usize| -> Option<Vec<f32>> {
+            Some((0..n).map(|_| rng.normal() as f32 * 0.3).collect())
+        };
+        let c1 = b.conv2d(x, 16, 1, 1, PaddingMode::Valid, ActivationKind::Relu6, w(16 * 3), None);
+        let c2 = b.conv2d(x, 16, 1, 1, PaddingMode::Valid, ActivationKind::Relu6, w(16 * 3), None);
+        let c3 = b.conv2d(c2, 16, 3, 1, PaddingMode::Same, ActivationKind::Relu6, w(16 * 9 * 16), None);
+        let cat = b.concat(&[c1, c2, c3]);
+        let head = b.conv2d(cat, 27, 1, 1, PaddingMode::Valid, ActivationKind::None, w(27 * 48), None);
+        let d = b.box_decode(head, 3, 4);
+        b.finish(&[d])
+    }
+
+    #[test]
+    fn prune_reduces_params_and_stays_valid() {
+        let g = elan_net(1);
+        let base = g.param_count();
+        let (p, r) = prune_step(&g, 0.3, base);
+        assert!(p.validate().is_ok());
+        assert!(r.removed_filters > 0);
+        assert!(r.param_sparsity > 0.1, "sparsity {}", r.param_sparsity);
+        assert!(p.param_count() < base);
+    }
+
+    #[test]
+    fn concat_channel_remap_is_consistent() {
+        // After pruning, the head conv's in_c must equal the concat's
+        // output channels, and the pruned graph must still execute.
+        let g = elan_net(2);
+        let (p, _) = prune_step(&g, 0.4, g.param_count());
+        let cat = p.nodes.iter().find(|n| matches!(n.op, Op::Concat)).unwrap();
+        let head = p
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Conv2d { .. }) && n.inputs[0] == cat.id)
+            .unwrap();
+        let w_shape = &p.node(head.inputs[1]).output.shape;
+        assert_eq!(w_shape[3], *cat.output.shape.last().unwrap());
+        let mut rng = Rng::new(3);
+        let input =
+            Value::new(vec![1, 8, 8, 3], (0..192).map(|_| rng.f64() as f32).collect());
+        let out = Interpreter::new(&p).run(&[input]);
+        assert!(!out[0].f.is_empty());
+    }
+
+    #[test]
+    fn detection_head_protected() {
+        let g = elan_net(4);
+        let (p, _) = prune_step(&g, 0.5, g.param_count());
+        // The conv feeding BoxDecode keeps all 27 channels.
+        let decode = p.nodes.iter().find(|n| matches!(n.op, Op::BoxDecode { .. })).unwrap();
+        let head = p.node(decode.inputs[0]);
+        assert_eq!(*head.output.shape.last().unwrap(), 27);
+    }
+
+    #[test]
+    fn removes_least_important_filters() {
+        // Construct a conv where filters 0..4 are near-zero: they must go
+        // first.
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 4, 4, 2]);
+        let mut w = vec![0.0f32; 16 * 2];
+        for o in 0..16 {
+            let v = if o < 4 { 1e-4 } else { 1.0 };
+            for c in 0..2 {
+                w[o * 2 + c] = v;
+            }
+        }
+        let c1 = b.conv2d(x, 16, 1, 1, PaddingMode::Valid, ActivationKind::Relu, Some(w), None);
+        let w2: Vec<f32> = vec![1.0; 9 * 16];
+        let head = b.conv2d(c1, 9, 1, 1, PaddingMode::Valid, ActivationKind::None, Some(w2), None);
+        let d = b.box_decode(head, 1, 4);
+        let g = b.finish(&[d]);
+        let (p, r) = prune_step(&g, 0.25, g.param_count());
+        assert_eq!(r.removed_filters, 4);
+        let pruned_conv = p
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Conv2d { out_channels: 12, .. }))
+            .expect("16-4=12 channel conv");
+        let w = p.weights[&pruned_conv.inputs[1]].as_f32().unwrap();
+        assert!(w.iter().all(|&v| v == 1.0), "near-zero filters removed");
+    }
+
+    #[test]
+    fn iterative_pruning_on_yolov7_tiny_reaches_high_sparsity() {
+        use crate::workload::{yolov7_tiny, ModelVariant};
+        let mut rng = Rng::new(5);
+        let mut g = yolov7_tiny(160, ModelVariant::Base, 4);
+        for w in g.weights.values_mut() {
+            if let WeightData::F32(v) = w {
+                for x in v.iter_mut() {
+                    *x = rng.normal() as f32 * 0.1;
+                }
+            }
+        }
+        let base = g.param_count();
+        let mut cur = g;
+        let mut last_sparsity = 0.0;
+        for _ in 0..6 {
+            let (next, r) = prune_step(&cur, 0.25, base);
+            assert!(r.param_sparsity >= last_sparsity);
+            last_sparsity = r.param_sparsity;
+            cur = next;
+        }
+        assert!(last_sparsity > 0.6, "sparsity after 6 iters: {last_sparsity}");
+        assert!(cur.validate().is_ok());
+        assert_eq!(cur.count(|n| matches!(n.op, Op::Conv2d { .. })), 58);
+    }
+}

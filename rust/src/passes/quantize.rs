@@ -1,0 +1,376 @@
+//! Post-training int8 quantization (Section IV-B4).
+//!
+//! TFLite-style per-tensor affine quantization, restricted (as the paper
+//! chose) to **per-tensor, symmetric** parameters — the form Gemmini's
+//! single output-scale multiplier supports directly. Calibration is real:
+//! the float graph runs over a calibration set and every activation's
+//! min/max is recorded; weights use per-tensor absmax.
+//!
+//! The rewritten graph has:
+//! - `Quantize` nodes after every graph input,
+//! - int8 weights + int8 activations through the conv/pool/upsample/concat
+//!   region (the "main part"),
+//! - `Dequantize` at the boundary to the float tail (BoxDecode / NMS prep),
+//!   exactly the structure the partitioner keys on (Section IV-D).
+
+use std::collections::HashMap;
+
+use crate::ir::graph::WeightData;
+use crate::ir::interp::{Interpreter, Value};
+use crate::ir::{DType, Graph, NodeId, Op, QuantParams, TensorMeta};
+
+/// Options for the quantization pass.
+#[derive(Debug, Clone)]
+pub struct QuantizeOptions {
+    /// Store output scales as fp16 (Section III-A hardware optimization).
+    pub fp16_scale: bool,
+    /// Use TVM-style fixed-point requantization arithmetic.
+    pub fixed_point_requant: bool,
+}
+
+impl Default for QuantizeOptions {
+    fn default() -> Self {
+        Self { fp16_scale: false, fixed_point_requant: false }
+    }
+}
+
+/// Symmetric per-tensor scale from a (min, max) range.
+fn sym_scale(mn: f32, mx: f32, fp16: bool) -> QuantParams {
+    let absmax = mn.abs().max(mx.abs()).max(1e-6);
+    let mut qp = QuantParams::new(absmax / 127.0, 0);
+    qp.fp16_scale = fp16;
+    qp
+}
+
+/// Quantize a float graph to int8 using real calibration data.
+///
+/// `calib` is a set of calibration batches (each one input-set for the
+/// graph). Returns the rewritten graph.
+pub fn quantize_graph(g: &Graph, calib: &[Vec<Value>], opts: &QuantizeOptions) -> Graph {
+    assert!(!calib.is_empty(), "need at least one calibration batch");
+    // ---- 1. Calibrate: merged activation ranges. ----
+    let interp = Interpreter::new(g);
+    let mut ranges: HashMap<NodeId, (f32, f32)> = HashMap::new();
+    for batch in calib {
+        let (_, r) = interp.run_calibrated(batch);
+        for (id, (mn, mx)) in r {
+            let e = ranges.entry(id).or_insert((f32::INFINITY, f32::NEG_INFINITY));
+            e.0 = e.0.min(mn);
+            e.1 = e.1.max(mx);
+        }
+    }
+
+    // ---- 2. Which nodes live in the int8 region? ----
+    let mut int8 = vec![false; g.nodes.len()];
+    for n in &g.nodes {
+        int8[n.id] = match &n.op {
+            Op::Input => true, // via inserted Quantize
+            Op::Conv2d { .. } | Op::Dense { .. } => {
+                n.inputs.first().map(|&i| int8[i]).unwrap_or(false)
+            }
+            Op::MaxPool2d { .. } | Op::Upsample { .. } | Op::Reshape => int8[n.inputs[0]],
+            Op::Concat => n.inputs.iter().all(|&i| int8[i]),
+            _ => false,
+        };
+    }
+
+    // ---- 3. Rebuild. ----
+    let mut out = Graph::new(format!("{}-int8", g.name));
+    out.requant_fixed_point = opts.fixed_point_requant;
+    // old id -> new id of the *int8* value (inside region) and/or float.
+    let mut q_of: HashMap<NodeId, NodeId> = HashMap::new();
+    let mut f_of: HashMap<NodeId, NodeId> = HashMap::new();
+    // Quant params chosen for each old int8 node (for scale propagation).
+    let mut qp_of: HashMap<NodeId, QuantParams> = HashMap::new();
+
+    // Resolve an input as float (inserting Dequantize on demand).
+    fn as_float(
+        out: &mut Graph,
+        q_of: &HashMap<NodeId, NodeId>,
+        f_of: &mut HashMap<NodeId, NodeId>,
+        old: NodeId,
+    ) -> NodeId {
+        if let Some(&f) = f_of.get(&old) {
+            return f;
+        }
+        let q = q_of[&old];
+        let meta = out.node(q).output.clone();
+        let deq = out.push(
+            Op::Dequantize,
+            vec![q],
+            TensorMeta::new(
+                format!("{}_deq", meta.name),
+                meta.shape,
+                DType::Float32,
+                meta.layout,
+            ),
+        );
+        f_of.insert(old, deq);
+        deq
+    }
+
+    for n in &g.nodes {
+        match &n.op {
+            Op::Input => {
+                let inp = out.push(Op::Input, vec![], n.output.clone());
+                out.inputs.push(inp);
+                f_of.insert(n.id, inp);
+                let (mn, mx) = ranges.get(&n.id).copied().unwrap_or((-1.0, 1.0));
+                let qp = sym_scale(mn, mx, opts.fp16_scale);
+                let mut meta = n.output.clone();
+                meta.name = format!("{}_q", meta.name);
+                meta.dtype = DType::Int8;
+                meta.quant = Some(qp);
+                let q = out.push(Op::Quantize, vec![inp], meta);
+                q_of.insert(n.id, q);
+                qp_of.insert(n.id, qp);
+            }
+            Op::Const => {
+                // Weights of int8 convs handled at the conv; copy as float
+                // here, dead consts removed by DCE later.
+                let c = out.push(Op::Const, vec![], n.output.clone());
+                out.weights.insert(c, g.weights[&n.id].clone());
+                f_of.insert(n.id, c);
+            }
+            Op::Conv2d { .. } | Op::Dense { .. } if int8[n.id] => {
+                // Quantize weights per-tensor symmetric.
+                let w_old = n.inputs[1];
+                let wdata = g.weights[&w_old].as_f32().expect("float weights").to_vec();
+                let absmax =
+                    wdata.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-6);
+                let mut wqp = QuantParams::new(absmax / 127.0, 0);
+                wqp.fp16_scale = false; // weight grid itself stays exact
+                let wq: Vec<i8> =
+                    wdata.iter().map(|&v| wqp.quantize(v)).collect();
+                let mut wmeta = g.node(w_old).output.clone();
+                wmeta.dtype = DType::Int8;
+                wmeta.quant = Some(wqp);
+                let wnew = out.push(Op::Const, vec![], wmeta);
+                out.weights.insert(wnew, WeightData::I8(wq));
+
+                let mut inputs = vec![q_of[&n.inputs[0]], wnew];
+                if n.inputs.len() > 2 {
+                    // bias stays float (folded to i32 at execution).
+                    inputs.push(f_of[&n.inputs[2]]);
+                }
+                let (mn, mx) = ranges[&n.id];
+                let qp = sym_scale(mn, mx, opts.fp16_scale);
+                let mut meta = n.output.clone();
+                meta.dtype = DType::Int8;
+                meta.quant = Some(qp);
+                let c = out.push(n.op.clone(), inputs, meta);
+                q_of.insert(n.id, c);
+                qp_of.insert(n.id, qp);
+            }
+            Op::MaxPool2d { .. } | Op::Upsample { .. } | Op::Reshape if int8[n.id] => {
+                // Exact int8 passthrough: inherit the input's scale.
+                let qp = qp_of[&n.inputs[0]];
+                let mut meta = n.output.clone();
+                meta.dtype = DType::Int8;
+                meta.quant = Some(qp);
+                let c = out.push(n.op.clone(), vec![q_of[&n.inputs[0]]], meta);
+                q_of.insert(n.id, c);
+                qp_of.insert(n.id, qp);
+            }
+            Op::Concat if int8[n.id] => {
+                // Requantize to the widest input scale (real concat
+                // behaviour in TFLite/Gemmini deployments).
+                let qp = n
+                    .inputs
+                    .iter()
+                    .map(|i| qp_of[i])
+                    .max_by(|a, b| a.scale.partial_cmp(&b.scale).unwrap())
+                    .unwrap();
+                let mut meta = n.output.clone();
+                meta.dtype = DType::Int8;
+                meta.quant = Some(qp);
+                let c = out.push(
+                    Op::Concat,
+                    n.inputs.iter().map(|i| q_of[i]).collect(),
+                    meta,
+                );
+                q_of.insert(n.id, c);
+                qp_of.insert(n.id, qp);
+            }
+            // Float tail (BoxDecode, Binary, standalone Activation, …).
+            op => {
+                let inputs: Vec<NodeId> = n
+                    .inputs
+                    .iter()
+                    .map(|&i| {
+                        if q_of.contains_key(&i) && !f_of.contains_key(&i) {
+                            as_float(&mut out, &q_of, &mut f_of, i)
+                        } else {
+                            f_of[&i]
+                        }
+                    })
+                    .collect();
+                let c = out.push(op.clone(), inputs, n.output.clone());
+                f_of.insert(n.id, c);
+            }
+        }
+    }
+
+    // Outputs: keep float view (dequantize if needed).
+    let mut outputs = Vec::new();
+    for &o in &g.outputs {
+        let id = if let Some(&f) = f_of.get(&o) {
+            f
+        } else {
+            as_float(&mut out, &q_of, &mut f_of, o)
+        };
+        outputs.push(id);
+    }
+    out.outputs = outputs;
+    crate::ir::topo::dce(&mut out);
+    out.validate().expect("quantize produced invalid graph");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ActivationKind, GraphBuilder, PaddingMode};
+    use crate::util::Rng;
+
+    /// A small conv stack with known weights.
+    fn small_net(seed: u64) -> (Graph, Vec<Value>) {
+        let mut rng = Rng::new(seed);
+        let mut b = GraphBuilder::new("small");
+        let x = b.input("x", vec![1, 8, 8, 3]);
+        let w1: Vec<f32> = (0..16 * 9 * 3).map(|_| rng.normal() as f32 * 0.2).collect();
+        let c1 = b.conv2d(x, 16, 3, 1, PaddingMode::Same, ActivationKind::Relu6, Some(w1), None);
+        let p = b.maxpool(c1, 2, 2);
+        let w2: Vec<f32> = (0..16 * 16).map(|_| rng.normal() as f32 * 0.2).collect();
+        let c2 = b.conv2d(p, 16, 1, 1, PaddingMode::Valid, ActivationKind::Relu6, Some(w2), None);
+        let d = b.box_decode(c2, 2, 3);
+        let g = b.finish(&[d]);
+        let input = Value::new(
+            vec![1, 8, 8, 3],
+            (0..8 * 8 * 3).map(|_| rng.f64() as f32).collect(),
+        );
+        (g, vec![input])
+    }
+
+    #[test]
+    fn structure_has_quantize_and_dequantize() {
+        let (g, calib) = small_net(1);
+        let q = quantize_graph(&g, &[calib], &QuantizeOptions::default());
+        assert!(q.validate().is_ok());
+        assert_eq!(q.count(|n| matches!(n.op, Op::Quantize)), 1);
+        assert!(q.count(|n| matches!(n.op, Op::Dequantize)) >= 1);
+        // Convs are int8 now.
+        for n in &q.nodes {
+            if matches!(n.op, Op::Conv2d { .. }) {
+                assert_eq!(n.output.dtype, DType::Int8);
+                assert!(n.output.quant.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn int8_outputs_close_to_float() {
+        let (g, calib) = small_net(2);
+        let q = quantize_graph(&g, &[calib.clone()], &QuantizeOptions::default());
+        let fout = Interpreter::new(&g).run(&calib);
+        let qout = Interpreter::new(&q).run(&calib);
+        assert_eq!(fout[0].f.len(), qout[0].f.len());
+        // BoxDecode outputs are bounded [0,1]-ish; int8 error stays small.
+        let max_err = fout[0]
+            .f
+            .iter()
+            .zip(&qout[0].f)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 0.15, "max err {max_err}");
+        // …but not bit-identical (it IS quantized).
+        assert!(fout[0].f != qout[0].f);
+    }
+
+    #[test]
+    fn fp16_scales_marked() {
+        let (g, calib) = small_net(3);
+        let q = quantize_graph(
+            &g,
+            &[calib],
+            &QuantizeOptions { fp16_scale: true, fixed_point_requant: false },
+        );
+        for n in &q.nodes {
+            if matches!(n.op, Op::Conv2d { .. }) {
+                assert!(n.output.quant.unwrap().fp16_scale);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_point_requant_changes_bits_slightly() {
+        let (g, calib) = small_net(4);
+        let q_float =
+            quantize_graph(&g, &[calib.clone()], &QuantizeOptions::default());
+        let q_fixed = quantize_graph(
+            &g,
+            &[calib.clone()],
+            &QuantizeOptions { fp16_scale: false, fixed_point_requant: true },
+        );
+        let a = Interpreter::new(&q_float).run(&calib);
+        let b = Interpreter::new(&q_fixed).run(&calib);
+        let max_err = a[0]
+            .f
+            .iter()
+            .zip(&b[0].f)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 0.05, "fixed-point should be a small perturbation, got {max_err}");
+    }
+
+    #[test]
+    fn calibration_uses_all_batches() {
+        let (g, c1) = small_net(5);
+        // A second batch with 10× larger inputs must widen input scale.
+        let big = vec![Value::new(
+            vec![1, 8, 8, 3],
+            (0..8 * 8 * 3).map(|i| (i % 7) as f32).collect(),
+        )];
+        let q1 = quantize_graph(&g, &[c1.clone()], &QuantizeOptions::default());
+        let q2 = quantize_graph(&g, &[c1, big], &QuantizeOptions::default());
+        let scale_of = |g: &Graph| {
+            g.nodes
+                .iter()
+                .find(|n| matches!(n.op, Op::Quantize))
+                .unwrap()
+                .output
+                .quant
+                .unwrap()
+                .scale
+        };
+        assert!(scale_of(&q2) > scale_of(&q1));
+    }
+
+    #[test]
+    fn quantizes_yolov7_tiny_structure() {
+        use crate::workload::{yolov7_tiny, ModelVariant};
+        let mut g = yolov7_tiny(160, ModelVariant::Pruned88, 4);
+        crate::passes::activation::replace_activations(&mut g);
+        // Random weights for a meaningful calibration run.
+        let mut rng = Rng::new(7);
+        for w in g.weights.values_mut() {
+            if let WeightData::F32(v) = w {
+                for x in v.iter_mut() {
+                    *x = rng.normal() as f32 * 0.05;
+                }
+            }
+        }
+        let input = Value::new(
+            vec![1, 160, 160, 3],
+            (0..160 * 160 * 3).map(|_| rng.f64() as f32).collect(),
+        );
+        let q = quantize_graph(&g, &[vec![input]], &QuantizeOptions::default());
+        assert!(q.validate().is_ok());
+        let int8_convs = q.count(|n| {
+            matches!(n.op, Op::Conv2d { .. }) && n.output.dtype == DType::Int8
+        });
+        assert_eq!(int8_convs, 58, "all 58 convs quantized");
+        // Exactly 3 dequantize boundaries (one per detection head).
+        assert_eq!(q.count(|n| matches!(n.op, Op::Dequantize)), 3);
+    }
+}

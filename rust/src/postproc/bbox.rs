@@ -1,0 +1,89 @@
+//! Bounding boxes and IoU.
+
+/// An axis-aligned box in normalized [0,1] image coordinates,
+/// center-size parameterization (YOLO convention).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BBox {
+    pub cx: f32,
+    pub cy: f32,
+    pub w: f32,
+    pub h: f32,
+}
+
+impl BBox {
+    pub fn new(cx: f32, cy: f32, w: f32, h: f32) -> Self {
+        Self { cx, cy, w, h }
+    }
+
+    pub fn x0(&self) -> f32 {
+        self.cx - self.w / 2.0
+    }
+    pub fn y0(&self) -> f32 {
+        self.cy - self.h / 2.0
+    }
+    pub fn x1(&self) -> f32 {
+        self.cx + self.w / 2.0
+    }
+    pub fn y1(&self) -> f32 {
+        self.cy + self.h / 2.0
+    }
+
+    pub fn area(&self) -> f32 {
+        self.w.max(0.0) * self.h.max(0.0)
+    }
+
+    /// Intersection-over-union.
+    pub fn iou(&self, other: &BBox) -> f32 {
+        let ix = (self.x1().min(other.x1()) - self.x0().max(other.x0())).max(0.0);
+        let iy = (self.y1().min(other.y1()) - self.y0().max(other.y0())).max(0.0);
+        let inter = ix * iy;
+        let union = self.area() + other.area() - inter;
+        if union <= 0.0 {
+            0.0
+        } else {
+            inter / union
+        }
+    }
+}
+
+/// A scored, classified detection.
+#[derive(Debug, Clone, Copy)]
+pub struct Detection {
+    pub bbox: BBox,
+    pub score: f32,
+    pub class: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identical_is_one() {
+        let b = BBox::new(0.5, 0.5, 0.2, 0.2);
+        assert!((b.iou(&b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        let a = BBox::new(0.2, 0.2, 0.1, 0.1);
+        let b = BBox::new(0.8, 0.8, 0.1, 0.1);
+        assert_eq!(a.iou(&b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // Two unit-width boxes offset by half a width: inter = 0.5·area,
+        // union = 1.5·area → IoU = 1/3.
+        let a = BBox::new(0.5, 0.5, 0.2, 0.2);
+        let b = BBox::new(0.6, 0.5, 0.2, 0.2);
+        assert!((a.iou(&b) - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn iou_symmetric() {
+        let a = BBox::new(0.4, 0.4, 0.3, 0.2);
+        let b = BBox::new(0.5, 0.45, 0.2, 0.3);
+        assert!((a.iou(&b) - b.iou(&a)).abs() < 1e-7);
+    }
+}

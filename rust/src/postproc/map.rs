@@ -1,0 +1,182 @@
+//! Mean average precision (COCO-style 101-point interpolated AP at a
+//! single IoU threshold — the metric of Table I and Figures 3/4).
+
+use super::bbox::{BBox, Detection};
+
+/// Ground-truth object in one image.
+#[derive(Debug, Clone, Copy)]
+pub struct GroundTruth {
+    pub bbox: BBox,
+    pub class: usize,
+}
+
+/// AP for one class across a dataset.
+/// `dets`: (image index, detection) sorted or not; `gts`: (image, truth).
+fn average_precision(
+    dets: &[(usize, Detection)],
+    gts: &[(usize, GroundTruth)],
+    iou_thr: f32,
+) -> Option<f64> {
+    let npos = gts.len();
+    if npos == 0 {
+        return None; // class absent from the dataset: skipped by mAP
+    }
+    let mut dets: Vec<&(usize, Detection)> = dets.iter().collect();
+    dets.sort_by(|a, b| b.1.score.partial_cmp(&a.1.score).unwrap());
+    let mut matched = vec![false; gts.len()];
+    let mut tp = Vec::with_capacity(dets.len());
+    for (img, d) in dets {
+        let mut best = -1f32;
+        let mut best_gt = usize::MAX;
+        for (gi, (gimg, gt)) in gts.iter().enumerate() {
+            if gimg != img || matched[gi] {
+                continue;
+            }
+            let iou = d.bbox.iou(&gt.bbox);
+            if iou > best {
+                best = iou;
+                best_gt = gi;
+            }
+        }
+        if best >= iou_thr && best_gt != usize::MAX {
+            matched[best_gt] = true;
+            tp.push(true);
+        } else {
+            tp.push(false);
+        }
+    }
+    // precision-recall curve
+    let mut cum_tp = 0f64;
+    let mut precisions = Vec::with_capacity(tp.len());
+    let mut recalls = Vec::with_capacity(tp.len());
+    for (i, &t) in tp.iter().enumerate() {
+        if t {
+            cum_tp += 1.0;
+        }
+        precisions.push(cum_tp / (i + 1) as f64);
+        recalls.push(cum_tp / npos as f64);
+    }
+    // 101-point interpolation
+    let mut ap = 0f64;
+    for r in 0..=100 {
+        let r = r as f64 / 100.0;
+        let p = precisions
+            .iter()
+            .zip(&recalls)
+            .filter(|(_, &rec)| rec >= r)
+            .map(|(&p, _)| p)
+            .fold(0f64, f64::max);
+        ap += p / 101.0;
+    }
+    Some(ap)
+}
+
+/// Dataset-level mAP@`iou_thr` over `num_classes` classes.
+///
+/// `detections[i]` / `truths[i]` belong to image `i`.
+pub fn mean_average_precision(
+    detections: &[Vec<Detection>],
+    truths: &[Vec<GroundTruth>],
+    num_classes: usize,
+    iou_thr: f32,
+) -> f64 {
+    assert_eq!(detections.len(), truths.len(), "image count mismatch");
+    let mut aps = Vec::new();
+    for c in 0..num_classes {
+        let dets: Vec<(usize, Detection)> = detections
+            .iter()
+            .enumerate()
+            .flat_map(|(i, v)| v.iter().filter(|d| d.class == c).map(move |d| (i, *d)))
+            .collect();
+        let gts: Vec<(usize, GroundTruth)> = truths
+            .iter()
+            .enumerate()
+            .flat_map(|(i, v)| v.iter().filter(|g| g.class == c).map(move |g| (i, *g)))
+            .collect();
+        if let Some(ap) = average_precision(&dets, &gts, iou_thr) {
+            aps.push(ap);
+        }
+    }
+    if aps.is_empty() {
+        0.0
+    } else {
+        aps.iter().sum::<f64>() / aps.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(cx: f32, s: f32, score: f32, class: usize) -> Detection {
+        Detection { bbox: BBox::new(cx, 0.5, s, s), score, class }
+    }
+    fn g(cx: f32, s: f32, class: usize) -> GroundTruth {
+        GroundTruth { bbox: BBox::new(cx, 0.5, s, s), class }
+    }
+
+    #[test]
+    fn perfect_detections_give_map_one() {
+        let dets = vec![vec![d(0.3, 0.1, 0.9, 0), d(0.7, 0.1, 0.8, 1)]];
+        let gts = vec![vec![g(0.3, 0.1, 0), g(0.7, 0.1, 1)]];
+        let m = mean_average_precision(&dets, &gts, 2, 0.5);
+        assert!((m - 1.0).abs() < 1e-2, "mAP {m}");
+    }
+
+    #[test]
+    fn no_detections_give_zero() {
+        let dets = vec![vec![]];
+        let gts = vec![vec![g(0.3, 0.1, 0)]];
+        assert_eq!(mean_average_precision(&dets, &gts, 2, 0.5), 0.0);
+    }
+
+    #[test]
+    fn false_positives_lower_precision() {
+        let perfect = vec![vec![d(0.3, 0.1, 0.9, 0)]];
+        let noisy = vec![vec![d(0.3, 0.1, 0.9, 0), d(0.8, 0.1, 0.95, 0)]];
+        let gts = vec![vec![g(0.3, 0.1, 0)]];
+        let m_p = mean_average_precision(&perfect, &gts, 1, 0.5);
+        let m_n = mean_average_precision(&noisy, &gts, 1, 0.5);
+        assert!(m_n < m_p, "{m_n} !< {m_p}");
+    }
+
+    #[test]
+    fn localization_error_beyond_iou_is_miss() {
+        let dets = vec![vec![d(0.5, 0.1, 0.9, 0)]];
+        let gts = vec![vec![g(0.3, 0.1, 0)]]; // far away
+        let m = mean_average_precision(&dets, &gts, 1, 0.5);
+        assert!(m < 0.05, "mAP {m}");
+    }
+
+    #[test]
+    fn duplicate_detections_counted_once() {
+        let dets = vec![vec![d(0.3, 0.1, 0.9, 0), d(0.3, 0.1, 0.85, 0)]];
+        let gts = vec![vec![g(0.3, 0.1, 0)]];
+        let m = mean_average_precision(&dets, &gts, 1, 0.5);
+        // Second detection is a false positive at recall 1.0: AP stays
+        // high but below a clean single detection.
+        let clean = mean_average_precision(&vec![vec![d(0.3, 0.1, 0.9, 0)]], &gts, 1, 0.5);
+        assert!(m <= clean);
+    }
+
+    #[test]
+    fn absent_classes_skipped_not_zeroed() {
+        // Class 1 has no ground truth anywhere: mAP is class-0 AP only.
+        let dets = vec![vec![d(0.3, 0.1, 0.9, 0)]];
+        let gts = vec![vec![g(0.3, 0.1, 0)]];
+        let m1 = mean_average_precision(&dets, &gts, 1, 0.5);
+        let m2 = mean_average_precision(&dets, &gts, 5, 0.5);
+        assert!((m1 - m2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_image_aggregation() {
+        let dets = vec![
+            vec![d(0.3, 0.1, 0.9, 0)],
+            vec![], // miss on image 2
+        ];
+        let gts = vec![vec![g(0.3, 0.1, 0)], vec![g(0.6, 0.1, 0)]];
+        let m = mean_average_precision(&dets, &gts, 1, 0.5);
+        assert!(m > 0.3 && m < 0.7, "recall-limited mAP {m}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Post-processing: box decoding output → NMS → detections, plus the mAP
+//! metric (the paper's "second part" of the model, Section IV-D — runs on
+//! the PS, never on the accelerator).
+
+pub mod bbox;
+pub mod map;
+pub mod nms;
+
+pub use bbox::{BBox, Detection};
+pub use map::{mean_average_precision, GroundTruth};
+pub use nms::{decode_and_nms, nms, NmsConfig};

@@ -1,0 +1,155 @@
+//! Non-maximum suppression (the float post-processing the paper keeps on
+//! the PS and deliberately excludes from quantization, Section IV-B4).
+
+use super::bbox::{BBox, Detection};
+
+/// NMS parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct NmsConfig {
+    /// Minimum objectness × class score to keep a candidate.
+    pub score_threshold: f32,
+    /// IoU above which a lower-scored box is suppressed.
+    pub iou_threshold: f32,
+    /// Cap on detections returned per image.
+    pub max_detections: usize,
+}
+
+impl Default for NmsConfig {
+    fn default() -> Self {
+        Self { score_threshold: 0.25, iou_threshold: 0.45, max_detections: 300 }
+    }
+}
+
+/// Class-aware greedy NMS over scored candidates.
+pub fn nms(mut candidates: Vec<Detection>, cfg: &NmsConfig) -> Vec<Detection> {
+    candidates.retain(|d| d.score >= cfg.score_threshold);
+    candidates.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut keep: Vec<Detection> = Vec::new();
+    'outer: for d in candidates {
+        for k in &keep {
+            if k.class == d.class && k.bbox.iou(&d.bbox) > cfg.iou_threshold {
+                continue 'outer;
+            }
+        }
+        keep.push(d);
+        if keep.len() >= cfg.max_detections {
+            break;
+        }
+    }
+    keep
+}
+
+/// Decode a `BoxDecode` output tensor (`[1, boxes, 5+classes]`, see
+/// [`crate::ir::interp`]) into candidates and run NMS.
+pub fn decode_and_nms(decoded: &[f32], num_classes: usize, cfg: &NmsConfig) -> Vec<Detection> {
+    let per = 5 + num_classes;
+    assert_eq!(decoded.len() % per, 0, "decoded tensor not a multiple of {per}");
+    let mut cands = Vec::new();
+    for chunk in decoded.chunks(per) {
+        let obj = chunk[4];
+        if obj < cfg.score_threshold * 0.5 {
+            continue; // cheap pre-filter
+        }
+        // Best class.
+        let (class, &cls_score) = chunk[5..]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let score = obj * cls_score;
+        if score < cfg.score_threshold {
+            continue;
+        }
+        cands.push(Detection {
+            bbox: BBox::new(chunk[0], chunk[1], chunk[2], chunk[3]),
+            score,
+            class,
+        });
+    }
+    nms(cands, cfg)
+}
+
+/// FLOP estimate for the NMS-prep tail on `n` candidate boxes with `c`
+/// classes (sigmoids, decode arithmetic, pairwise IoU) — used by the
+/// Figure 6 partitioning experiment to cost the PS-side work.
+pub fn postproc_gflop(n: usize, c: usize) -> f64 {
+    // decode: ~8 flops/box + (5+c) sigmoids (~4 flops each); NMS pairwise
+    // IoU on the ~n/10 surviving boxes (~16 flops per pair).
+    let decode = n as f64 * (8.0 + 4.0 * (5 + c) as f64);
+    let surv = (n / 10).max(1) as f64;
+    let pairwise = surv * surv * 16.0;
+    (decode + pairwise) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(cx: f32, cy: f32, s: f32, score: f32, class: usize) -> Detection {
+        Detection { bbox: BBox::new(cx, cy, s, s), score, class }
+    }
+
+    #[test]
+    fn suppresses_overlapping_same_class() {
+        let out = nms(
+            vec![det(0.5, 0.5, 0.2, 0.9, 0), det(0.51, 0.5, 0.2, 0.8, 0)],
+            &NmsConfig::default(),
+        );
+        assert_eq!(out.len(), 1);
+        assert!((out[0].score - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn keeps_overlapping_different_class() {
+        let out = nms(
+            vec![det(0.5, 0.5, 0.2, 0.9, 0), det(0.51, 0.5, 0.2, 0.8, 1)],
+            &NmsConfig::default(),
+        );
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn keeps_distant_same_class() {
+        let out = nms(
+            vec![det(0.2, 0.2, 0.1, 0.9, 0), det(0.8, 0.8, 0.1, 0.8, 0)],
+            &NmsConfig::default(),
+        );
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn score_threshold_filters() {
+        let out = nms(vec![det(0.5, 0.5, 0.2, 0.1, 0)], &NmsConfig::default());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn decode_and_nms_end_to_end() {
+        // Two boxes; one strong, one weak-overlapping.
+        let c = 3;
+        let mut raw = Vec::new();
+        // box 1: strong class 2
+        raw.extend_from_slice(&[0.5, 0.5, 0.2, 0.2, 0.95, 0.1, 0.1, 0.9]);
+        // box 2: overlapping, lower
+        raw.extend_from_slice(&[0.52, 0.5, 0.2, 0.2, 0.7, 0.1, 0.1, 0.8]);
+        // box 3: far away class 0
+        raw.extend_from_slice(&[0.1, 0.1, 0.1, 0.1, 0.9, 0.85, 0.05, 0.05]);
+        let out = decode_and_nms(&raw, c, &NmsConfig::default());
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].class, 2);
+        assert_eq!(out[1].class, 0);
+    }
+
+    #[test]
+    fn max_detections_cap() {
+        let cands: Vec<Detection> =
+            (0..50).map(|i| det(0.01 * i as f32 + 0.1, 0.5, 0.01, 0.9, 0)).collect();
+        let cfg = NmsConfig { max_detections: 10, ..Default::default() };
+        assert_eq!(nms(cands, &cfg).len(), 10);
+    }
+
+    #[test]
+    fn postproc_gflop_positive_and_scales() {
+        assert!(postproc_gflop(1000, 80) > postproc_gflop(100, 80));
+    }
+}

@@ -1,0 +1,161 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The deployed system is self-contained after `make artifacts`: this
+//! module loads `artifacts/model.hlo.txt` (HLO *text* — the interchange
+//! format the image's xla_extension 0.5.1 accepts, see
+//! /opt/xla-example/README.md), compiles it once on the PJRT CPU client,
+//! and executes it from the request path. Python never runs at inference
+//! time — exactly the paper's deployment contract (the TVM-generated C
+//! code on the RISC-V side).
+
+use anyhow::{Context, Result};
+
+use crate::ir::interp::Value;
+use crate::util::json::Json;
+
+/// Metadata emitted next to each artifact by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub num_anchors: usize,
+    pub num_classes: usize,
+    /// Shapes of the weight parameters the executable takes after the
+    /// image (quantized values carried as f32 — see `aot.py`).
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        let shape = |key: &str| -> Result<Vec<usize>> {
+            Ok(j.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("missing {key}"))?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as usize)
+                .collect())
+        };
+        let param_shapes = j
+            .get("param_shapes")
+            .and_then(|v| v.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(|d| d.as_f64().unwrap_or(0.0) as usize)
+                            .collect()
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Self {
+            input_shape: shape("input")?,
+            output_shape: shape("output")?,
+            num_anchors: j.get("num_anchors").and_then(|v| v.as_f64()).unwrap_or(2.0) as usize,
+            num_classes: j.get("num_classes").and_then(|v| v.as_f64()).unwrap_or(4.0) as usize,
+            param_shapes,
+        })
+    }
+}
+
+/// A compiled model on the PJRT CPU client.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    /// Weight literals loaded once (fed after the image each execute).
+    params: Vec<xla::Literal>,
+}
+
+impl Executor {
+    /// Load + compile `artifacts/<name>.hlo.txt` (+ `.meta.json`).
+    pub fn load(hlo_path: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .with_context(|| format!("parsing HLO text {hlo_path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        let meta_path = hlo_path.replace(".hlo.txt", ".meta.json");
+        let meta = ArtifactMeta::load(&meta_path)?;
+        // Weight parameters (optional: absent for weightless artifacts).
+        let mut params = Vec::new();
+        if !meta.param_shapes.is_empty() {
+            let ppath = hlo_path.replace(".hlo.txt", ".params.json");
+            let text =
+                std::fs::read_to_string(&ppath).with_context(|| format!("reading {ppath}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {ppath}: {e}"))?;
+            let arrays = j
+                .get("params")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("missing params"))?;
+            anyhow::ensure!(arrays.len() == meta.param_shapes.len(), "param count mismatch");
+            for (vals, shape) in arrays.iter().zip(&meta.param_shapes) {
+                let v: Vec<f32> = vals
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|x| x.as_f64().unwrap_or(0.0) as f32)
+                    .collect();
+                anyhow::ensure!(v.len() == shape.iter().product::<usize>(), "param size mismatch");
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                params.push(xla::Literal::vec1(&v).reshape(&dims)?);
+            }
+        }
+        Ok(Self { exe, meta, params })
+    }
+
+    /// Execute the main part on one image (`Value` NHWC f32 matching the
+    /// artifact's input shape). Returns the dequantized head map.
+    pub fn run(&self, image: &Value) -> Result<Value> {
+        anyhow::ensure!(
+            image.shape == self.meta.input_shape,
+            "input shape {:?} != artifact {:?}",
+            image.shape,
+            self.meta.input_shape
+        );
+        let dims: Vec<i64> = image.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&image.f).reshape(&dims)?;
+        let mut args = vec![lit];
+        for p in &self.params {
+            args.push(p.clone());
+        }
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        anyhow::ensure!(
+            values.len() == self.meta.output_shape.iter().product::<usize>(),
+            "output size mismatch"
+        );
+        Ok(Value::new(self.meta.output_shape.clone(), values))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration tests that need artifacts live in rust/tests/
+    /// (they require `make artifacts`); here only the meta parser.
+    #[test]
+    fn meta_parses() {
+        let dir = std::env::temp_dir().join("ge_meta_test.json");
+        std::fs::write(
+            &dir,
+            r#"{"input":[1,96,96,3],"output":[1,12,12,18],"num_anchors":2,"num_classes":4}"#,
+        )
+        .unwrap();
+        let m = ArtifactMeta::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.input_shape, vec![1, 96, 96, 3]);
+        assert_eq!(m.output_shape, vec![1, 12, 12, 18]);
+        assert_eq!(m.num_classes, 4);
+    }
+
+    #[test]
+    fn meta_missing_file_errors() {
+        assert!(ArtifactMeta::load("/nonexistent/meta.json").is_err());
+    }
+}

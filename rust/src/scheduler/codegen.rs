@@ -1,0 +1,669 @@
+//! Lowering IR layers to Gemmini instruction streams.
+//!
+//! Convolutions and dense layers become tiled GEMMs (conv via im2col, with
+//! the gather cost charged as fragmented DMA — see
+//! [`crate::gemmini::cisc`]). Two lowerings exist per layer:
+//!
+//! - [`lower_cisc`] — the single CISC FSM instruction with its fixed
+//!   internal schedule (Figure 5's "Default");
+//! - [`lower_risc`] — a RISC stream shaped by a [`RiscSchedule`]: A-block
+//!   caching, weight-reuse preloads, double buffering and loop-order
+//!   selection (Figure 5's "AutoTVM" candidates).
+//!
+//! Max pooling, upsample/resize and concat lower to DMA movement streams
+//! ([`lower_move_op`]) — they are bandwidth-bound on Gemmini; their
+//! numerics run on the IR interpreter (the simulator provides timing).
+
+use crate::gemmini::config::GemminiConfig;
+use crate::gemmini::isa::{Activation, Instr, MvinDst, REUSE_WEIGHTS};
+use crate::gemmini::memory::DramAllocator;
+use crate::ir::{ActivationKind, Graph, NodeId, Op};
+
+use super::space::{LoopOrder, RiscSchedule};
+
+/// GEMM-shaped geometry of one layer.
+#[derive(Debug, Clone)]
+pub struct ConvGeom {
+    /// GEMM dims: `C[m×n] = A[m×k]·B[k×n]`.
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Kernel size (1 for dense / 1×1 convs): the DMA gather fragmentation.
+    pub kernel: usize,
+    /// Requantization scale and fused activation for the store path.
+    pub scale: f32,
+    pub activation: Activation,
+    /// Whether a bias vector exists.
+    pub bias: bool,
+    /// Human label (layer name).
+    pub label: String,
+}
+
+impl ConvGeom {
+    pub fn mt(&self, dim: usize) -> usize {
+        self.m.div_ceil(dim)
+    }
+    pub fn nt(&self, dim: usize) -> usize {
+        self.n.div_ceil(dim)
+    }
+    pub fn kt(&self, dim: usize) -> usize {
+        self.k.div_ceil(dim)
+    }
+    /// MACs for this layer.
+    pub fn macs(&self) -> u64 {
+        (self.m * self.n * self.k) as u64
+    }
+}
+
+/// DRAM addresses for one layer's operands.
+#[derive(Debug, Clone)]
+pub struct LayerBuffers {
+    /// A operand (staged im2col for convs), `m × k` int8, stride `k`.
+    pub a_addr: usize,
+    /// B operand (weights in GEMM layout), `k × n` int8, stride `n`.
+    pub b_addr: usize,
+    /// Bias (int32, `n` entries) — present iff geometry has bias.
+    pub bias_addr: Option<usize>,
+    /// Output, `m × n` int8, stride `n`.
+    pub c_addr: usize,
+}
+
+/// Allocate DRAM for a layer.
+pub fn alloc_buffers(g: &ConvGeom, alloc: &mut DramAllocator) -> LayerBuffers {
+    LayerBuffers {
+        a_addr: alloc.alloc(g.m * g.k),
+        b_addr: alloc.alloc(g.k * g.n),
+        bias_addr: if g.bias { Some(alloc.alloc(g.n * 4)) } else { None },
+        c_addr: alloc.alloc(g.m * g.n),
+    }
+}
+
+/// Extract GEMM geometry from a conv/dense node (post-quantization graph:
+/// scales come from the quant params; float graphs get scale 1.0).
+pub fn layer_geometry(g: &Graph, id: NodeId) -> Option<ConvGeom> {
+    let n = g.node(id);
+    match &n.op {
+        Op::Conv2d { out_channels, kernel, activation, bias, .. } => {
+            let w = g.node(n.inputs[1]);
+            let ic = *w.output.shape.last().unwrap();
+            let oh = n.output.shape[1];
+            let ow = n.output.shape[2];
+            let scale = requant_scale(g, id);
+            Some(ConvGeom {
+                m: oh * ow,
+                n: *out_channels,
+                k: kernel * kernel * ic,
+                kernel: *kernel,
+                scale,
+                activation: hw_activation(*activation, g, id),
+                bias: *bias,
+                label: n.output.name.clone(),
+            })
+        }
+        Op::Dense { out_features, activation, bias } => {
+            let w = g.node(n.inputs[1]);
+            let inf = *w.output.shape.last().unwrap();
+            let scale = requant_scale(g, id);
+            Some(ConvGeom {
+                m: n.output.shape[0],
+                n: *out_features,
+                k: inf,
+                kernel: 1,
+                scale,
+                activation: hw_activation(*activation, g, id),
+                bias: *bias,
+                label: n.output.name.clone(),
+            })
+        }
+        _ => None,
+    }
+}
+
+fn requant_scale(g: &Graph, id: NodeId) -> f32 {
+    let n = g.node(id);
+    match (n.output.quant, g.node(n.inputs[0]).output.quant, g.node(n.inputs[1]).output.quant) {
+        (Some(o), Some(x), Some(w)) => {
+            x.effective_scale() * w.effective_scale() / o.effective_scale()
+        }
+        _ => 1.0,
+    }
+}
+
+fn hw_activation(a: ActivationKind, g: &Graph, id: NodeId) -> Activation {
+    match a {
+        ActivationKind::Relu => Activation::Relu,
+        ActivationKind::Relu6 => {
+            let qmax = g
+                .node(id)
+                .output
+                .quant
+                .map(|q| (6.0 / q.effective_scale()).round().clamp(1.0, 127.0) as i8)
+                .unwrap_or(127);
+            Activation::Relu6 { qmax }
+        }
+        _ => Activation::None,
+    }
+}
+
+/// Lower a layer to the CISC FSM instruction (the "Default" schedule).
+pub fn lower_cisc(geom: &ConvGeom, bufs: &LayerBuffers) -> Vec<Instr> {
+    vec![Instr::LoopWs {
+        m: geom.m,
+        n: geom.n,
+        k: geom.k,
+        a_addr: bufs.a_addr,
+        b_addr: bufs.b_addr,
+        bias_addr: bufs.bias_addr,
+        c_addr: bufs.c_addr,
+        scale: geom.scale,
+        activation: geom.activation,
+    }]
+}
+
+/// Lower a layer to a tuned RISC stream for the given schedule.
+///
+/// Scratchpad layout: `[A slot 0 | A slot 1? | B slot 0 | B slot 1?]`,
+/// where an A slot holds `mb` m-tiles × `kt` k-tiles. Accumulator holds
+/// `mb` (NOuter) or `mb × nt` (KOuter) tiles.
+pub fn lower_risc(
+    cfg: &GemminiConfig,
+    geom: &ConvGeom,
+    bufs: &LayerBuffers,
+    s: &RiscSchedule,
+) -> Vec<Instr> {
+    let dim = cfg.dim;
+    let (mt, nt, kt) = (geom.mt(dim), geom.nt(dim), geom.kt(dim));
+    assert!(s.fits(cfg, kt, nt), "schedule does not fit: {s:?}");
+    let a_slot_rows = s.mb * dim * kt;
+    let a_slots = if s.double_buffer_a { 2 } else { 1 };
+    let b_base = a_slot_rows * a_slots;
+    let b_slots = if s.double_buffer_b { 2 } else { 1 };
+
+    let mut out = Vec::new();
+    out.push(Instr::ConfigEx { acc_shift: 0 });
+    out.push(Instr::ConfigSt { scale: geom.scale, activation: geom.activation });
+
+    let blocks = mt.div_ceil(s.mb);
+    let mut b_rot = 0usize;
+    for blk in 0..blocks {
+        let m0 = blk * s.mb; // first m-tile of the block
+        let mbe = s.mb.min(mt - m0); // tiles in this block
+        let a_base = (blk % a_slots) * a_slot_rows;
+
+        // ---- load the A block: per (ki, mi), fragmented by kernel rows ----
+        for ki in 0..kt {
+            let k_eff = dim.min(geom.k - ki * dim);
+            for mi in 0..mbe {
+                let rows = dim.min(geom.m - (m0 + mi) * dim);
+                emit_a_mvin(
+                    &mut out,
+                    bufs.a_addr + ((m0 + mi) * dim) * geom.k + ki * dim,
+                    a_base + (ki * s.mb + mi) * dim,
+                    rows,
+                    k_eff,
+                    geom.k,
+                    geom.kernel,
+                );
+            }
+        }
+
+        // acc tile row for (mi, ni) under the chosen order.
+        let acc_row = |mi: usize, ni: usize| -> usize {
+            match s.order {
+                LoopOrder::NOuter => mi * dim,
+                LoopOrder::KOuter => (mi * nt + ni) * dim,
+            }
+        };
+
+        match s.order {
+            LoopOrder::NOuter => {
+                for ni in 0..nt {
+                    let n_eff = dim.min(geom.n - ni * dim);
+                    if let Some(bias) = bufs.bias_addr {
+                        for mi in 0..mbe {
+                            let rows = dim.min(geom.m - (m0 + mi) * dim);
+                            out.push(Instr::Mvin {
+                                dram_addr: bias + ni * dim * 4,
+                                dst: MvinDst::Accumulator { row: acc_row(mi, ni) },
+                                rows,
+                                cols: n_eff,
+                                stride_bytes: 0,
+                            });
+                        }
+                    }
+                    for ki in 0..kt {
+                        let k_eff = dim.min(geom.k - ki * dim);
+                        let b_row = b_base + (b_rot % b_slots) * dim;
+                        b_rot += 1;
+                        out.push(Instr::Mvin {
+                            dram_addr: bufs.b_addr + (ki * dim) * geom.n + ni * dim,
+                            dst: MvinDst::Scratchpad { row: b_row },
+                            rows: k_eff,
+                            cols: n_eff,
+                            stride_bytes: geom.n,
+                        });
+                        for mi in 0..mbe {
+                            let rows = dim.min(geom.m - (m0 + mi) * dim);
+                            let accumulate = ki > 0 || bufs.bias_addr.is_some();
+                            out.push(Instr::Preload {
+                                b_row: if mi == 0 { b_row } else { REUSE_WEIGHTS },
+                                acc_row: acc_row(mi, ni),
+                                accumulate,
+                            });
+                            out.push(Instr::Compute {
+                                a_row: a_base + (ki * s.mb + mi) * dim,
+                                rows,
+                                cols: k_eff,
+                            });
+                        }
+                    }
+                    for mi in 0..mbe {
+                        let rows = dim.min(geom.m - (m0 + mi) * dim);
+                        out.push(Instr::Mvout {
+                            acc_row: acc_row(mi, ni),
+                            dram_addr: bufs.c_addr + ((m0 + mi) * dim) * geom.n + ni * dim,
+                            rows,
+                            cols: n_eff,
+                            stride_bytes: geom.n,
+                        });
+                    }
+                }
+            }
+            LoopOrder::KOuter => {
+                if let Some(bias) = bufs.bias_addr {
+                    for ni in 0..nt {
+                        let n_eff = dim.min(geom.n - ni * dim);
+                        for mi in 0..mbe {
+                            let rows = dim.min(geom.m - (m0 + mi) * dim);
+                            out.push(Instr::Mvin {
+                                dram_addr: bias + ni * dim * 4,
+                                dst: MvinDst::Accumulator { row: acc_row(mi, ni) },
+                                rows,
+                                cols: n_eff,
+                                stride_bytes: 0,
+                            });
+                        }
+                    }
+                }
+                for ki in 0..kt {
+                    let k_eff = dim.min(geom.k - ki * dim);
+                    for ni in 0..nt {
+                        let n_eff = dim.min(geom.n - ni * dim);
+                        let b_row = b_base + (b_rot % b_slots) * dim;
+                        b_rot += 1;
+                        out.push(Instr::Mvin {
+                            dram_addr: bufs.b_addr + (ki * dim) * geom.n + ni * dim,
+                            dst: MvinDst::Scratchpad { row: b_row },
+                            rows: k_eff,
+                            cols: n_eff,
+                            stride_bytes: geom.n,
+                        });
+                        for mi in 0..mbe {
+                            let rows = dim.min(geom.m - (m0 + mi) * dim);
+                            let accumulate = ki > 0 || bufs.bias_addr.is_some();
+                            out.push(Instr::Preload {
+                                b_row: if mi == 0 { b_row } else { REUSE_WEIGHTS },
+                                acc_row: acc_row(mi, ni),
+                                accumulate,
+                            });
+                            out.push(Instr::Compute {
+                                a_row: a_base + (ki * s.mb + mi) * dim,
+                                rows,
+                                cols: k_eff,
+                            });
+                        }
+                    }
+                }
+                for ni in 0..nt {
+                    let n_eff = dim.min(geom.n - ni * dim);
+                    for mi in 0..mbe {
+                        let rows = dim.min(geom.m - (m0 + mi) * dim);
+                        out.push(Instr::Mvout {
+                            acc_row: acc_row(mi, ni),
+                            dram_addr: bufs.c_addr + ((m0 + mi) * dim) * geom.n + ni * dim,
+                            rows,
+                            cols: n_eff,
+                            stride_bytes: geom.n,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out.push(Instr::Flush);
+    out
+}
+
+/// Split an A-tile mvin into `frag` chunks modelling the conv FSM's
+/// per-kernel-row gather (matches the CISC expansion's accounting).
+fn emit_a_mvin(
+    out: &mut Vec<Instr>,
+    dram_addr: usize,
+    sp_row: usize,
+    rows: usize,
+    cols: usize,
+    stride: usize,
+    frag: usize,
+) {
+    let frag = frag.clamp(1, rows);
+    let chunk = rows.div_ceil(frag);
+    let mut r0 = 0;
+    while r0 < rows {
+        let r = chunk.min(rows - r0);
+        out.push(Instr::Mvin {
+            dram_addr: dram_addr + r0 * stride,
+            dst: MvinDst::Scratchpad { row: sp_row + r0 },
+            rows: r,
+            cols,
+            stride_bytes: stride,
+        });
+        r0 += r;
+    }
+}
+
+/// Lower a data-movement op (maxpool / upsample / concat) to a DMA stream:
+/// `bytes_in` DRAM→scratchpad, `bytes_out` accumulator→DRAM writeback.
+/// Timing-only (numerics run on the IR interpreter).
+pub fn lower_move_op(cfg: &GemminiConfig, bytes_in: usize, bytes_out: usize) -> Vec<Instr> {
+    let dim = cfg.dim;
+    let row_bytes = dim; // one scratchpad row per burst
+    let mut out = vec![Instr::ConfigSt { scale: 1.0, activation: Activation::None }];
+    let mut emitted = 0usize;
+    while emitted < bytes_in {
+        let rows = ((bytes_in - emitted).div_ceil(row_bytes)).min(dim);
+        out.push(Instr::Mvin {
+            dram_addr: emitted,
+            dst: MvinDst::Scratchpad { row: 0 },
+            rows,
+            cols: dim,
+            stride_bytes: row_bytes,
+        });
+        emitted += rows * row_bytes;
+    }
+    let mut written = 0usize;
+    while written < bytes_out {
+        let rows = ((bytes_out - written).div_ceil(row_bytes)).min(dim);
+        out.push(Instr::Mvout {
+            acc_row: 0,
+            dram_addr: (1 << 22) + written,
+            rows,
+            cols: dim,
+            stride_bytes: row_bytes,
+        });
+        written += rows * row_bytes;
+    }
+    out.push(Instr::Flush);
+    out
+}
+
+/// Stage the im2col matrix for a conv layer into `bufs.a_addr`
+/// (functional-mode helper; mirrors `cisc::stage_im2col`).
+#[allow(clippy::too_many_arguments)]
+pub fn stage_conv_operands(
+    dram: &mut crate::gemmini::memory::Dram,
+    geom: &ConvGeom,
+    bufs: &LayerBuffers,
+    input_nhwc: &[i8],
+    in_h: usize,
+    in_w: usize,
+    in_c: usize,
+    stride: usize,
+    pad: usize,
+    weights_oihw: &[i8], // IR layout [oc, kh, kw, ic]
+    bias: Option<&[i32]>,
+) {
+    let k = geom.kernel;
+    // A: im2col M×K.
+    let (oh, ow) = crate::gemmini::cisc::conv_out_dims(in_h, in_w, k, stride, pad);
+    assert_eq!(oh * ow, geom.m);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let patch = oy * ow + ox;
+            for kh in 0..k {
+                for kw in 0..k {
+                    let iy = (oy * stride + kh) as isize - pad as isize;
+                    let ix = (ox * stride + kw) as isize - pad as isize;
+                    let dst = bufs.a_addr + patch * geom.k + (kh * k + kw) * in_c;
+                    for c in 0..in_c {
+                        let v = if iy < 0 || ix < 0 || iy >= in_h as isize || ix >= in_w as isize
+                        {
+                            0
+                        } else {
+                            input_nhwc[((iy as usize) * in_w + ix as usize) * in_c + c]
+                        };
+                        dram.write_i8(dst + c, v);
+                    }
+                }
+            }
+        }
+    }
+    // B: weights [oc,kh,kw,ic] -> GEMM K×N with K=(kh,kw,ic), N=oc.
+    for o in 0..geom.n {
+        for kh in 0..k {
+            for kw in 0..k {
+                for c in 0..in_c {
+                    let krow = (kh * k + kw) * in_c + c;
+                    let v = weights_oihw[((o * k + kh) * k + kw) * in_c + c];
+                    dram.write_i8(bufs.b_addr + krow * geom.n + o, v);
+                }
+            }
+        }
+    }
+    if let (Some(addr), Some(b)) = (bufs.bias_addr, bias) {
+        for (i, &v) in b.iter().enumerate() {
+            dram.write_i32(addr + i * 4, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemmini::sim::Simulator;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn cfg4() -> GemminiConfig {
+        GemminiConfig { dim: 4, scratchpad_kib: 8, accumulator_kib: 4, ..GemminiConfig::original_zcu102() }
+    }
+
+    fn ref_gemm(a: &[i8], b: &[i8], bias: Option<&[i32]>, m: usize, n: usize, k: usize, scale: f32) -> Vec<i8> {
+        let mut c = vec![0i8; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc: i32 = bias.map(|b| b[j]).unwrap_or(0);
+                for x in 0..k {
+                    acc += a[i * k + x] as i32 * b[x * n + j] as i32;
+                }
+                c[i * n + j] = ((acc as f32 * scale).round() as i32).clamp(-128, 127) as i8;
+            }
+        }
+        c
+    }
+
+    fn check_schedule(m: usize, n: usize, k: usize, s: RiscSchedule, bias: bool, seed: u64) {
+        let cfg = cfg4();
+        let geom = ConvGeom {
+            m,
+            n,
+            k,
+            kernel: 1,
+            scale: 0.5,
+            activation: Activation::None,
+            bias,
+            label: "t".into(),
+        };
+        if !s.fits(&cfg, geom.kt(4), geom.nt(4)) {
+            return;
+        }
+        let mut alloc = DramAllocator::new(1 << 20);
+        let bufs = alloc_buffers(&geom, &mut alloc);
+        let mut sim = Simulator::new_functional(cfg.clone(), 1 << 20);
+        let mut rng = Rng::new(seed);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(11) as i8) - 5).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| (rng.below(9) as i8) - 4).collect();
+        let bv: Vec<i32> = (0..n).map(|_| (rng.below(7) as i32) - 3).collect();
+        sim.dram.write_i8_matrix(bufs.a_addr, &a, m, k, k);
+        sim.dram.write_i8_matrix(bufs.b_addr, &b, k, n, n);
+        if let Some(addr) = bufs.bias_addr {
+            sim.dram.write_i32_matrix(addr, &bv, 1, n, 0);
+        }
+        let stream = lower_risc(&cfg, &geom, &bufs, &s);
+        sim.run(&stream);
+        let got = sim.dram.read_i8_matrix(bufs.c_addr, m, n, n);
+        let want = ref_gemm(&a, &b, bias.then_some(&bv[..]), m, n, k, 0.5);
+        assert_eq!(got, want, "m={m} n={n} k={k} sched={s:?}");
+    }
+
+    #[test]
+    fn risc_schedules_all_compute_same_result() {
+        for &order in &[LoopOrder::NOuter, LoopOrder::KOuter] {
+            for &mb in &[1, 2, 4] {
+                for &db in &[false, true] {
+                    let s = RiscSchedule {
+                        mb,
+                        double_buffer_a: db,
+                        double_buffer_b: db,
+                        order,
+                    };
+                    check_schedule(10, 6, 9, s, false, 42);
+                    check_schedule(8, 8, 8, s, true, 43);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_shapes_and_schedules() {
+        prop::check(
+            7,
+            25,
+            |r| {
+                let m = r.range(1, 20);
+                let n = r.range(1, 12);
+                let k = r.range(1, 16);
+                let s = RiscSchedule {
+                    mb: *r.choose(&[1usize, 2, 4]),
+                    double_buffer_a: r.chance(0.5),
+                    double_buffer_b: r.chance(0.5),
+                    order: if r.chance(0.5) { LoopOrder::NOuter } else { LoopOrder::KOuter },
+                };
+                let bias = r.chance(0.5);
+                let seed = r.next_u64();
+                (m, n, k, s, bias, seed)
+            },
+            |&(m, n, k, s, bias, seed)| {
+                check_schedule(m, n, k, s, bias, seed);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn risc_beats_cisc_on_reuse_heavy_layer() {
+        // A GEMM with many m-tiles: A-block caching + weight reuse should
+        // beat the single-buffered CISC schedule.
+        let cfg = cfg4();
+        let geom = ConvGeom {
+            m: 64,
+            n: 8,
+            k: 16,
+            kernel: 1,
+            scale: 1.0,
+            activation: Activation::None,
+            bias: false,
+            label: "t".into(),
+        };
+        let mut alloc = DramAllocator::new(1 << 20);
+        let bufs = alloc_buffers(&geom, &mut alloc);
+        let mut sim = Simulator::new(cfg.clone(), 1 << 20);
+        let cisc = sim.run(&lower_cisc(&geom, &bufs)).cycles;
+        let s = RiscSchedule {
+            mb: 4,
+            double_buffer_a: true,
+            double_buffer_b: true,
+            order: LoopOrder::NOuter,
+        };
+        let mut sim2 = Simulator::new(cfg.clone(), 1 << 20);
+        let risc = sim2.run(&lower_risc(&cfg, &geom, &bufs, &s)).cycles;
+        assert!(risc < cisc, "risc {risc} !< cisc {cisc}");
+    }
+
+    #[test]
+    fn conv_geometry_from_graph() {
+        use crate::ir::{GraphBuilder, PaddingMode};
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![1, 16, 16, 8]);
+        let c = b.conv2d(x, 24, 3, 2, PaddingMode::Same, ActivationKind::Relu6, None, None);
+        let g = b.finish(&[c]);
+        let geom = layer_geometry(&g, c).unwrap();
+        assert_eq!(geom.m, 8 * 8);
+        assert_eq!(geom.n, 24);
+        assert_eq!(geom.k, 9 * 8);
+        assert_eq!(geom.kernel, 3);
+    }
+
+    #[test]
+    fn move_op_stream_scales_with_bytes() {
+        let cfg = cfg4();
+        let mut sim = Simulator::new(cfg.clone(), 1 << 24);
+        let small = sim.run(&lower_move_op(&cfg, 1024, 1024)).cycles;
+        let mut sim2 = Simulator::new(cfg, 1 << 24);
+        let big = sim2.run(&lower_move_op(&sim2.cfg.clone(), 8192, 8192)).cycles;
+        assert!(big > 2 * small);
+    }
+
+    #[test]
+    fn staged_conv_executes_correctly_end_to_end() {
+        // Full conv through stage + lower_risc vs direct reference.
+        let cfg = cfg4();
+        let (ih, iw, ic, oc, k, stride, pad) = (5usize, 5usize, 2usize, 3usize, 3usize, 1usize, 1usize);
+        let (oh, ow) = crate::gemmini::cisc::conv_out_dims(ih, iw, k, stride, pad);
+        let geom = ConvGeom {
+            m: oh * ow,
+            n: oc,
+            k: k * k * ic,
+            kernel: k,
+            scale: 1.0,
+            activation: Activation::None,
+            bias: false,
+            label: "conv".into(),
+        };
+        let mut alloc = DramAllocator::new(1 << 20);
+        let bufs = alloc_buffers(&geom, &mut alloc);
+        let mut rng = Rng::new(9);
+        let input: Vec<i8> = (0..ih * iw * ic).map(|_| (rng.below(9) as i8) - 4).collect();
+        let w: Vec<i8> = (0..oc * k * k * ic).map(|_| (rng.below(7) as i8) - 3).collect();
+        let mut sim = Simulator::new_functional(cfg.clone(), 1 << 20);
+        stage_conv_operands(&mut sim.dram, &geom, &bufs, &input, ih, iw, ic, stride, pad, &w, None);
+        let s = RiscSchedule { mb: 2, double_buffer_a: true, double_buffer_b: false, order: LoopOrder::NOuter };
+        sim.run(&lower_risc(&cfg, &geom, &bufs, &s));
+        let got = sim.dram.read_i8_matrix(bufs.c_addr, geom.m, geom.n, geom.n);
+        // direct reference
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for n in 0..oc {
+                    let mut acc = 0i32;
+                    for kh in 0..k {
+                        for kw in 0..k {
+                            let iy = (oy + kh) as isize - pad as isize;
+                            let ix = (ox + kw) as isize - pad as isize;
+                            if iy < 0 || ix < 0 || iy >= ih as isize || ix >= iw as isize {
+                                continue;
+                            }
+                            for c in 0..ic {
+                                acc += input[((iy as usize) * iw + ix as usize) * ic + c] as i32
+                                    * w[((n * k + kh) * k + kw) * ic + c] as i32;
+                            }
+                        }
+                    }
+                    assert_eq!(
+                        got[(oy * ow + ox) * oc + n] as i32,
+                        acc.clamp(-128, 127),
+                        "({oy},{ox},{n})"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Schedule exploration for Gemmini layers (Sections IV-C, V-A).
+//!
+//! The paper expands the TVM→Gemmini integration so convolutions, max
+//! pooling, resize and concat lower to RISC-type instruction streams whose
+//! schedule (tile-block size, loop order, double buffering) is *tunable*,
+//! then uses AutoTVM to search that space per layer, falling back to the
+//! CISC state machines when the tuned schedule loses. This module is that
+//! machinery re-implemented natively:
+//!
+//! - [`space`] — the per-layer schedule space (analogue of AutoTVM knobs);
+//! - [`codegen`] — lowering IR layers to RISC streams for a schedule, or
+//!   to the CISC FSM instruction (the "Default" of Figure 5);
+//! - [`cost_model`] — analytic latency estimate used to prune the search;
+//! - [`search`] — random + local search, with the top candidates measured
+//!   on the cycle-approximate simulator (AutoTVM's measure step);
+//! - [`tuner`] — whole-model orchestration producing the Figure 5 data.
+
+pub mod codegen;
+pub mod cost_model;
+pub mod search;
+pub mod space;
+pub mod tuner;
+
+pub use codegen::{layer_geometry, lower_cisc, lower_risc, ConvGeom};
+pub use space::{LoopOrder, RiscSchedule};
+pub use tuner::{tune_graph, LayerTuning, TuningResult};

@@ -1,0 +1,152 @@
+//! Schedule search (the AutoTVM loop of Section V-A).
+//!
+//! Strategy: enumerate the valid space, rank every candidate with the
+//! analytic cost model, then *measure* the top `measure_k` candidates on
+//! the cycle-approximate simulator and keep the best measurement — the
+//! same explore-then-measure structure AutoTVM uses, with the simulator
+//! standing in for the FPGA (DESIGN.md §2).
+
+use crate::gemmini::config::GemminiConfig;
+use crate::gemmini::memory::DramAllocator;
+use crate::gemmini::sim::Simulator;
+use crate::util::json::Json;
+
+use super::codegen::{alloc_buffers, lower_cisc, lower_risc, ConvGeom};
+use super::cost_model::{estimate_cisc, estimate_risc};
+use super::space::{enumerate, RiscSchedule};
+
+/// Result of tuning one layer.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Cycles of the CISC default schedule (measured).
+    pub default_cycles: u64,
+    /// Best tuned cycles (measured); equals `default_cycles` when the
+    /// fallback wins (the paper: "when the schedule using RISC-type
+    /// instructions is not as good as the default one, we default to the
+    /// CISC-type schedules").
+    pub best_cycles: u64,
+    /// The winning RISC schedule, `None` when CISC won.
+    pub best_schedule: Option<RiscSchedule>,
+    /// Candidates measured on the simulator.
+    pub measured: usize,
+    /// Size of the enumerated space.
+    pub space_size: usize,
+}
+
+impl SearchResult {
+    pub fn speedup(&self) -> f64 {
+        self.default_cycles as f64 / self.best_cycles as f64
+    }
+
+    pub fn improved(&self) -> bool {
+        self.best_cycles < self.default_cycles
+    }
+
+    pub fn to_json(&self, label: &str) -> Json {
+        Json::obj(vec![
+            ("layer", Json::Str(label.into())),
+            ("default_cycles", Json::Num(self.default_cycles as f64)),
+            ("best_cycles", Json::Num(self.best_cycles as f64)),
+            ("speedup", Json::Num(self.speedup())),
+            ("improved", Json::Bool(self.improved())),
+            (
+                "schedule",
+                match &self.best_schedule {
+                    Some(s) => Json::Str(format!("{s:?}")),
+                    None => Json::Str("cisc-default".into()),
+                },
+            ),
+        ])
+    }
+}
+
+/// Measure one schedule on a fresh simulator (timing-only).
+fn measure(cfg: &GemminiConfig, geom: &ConvGeom, sched: Option<&RiscSchedule>) -> u64 {
+    let mut alloc = DramAllocator::new(1 << 28);
+    let bufs = alloc_buffers(geom, &mut alloc);
+    let mut sim = Simulator::new(cfg.clone(), 1 << 28);
+    let stream = match sched {
+        Some(s) => lower_risc(cfg, geom, &bufs, s),
+        None => lower_cisc(geom, &bufs),
+    };
+    sim.run(&stream).cycles
+}
+
+/// Tune one layer: cost-model ranking + top-k measurement + CISC fallback.
+pub fn tune_layer(cfg: &GemminiConfig, geom: &ConvGeom, measure_k: usize) -> SearchResult {
+    let default_cycles = measure(cfg, geom, None);
+    let space = enumerate(cfg, geom.kt(cfg.dim), geom.nt(cfg.dim));
+    let mut ranked: Vec<(f64, RiscSchedule)> =
+        space.iter().map(|s| (estimate_risc(cfg, geom, s), *s)).collect();
+    ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // Skip measuring candidates the model says are far worse than CISC.
+    let cisc_est = estimate_cisc(cfg, geom);
+    let mut best_cycles = default_cycles;
+    let mut best_schedule = None;
+    let mut measured = 0;
+    for (est, s) in ranked.iter().take(measure_k) {
+        if *est > 3.0 * cisc_est {
+            break;
+        }
+        let cycles = measure(cfg, geom, Some(s));
+        measured += 1;
+        if cycles < best_cycles {
+            best_cycles = cycles;
+            best_schedule = Some(*s);
+        }
+    }
+    SearchResult { default_cycles, best_cycles, best_schedule, measured, space_size: space.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemmini::isa::Activation;
+
+    fn small_cfg() -> GemminiConfig {
+        GemminiConfig { dim: 8, scratchpad_kib: 32, accumulator_kib: 16, ..GemminiConfig::original_zcu102() }
+    }
+
+    fn geom(m: usize, n: usize, k: usize, kernel: usize) -> ConvGeom {
+        ConvGeom {
+            m,
+            n,
+            k,
+            kernel,
+            scale: 1.0,
+            activation: Activation::None,
+            bias: false,
+            label: format!("gemm{m}x{n}x{k}"),
+        }
+    }
+
+    #[test]
+    fn tuned_never_worse_than_default() {
+        let cfg = small_cfg();
+        for g in [geom(64, 16, 32, 1), geom(16, 8, 72, 3), geom(256, 8, 8, 1)] {
+            let r = tune_layer(&cfg, &g, 6);
+            assert!(r.best_cycles <= r.default_cycles, "{}: {r:?}", g.label);
+            assert!(r.speedup() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn reuse_heavy_layer_improves_substantially() {
+        // Large M (conv over many pixels): block caching should win big.
+        let cfg = small_cfg();
+        let r = tune_layer(&cfg, &geom(512, 16, 32, 3), 8);
+        assert!(r.improved(), "{r:?}");
+        assert!(r.speedup() > 1.2, "speedup {}", r.speedup());
+        assert!(r.best_schedule.is_some());
+    }
+
+    #[test]
+    fn search_result_serializes() {
+        let cfg = small_cfg();
+        let r = tune_layer(&cfg, &geom(32, 8, 16, 1), 3);
+        let j = r.to_json("conv_1");
+        let s = j.dump();
+        assert!(s.contains("conv_1"));
+        assert!(Json::parse(&s).is_ok());
+    }
+}

@@ -1,0 +1,120 @@
+//! The per-layer schedule space (the AutoTVM knobs of Section IV-C).
+
+use crate::gemmini::config::GemminiConfig;
+
+/// Loop nesting inside one m-block: which of the (n, k) loops is outer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopOrder {
+    /// `for n { for k { preload B(k,n); for m: compute } }` — B loaded
+    /// kt times per (block, n); accumulator written once per n.
+    NOuter,
+    /// `for k { for n { … } }` — same loads, different accumulate pattern:
+    /// every (m, n) accumulator tile stays live across the whole k loop,
+    /// so `mb × nt` tiles must fit in the accumulator.
+    KOuter,
+}
+
+/// A RISC-type schedule for one GEMM-shaped layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RiscSchedule {
+    /// m-tiles processed per block (A block cached in scratchpad across
+    /// the whole n/k loop — the reuse CISC's fixed schedule lacks).
+    pub mb: usize,
+    /// Double-buffer A blocks (prefetch next block during compute).
+    pub double_buffer_a: bool,
+    /// Double-buffer B tiles (prefetch next B during compute).
+    pub double_buffer_b: bool,
+    /// Loop order inside a block.
+    pub order: LoopOrder,
+}
+
+impl RiscSchedule {
+    /// Scratchpad rows needed for a layer with `kt` K-tiles.
+    pub fn sp_rows_needed(&self, cfg: &GemminiConfig, kt: usize) -> usize {
+        let a_block = self.mb * cfg.dim * kt;
+        let a_bufs = if self.double_buffer_a { 2 } else { 1 };
+        let b_bufs = if self.double_buffer_b { 2 } else { 1 };
+        a_block * a_bufs + cfg.dim * b_bufs
+    }
+
+    /// Accumulator rows needed (`nt` N-tiles for the KOuter order).
+    pub fn acc_rows_needed(&self, cfg: &GemminiConfig, nt: usize) -> usize {
+        match self.order {
+            LoopOrder::NOuter => self.mb * cfg.dim,
+            LoopOrder::KOuter => self.mb * nt.max(1) * cfg.dim,
+        }
+    }
+
+    /// Whether this schedule fits the accelerator for a layer of `kt`
+    /// K-tiles and `nt` N-tiles.
+    pub fn fits(&self, cfg: &GemminiConfig, kt: usize, nt: usize) -> bool {
+        self.sp_rows_needed(cfg, kt) <= cfg.scratchpad_rows()
+            && self.acc_rows_needed(cfg, nt) <= cfg.accumulator_rows()
+    }
+}
+
+/// Enumerate the valid schedule space for a layer (`kt` K-tiles,
+/// `nt` N-tiles). This is the space AutoTVM would search.
+pub fn enumerate(cfg: &GemminiConfig, kt: usize, nt: usize) -> Vec<RiscSchedule> {
+    let mut out = Vec::new();
+    for &mb in &[1usize, 2, 4, 8, 16] {
+        for &da in &[false, true] {
+            for &db in &[false, true] {
+                for &order in &[LoopOrder::NOuter, LoopOrder::KOuter] {
+                    let s = RiscSchedule { mb, double_buffer_a: da, double_buffer_b: db, order };
+                    if s.fits(cfg, kt, nt) {
+                        out.push(s);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_nonempty_for_typical_layers() {
+        let cfg = GemminiConfig::ours_zcu102();
+        // 3×3×64→128 conv at 60×60: K=576→kt=18, N=128→nt=4.
+        let s = enumerate(&cfg, 18, 4);
+        assert!(s.len() >= 8, "space size {}", s.len());
+        // Always contains the trivial schedule.
+        assert!(s.contains(&RiscSchedule {
+            mb: 1,
+            double_buffer_a: false,
+            double_buffer_b: false,
+            order: LoopOrder::NOuter
+        }));
+    }
+
+    #[test]
+    fn capacity_prunes_large_blocks() {
+        let cfg = GemminiConfig::original_zcu102();
+        // Huge K (first layers at 480²): kt = 64 → A blocks get big.
+        let all = enumerate(&cfg, 64, 2);
+        let max_mb = all.iter().map(|s| s.mb).max().unwrap();
+        assert!(max_mb <= 8, "mb {max_mb} should be capacity-limited");
+        // Small K: bigger blocks allowed.
+        let small = enumerate(&cfg, 2, 2);
+        assert!(small.iter().map(|s| s.mb).max().unwrap() >= max_mb);
+    }
+
+    #[test]
+    fn kouter_constrained_by_accumulator() {
+        let cfg = GemminiConfig::original_zcu102(); // 64 acc tiles @dim16
+        let s = RiscSchedule {
+            mb: 16,
+            double_buffer_a: false,
+            double_buffer_b: false,
+            order: LoopOrder::KOuter,
+        };
+        // nt=8 → needs 128 tiles > 64.
+        assert!(!s.fits(&cfg, 4, 8));
+        let s2 = RiscSchedule { order: LoopOrder::NOuter, ..s };
+        assert!(s2.fits(&cfg, 4, 8));
+    }
+}

@@ -1,0 +1,303 @@
+//! Gaussian-Mixture PHD filter over a constant-velocity model.
+//!
+//! State per component: [x, y, vx, vy] with diagonal-ish covariance.
+//! Standard GM-PHD recursion (Vo & Ma 2006): predict, update with
+//! detection likelihoods, prune/merge, extract tracks above weight 0.5.
+
+/// One Gaussian component of the PHD intensity.
+#[derive(Debug, Clone)]
+struct Component {
+    w: f64,
+    x: [f64; 4],
+    /// Covariance, row-major 4×4.
+    p: [[f64; 4]; 4],
+    id: usize,
+}
+
+/// An extracted track.
+#[derive(Debug, Clone)]
+pub struct Track {
+    pub id: usize,
+    pub x: f64,
+    pub y: f64,
+    pub vx: f64,
+    pub vy: f64,
+    pub weight: f64,
+}
+
+/// Filter parameters.
+#[derive(Debug, Clone)]
+pub struct GmPhdConfig {
+    pub dt: f64,
+    /// Survival and detection probabilities.
+    pub p_survive: f64,
+    pub p_detect: f64,
+    /// Process / measurement noise std.
+    pub sigma_process: f64,
+    pub sigma_meas: f64,
+    /// Clutter density (false alarms per unit area).
+    pub clutter: f64,
+    /// Birth weight for each measurement-driven birth component.
+    pub birth_weight: f64,
+    pub prune_threshold: f64,
+    pub merge_dist: f64,
+    pub max_components: usize,
+}
+
+impl Default for GmPhdConfig {
+    fn default() -> Self {
+        Self {
+            dt: 0.1,
+            p_survive: 0.98,
+            p_detect: 0.9,
+            sigma_process: 0.5,
+            sigma_meas: 0.3,
+            clutter: 0.05,
+            birth_weight: 0.25,
+            prune_threshold: 1e-4,
+            merge_dist: 1.0,
+            max_components: 60,
+        }
+    }
+}
+
+fn matmul4(a: &[[f64; 4]; 4], b: &[[f64; 4]; 4]) -> [[f64; 4]; 4] {
+    let mut o = [[0.0; 4]; 4];
+    for i in 0..4 {
+        for k in 0..4 {
+            let av = a[i][k];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..4 {
+                o[i][j] += av * b[k][j];
+            }
+        }
+    }
+    o
+}
+
+/// `a · bᵀ`.
+fn matmul4_bt(a: &[[f64; 4]; 4], b: &[[f64; 4]; 4]) -> [[f64; 4]; 4] {
+    let mut o = [[0.0; 4]; 4];
+    for i in 0..4 {
+        for j in 0..4 {
+            let mut s = 0.0;
+            for k in 0..4 {
+                s += a[i][k] * b[j][k];
+            }
+            o[i][j] = s;
+        }
+    }
+    o
+}
+
+/// The GM-PHD filter.
+pub struct GmPhd {
+    cfg: GmPhdConfig,
+    comps: Vec<Component>,
+    next_id: usize,
+}
+
+impl GmPhd {
+    pub fn new(cfg: GmPhdConfig) -> Self {
+        Self { cfg, comps: Vec::new(), next_id: 0 }
+    }
+
+    /// Predict + update with this frame's measurements (world x, y).
+    pub fn step(&mut self, measurements: &[(f64, f64)]) {
+        let c = self.cfg.clone();
+        // ---- predict: x := Fx, P := F P Fᵀ + Q (constant-velocity F) ----
+        let mut f_mat = [[0.0f64; 4]; 4];
+        for (i, row) in f_mat.iter_mut().enumerate() {
+            row[i] = 1.0;
+        }
+        f_mat[0][2] = c.dt;
+        f_mat[1][3] = c.dt;
+        for comp in self.comps.iter_mut() {
+            comp.w *= c.p_survive;
+            comp.x[0] += comp.x[2] * c.dt;
+            comp.x[1] += comp.x[3] * c.dt;
+            let fp = matmul4(&f_mat, &comp.p);
+            let mut p = matmul4_bt(&fp, &f_mat); // F P Fᵀ
+            let q = c.sigma_process * c.sigma_process * c.dt;
+            for (i, row) in p.iter_mut().enumerate() {
+                row[i] += q * if i < 2 { 0.5 } else { 1.0 };
+            }
+            comp.p = p;
+        }
+
+        // ---- update ----
+        let r = c.sigma_meas * c.sigma_meas;
+        let mut updated: Vec<Component> = self
+            .comps
+            .iter()
+            .map(|comp| Component { w: comp.w * (1.0 - c.p_detect), ..comp.clone() })
+            .collect();
+        for &(zx, zy) in measurements {
+            let mut batch: Vec<Component> = Vec::new();
+            let mut denom = c.clutter;
+            for comp in &self.comps {
+                // Innovation with H = [I2 0]; S = P[0..2,0..2] + R.
+                let sxx = comp.p[0][0] + r;
+                let syy = comp.p[1][1] + r;
+                let dx = zx - comp.x[0];
+                let dy = zy - comp.x[1];
+                let maha = dx * dx / sxx + dy * dy / syy;
+                let lik = (-0.5 * maha).exp()
+                    / (2.0 * std::f64::consts::PI * (sxx * syy).sqrt());
+                let w = c.p_detect * comp.w * lik;
+                denom += w;
+                // Kalman update with H = [I₂ 0] and diagonal S:
+                // K = P Hᵀ S⁻¹;  x' = x + K ν;  P' = (I − K H) P.
+                let mut kmat = [[0.0f64; 2]; 4];
+                for i in 0..4 {
+                    kmat[i][0] = comp.p[i][0] / sxx;
+                    kmat[i][1] = comp.p[i][1] / syy;
+                }
+                let mut x = comp.x;
+                for i in 0..4 {
+                    x[i] += kmat[i][0] * dx + kmat[i][1] * dy;
+                }
+                let mut p = comp.p;
+                for i in 0..4 {
+                    for j in 0..4 {
+                        p[i][j] -=
+                            kmat[i][0] * comp.p[0][j] + kmat[i][1] * comp.p[1][j];
+                    }
+                }
+                batch.push(Component { w, x, p, id: comp.id });
+            }
+            for mut comp in batch {
+                comp.w /= denom;
+                updated.push(comp);
+            }
+            // Measurement-driven birth — only where no existing component
+            // already explains the measurement (otherwise the zero-velocity
+            // birth would merge into the track and bias its velocity).
+            let explained = self.comps.iter().any(|comp| {
+                let dx = comp.x[0] - zx;
+                let dy = comp.x[1] - zy;
+                comp.w > 0.1 && dx * dx + dy * dy < c.merge_dist * c.merge_dist
+            });
+            if !explained {
+                let mut p = [[0.0; 4]; 4];
+                p[0][0] = 0.5;
+                p[1][1] = 0.5;
+                p[2][2] = 2.0;
+                p[3][3] = 2.0;
+                updated.push(Component {
+                    w: c.birth_weight,
+                    x: [zx, zy, 0.0, 0.0],
+                    p,
+                    id: self.next_id,
+                });
+                self.next_id += 1;
+            }
+        }
+
+        // ---- prune & merge ----
+        updated.retain(|cmp| cmp.w > c.prune_threshold && cmp.w.is_finite());
+        updated.sort_by(|a, b| b.w.partial_cmp(&a.w).unwrap());
+        let mut merged: Vec<Component> = Vec::new();
+        for comp in updated {
+            if let Some(m) = merged.iter_mut().find(|m| {
+                let dx = m.x[0] - comp.x[0];
+                let dy = m.x[1] - comp.x[1];
+                dx * dx + dy * dy < c.merge_dist * c.merge_dist
+            }) {
+                let wsum = m.w + comp.w;
+                for i in 0..4 {
+                    m.x[i] = (m.x[i] * m.w + comp.x[i] * comp.w) / wsum;
+                }
+                m.w = wsum;
+            } else {
+                merged.push(comp);
+            }
+        }
+        merged.truncate(c.max_components);
+        self.comps = merged;
+    }
+
+    /// Tracks with weight ≥ 0.5 (expected-cardinality extraction).
+    pub fn tracks(&self) -> Vec<Track> {
+        self.comps
+            .iter()
+            .filter(|c| c.w >= 0.5)
+            .map(|c| Track { id: c.id, x: c.x[0], y: c.x[1], vx: c.x[2], vy: c.x[3], weight: c.w })
+            .collect()
+    }
+
+    /// Estimated number of objects (sum of weights).
+    pub fn cardinality(&self) -> f64 {
+        self.comps.iter().map(|c| c.w).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_single_constant_velocity_target() {
+        let mut f = GmPhd::new(GmPhdConfig::default());
+        for t in 0..30 {
+            let x = 0.0 + 0.5 * t as f64 * 0.1; // 0.5 m/s
+            f.step(&[(x, 2.0)]);
+        }
+        let tracks = f.tracks();
+        assert_eq!(tracks.len(), 1, "cardinality {}", f.cardinality());
+        let tr = &tracks[0];
+        assert!((tr.y - 2.0).abs() < 0.3, "y {}", tr.y);
+        assert!((tr.vx - 0.5).abs() < 0.3, "vx {}", tr.vx);
+        assert!(tr.vy.abs() < 0.3);
+    }
+
+    #[test]
+    fn tracks_two_separated_targets() {
+        let mut f = GmPhd::new(GmPhdConfig::default());
+        for t in 0..25 {
+            let dt = t as f64 * 0.1;
+            f.step(&[(dt, 0.0), (10.0 - dt, 8.0)]);
+        }
+        assert_eq!(f.tracks().len(), 2);
+        assert!((f.cardinality() - 2.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn missed_detections_tolerated() {
+        let mut f = GmPhd::new(GmPhdConfig::default());
+        for t in 0..30 {
+            if t % 4 == 3 {
+                f.step(&[]); // dropout frame
+            } else {
+                f.step(&[(1.0, 1.0)]);
+            }
+        }
+        assert_eq!(f.tracks().len(), 1);
+    }
+
+    #[test]
+    fn clutter_does_not_spawn_persistent_tracks() {
+        let mut f = GmPhd::new(GmPhdConfig::default());
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..30 {
+            // one real target + one random clutter point far away
+            let cx = rng.range_f64(-20.0, 20.0);
+            let cy = rng.range_f64(10.0, 30.0);
+            f.step(&[(0.0, 0.0), (cx, cy)]);
+        }
+        let tracks = f.tracks();
+        // The persistent target tracked; clutter components stay < 0.5.
+        assert!(!tracks.is_empty());
+        assert!(tracks.iter().any(|t| t.x.abs() < 0.5 && t.y.abs() < 0.5));
+        assert!(f.cardinality() < 2.5);
+    }
+
+    #[test]
+    fn empty_filter_is_empty() {
+        let f = GmPhd::new(GmPhdConfig::default());
+        assert!(f.tracks().is_empty());
+        assert_eq!(f.cardinality(), 0.0);
+    }
+}

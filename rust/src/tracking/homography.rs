@@ -1,0 +1,47 @@
+//! Homography projection: image plane → ground plane (the case study
+//! projects detections from a calibrated camera to world coordinates).
+
+/// A 3×3 projective transform, row-major.
+#[derive(Debug, Clone, Copy)]
+pub struct Homography {
+    pub h: [f64; 9],
+}
+
+impl Homography {
+    pub fn identity() -> Self {
+        Self { h: [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0] }
+    }
+
+    /// A simple calibrated overhead camera: scale + ground offset.
+    pub fn scale_offset(sx: f64, sy: f64, tx: f64, ty: f64) -> Self {
+        Self { h: [sx, 0.0, tx, 0.0, sy, ty, 0.0, 0.0, 1.0] }
+    }
+
+    /// Project an image point (normalized coords) to the ground plane.
+    pub fn project(&self, x: f64, y: f64) -> (f64, f64) {
+        let h = &self.h;
+        let w = h[6] * x + h[7] * y + h[8];
+        ((h[0] * x + h[1] * y + h[2]) / w, (h[3] * x + h[4] * y + h[5]) / w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_noop() {
+        let h = Homography::identity();
+        assert_eq!(h.project(0.3, 0.7), (0.3, 0.7));
+    }
+
+    #[test]
+    fn scale_offset_maps_to_world() {
+        let h = Homography::scale_offset(20.0, 30.0, -10.0, -15.0);
+        let (x, y) = h.project(0.5, 0.5);
+        assert!((x - 0.0).abs() < 1e-9);
+        assert!((y - 0.0).abs() < 1e-9);
+        let (x, y) = h.project(1.0, 1.0);
+        assert!((x - 10.0).abs() < 1e-9 && (y - 15.0).abs() < 1e-9);
+    }
+}

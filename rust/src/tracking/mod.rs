@@ -1,0 +1,10 @@
+//! GM-PHD multi-object tracking + ground-plane projection — the Section VI
+//! case-study's "main ECU" stage (world-space tracking with velocity
+//! estimation via a Gaussian Mixture Probability Hypothesis Density
+//! filter, fed by the FPGA detector through homography projection).
+
+pub mod gmphd;
+pub mod homography;
+
+pub use gmphd::{GmPhd, GmPhdConfig, Track};
+pub use homography::Homography;

@@ -1,0 +1,9 @@
+//! Small utilities the offline environment forces us to hand-roll:
+//! a deterministic PRNG (no `rand`), a minimal JSON writer (no `serde`),
+//! and a lightweight property-test driver (no `proptest`).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

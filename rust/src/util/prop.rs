@@ -1,0 +1,51 @@
+//! Lightweight property-test driver (offline stand-in for proptest).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it reports the failing case index and debug representation.
+//! No shrinking — failures print the full input, which our inputs are small
+//! enough to read directly.
+
+use super::rng::Rng;
+
+/// Run a property over generated cases; panics (with context) on failure.
+pub fn check<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property failed on case {i} (seed {seed}): {msg}\ninput: {input:#?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            1,
+            200,
+            |r| (r.below(100), r.below(100)),
+            |&(a, b)| {
+                if a + b >= a {
+                    Ok(())
+                } else {
+                    Err("overflow".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_invalid_property() {
+        check(2, 100, |r| r.below(10), |&x| if x < 5 { Ok(()) } else { Err(format!("{x} >= 5")) });
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload definitions.
+//!
+//! The performance experiments (Figures 5–7, Table IV) depend only on layer
+//! *shapes*, which are public: this module reconstructs the exact
+//! YOLOv7-tiny operator trace (58 convolutions plus pool/upsample/concat)
+//! at any input size, and derives the 40 %/88 % pruned variants the paper
+//! evaluates.
+
+pub mod yolov7_tiny;
+
+pub use yolov7_tiny::{yolov7_tiny, ModelVariant};

@@ -1,0 +1,276 @@
+//! YOLOv7-tiny architecture as an IR graph.
+//!
+//! Reconstructed from the official `yolov7-tiny.yaml`: a stem of two
+//! stride-2 convs, four ELAN-tiny blocks separated by maxpools, an
+//! SPPCSP-tiny neck, an FPN/PAN head with two more ELAN-tiny blocks per
+//! path, and three detection heads. All activations are LeakyReLU(0.1) in
+//! the original (the paper replaces them with ReLU6, Section IV-B2).
+//!
+//! Counting convolutions: stem 2 + 4 backbone ELANs × 5 + SPPCSP 4 +
+//! FPN (2 laterals + 2 reductions + 2 ELANs × 5) + PAN (2 downsamples +
+//! 2 ELANs × 5) + 3 pre-head 3×3 + 3 detect 1×1 = **58**, matching the
+//! paper ("58 convolution layers", Section V-C).
+
+use crate::ir::{ActivationKind, Graph, GraphBuilder, NodeId, PaddingMode};
+
+/// Which model version (Section IV-B3: the paper evaluates the original and
+/// the 40 %- and 88 %-sparse pruned models).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelVariant {
+    /// Un-pruned YOLOv7-tiny.
+    Base,
+    /// 40 % parameter sparsity (mAP kept above 30 %).
+    Pruned40,
+    /// 88 % parameter sparsity (minimum-latency extreme).
+    Pruned88,
+}
+
+impl ModelVariant {
+    /// Fraction of filters *retained* per prunable conv, derived from the
+    /// target parameter sparsity. Parameters of a conv scale roughly with
+    /// retained_in × retained_out, so retained ≈ sqrt(1 − sparsity).
+    pub fn channel_keep(self) -> f64 {
+        match self {
+            ModelVariant::Base => 1.0,
+            ModelVariant::Pruned40 => (1.0f64 - 0.40).sqrt(), // ≈ 0.775
+            ModelVariant::Pruned88 => (1.0f64 - 0.88).sqrt(), // ≈ 0.346
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ModelVariant::Base => "YOLOv7-tiny",
+            ModelVariant::Pruned40 => "YOLOv7-tiny 40%",
+            ModelVariant::Pruned88 => "YOLOv7-tiny 88%",
+        }
+    }
+
+    pub fn all() -> [ModelVariant; 3] {
+        [ModelVariant::Base, ModelVariant::Pruned40, ModelVariant::Pruned88]
+    }
+}
+
+/// Internal channel-scaling helper: keeps channels a multiple of 8 (what
+/// structured filter pruning on a systolic-array target would do) and ≥8.
+fn scale_c(c: usize, keep: f64) -> usize {
+    let scaled = ((c as f64 * keep) / 8.0).round() as usize * 8;
+    scaled.max(8)
+}
+
+struct Ctx {
+    b: GraphBuilder,
+    act: ActivationKind,
+    keep: f64,
+}
+
+impl Ctx {
+    fn conv(&mut self, x: NodeId, c: usize, k: usize, s: usize) -> NodeId {
+        let oc = scale_c(c, self.keep);
+        self.b.conv2d(x, oc, k, s, PaddingMode::Same, self.act, None, None)
+    }
+
+    /// Detection convs are never pruned (they must emit the full
+    /// anchors×(5+classes) channels).
+    fn conv_fixed(&mut self, x: NodeId, c: usize, k: usize, s: usize, act: ActivationKind) -> NodeId {
+        self.b.conv2d(x, c, k, s, PaddingMode::Same, act, None, None)
+    }
+
+    /// ELAN-tiny block: two parallel 1×1 branches, two chained 3×3 convs,
+    /// 4-way concat, 1×1 merge. 5 convolutions.
+    fn elan(&mut self, x: NodeId, c_hidden: usize, c_out: usize) -> NodeId {
+        let c1 = self.conv(x, c_hidden, 1, 1);
+        let c2 = self.conv(x, c_hidden, 1, 1);
+        let c3 = self.conv(c2, c_hidden, 3, 1);
+        let c4 = self.conv(c3, c_hidden, 3, 1);
+        let cat = self.b.concat(&[c4, c3, c2, c1]);
+        self.conv(cat, c_out, 1, 1)
+    }
+
+    /// SPPCSP-tiny: 1×1 reduce ×2 (split), maxpool 5/9/13 pyramid on one
+    /// branch, concat, 1×1 merge, concat with bypass, 1×1 out.
+    /// 4 convolutions. We model the 5/9/13 pools as three stride-1 pools
+    /// (padding folded into shape preservation: kernel k, stride 1 on a
+    /// padded map keeps H×W — we approximate with kernel 1 shape-wise but
+    /// keep distinct nodes so the scheduler sees three pool ops).
+    fn sppcsp(&mut self, x: NodeId, c_out: usize) -> NodeId {
+        let a = self.conv(x, c_out, 1, 1);
+        let bypass = self.conv(x, c_out, 1, 1);
+        // SAME-padded stride-1 maxpools keep spatial dims; our builder pools
+        // are VALID, so emulate with kernel=1 stride=1 (shape-preserving)
+        // and account for the true 5/9/13 windows in the scheduler's cost
+        // via the op parameters' kernel field where possible.
+        let p5 = self.b.maxpool(a, 1, 1);
+        let p9 = self.b.maxpool(p5, 1, 1);
+        let p13 = self.b.maxpool(p9, 1, 1);
+        let cat = self.b.concat(&[a, p5, p9, p13]);
+        let m = self.conv(cat, c_out, 1, 1);
+        let cat2 = self.b.concat(&[m, bypass]);
+        self.conv(cat2, c_out, 1, 1)
+    }
+}
+
+/// Build YOLOv7-tiny as an IR graph.
+///
+/// * `input_size` — square input resolution (the paper sweeps 160–640 and
+///   picks 480, Figure 3). Must be divisible by 32.
+/// * `variant` — pruning level (Section IV-B3).
+/// * `num_classes` — 80 for COCO; the synthetic benchmark uses 8.
+pub fn yolov7_tiny(input_size: usize, variant: ModelVariant, num_classes: usize) -> Graph {
+    assert_eq!(input_size % 32, 0, "input size must be divisible by 32");
+    let keep = variant.channel_keep();
+    let mut ctx = Ctx {
+        b: GraphBuilder::new(format!("yolov7-tiny-{}@{}", variant.label(), input_size)),
+        act: ActivationKind::LeakyRelu(0.1),
+        keep,
+    };
+
+    let x = ctx.b.input("image", vec![1, input_size, input_size, 3]);
+
+    // ---- Backbone ----
+    let s1 = ctx.conv(x, 32, 3, 2); // P1/2
+    let s2 = ctx.conv(s1, 64, 3, 2); // P2/4
+    let e1 = ctx.elan(s2, 32, 64);
+    let p3 = ctx.b.maxpool(e1, 2, 2); // P3/8
+    let e2 = ctx.elan(p3, 64, 128);
+    let p4 = ctx.b.maxpool(e2, 2, 2); // P4/16
+    let e3 = ctx.elan(p4, 128, 256);
+    let p5 = ctx.b.maxpool(e3, 2, 2); // P5/32
+    let e4 = ctx.elan(p5, 256, 512);
+
+    // ---- Neck ----
+    let spp = ctx.sppcsp(e4, 256);
+
+    // ---- FPN (top-down) ----
+    let f1 = ctx.conv(spp, 128, 1, 1);
+    let f1u = ctx.b.upsample(f1, 2);
+    let l4 = ctx.conv(e3, 128, 1, 1); // lateral from P4
+    let f1c = ctx.b.concat(&[f1u, l4]);
+    let fe1 = ctx.elan(f1c, 64, 128); // head ELAN @ P4 scale
+
+    let f2 = ctx.conv(fe1, 64, 1, 1);
+    let f2u = ctx.b.upsample(f2, 2);
+    let l3 = ctx.conv(e2, 64, 1, 1); // lateral from P3
+    let f2c = ctx.b.concat(&[f2u, l3]);
+    let fe2 = ctx.elan(f2c, 32, 64); // head ELAN @ P3 scale
+
+    // ---- PAN (bottom-up) ----
+    let d1 = ctx.conv(fe2, 128, 3, 2);
+    let d1c = ctx.b.concat(&[d1, fe1]);
+    let pe1 = ctx.elan(d1c, 64, 128);
+
+    let d2 = ctx.conv(pe1, 256, 3, 2);
+    let d2c = ctx.b.concat(&[d2, spp]);
+    let pe2 = ctx.elan(d2c, 128, 256);
+
+    // ---- Heads: 3×3 expand + 1×1 detect at each scale ----
+    let head_c = 3 * (5 + num_classes);
+    let h3 = ctx.conv(fe2, 128, 3, 1);
+    let det3 = ctx.conv_fixed(h3, head_c, 1, 1, ActivationKind::None);
+    let h4 = ctx.conv(pe1, 256, 3, 1);
+    let det4 = ctx.conv_fixed(h4, head_c, 1, 1, ActivationKind::None);
+    let h5 = ctx.conv(pe2, 512, 3, 1);
+    let det5 = ctx.conv_fixed(h5, head_c, 1, 1, ActivationKind::None);
+
+    // ---- Float tail: decode each head for NMS (the paper's "second part",
+    //      Section IV-D — runs on the PS) ----
+    let b3 = ctx.b.box_decode(det3, 3, num_classes);
+    let b4 = ctx.b.box_decode(det4, 3, num_classes);
+    let b5 = ctx.b.box_decode(det5, 3, num_classes);
+
+    ctx.b.finish(&[b3, b4, b5])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    #[test]
+    fn has_58_convolutions() {
+        let g = yolov7_tiny(480, ModelVariant::Base, 80);
+        let convs = g.count(|n| matches!(n.op, Op::Conv2d { .. }));
+        assert_eq!(convs, 58, "paper: 58 convolution layers");
+    }
+
+    #[test]
+    fn param_count_close_to_6m() {
+        // Paper: YOLOv7-tiny has 6.2 M parameters. Our reconstruction
+        // should land in the same ballpark (±25 %).
+        let g = yolov7_tiny(480, ModelVariant::Base, 80);
+        let p = g.param_count() as f64 / 1e6;
+        assert!((4.5..8.0).contains(&p), "got {p} M params");
+    }
+
+    #[test]
+    fn gflops_halve_from_640_to_480() {
+        // Figure 3 rationale: 480×480 cuts GFLOPs by "almost 50 %" vs 640.
+        let g640 = yolov7_tiny(640, ModelVariant::Base, 80);
+        let g480 = yolov7_tiny(480, ModelVariant::Base, 80);
+        let ratio = g480.gops() / g640.gops();
+        assert!((0.5..0.62).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn base_gflops_plausible() {
+        // Official repo: 13.7 GFLOPs at 640. Allow generous tolerance for
+        // reconstruction details (we model SPPCSP pools shape-only).
+        let g = yolov7_tiny(640, ModelVariant::Base, 80);
+        let gf = g.gops();
+        assert!((9.0..18.0).contains(&gf), "got {gf} GFLOPs");
+    }
+
+    #[test]
+    fn pruned_variants_reduce_params() {
+        let base = yolov7_tiny(480, ModelVariant::Base, 80).param_count() as f64;
+        let p40 = yolov7_tiny(480, ModelVariant::Pruned40, 80).param_count() as f64;
+        let p88 = yolov7_tiny(480, ModelVariant::Pruned88, 80).param_count() as f64;
+        let s40 = 1.0 - p40 / base;
+        let s88 = 1.0 - p88 / base;
+        assert!((0.30..0.50).contains(&s40), "40% variant sparsity {s40}");
+        assert!((0.80..0.93).contains(&s88), "88% variant sparsity {s88}");
+    }
+
+    #[test]
+    fn pruned_gflops_reduction_matches_paper() {
+        // Paper: up to 78 % GFLOPs reduction at 88 % sparsity.
+        let base = yolov7_tiny(480, ModelVariant::Base, 80).gops();
+        let p88 = yolov7_tiny(480, ModelVariant::Pruned88, 80).gops();
+        let red = 1.0 - p88 / base;
+        assert!((0.70..0.92).contains(&red), "GFLOP reduction {red}");
+    }
+
+    #[test]
+    fn all_activations_leaky_before_pass() {
+        let g = yolov7_tiny(480, ModelVariant::Base, 80);
+        let leaky = g.count(|n| {
+            matches!(
+                n.op,
+                Op::Conv2d { activation: ActivationKind::LeakyRelu(_), .. }
+            )
+        });
+        // All but the 3 detect convs are LeakyReLU.
+        assert_eq!(leaky, 55);
+    }
+
+    #[test]
+    fn three_detection_scales() {
+        let g = yolov7_tiny(480, ModelVariant::Base, 80);
+        assert_eq!(g.outputs.len(), 3);
+        let decodes = g.count(|n| matches!(n.op, Op::BoxDecode { .. }));
+        assert_eq!(decodes, 3);
+        // Scales: 480/8=60, 480/16=30, 480/32=15 cells.
+        let cells: Vec<usize> =
+            g.outputs.iter().map(|&o| g.node(o).output.shape[1] / 3).collect();
+        assert_eq!(cells, vec![60 * 60, 30 * 30, 15 * 15]);
+    }
+
+    #[test]
+    fn graph_valid_at_multiple_sizes() {
+        for size in [160, 320, 480, 640] {
+            for v in ModelVariant::all() {
+                let g = yolov7_tiny(size, v, 8);
+                assert!(g.validate().is_ok(), "{size} {v:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Section V-A claims, asserted on the real YOLOv7-tiny workload:
+//! - tuning improves mean conv latency substantially (paper: ~50 %),
+//! - more than 60 % of conv layers improve,
+//! - our config beats the original Gemmini on default schedules
+//!   (paper: mean 60 % speed-up),
+//! - tuned never regresses below the CISC fallback.
+
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::passes::replace_activations;
+use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+#[test]
+fn section_v_a_claims_hold_in_shape() {
+    let mut g = yolov7_tiny(160, ModelVariant::Base, 80);
+    replace_activations(&mut g);
+    let ours = GemminiConfig::ours_zcu102();
+    let orig = GemminiConfig::original_zcu102();
+    let t_ours = tune_graph(&ours, &g, 3);
+    let t_orig = tune_graph(&orig, &g, 0);
+
+    // Tuning gain (paper: mean 50 %).
+    let gain = t_ours.conv_improvement();
+    assert!(gain > 0.30, "conv improvement {gain}");
+    // Fraction of layers improved (paper: > 60 %).
+    assert!(t_ours.fraction_improved() > 0.6, "{}", t_ours.fraction_improved());
+    // Ours vs original on default schedules (paper: 1.6×; our simulator
+    // gives a larger factor — same direction, see EXPERIMENTS.md).
+    let ours_ms = t_ours.default_conv_cycles() as f64 / ours.clock_mhz;
+    let orig_ms = t_orig.default_conv_cycles() as f64 / orig.clock_mhz;
+    assert!(orig_ms / ours_ms > 1.5, "speedup {}", orig_ms / ours_ms);
+    // Fallback safety: tuned ≤ default per layer.
+    for l in &t_ours.layers {
+        assert!(l.result.best_cycles <= l.result.default_cycles, "{}", l.label);
+    }
+}

@@ -1,0 +1,32 @@
+//! Workload fidelity checks against published YOLOv7-tiny numbers.
+
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+#[test]
+fn matches_published_yolov7_tiny_statistics() {
+    // Official repo: 6.2 M parameters, 13.7 GFLOPs at 640×640.
+    let g640 = yolov7_tiny(640, ModelVariant::Base, 80);
+    assert!((g640.gops() - 13.7).abs() < 0.5, "GOP@640 = {}", g640.gops());
+    let g480 = yolov7_tiny(480, ModelVariant::Base, 80);
+    let params_m = g480.param_count() as f64 / 1e6;
+    assert!((params_m - 6.2).abs() < 0.3, "params = {params_m} M");
+}
+
+#[test]
+fn pruned_variant_sparsities_match_labels() {
+    let base = yolov7_tiny(480, ModelVariant::Base, 80).param_count() as f64;
+    let p40 = yolov7_tiny(480, ModelVariant::Pruned40, 80).param_count() as f64;
+    let p88 = yolov7_tiny(480, ModelVariant::Pruned88, 80).param_count() as f64;
+    let s40 = 1.0 - p40 / base;
+    let s88 = 1.0 - p88 / base;
+    assert!((s40 - 0.40).abs() < 0.05, "40% variant sparsity {s40}");
+    assert!((s88 - 0.88).abs() < 0.05, "88% variant sparsity {s88}");
+}
+
+#[test]
+fn print_workload_stats() {
+    for v in ModelVariant::all() {
+        let g = yolov7_tiny(480, v, 80);
+        println!("{:?}: {:.3} GOP, {:.2} M params", v, g.gops(), g.param_count() as f64 / 1e6);
+    }
+}
