@@ -1,0 +1,28 @@
+# Developer entry points. `make check` is the tier-1 gate every PR must
+# keep green; `make artifacts` needs the JAX/Pallas python environment.
+
+CARGO ?= cargo
+
+.PHONY: check build test clippy fmt artifacts fleet
+
+check: build test clippy
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+fmt:
+	$(CARGO) fmt --check
+
+# AOT-compile the JAX/Pallas detector to artifacts/ (PJRT runtime input).
+artifacts:
+	python3 python/compile/aot.py
+
+# Quick fleet-serving demo (the Section-VI case study at fleet scale).
+fleet:
+	$(CARGO) run --release --example fleet_serving

@@ -20,7 +20,7 @@ use gemmini_edge::postproc::map::mean_average_precision;
 use gemmini_edge::postproc::nms::{decode_and_nms, NmsConfig};
 use gemmini_edge::runtime::Executor;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let scenes = validation_set(&SceneConfig { size: 96, ..Default::default() }, 48, 7);
 
     // ---- the deployment workflow on the IR graph ----

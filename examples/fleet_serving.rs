@@ -1,0 +1,112 @@
+//! Fleet serving: the Section VI deployment, scaled out.
+//!
+//! Stitches the whole stack end to end:
+//!
+//! 1. `coordinator::deploy` runs the paper's deployment workflow on the
+//!    detector (activation replacement → int8 quantization → tuning on
+//!    the Gemmini cycle simulator) — exactly the single-board story.
+//! 2. The resulting `TuningResult` becomes serving devices: the tuned
+//!    ZCU102, the same bitstream clocked at the ZCU111's 167 MHz, the
+//!    unmodified original-config ZCU102, and an embedded-GPU baseline —
+//!    a 4-device heterogeneous shard pool.
+//! 3. A bursty multi-camera trace (object counts from the scene
+//!    generator's distribution) is served open-loop through dynamic
+//!    batching, bounded admission and work stealing; the report prints
+//!    p50/p99 latency, aggregate FPS, per-device utilization and power.
+
+use gemmini_edge::baselines::xavier;
+use gemmini_edge::coordinator::{deploy, DeployOptions};
+use gemmini_edge::dataset::detector::{build_detector, default_weights};
+use gemmini_edge::dataset::scenes::{validation_set, SceneConfig};
+use gemmini_edge::fpga::resources::Board;
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::ir::interp::Value;
+use gemmini_edge::report::fleet_table;
+use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
+use gemmini_edge::serving::{
+    multi_camera_trace, simulate, Backend, BaselineDevice, BatchPolicy, GemminiDevice, ShardPool,
+    SimConfig,
+};
+
+/// Sustainable FPS of a device under a batching cap.
+fn capacity_fps(dev: &dyn Backend, max_batch: usize) -> f64 {
+    let b = max_batch.min(dev.max_batch()).max(1);
+    b as f64 / dev.batch_latency_s(b)
+}
+
+fn main() {
+    let size = 96;
+
+    // ---- 1. the paper's deployment workflow (single board) ----
+    let g = build_detector(size, &default_weights());
+    let scenes = validation_set(&SceneConfig { size, ..Default::default() }, 12, 7);
+    let calib: Vec<Vec<Value>> = scenes.iter().take(3).map(|s| vec![s.image.clone()]).collect();
+    let opts = DeployOptions { measure_k: 2, ..Default::default() };
+    let dep = deploy(&g, &calib, &scenes, &opts);
+    println!("== deployment (ZCU102, tuned) ==");
+    println!("  mAP@0.5          : {:.3}", dep.map.unwrap_or(0.0));
+    println!("  single-frame     : {:.3} ms ({:.1} FPS)", dep.latency_s * 1e3, dep.fps());
+
+    // ---- 2. a heterogeneous shard pool from the tuning results ----
+    // The original (untuned-config) board needs its own tuning pass.
+    let orig_cfg = GemminiConfig::original_zcu102();
+    let mut g_orig = g.clone();
+    gemmini_edge::passes::replace_activations(&mut g_orig);
+    let t_orig = tune_graph(&orig_cfg, &g_orig, 2);
+
+    let mk_pool = || {
+        let mut pool = ShardPool::paper_boards(&dep.tuning, DEFAULT_DISPATCH_S);
+        pool.register(Box::new(GemminiDevice::from_tuning(
+            "ZCU102-Gemmini (orig)",
+            Board::Zcu102,
+            orig_cfg.clone(),
+            &t_orig,
+            DEFAULT_DISPATCH_S,
+        )));
+        pool.register(Box::new(BaselineDevice::new(xavier(), g.gops(), 8)));
+        pool
+    };
+    let mut pool = mk_pool();
+
+    // ---- 3. a multi-camera trace sized to ~80% of fleet capacity ----
+    let policy = BatchPolicy::new(8, 0.015);
+    let fleet_fps: f64 =
+        pool.devices.iter().map(|d| capacity_fps(d.backend.as_ref(), policy.max_batch)).sum();
+    let fps_per_cam = 30.0;
+    let cameras = ((0.8 * fleet_fps / fps_per_cam) as usize).max(3);
+    let horizon = 10.0;
+    let scene_cfg = SceneConfig { size, ..Default::default() };
+    let trace = multi_camera_trace(&scene_cfg, cameras, fps_per_cam, horizon, 20240710);
+    println!(
+        "\n== fleet: {} devices, {:.0} FPS capacity, {} cameras × {:.0} FPS for {:.0} s ({} frames) ==",
+        pool.len(),
+        fleet_fps,
+        cameras,
+        fps_per_cam,
+        horizon,
+        trace.len()
+    );
+
+    let cfg = SimConfig {
+        batch: policy,
+        queue_depth: 64,
+        slo_s: 0.100,
+        work_stealing: true,
+        ..Default::default()
+    };
+    let report = simulate(&mut pool, &trace, &cfg);
+    print!("{}", fleet_table(&report));
+
+    // ---- the same load without batching, for contrast ----
+    let unbatched = SimConfig { batch: BatchPolicy::unbatched(), ..cfg };
+    let r1 = simulate(&mut mk_pool(), &trace, &unbatched);
+    println!(
+        "\nunbatched at the same offered load: {:.1} FPS, p99 {:.1} ms, shed {} \
+         (dynamic batching: {:+.0}% throughput)",
+        r1.throughput_fps(),
+        r1.p99_s * 1e3,
+        r1.shed,
+        100.0 * (report.throughput_fps() / r1.throughput_fps() - 1.0)
+    );
+}

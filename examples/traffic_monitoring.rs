@@ -43,7 +43,7 @@ fn frame(seq: usize, size: usize) -> Value {
     Value::new(vec![1, size, size, 3], img)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Probe artifact metadata up front (the executable itself is built on
     // the detector-stage thread — PJRT handles are not Send).
     let meta = match gemmini_edge::runtime::ArtifactMeta::load("artifacts/model.meta.json") {
@@ -53,6 +53,13 @@ fn main() -> anyhow::Result<()> {
             return Ok(());
         }
     };
+    // Without the `pjrt` feature the executor below can never load; bail
+    // the same way missing artifacts do instead of panicking on the
+    // detector-stage thread.
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("built without the `pjrt` feature; rebuild with --features pjrt to run the live pipeline");
+        return Ok(());
+    }
     let size = meta.input_shape[1];
     let (na, nc) = (meta.num_anchors, meta.num_classes);
     let factory: DetectFactory = Box::new(move || -> DetectFn {

@@ -1,0 +1,84 @@
+//! Fleet-serving experiment: dynamic batching vs request-at-a-time on a
+//! heterogeneous pool at *equal offered load*.
+//!
+//! The per-invocation overhead a batch amortizes (host dispatch + weight
+//! streaming, see `serving::device`) is what separates the two runs: at
+//! an offered load above the unbatched capacity, batch=1 saturates and
+//! sheds while the batched fleet keeps up. Knobs: `SF_SIZE`, `SF_TRIALS`,
+//! `SF_RATE_X` (offered load as a multiple of unbatched capacity).
+
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::passes::replace_activations;
+use gemmini_edge::report::fleet_table;
+use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
+use gemmini_edge::serving::{poisson_trace, simulate, Backend, BatchPolicy, ShardPool, SimConfig};
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+fn env(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let size = env("SF_SIZE", 160.0) as usize;
+    let trials = env("SF_TRIALS", 2.0) as usize;
+    let rate_x = env("SF_RATE_X", 1.3);
+
+    println!("== serving fleet: YOLOv7-tiny (88% pruned) @{size}px ==");
+    let mut g = yolov7_tiny(size, ModelVariant::Pruned88, 80);
+    replace_activations(&mut g);
+    let cfg102 = GemminiConfig::ours_zcu102();
+    let tuning = tune_graph(&cfg102, &g, trials);
+
+    let mk_pool = || ShardPool::paper_boards(&tuning, DEFAULT_DISPATCH_S);
+
+    // Unbatched fleet capacity: 1 / single-invocation latency per device.
+    let pool = mk_pool();
+    let cap_1: f64 = pool.devices.iter().map(|d| 1.0 / d.backend.batch_latency_s(1)).sum();
+    drop(pool);
+    let rate = rate_x * cap_1;
+    let horizon = 20.0;
+    let trace = poisson_trace(rate, horizon, 20240710);
+    println!(
+        "unbatched capacity {cap_1:.0} FPS; offering {rate:.0} req/s (×{rate_x:.2}) for {horizon:.0} s = {} requests\n",
+        trace.len()
+    );
+
+    let base = SimConfig { queue_depth: 32, slo_s: 0.100, work_stealing: true, ..Default::default() };
+    let mut results = Vec::new();
+    for (label, policy) in [
+        ("batch=1 (request-at-a-time)", BatchPolicy::unbatched()),
+        ("batch≤4, wait≤10ms", BatchPolicy::new(4, 0.010)),
+        ("batch≤8, wait≤15ms", BatchPolicy::new(8, 0.015)),
+        ("batch≤16, wait≤25ms", BatchPolicy::new(16, 0.025)),
+    ] {
+        let mut pool = mk_pool();
+        let r = simulate(&mut pool, &trace, &SimConfig { batch: policy, ..base.clone() });
+        println!("-- {label} --");
+        print!("{}", fleet_table(&r));
+        println!();
+        results.push((label, r));
+    }
+
+    let (_, r1) = &results[0];
+    let best = results[1..]
+        .iter()
+        .max_by(|a, b| a.1.throughput_fps().partial_cmp(&b.1.throughput_fps()).unwrap())
+        .unwrap();
+    println!(
+        "dynamic batching ({}) vs batch=1 at equal offered load: \
+         {:.0} vs {:.0} FPS ({:+.0}%), shed {} vs {}, p99 {:.1} vs {:.1} ms",
+        best.0,
+        best.1.throughput_fps(),
+        r1.throughput_fps(),
+        100.0 * (best.1.throughput_fps() / r1.throughput_fps() - 1.0),
+        best.1.shed,
+        r1.shed,
+        best.1.p99_s * 1e3,
+        r1.p99_s * 1e3,
+    );
+    assert!(
+        best.1.throughput_fps() > r1.throughput_fps(),
+        "dynamic batching must beat batch=1 at this load"
+    );
+}

@@ -107,16 +107,10 @@ pub fn deploy(
     let latency_s = best.total_s();
     let default_latency_s = default_pl_s + best.post_s + best.transfer_s;
 
-    // 6. Energy (Table IV).
+    // 6. Energy (Table IV). Utilization proxy: macs over cycles at the
+    // tuned schedule (see `TuningResult::utilization`).
     let power = FpgaPowerModel::for_board(opts.board);
-    // Utilization proxy: macs over cycles at the tuned schedule.
-    let util = {
-        let total_macs: u64 = tuning.layers.iter().map(|l| l.geom.macs()).sum();
-        let cycles = tuning.total_cycles(true).max(1);
-        (total_macs as f64 / (cycles as f64 * opts.config.peak_macs_per_cycle() as f64))
-            .clamp(0.0, 1.0)
-    };
-    let power_w = power.power_w(&opts.config, util);
+    let power_w = power.power_w(&opts.config, tuning.utilization(&opts.config, true));
     let gop = part.main_gop + part.tail_gflop;
     let energy = EnergyReport::new(
         &format!("{}-Gemmini", opts.board.name()),

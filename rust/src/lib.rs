@@ -29,7 +29,14 @@
 //!   truth (stands in for COCO, see DESIGN.md §2);
 //! - [`pipeline`] / [`tracking`] — the Section VI traffic-monitoring case
 //!   study (pub/sub pipeline + GM-PHD tracker);
-//! - [`report`] — renderers that print each paper table/figure.
+//! - [`serving`] — the fleet layer above one board: N heterogeneous
+//!   devices (tuned Gemmini configs and/or CPU/GPU baselines) behind a
+//!   shard pool with dynamic batching, bounded admission queues with
+//!   load shedding, streaming p50/p95/p99 + SLO metrics, and a
+//!   deterministic discrete-event simulator driving it all offline
+//!   (see `rust/src/serving/README.md`);
+//! - [`report`] — renderers that print each paper table/figure, plus the
+//!   fleet-throughput table for [`serving`].
 
 pub mod baselines;
 pub mod coordinator;
@@ -45,6 +52,7 @@ pub mod postproc;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod serving;
 pub mod tracking;
 pub mod util;
 pub mod workload;

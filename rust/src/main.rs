@@ -7,6 +7,7 @@
 //! repro deploy [--size N] [--trials K]  run the full workflow on the detector
 //! repro infer [--hlo PATH]            run the AOT artifact on a scene (PJRT)
 //! repro tune [--size N] [--variant base|p40|p88] [--trials K]
+//! repro fleet [--cameras N] [--fps F] [--batch B] [--wait MS] [--seconds S]
 //! ```
 
 use gemmini_edge::coordinator::{deploy, DeployOptions};
@@ -24,7 +25,7 @@ fn arg_val(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("report") => match args.get(1).map(String::as_str) {
@@ -108,8 +109,48 @@ fn main() -> anyhow::Result<()> {
                 t.latency_s(&cfg, true) * 1e3
             );
         }
+        Some("fleet") => {
+            use gemmini_edge::baselines::xavier;
+            use gemmini_edge::report::fleet_table;
+            use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
+            use gemmini_edge::serving::{
+                multi_camera_trace, simulate, BaselineDevice, BatchPolicy, ShardPool, SimConfig,
+            };
+            let cameras: usize =
+                arg_val(&args, "--cameras").and_then(|v| v.parse().ok()).unwrap_or(24);
+            let fps: f64 = arg_val(&args, "--fps").and_then(|v| v.parse().ok()).unwrap_or(30.0);
+            let batch: usize =
+                arg_val(&args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let wait_ms: f64 =
+                arg_val(&args, "--wait").and_then(|v| v.parse().ok()).unwrap_or(15.0);
+            let seconds: f64 =
+                arg_val(&args, "--seconds").and_then(|v| v.parse().ok()).unwrap_or(10.0);
+
+            // Tune the detector once per distinct architecture.
+            let mut g = build_detector(96, &default_weights());
+            gemmini_edge::passes::replace_activations(&mut g);
+            let cfg102 = GemminiConfig::ours_zcu102();
+            let tuning = tune_graph(&cfg102, &g, 2);
+
+            let mut pool = ShardPool::paper_boards(&tuning, DEFAULT_DISPATCH_S);
+            pool.register(Box::new(BaselineDevice::new(xavier(), g.gops(), 8)));
+
+            let scene = SceneConfig { size: 96, ..Default::default() };
+            let trace = multi_camera_trace(&scene, cameras, fps, seconds, 20240710);
+            let cfg = SimConfig {
+                batch: BatchPolicy::new(batch, wait_ms * 1e-3),
+                ..Default::default()
+            };
+            println!(
+                "fleet: {} devices | {cameras} cameras × {fps:.0} FPS × {seconds:.0} s = {} frames | batch≤{batch}, wait≤{wait_ms:.0} ms",
+                pool.len(),
+                trace.len()
+            );
+            let r = simulate(&mut pool, &trace, &cfg);
+            print!("{}", fleet_table(&r));
+        }
         _ => {
-            eprintln!("usage: repro <report|deploy|infer|tune> [options]");
+            eprintln!("usage: repro <report|deploy|infer|tune|fleet> [options]");
         }
     }
     Ok(())

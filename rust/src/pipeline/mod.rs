@@ -9,7 +9,7 @@
 //! thread, and the detector stage runs the AOT artifact through the PJRT
 //! runtime — Python never on the path.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::thread::JoinHandle;
 
 use crate::ir::interp::Value;
@@ -37,10 +37,69 @@ pub struct Topic<T> {
     pub rx: Receiver<T>,
 }
 
+/// What to do when a non-blocking publish hits a full topic (the DDS
+/// history QoS: KEEP_ALL rejects, KEEP_LAST drops the oldest sample).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Reject the new message (caller sheds the newest sample).
+    Reject,
+    /// Evict the oldest queued message to make room for the new one.
+    DropOldest,
+}
+
+/// Outcome of [`Topic::try_publish`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PublishOutcome {
+    /// Delivered without displacing anything.
+    Delivered,
+    /// Delivered, but the oldest queued message was evicted.
+    DeliveredDroppedOldest,
+    /// Topic full and policy was [`OverflowPolicy::Reject`].
+    Rejected,
+    /// The consumer side is gone.
+    Closed,
+}
+
+impl PublishOutcome {
+    /// True when `msg` made it into the queue.
+    pub fn delivered(self) -> bool {
+        matches!(self, PublishOutcome::Delivered | PublishOutcome::DeliveredDroppedOldest)
+    }
+}
+
 /// Bounded topic — backpressure like a DDS queue.
 pub fn topic<T>(depth: usize) -> Topic<T> {
     let (tx, rx) = sync_channel(depth);
     Topic { tx, rx }
+}
+
+impl<T> Topic<T> {
+    /// Non-blocking publish with an explicit overflow policy. The topic
+    /// must still own its `rx` (the admission front door); once `rx` has
+    /// been moved into a consumer stage, use `tx.send`.
+    /// `serving::admission` builds its load-shedding front door on this.
+    pub fn try_publish(&self, msg: T, policy: OverflowPolicy) -> PublishOutcome {
+        let mut msg = match self.tx.try_send(msg) {
+            Ok(()) => return PublishOutcome::Delivered,
+            Err(TrySendError::Disconnected(_)) => return PublishOutcome::Closed,
+            Err(TrySendError::Full(m)) => m,
+        };
+        if policy == OverflowPolicy::Reject {
+            return PublishOutcome::Rejected;
+        }
+        // Drop-oldest: evict and retry until the message lands. Cloned
+        // senders may race the freed slot, in which case the next
+        // iteration sheds the new oldest — drop-oldest semantics hold,
+        // and with a single publisher the first retry always succeeds.
+        loop {
+            let _ = self.rx.try_recv();
+            match self.tx.try_send(msg) {
+                Ok(()) => return PublishOutcome::DeliveredDroppedOldest,
+                Err(TrySendError::Disconnected(_)) => return PublishOutcome::Closed,
+                Err(TrySendError::Full(m)) => msg = m,
+            }
+        }
+    }
 }
 
 /// Detector closure type: frame image → detections (wraps the PJRT
@@ -122,6 +181,21 @@ impl TrafficPipeline {
             let _ = w.join();
         }
     }
+
+    /// Shut down, *draining* every in-flight frame first: close the input
+    /// side, keep receiving until the stages finish their queues and hang
+    /// up, then join. Returns the drained results in order.
+    pub fn shutdown_drain(self) -> Vec<FrameResult> {
+        drop(self.frame_tx);
+        let mut out = Vec::new();
+        while let Ok(r) = self.result_rx.recv() {
+            out.push(r);
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -158,6 +232,51 @@ mod tests {
             assert_eq!(r.detections.len(), 1);
         }
         p.shutdown();
+    }
+
+    #[test]
+    fn try_publish_policies() {
+        let t = topic::<usize>(2);
+        assert_eq!(t.try_publish(0, OverflowPolicy::Reject), PublishOutcome::Delivered);
+        assert_eq!(t.try_publish(1, OverflowPolicy::Reject), PublishOutcome::Delivered);
+        // Full: reject keeps the queue, drop-oldest evicts 0.
+        assert_eq!(t.try_publish(2, OverflowPolicy::Reject), PublishOutcome::Rejected);
+        assert_eq!(
+            t.try_publish(2, OverflowPolicy::DropOldest),
+            PublishOutcome::DeliveredDroppedOldest
+        );
+        assert_eq!(t.rx.try_recv(), Ok(1));
+        assert_eq!(t.rx.try_recv(), Ok(2));
+        assert!(t.rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn try_publish_closed_topic() {
+        let t = topic::<usize>(1);
+        let Topic { tx, rx } = t;
+        drop(rx);
+        let t = Topic { tx, rx: topic::<usize>(1).rx };
+        assert_eq!(t.try_publish(7, OverflowPolicy::DropOldest), PublishOutcome::Closed);
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_frames() {
+        let p = TrafficPipeline::spawn(
+            fake_detector(),
+            Homography::identity(),
+            GmPhdConfig::default(),
+        );
+        let n = 8;
+        for seq in 0..n {
+            let v = Value::new(vec![1, 4, 4, 1], vec![seq as f32 / 10.0; 16]);
+            p.publish(Frame { seq, image: v }).unwrap();
+        }
+        // No recv() before shutdown: every frame is still in flight.
+        let results = p.shutdown_drain();
+        assert_eq!(results.len(), n, "all in-flight frames must drain");
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.seq, i);
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use crate::energy::EnergyReport;
 use crate::fpga::resources::ResourceReport;
 use crate::gemmini::config::{Dataflow, GemminiConfig, ScaleDtype};
+use crate::serving::FleetReport;
 
 /// Render Table II (resource consumption).
 pub fn table2(rows: &[ResourceReport]) -> String {
@@ -92,6 +93,38 @@ pub fn table4(rows: &[EnergyReport]) -> String {
     s
 }
 
+/// Render a fleet-serving run: per-device rows + fleet totals (the
+/// fleet-level analogue of Table IV; see `serving::metrics`).
+pub fn fleet_table(r: &FleetReport) -> String {
+    let mut s = String::from(
+        "| Device                    | Served | Batches | Mean batch | Busy | Power [W] | Stolen |\n",
+    );
+    for d in &r.devices {
+        s += &format!(
+            "| {:<25} | {:>6} | {:>7} | {:>10.2} | {:>3.0}% | {:>9.1} | {:>6} |\n",
+            d.name,
+            d.completed,
+            d.batches,
+            d.mean_batch,
+            d.busy_frac * 100.0,
+            d.power_w,
+            d.stolen
+        );
+    }
+    s += &format!(
+        "fleet: {:.1} FPS | p50 {:.1} ms | p95 {:.1} ms | p99 {:.1} ms | \
+         shed {} | SLO({:.0} ms) attainment {:.1}%\n",
+        r.throughput_fps(),
+        r.p50_s * 1e3,
+        r.p95_s * 1e3,
+        r.p99_s * 1e3,
+        r.shed,
+        r.slo_s * 1e3,
+        r.slo_attainment() * 100.0
+    );
+    s
+}
+
 /// A generic two-column series (figure data as rows).
 pub fn series(title: &str, xlabel: &str, ylabel: &str, points: &[(String, f64)]) -> String {
     let mut s = format!("# {title}\n| {xlabel} | {ylabel} |\n");
@@ -152,6 +185,37 @@ mod tests {
         let s = table4(&[r]);
         assert!(s.contains("Test HW"));
         assert!(s.contains("0.500")); // 0.05 s × 10 W
+    }
+
+    #[test]
+    fn fleet_table_renders_devices_and_totals() {
+        use crate::serving::metrics::DeviceReport;
+        let r = FleetReport {
+            completed: 900,
+            shed: 100,
+            makespan_s: 10.0,
+            p50_s: 0.015,
+            p95_s: 0.040,
+            p99_s: 0.070,
+            mean_s: 0.018,
+            max_s: 0.090,
+            slo_s: 0.100,
+            slo_violations: 0,
+            devices: vec![DeviceReport {
+                name: "ZCU102-ours".into(),
+                completed: 900,
+                batches: 150,
+                mean_batch: 6.0,
+                busy_frac: 0.8,
+                power_w: 9.5,
+                stolen: 12,
+            }],
+        };
+        let s = fleet_table(&r);
+        assert!(s.contains("ZCU102-ours"));
+        assert!(s.contains("90.0 FPS"), "{s}");
+        assert!(s.contains("p99 70.0 ms"), "{s}");
+        assert!(s.contains("attainment 90.0%"), "{s}");
     }
 
     #[test]

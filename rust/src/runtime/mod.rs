@@ -7,11 +7,38 @@
 //! and executes it from the request path. Python never runs at inference
 //! time — exactly the paper's deployment contract (the TVM-generated C
 //! code on the RISC-V side).
+//!
+//! The PJRT executor depends on the deployment image's vendored `xla`
+//! crate, which is not available on a plain offline checkout. It is gated
+//! behind the `pjrt` cargo feature: without it, [`ArtifactMeta`] still
+//! parses artifact metadata (pure Rust) and [`Executor`] is a stub whose
+//! `load` returns an error, so every caller that already handles missing
+//! artifacts degrades gracefully and `cargo test -q` passes without
+//! `make artifacts`.
 
-use anyhow::{Context, Result};
+use std::fmt;
 
 use crate::ir::interp::Value;
 use crate::util::json::Json;
+
+/// Runtime error (replaces `anyhow` so the default build has no external
+/// dependencies).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(RuntimeError(msg.into()))
+}
 
 /// Metadata emitted next to each artifact by `aot.py`.
 #[derive(Debug, Clone)]
@@ -27,15 +54,16 @@ pub struct ArtifactMeta {
 
 impl ArtifactMeta {
     pub fn load(path: &str) -> Result<Self> {
-        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| RuntimeError(format!("reading {path}: {e}")))?;
+        let j = Json::parse(&text).map_err(|e| RuntimeError(format!("parsing {path}: {e}")))?;
         let shape = |key: &str| -> Result<Vec<usize>> {
-            Ok(j.get(key)
-                .and_then(|v| v.as_arr())
-                .ok_or_else(|| anyhow::anyhow!("missing {key}"))?
-                .iter()
-                .map(|v| v.as_f64().unwrap_or(0.0) as usize)
-                .collect())
+            match j.get(key).and_then(|v| v.as_arr()) {
+                Some(arr) => {
+                    Ok(arr.iter().map(|v| v.as_f64().unwrap_or(0.0) as usize).collect())
+                }
+                None => err(format!("missing {key}")),
+            }
         };
         let param_shapes = j
             .get("param_shapes")
@@ -63,6 +91,7 @@ impl ArtifactMeta {
 }
 
 /// A compiled model on the PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct Executor {
     exe: xla::PjRtLoadedExecutable,
     pub meta: ArtifactMeta,
@@ -70,28 +99,32 @@ pub struct Executor {
     params: Vec<xla::Literal>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executor {
     /// Load + compile `artifacts/<name>.hlo.txt` (+ `.meta.json`).
     pub fn load(hlo_path: &str) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let wrap = |what: &str| move |e: xla::Error| RuntimeError(format!("{what}: {e}"));
+        let client = xla::PjRtClient::cpu().map_err(wrap("creating PJRT CPU client"))?;
         let proto = xla::HloModuleProto::from_text_file(hlo_path)
-            .with_context(|| format!("parsing HLO text {hlo_path}"))?;
+            .map_err(|e| RuntimeError(format!("parsing HLO text {hlo_path}: {e}")))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("PJRT compile")?;
+        let exe = client.compile(&comp).map_err(wrap("PJRT compile"))?;
         let meta_path = hlo_path.replace(".hlo.txt", ".meta.json");
         let meta = ArtifactMeta::load(&meta_path)?;
         // Weight parameters (optional: absent for weightless artifacts).
         let mut params = Vec::new();
         if !meta.param_shapes.is_empty() {
             let ppath = hlo_path.replace(".hlo.txt", ".params.json");
-            let text =
-                std::fs::read_to_string(&ppath).with_context(|| format!("reading {ppath}"))?;
-            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {ppath}: {e}"))?;
-            let arrays = j
-                .get("params")
-                .and_then(|v| v.as_arr())
-                .ok_or_else(|| anyhow::anyhow!("missing params"))?;
-            anyhow::ensure!(arrays.len() == meta.param_shapes.len(), "param count mismatch");
+            let text = std::fs::read_to_string(&ppath)
+                .map_err(|e| RuntimeError(format!("reading {ppath}: {e}")))?;
+            let j = Json::parse(&text).map_err(|e| RuntimeError(format!("parsing {ppath}: {e}")))?;
+            let arrays = match j.get("params").and_then(|v| v.as_arr()) {
+                Some(a) => a,
+                None => return err("missing params"),
+            };
+            if arrays.len() != meta.param_shapes.len() {
+                return err("param count mismatch");
+            }
             for (vals, shape) in arrays.iter().zip(&meta.param_shapes) {
                 let v: Vec<f32> = vals
                     .as_arr()
@@ -99,9 +132,13 @@ impl Executor {
                     .iter()
                     .map(|x| x.as_f64().unwrap_or(0.0) as f32)
                     .collect();
-                anyhow::ensure!(v.len() == shape.iter().product::<usize>(), "param size mismatch");
+                if v.len() != shape.iter().product::<usize>() {
+                    return err("param size mismatch");
+                }
                 let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                params.push(xla::Literal::vec1(&v).reshape(&dims)?);
+                params.push(
+                    xla::Literal::vec1(&v).reshape(&dims).map_err(wrap("reshaping param"))?,
+                );
             }
         }
         Ok(Self { exe, meta, params })
@@ -110,27 +147,52 @@ impl Executor {
     /// Execute the main part on one image (`Value` NHWC f32 matching the
     /// artifact's input shape). Returns the dequantized head map.
     pub fn run(&self, image: &Value) -> Result<Value> {
-        anyhow::ensure!(
-            image.shape == self.meta.input_shape,
-            "input shape {:?} != artifact {:?}",
-            image.shape,
-            self.meta.input_shape
-        );
+        if image.shape != self.meta.input_shape {
+            return err(format!(
+                "input shape {:?} != artifact {:?}",
+                image.shape, self.meta.input_shape
+            ));
+        }
+        let wrap = |what: &str| move |e: xla::Error| RuntimeError(format!("{what}: {e}"));
         let dims: Vec<i64> = image.shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(&image.f).reshape(&dims)?;
+        let lit = xla::Literal::vec1(&image.f).reshape(&dims).map_err(wrap("reshaping input"))?;
         let mut args = vec![lit];
         for p in &self.params {
             args.push(p.clone());
         }
-        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let result = self.exe.execute::<xla::Literal>(&args).map_err(wrap("PJRT execute"))?[0][0]
+            .to_literal_sync()
+            .map_err(wrap("fetching result"))?;
         // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        let values = out.to_vec::<f32>()?;
-        anyhow::ensure!(
-            values.len() == self.meta.output_shape.iter().product::<usize>(),
-            "output size mismatch"
-        );
+        let out = result.to_tuple1().map_err(wrap("unwrapping tuple"))?;
+        let values = out.to_vec::<f32>().map_err(wrap("reading result"))?;
+        if values.len() != self.meta.output_shape.iter().product::<usize>() {
+            return err("output size mismatch");
+        }
         Ok(Value::new(self.meta.output_shape.clone(), values))
+    }
+}
+
+/// Stub executor for builds without the `pjrt` feature: `load` always
+/// fails with a descriptive error, which every call site already treats
+/// as "artifacts unavailable" (the same path taken before `make
+/// artifacts` has run).
+#[cfg(not(feature = "pjrt"))]
+pub struct Executor {
+    pub meta: ArtifactMeta,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executor {
+    pub fn load(hlo_path: &str) -> Result<Self> {
+        err(format!(
+            "cannot load {hlo_path}: built without the `pjrt` feature (the PJRT \
+             executor needs the deployment image's vendored `xla` crate)"
+        ))
+    }
+
+    pub fn run(&self, _image: &Value) -> Result<Value> {
+        err("built without the `pjrt` feature")
     }
 }
 
@@ -157,5 +219,12 @@ mod tests {
     #[test]
     fn meta_missing_file_errors() {
         assert!(ArtifactMeta::load("/nonexistent/meta.json").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_executor_reports_missing_feature() {
+        let e = Executor::load("artifacts/model.hlo.txt").unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 }

@@ -47,6 +47,16 @@ impl TuningResult {
         self.total_cycles(tuned) as f64 / (cfg.clock_mhz * 1e6)
     }
 
+    /// MAC-array utilization of the schedule on `cfg`: achieved MACs per
+    /// cycle over the array's peak. This is the proxy the deployment
+    /// workflow feeds the power model (`coordinator::deploy`) and the
+    /// serving fleet reports per device (`serving::metrics`).
+    pub fn utilization(&self, cfg: &GemminiConfig, tuned: bool) -> f64 {
+        let total_macs: u64 = self.layers.iter().map(|l| l.geom.macs()).sum();
+        let cycles = self.total_cycles(tuned).max(1);
+        (total_macs as f64 / (cycles as f64 * cfg.peak_macs_per_cycle() as f64)).clamp(0.0, 1.0)
+    }
+
     /// Fraction of layers the tuner improved (paper: "> 60 % of the
     /// convolution layers were improved after tuning").
     pub fn fraction_improved(&self) -> f64 {
@@ -142,6 +152,24 @@ mod tests {
         let lat = t.latency_s(&cfg, true);
         assert!(lat > 0.0 && lat < 1.0, "latency {lat}");
         assert!(t.latency_s(&cfg, false) >= lat);
+    }
+
+    #[test]
+    fn utilization_is_macs_over_peak_cycles() {
+        let cfg = GemminiConfig::ours_zcu102();
+        let mut g = yolov7_tiny(160, ModelVariant::Pruned88, 8);
+        crate::passes::replace_activations(&mut g);
+        let t = tune_graph(&cfg, &g, 2);
+        let u_tuned = t.utilization(&cfg, true);
+        let u_default = t.utilization(&cfg, false);
+        assert!(u_tuned > 0.0 && u_tuned <= 1.0, "utilization {u_tuned}");
+        // Fewer cycles for the same MACs → tuned utilization never lower.
+        assert!(u_tuned >= u_default, "{u_tuned} < {u_default}");
+        // Matches the closed-form definition.
+        let macs: u64 = t.layers.iter().map(|l| l.geom.macs()).sum();
+        let expect = macs as f64
+            / (t.total_cycles(true) as f64 * cfg.peak_macs_per_cycle() as f64);
+        assert!((u_tuned - expect.clamp(0.0, 1.0)).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! Bounded admission queues with load shedding.
+//!
+//! Generalizes the backpressure of [`crate::pipeline::topic`]: where the
+//! Section VI pipeline *blocks* the producer when a DDS-style queue is
+//! full, an open-loop fleet cannot block a camera — it must shed. Each
+//! device's queue is bounded; when full, the shed policy decides whether
+//! the newest request is rejected or the oldest queued request is evicted
+//! (same semantics as [`crate::pipeline::OverflowPolicy`], which
+//! [`admit_via_topic`] reuses directly for live threaded front doors).
+
+use std::collections::VecDeque;
+
+use crate::pipeline::{OverflowPolicy, Topic};
+
+use super::Request;
+
+/// What to do when a bounded queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Reject the incoming request (newest-first shedding).
+    RejectNewest,
+    /// Evict the oldest queued request to admit the new one (freshest
+    /// frames win — the right call for perception pipelines where a
+    /// stale frame is worthless once a newer one exists).
+    DropOldest,
+}
+
+impl ShedPolicy {
+    /// The equivalent live-pipeline overflow policy.
+    pub fn overflow(self) -> OverflowPolicy {
+        match self {
+            ShedPolicy::RejectNewest => OverflowPolicy::Reject,
+            ShedPolicy::DropOldest => OverflowPolicy::DropOldest,
+        }
+    }
+}
+
+/// Outcome of one admission attempt.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Admission {
+    /// Admitted without displacing anything.
+    Admitted,
+    /// Admitted; the returned (oldest) request was shed to make room.
+    AdmittedEvicted(Request),
+    /// Queue full under [`ShedPolicy::RejectNewest`]; the new request
+    /// was shed.
+    Rejected,
+}
+
+/// Admit `req` into a bounded queue, shedding per `policy`. Returns what
+/// happened so the caller can count sheds.
+pub fn admit(
+    queue: &mut VecDeque<Request>,
+    capacity: usize,
+    policy: ShedPolicy,
+    req: Request,
+) -> Admission {
+    if queue.len() < capacity.max(1) {
+        queue.push_back(req);
+        return Admission::Admitted;
+    }
+    match policy {
+        ShedPolicy::RejectNewest => Admission::Rejected,
+        ShedPolicy::DropOldest => {
+            // capacity >= 1, so the queue is non-empty here.
+            let evicted = queue.pop_front().expect("non-empty full queue");
+            queue.push_back(req);
+            Admission::AdmittedEvicted(evicted)
+        }
+    }
+}
+
+/// Admit into a live threaded [`Topic`] front door with the same shed
+/// semantics (reuses [`Topic::try_publish`]). Returns `true` when the
+/// message was delivered.
+pub fn admit_via_topic<T>(topic: &Topic<T>, msg: T, policy: ShedPolicy) -> bool {
+    topic.try_publish(msg, policy.overflow()).delivered()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::topic;
+
+    fn req(id: u64, t: f64) -> Request {
+        Request { id, camera: 0, arrival_s: t, objects: 1 }
+    }
+
+    #[test]
+    fn admits_until_capacity() {
+        let mut q = VecDeque::new();
+        for i in 0..3 {
+            assert_eq!(admit(&mut q, 3, ShedPolicy::RejectNewest, req(i, 0.0)), Admission::Admitted);
+        }
+        assert_eq!(admit(&mut q, 3, ShedPolicy::RejectNewest, req(3, 0.0)), Admission::Rejected);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.front().unwrap().id, 0);
+    }
+
+    #[test]
+    fn drop_oldest_keeps_fresh_frames() {
+        let mut q = VecDeque::new();
+        for i in 0..2 {
+            admit(&mut q, 2, ShedPolicy::DropOldest, req(i, i as f64));
+        }
+        match admit(&mut q, 2, ShedPolicy::DropOldest, req(2, 2.0)) {
+            Admission::AdmittedEvicted(old) => assert_eq!(old.id, 0),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn topic_front_door_sheds_like_the_queue() {
+        let t = topic::<u64>(2);
+        assert!(admit_via_topic(&t, 0, ShedPolicy::RejectNewest));
+        assert!(admit_via_topic(&t, 1, ShedPolicy::RejectNewest));
+        // Full: reject sheds the newest, drop-oldest admits.
+        assert!(!admit_via_topic(&t, 2, ShedPolicy::RejectNewest));
+        assert!(admit_via_topic(&t, 3, ShedPolicy::DropOldest));
+        assert_eq!(t.rx.try_recv(), Ok(1));
+        assert_eq!(t.rx.try_recv(), Ok(3));
+    }
+}

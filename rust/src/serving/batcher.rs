@@ -1,0 +1,133 @@
+//! Dynamic batching: the max-batch/max-wait policy.
+//!
+//! Every queued request waits at most `max_wait_s` before its batch is
+//! closed; a batch closes early the moment `max_batch` requests are
+//! queued. `max_batch = 1` degenerates to request-at-a-time serving (the
+//! paper's single-board deployment); `max_wait_s = 0` greedily batches
+//! whatever is queued when the device frees up. The policy trades the
+//! head request's queueing delay against amortizing the per-invocation
+//! overhead (dispatch + weight streaming) measured by
+//! [`crate::serving::device`].
+
+use std::collections::VecDeque;
+
+use super::Request;
+
+/// The dynamic-batching knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Close a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Close a (non-empty) batch once its oldest request has waited this
+    /// long, seconds.
+    pub max_wait_s: f64,
+}
+
+impl BatchPolicy {
+    /// Request-at-a-time serving (no batching).
+    pub fn unbatched() -> Self {
+        Self { max_batch: 1, max_wait_s: 0.0 }
+    }
+
+    pub fn new(max_batch: usize, max_wait_s: f64) -> Self {
+        Self { max_batch: max_batch.max(1), max_wait_s: max_wait_s.max(0.0) }
+    }
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait_s: 10e-3 }
+    }
+}
+
+/// What an idle device should do with its queue at time `now`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Close a batch of this many requests (front of the queue) now.
+    Dispatch(usize),
+    /// Keep accumulating; re-evaluate at this absolute time at the
+    /// latest (the oldest request's wait deadline).
+    WaitUntil(f64),
+    /// Nothing queued.
+    Idle,
+}
+
+impl BatchPolicy {
+    /// Evaluate the policy against a device queue. `device_cap` is the
+    /// backend's activation-memory bound on batch size.
+    pub fn decide(&self, queue: &VecDeque<Request>, now: f64, device_cap: usize) -> Decision {
+        let cap = self.max_batch.min(device_cap.max(1));
+        match queue.front() {
+            None => Decision::Idle,
+            Some(oldest) => {
+                if queue.len() >= cap {
+                    Decision::Dispatch(cap)
+                } else {
+                    let deadline = oldest.arrival_s + self.max_wait_s;
+                    if now >= deadline {
+                        Decision::Dispatch(queue.len())
+                    } else {
+                        Decision::WaitUntil(deadline)
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue(arrivals: &[f64]) -> VecDeque<Request> {
+        arrivals
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| Request { id: i as u64, camera: 0, arrival_s: t, objects: 1 })
+            .collect()
+    }
+
+    #[test]
+    fn empty_queue_is_idle() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.decide(&queue(&[]), 0.0, 32), Decision::Idle);
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let p = BatchPolicy::new(4, 1.0);
+        let q = queue(&[0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(p.decide(&q, 0.0, 32), Decision::Dispatch(4));
+    }
+
+    #[test]
+    fn device_cap_limits_batch() {
+        let p = BatchPolicy::new(16, 1.0);
+        let q = queue(&[0.0; 8]);
+        assert_eq!(p.decide(&q, 0.0, 4), Decision::Dispatch(4));
+    }
+
+    #[test]
+    fn partial_batch_waits_then_flushes_at_deadline() {
+        let p = BatchPolicy::new(8, 0.010);
+        let q = queue(&[1.000, 1.002]);
+        match p.decide(&q, 1.004, 32) {
+            Decision::WaitUntil(t) => assert!((t - 1.010).abs() < 1e-12),
+            other => panic!("expected WaitUntil, got {other:?}"),
+        }
+        assert_eq!(p.decide(&q, 1.010, 32), Decision::Dispatch(2));
+    }
+
+    #[test]
+    fn unbatched_always_dispatches_one() {
+        let p = BatchPolicy::unbatched();
+        assert_eq!(p.decide(&queue(&[5.0]), 5.0, 32), Decision::Dispatch(1));
+        assert_eq!(p.decide(&queue(&[5.0, 5.0, 5.0]), 5.0, 32), Decision::Dispatch(1));
+    }
+
+    #[test]
+    fn zero_wait_greedily_flushes() {
+        let p = BatchPolicy::new(8, 0.0);
+        assert_eq!(p.decide(&queue(&[2.0, 2.1, 2.2]), 2.2, 32), Decision::Dispatch(3));
+    }
+}

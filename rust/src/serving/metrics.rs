@@ -1,0 +1,323 @@
+//! Streaming fleet metrics: latency quantiles, throughput, per-device
+//! utilization, SLO violations.
+//!
+//! Quantiles come from a log-spaced streaming histogram (constant memory,
+//! one pass — the shape HDRHistogram uses) so the fleet can track p99
+//! over millions of requests without retaining them; resolution is the
+//! bin ratio (~4% relative error), which the tests verify against a
+//! brute-force percentile. Per-device compute utilization reuses
+//! [`crate::scheduler::TuningResult::utilization`] through
+//! [`super::device::Backend::power_w`] rather than duplicating the
+//! formula.
+
+use super::device::Backend;
+
+/// Streaming latency histogram with log-spaced bins.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Lower edge of bin 0, seconds.
+    lo: f64,
+    /// Geometric bin width (upper/lower edge ratio).
+    ratio: f64,
+    bins: Vec<u64>,
+    count: u64,
+    sum_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+impl LatencyHistogram {
+    /// 512 bins at 4% spacing: covers ~10 µs to ~5×10^3 s.
+    pub fn new() -> Self {
+        Self {
+            lo: 1e-5,
+            ratio: 1.04,
+            bins: vec![0; 512],
+            count: 0,
+            sum_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+        }
+    }
+
+    fn index(&self, latency_s: f64) -> usize {
+        if latency_s <= self.lo {
+            return 0;
+        }
+        let idx = ((latency_s / self.lo).ln() / self.ratio.ln()).floor() as usize;
+        idx.min(self.bins.len() - 1)
+    }
+
+    pub fn record(&mut self, latency_s: f64) {
+        let i = self.index(latency_s);
+        self.bins[i] += 1;
+        self.count += 1;
+        self.sum_s += latency_s;
+        self.min_s = self.min_s.min(latency_s);
+        self.max_s = self.max_s.max(latency_s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// The `q`-quantile (`q` in `[0, 1]`), to bin resolution. Returns the
+    /// geometric midpoint of the bin holding the target rank, clamped to
+    /// the observed min/max so tiny samples stay sensible.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &n) in self.bins.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                let mid = self.lo * self.ratio.powi(i as i32) * self.ratio.sqrt();
+                return mid.clamp(self.min_s, self.max_s);
+            }
+        }
+        self.max_s
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Final per-device figures.
+#[derive(Debug, Clone)]
+pub struct DeviceReport {
+    pub name: String,
+    pub completed: u64,
+    pub batches: u64,
+    /// Mean closed-batch size.
+    pub mean_batch: f64,
+    /// Fraction of the makespan the device was serving.
+    pub busy_frac: f64,
+    /// Average board power at that busy fraction, W.
+    pub power_w: f64,
+    /// Requests this device pulled from a sibling's queue.
+    pub stolen: u64,
+}
+
+/// Fleet-level summary of one simulated run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub completed: u64,
+    pub shed: u64,
+    /// Time from first arrival to last completion, s.
+    pub makespan_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+    pub max_s: f64,
+    /// The latency objective requests were judged against, s.
+    pub slo_s: f64,
+    /// Completed requests whose end-to-end latency exceeded the SLO.
+    pub slo_violations: u64,
+    pub devices: Vec<DeviceReport>,
+}
+
+impl FleetReport {
+    /// Aggregate served throughput, frames per second.
+    pub fn throughput_fps(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.makespan_s
+        }
+    }
+
+    /// Fraction of *offered* requests that met the SLO (shed requests
+    /// count as violations — a shed frame never met its deadline).
+    pub fn slo_attainment(&self) -> f64 {
+        let offered = self.completed + self.shed;
+        if offered == 0 {
+            return 1.0;
+        }
+        (self.completed - self.slo_violations) as f64 / offered as f64
+    }
+}
+
+/// Streaming accumulator the simulator feeds.
+#[derive(Debug, Clone)]
+pub(super) struct DeviceStats {
+    pub busy_s: f64,
+    pub completed: u64,
+    pub batches: u64,
+    pub stolen: u64,
+}
+
+#[derive(Debug)]
+pub struct FleetMetrics {
+    pub(super) hist: LatencyHistogram,
+    pub(super) shed: u64,
+    pub(super) slo_s: f64,
+    pub(super) slo_violations: u64,
+    pub(super) per_device: Vec<DeviceStats>,
+}
+
+impl FleetMetrics {
+    pub fn new(n_devices: usize, slo_s: f64) -> Self {
+        Self {
+            hist: LatencyHistogram::new(),
+            shed: 0,
+            slo_s,
+            slo_violations: 0,
+            per_device: (0..n_devices)
+                .map(|_| DeviceStats { busy_s: 0.0, completed: 0, batches: 0, stolen: 0 })
+                .collect(),
+        }
+    }
+
+    /// Record one completed request on `device`.
+    pub fn record_completion(&mut self, device: usize, latency_s: f64) {
+        self.hist.record(latency_s);
+        if latency_s > self.slo_s {
+            self.slo_violations += 1;
+        }
+        self.per_device[device].completed += 1;
+    }
+
+    /// Record one closed batch (its service time busies the device).
+    pub fn record_batch(&mut self, device: usize, service_s: f64) {
+        self.per_device[device].batches += 1;
+        self.per_device[device].busy_s += service_s;
+    }
+
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    pub fn record_steal(&mut self, device: usize, n: usize) {
+        self.per_device[device].stolen += n as u64;
+    }
+
+    /// Finalize against the devices that produced the stats.
+    pub fn report(&self, backends: &[&dyn Backend], makespan_s: f64) -> FleetReport {
+        let devices = self
+            .per_device
+            .iter()
+            .zip(backends)
+            .map(|(s, b)| {
+                let busy_frac = if makespan_s > 0.0 {
+                    (s.busy_s / makespan_s).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                };
+                DeviceReport {
+                    name: b.name().to_string(),
+                    completed: s.completed,
+                    batches: s.batches,
+                    mean_batch: if s.batches == 0 {
+                        0.0
+                    } else {
+                        s.completed as f64 / s.batches as f64
+                    },
+                    busy_frac,
+                    power_w: b.power_w(busy_frac),
+                    stolen: s.stolen,
+                }
+            })
+            .collect();
+        FleetReport {
+            completed: self.hist.count(),
+            shed: self.shed,
+            makespan_s,
+            p50_s: self.hist.quantile(0.50),
+            p95_s: self.hist.quantile(0.95),
+            p99_s: self.hist.quantile(0.99),
+            mean_s: self.hist.mean_s(),
+            max_s: self.hist.max_s(),
+            slo_s: self.slo_s,
+            slo_violations: self.slo_violations,
+            devices,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Brute-force percentile (nearest-rank) for cross-checking.
+    fn brute_quantile(samples: &mut [f64], q: f64) -> f64 {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q * samples.len() as f64).ceil() as usize).clamp(1, samples.len());
+        samples[rank - 1]
+    }
+
+    #[test]
+    fn quantiles_match_brute_force_within_bin_resolution() {
+        let mut rng = Rng::new(99);
+        let mut h = LatencyHistogram::new();
+        let mut samples = Vec::new();
+        // Log-normal-ish latencies around 10 ms with a heavy tail.
+        for _ in 0..20_000 {
+            let s = (0.010 * (0.6 * rng.normal()).exp()).max(1e-5);
+            h.record(s);
+            samples.push(s);
+        }
+        for q in [0.50, 0.95, 0.99] {
+            let exact = brute_quantile(&mut samples, q);
+            let approx = h.quantile(q);
+            let rel = (approx - exact).abs() / exact;
+            // One 4% bin of slack either side.
+            assert!(rel < 0.05, "q{q}: approx {approx} vs exact {exact} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn mean_and_count_are_exact() {
+        let mut h = LatencyHistogram::new();
+        for s in [0.001, 0.002, 0.003] {
+            h.record(s);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_s() - 0.002).abs() < 1e-15);
+        assert!((h.max_s() - 0.003).abs() < 1e-15);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantile_clamps_to_observation() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0123);
+        // All quantiles of a single observation are that observation.
+        assert!((h.quantile(0.5) - 0.0123).abs() / 0.0123 < 0.05);
+        assert_eq!(h.quantile(0.99), h.quantile(0.01));
+    }
+
+    #[test]
+    fn slo_violations_counted() {
+        let mut m = FleetMetrics::new(1, 0.010);
+        m.record_completion(0, 0.005);
+        m.record_completion(0, 0.015);
+        m.record_completion(0, 0.020);
+        assert_eq!(m.slo_violations, 2);
+    }
+}

@@ -1,0 +1,53 @@
+//! Multi-device inference serving: the fleet layer above one board.
+//!
+//! The paper deploys one YOLOv7-tiny on one ZCU102 and wires it into the
+//! Section VI traffic-monitoring system. This subsystem grows that into a
+//! *fleet*: N heterogeneous devices (tuned Gemmini configs and/or CPU/GPU
+//! baselines) behind a shard pool, fed by many concurrent camera streams,
+//! with dynamic batching, bounded admission queues with load shedding,
+//! and streaming latency-SLO metrics — all driven by a deterministic
+//! discrete-event simulator so fleet-level decisions (batch policy, queue
+//! depth, device mix) are benchmarkable offline, the same way the Gemmini
+//! cycle simulator makes per-layer schedules benchmarkable offline.
+//!
+//! Module map (see `rust/src/serving/README.md` for the fleet model):
+//!
+//! - [`device`] — the [`Backend`] trait + Gemmini/baseline impls; batch
+//!   service times derived from the existing cycle model;
+//! - [`batcher`] — max-batch/max-wait dynamic batching policy;
+//! - [`shard`] — the device pool: least-outstanding-work routing and
+//!   work stealing;
+//! - [`admission`] — bounded per-device queues with shed policies
+//!   (generalizing [`crate::pipeline::Topic`]'s overflow handling);
+//! - [`metrics`] — streaming p50/p95/p99, throughput, utilization, SLO
+//!   violation counters;
+//! - [`sim`] — the discrete-event driver + arrival-trace generators
+//!   (open-loop Poisson, bursty multi-camera).
+
+pub mod admission;
+pub mod batcher;
+pub mod device;
+pub mod metrics;
+pub mod shard;
+pub mod sim;
+
+pub use admission::ShedPolicy;
+pub use batcher::BatchPolicy;
+pub use device::{Backend, BaselineDevice, GemminiDevice};
+pub use metrics::{FleetReport, LatencyHistogram};
+pub use shard::ShardPool;
+pub use sim::{multi_camera_trace, poisson_trace, simulate, SimConfig};
+
+/// One inference request: a camera frame arriving at the fleet front door.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Monotonically increasing id over the whole trace.
+    pub id: u64,
+    /// Which camera stream emitted the frame.
+    pub camera: usize,
+    /// Arrival time at the fleet, seconds since trace start.
+    pub arrival_s: f64,
+    /// Objects in the frame (scene-complexity hint from the trace
+    /// generator; drives burstiness, not service time).
+    pub objects: usize,
+}

@@ -1,0 +1,199 @@
+//! The shard pool: N heterogeneous devices, least-outstanding-work
+//! routing, and work stealing.
+//!
+//! Routing estimates each device's time-to-drain (remaining service of
+//! the in-flight batch plus the estimated service of its queue with the
+//! candidate request appended) and picks the minimum — so a 167 MHz
+//! ZCU111 naturally absorbs more streams than a 100 MHz original-config
+//! board, without static weights. When a device goes idle with an empty
+//! queue, it steals the newer half of the most-backlogged sibling's
+//! queue (FIFO order is preserved for the victim's older requests).
+
+use std::collections::VecDeque;
+
+use crate::fpga::resources::Board;
+use crate::gemmini::config::GemminiConfig;
+use crate::scheduler::TuningResult;
+
+use super::device::{Backend, GemminiDevice};
+use super::Request;
+
+/// One registered device plus its serving state.
+pub struct DeviceState {
+    pub backend: Box<dyn Backend>,
+    /// Admitted requests waiting to be batched.
+    pub queue: VecDeque<Request>,
+    /// Whether a batch is currently in flight.
+    pub busy: bool,
+    /// Absolute time the in-flight batch completes, s.
+    pub free_at: f64,
+    /// The in-flight batch's requests (latencies recorded at completion).
+    pub in_flight: Vec<Request>,
+}
+
+impl DeviceState {
+    fn new(backend: Box<dyn Backend>) -> Self {
+        Self { backend, queue: VecDeque::new(), busy: false, free_at: 0.0, in_flight: Vec::new() }
+    }
+
+    /// Estimated seconds until this device could finish one more request
+    /// arriving at `now`.
+    pub fn outstanding_s(&self, now: f64) -> f64 {
+        let busy_rem = if self.busy { (self.free_at - now).max(0.0) } else { 0.0 };
+        busy_rem + self.backend.batch_latency_s(self.queue.len() + 1)
+    }
+}
+
+/// The registered fleet.
+#[derive(Default)]
+pub struct ShardPool {
+    pub devices: Vec<DeviceState>,
+}
+
+impl ShardPool {
+    pub fn new() -> Self {
+        Self { devices: Vec::new() }
+    }
+
+    /// Register a device; returns its index.
+    pub fn register(&mut self, backend: Box<dyn Backend>) -> usize {
+        self.devices.push(DeviceState::new(backend));
+        self.devices.len() - 1
+    }
+
+    /// The paper's two tuned boards as a pool: the "ours" ZCU102 build
+    /// plus the same architecture at the ZCU111's 167 MHz, sharing one
+    /// `TuningResult` (identical architecture, so the tuned schedules
+    /// transfer; only the clock differs). The CLI, bench and example all
+    /// start from this and register extra devices on top.
+    pub fn paper_boards(tuning: &TuningResult, dispatch_s: f64) -> Self {
+        let mut pool = Self::new();
+        pool.register(Box::new(GemminiDevice::from_tuning(
+            "ZCU102-Gemmini (ours)",
+            Board::Zcu102,
+            GemminiConfig::ours_zcu102(),
+            tuning,
+            dispatch_s,
+        )));
+        pool.register(Box::new(GemminiDevice::from_tuning(
+            "ZCU111-Gemmini (ours)",
+            Board::Zcu111,
+            GemminiConfig::ours_zcu111(),
+            tuning,
+            dispatch_s,
+        )));
+        pool
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Least-outstanding-work routing: the device that would finish the
+    /// new request soonest. Ties break to the lowest index
+    /// (deterministic).
+    pub fn route(&self, now: f64) -> usize {
+        let mut best = 0;
+        let mut best_s = f64::INFINITY;
+        for (i, d) in self.devices.iter().enumerate() {
+            let est = d.outstanding_s(now);
+            if est < best_s {
+                best_s = est;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Steal the newer half of the most-backlogged sibling's queue into
+    /// idle device `idx`. Returns how many requests moved.
+    pub fn steal_into(&mut self, idx: usize) -> usize {
+        debug_assert!(self.devices[idx].queue.is_empty());
+        // Victim: largest queue with at least 2 requests (stealing a lone
+        // request just moves the same work without helping latency).
+        let mut victim = None;
+        let mut victim_len = 1;
+        for (i, d) in self.devices.iter().enumerate() {
+            if i != idx && d.queue.len() > victim_len {
+                victim_len = d.queue.len();
+                victim = Some(i);
+            }
+        }
+        let Some(v) = victim else { return 0 };
+        let take = victim_len / 2;
+        let keep = victim_len - take;
+        let stolen = self.devices[v].queue.split_off(keep);
+        let n = stolen.len();
+        self.devices[idx].queue.extend(stolen);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{rpi4, xavier};
+    use crate::serving::device::BaselineDevice;
+
+    fn req(id: u64, t: f64) -> Request {
+        Request { id, camera: 0, arrival_s: t, objects: 1 }
+    }
+
+    fn pool2() -> ShardPool {
+        let mut p = ShardPool::new();
+        // Xavier ~19× the RPi4's sustained throughput on this workload.
+        p.register(Box::new(BaselineDevice::new(xavier(), 0.5, 8)));
+        p.register(Box::new(BaselineDevice::new(rpi4(), 0.5, 8)));
+        p
+    }
+
+    #[test]
+    fn routes_to_idle_fast_device() {
+        let p = pool2();
+        assert_eq!(p.route(0.0), 0, "empty pool routes to the faster device");
+    }
+
+    #[test]
+    fn routing_accounts_for_queue_depth_and_speed() {
+        let mut p = pool2();
+        // Pile work on the fast device until the slow one wins.
+        for i in 0..64 {
+            p.devices[0].queue.push_back(req(i, 0.0));
+        }
+        assert_eq!(p.route(0.0), 1, "deep queue on the fast device diverts to the slow one");
+    }
+
+    #[test]
+    fn routing_accounts_for_busy_remainder() {
+        let mut p = pool2();
+        p.devices[0].busy = true;
+        p.devices[0].free_at = 1000.0; // wedged for a long time
+        assert_eq!(p.route(0.0), 1);
+    }
+
+    #[test]
+    fn steal_takes_newer_half_preserving_victim_order() {
+        let mut p = pool2();
+        for i in 0..5 {
+            p.devices[0].queue.push_back(req(i, i as f64));
+        }
+        let n = p.steal_into(1);
+        assert_eq!(n, 2);
+        let victim: Vec<u64> = p.devices[0].queue.iter().map(|r| r.id).collect();
+        let thief: Vec<u64> = p.devices[1].queue.iter().map(|r| r.id).collect();
+        assert_eq!(victim, vec![0, 1, 2]);
+        assert_eq!(thief, vec![3, 4]);
+    }
+
+    #[test]
+    fn no_steal_from_single_request_queues() {
+        let mut p = pool2();
+        p.devices[0].queue.push_back(req(0, 0.0));
+        assert_eq!(p.steal_into(1), 0);
+        assert_eq!(p.devices[0].queue.len(), 1);
+    }
+}
