@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy fmt artifacts fleet
+.PHONY: check build test clippy fmt fmt-drift featurecheck artifacts fleet
 
-check: build test clippy
+check: build test clippy fmt-drift featurecheck
 
 build:
 	$(CARGO) build --release
@@ -16,8 +16,28 @@ test:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
+# Strict formatting gate (`make fmt` fails on any drift).
 fmt:
 	$(CARGO) fmt --check
+
+# Advisory variant used by `check`: the seed predates rustfmt
+# enforcement (a few long literal/struct lines would be rewrapped), so
+# drift is *reported* without masking build/test/clippy results. Once
+# the tree has been `cargo fmt`ed wholesale, point `check` at `fmt`.
+fmt-drift:
+	-$(CARGO) fmt --check
+
+# Build/test with the `pjrt` feature too — but only when the vendored
+# `xla` crate has been wired into the manifest (see Cargo.toml: on a
+# plain offline checkout the feature cannot resolve, so the default
+# build's stub Executor is the tested configuration and this target
+# degrades to a notice).
+featurecheck:
+	@if grep -q '^xla' Cargo.toml; then \
+		$(CARGO) build --release --features pjrt && $(CARGO) test -q --features pjrt; \
+	else \
+		echo "featurecheck: skipping --features pjrt (vendored xla not configured; stub Executor covered by the default build/test)"; \
+	fi
 
 # AOT-compile the JAX/Pallas detector to artifacts/ (PJRT runtime input).
 artifacts:

@@ -13,6 +13,10 @@
 //!    generator's distribution) is served open-loop through dynamic
 //!    batching, bounded admission and work stealing; the report prints
 //!    p50/p99 latency, aggregate FPS, per-device utilization and power.
+//! 4. The same city grows: twice the cameras arrive as *closed-loop*
+//!    clients (each holds ≤ K frames in flight) and the autoscaler
+//!    provisions extra ZCU102 replicas between DES epochs — scaling
+//!    events and the device-count trajectory land in the fleet table.
 
 use gemmini_edge::baselines::xavier;
 use gemmini_edge::coordinator::{deploy, DeployOptions};
@@ -25,8 +29,9 @@ use gemmini_edge::report::fleet_table;
 use gemmini_edge::scheduler::tune_graph;
 use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
 use gemmini_edge::serving::{
-    multi_camera_trace, simulate, Backend, BaselineDevice, BatchPolicy, GemminiDevice, ShardPool,
-    SimConfig,
+    multi_camera_trace, simulate, simulate_closed_loop_autoscaled, AutoscaleConfig, Autoscaler,
+    Backend, BaselineDevice, BatchPolicy, ClosedLoopConfig, GemminiDevice, ShardPool, SimConfig,
+    TargetUtilization,
 };
 
 /// Sustainable FPS of a device under a batching cap.
@@ -99,7 +104,7 @@ fn main() {
     print!("{}", fleet_table(&report));
 
     // ---- the same load without batching, for contrast ----
-    let unbatched = SimConfig { batch: BatchPolicy::unbatched(), ..cfg };
+    let unbatched = SimConfig { batch: BatchPolicy::unbatched(), ..cfg.clone() };
     let r1 = simulate(&mut mk_pool(), &trace, &unbatched);
     println!(
         "\nunbatched at the same offered load: {:.1} FPS, p99 {:.1} ms, shed {} \
@@ -109,4 +114,46 @@ fn main() {
         r1.shed,
         100.0 * (report.throughput_fps() / r1.throughput_fps() - 1.0)
     );
+
+    // ---- 4. the city doubles: closed-loop cameras + autoscaling ----
+    // Twice the cameras, each a closed-loop client holding ≤ 3 frames in
+    // flight; the pool starts from the two tuned boards and the
+    // autoscaler provisions ZCU102 replicas (1 s warm-up) as utilization
+    // climbs.
+    let clients = ClosedLoopConfig {
+        cameras: 2 * cameras,
+        max_outstanding: 3,
+        period_s: 1.0 / fps_per_cam,
+        think_s: 0.005,
+        horizon_s: horizon,
+        seed: 20240711,
+    };
+    let mut auto = Autoscaler::new(
+        AutoscaleConfig {
+            epoch_s: 0.5,
+            provision_delay_s: 1.0,
+            min_devices: 2,
+            max_devices: 8,
+            cooldown_epochs: 0,
+        },
+        Box::new(TargetUtilization::default()),
+    );
+    let mut factory = |i: usize| -> Box<dyn Backend> {
+        Box::new(GemminiDevice::from_tuning(
+            &format!("ZCU102-Gemmini (replica {i})"),
+            Board::Zcu102,
+            GemminiConfig::ours_zcu102(),
+            &dep.tuning,
+            DEFAULT_DISPATCH_S,
+        ))
+    };
+    let mut small_pool = ShardPool::paper_boards(&dep.tuning, DEFAULT_DISPATCH_S);
+    let scaled =
+        simulate_closed_loop_autoscaled(&mut small_pool, &clients, &cfg, &mut auto, &mut factory);
+    println!(
+        "\n== {} closed-loop cameras (window 3) on an autoscaled pool ==",
+        clients.cameras
+    );
+    println!("offered {} frames (self-paced by the window)", scaled.offered);
+    print!("{}", fleet_table(&scaled));
 }

@@ -1,22 +1,50 @@
-//! Fleet-serving experiment: dynamic batching vs request-at-a-time on a
-//! heterogeneous pool at *equal offered load*.
+//! Fleet-serving experiments:
 //!
-//! The per-invocation overhead a batch amortizes (host dispatch + weight
-//! streaming, see `serving::device`) is what separates the two runs: at
-//! an offered load above the unbatched capacity, batch=1 saturates and
-//! sheds while the batched fleet keeps up. Knobs: `SF_SIZE`, `SF_TRIALS`,
-//! `SF_RATE_X` (offered load as a multiple of unbatched capacity).
+//! 1. Dynamic batching vs request-at-a-time on a heterogeneous pool at
+//!    *equal offered load*. The per-invocation overhead a batch amortizes
+//!    (host dispatch + weight streaming, see `serving::device`) is what
+//!    separates the runs: above the unbatched capacity, batch=1 saturates
+//!    and sheds while the batched fleet keeps up.
+//! 2. Fixed pool vs autoscaled pool at *ramping* offered load. The fixed
+//!    two-board pool sheds once the ramp passes its capacity; the
+//!    autoscaler provisions batch-tuned ZCU102 replicas (with a warm-up
+//!    delay) and holds p99 under the SLO through the top of the ramp.
+//!
+//! Knobs: `SF_SIZE`, `SF_TRIALS`, `SF_RATE_X` (offered load as a multiple
+//! of unbatched capacity).
 
+use gemmini_edge::fpga::resources::Board;
 use gemmini_edge::gemmini::config::GemminiConfig;
 use gemmini_edge::passes::replace_activations;
 use gemmini_edge::report::fleet_table;
-use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::scheduler::{tune_graph, tune_graph_batch};
+use gemmini_edge::serving::admission::ShedPolicy;
 use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
-use gemmini_edge::serving::{poisson_trace, simulate, Backend, BatchPolicy, ShardPool, SimConfig};
+use gemmini_edge::serving::{
+    poisson_trace, simulate, simulate_autoscaled, AutoscaleConfig, Autoscaler, Backend,
+    BatchPolicy, GemminiDevice, Request, ShardPool, SimConfig, TargetUtilization,
+};
 use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
 
 fn env(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Concatenate Poisson segments of `(rate, duration)` into one trace.
+fn ramp_trace(segments: &[(f64, f64)], seed: u64) -> Vec<Request> {
+    let mut out = Vec::new();
+    let mut t0 = 0.0;
+    for (i, &(rate, dur)) in segments.iter().enumerate() {
+        for mut r in poisson_trace(rate, dur, seed + i as u64) {
+            r.arrival_s += t0;
+            out.push(r);
+        }
+        t0 += dur;
+    }
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    out
 }
 
 fn main() {
@@ -81,4 +109,102 @@ fn main() {
         best.1.throughput_fps() > r1.throughput_fps(),
         "dynamic batching must beat batch=1 at this load"
     );
+
+    // ---- experiment 2: fixed vs autoscaled at ramping offered load ----
+    let batch = 8usize;
+    let policy = BatchPolicy::new(batch, 0.010);
+    // Replicas are batch-aware: their service model comes from schedules
+    // tuned *for* batch 8, not the analytic weight-stream split.
+    let tuning_b = tune_graph_batch(&cfg102, &g, trials, batch);
+    let mk_replica = |i: usize| -> GemminiDevice {
+        GemminiDevice::from_batch_tuning(
+            &format!("ZCU102-Gemmini (replica {i})"),
+            Board::Zcu102,
+            GemminiConfig::ours_zcu102(),
+            &tuning,
+            &tuning_b,
+            batch,
+            DEFAULT_DISPATCH_S,
+        )
+    };
+    let pool = mk_pool();
+    let bl = |d: &dyn Backend| d.batch_latency_s(batch.min(d.max_batch()).max(1));
+    // Batched fleet capacity and the worst batched service time (boards
+    // *and* replicas) bound the experiment: rates are multiples of
+    // capacity, and the SLO sits a safe factor above the full-queue
+    // sojourn so bounded queues + drop-oldest keep it achievable.
+    let cap_b: f64 = pool
+        .devices
+        .iter()
+        .map(|d| {
+            let b = batch.min(d.backend.max_batch()).max(1);
+            b as f64 / d.backend.batch_latency_s(b)
+        })
+        .sum();
+    let probe = mk_replica(0);
+    let bl8_max = pool
+        .devices
+        .iter()
+        .map(|d| bl(d.backend.as_ref()))
+        .fold(bl(&probe), f64::max);
+    drop(pool);
+    let slo = 5.0 * bl8_max + 0.050;
+    let queue_depth = 2 * batch;
+    let ramp = [(0.5 * cap_b, 10.0), (1.1 * cap_b, 10.0), (1.8 * cap_b, 10.0)];
+    let trace = ramp_trace(&ramp, 20240711);
+    println!(
+        "\n== autoscaling: ramp 0.5x -> 1.1x -> 1.8x of {cap_b:.0} FPS batched capacity \
+         ({} requests), SLO {:.0} ms ==",
+        trace.len(),
+        slo * 1e3
+    );
+    let cfg = SimConfig {
+        batch: policy,
+        queue_depth,
+        shed: ShedPolicy::DropOldest,
+        slo_s: slo,
+        work_stealing: true,
+    };
+
+    let mut fixed_pool = mk_pool();
+    let fixed = simulate(&mut fixed_pool, &trace, &cfg);
+    println!("-- fixed pool (2 boards) --");
+    print!("{}", fleet_table(&fixed));
+    let mut auto = Autoscaler::new(
+        AutoscaleConfig {
+            epoch_s: 0.5,
+            provision_delay_s: 1.0,
+            min_devices: 2,
+            max_devices: 10,
+            cooldown_epochs: 0,
+        },
+        Box::new(TargetUtilization::default()),
+    );
+    let mut factory = |i: usize| -> Box<dyn Backend> { Box::new(mk_replica(i)) };
+    let mut auto_pool = mk_pool();
+    let scaled = simulate_autoscaled(&mut auto_pool, &trace, &cfg, &mut auto, &mut factory);
+    println!("\n-- autoscaled pool (target-utilization, warm-up 1 s) --");
+    print!("{}", fleet_table(&scaled));
+
+    println!(
+        "\nramp verdict: fixed sheds {} and p99 {:.1} ms; autoscaled sheds {} and p99 {:.1} ms \
+         (SLO {:.0} ms) with {} scaling events, peak {} devices",
+        fixed.shed,
+        fixed.p99_s * 1e3,
+        scaled.shed,
+        scaled.p99_s * 1e3,
+        slo * 1e3,
+        scaled.scaling.len(),
+        scaled.devices_peak
+    );
+    assert!(fixed.shed > 0, "the fixed pool must shed at 1.8x capacity");
+    assert!(scaled.shed < fixed.shed, "autoscaling must shed less than the fixed pool");
+    assert!(
+        scaled.p99_s <= slo,
+        "the autoscaled pool must hold p99 {:.1} ms under the {:.0} ms SLO",
+        scaled.p99_s * 1e3,
+        slo * 1e3
+    );
+    assert!(scaled.devices_peak > scaled.devices_start, "the pool must actually grow");
+    assert!(!scaled.scaling.is_empty(), "scaling events must be visible in the report");
 }

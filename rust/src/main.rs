@@ -8,7 +8,16 @@
 //! repro infer [--hlo PATH]            run the AOT artifact on a scene (PJRT)
 //! repro tune [--size N] [--variant base|p40|p88] [--trials K]
 //! repro fleet [--cameras N] [--fps F] [--batch B] [--wait MS] [--seconds S]
+//!             [--autoscale] [--policy util|slo] [--max-devices N]
+//!             [--epoch S] [--delay S] [--closed K]
 //! ```
+//!
+//! `repro fleet --autoscale` runs the same fleet behind the closed-loop
+//! autoscaler (`serving::autoscale`): the pool starts at the two paper
+//! boards and grows/shrinks ZCU102 replicas between DES epochs; when
+//! `--batch B` is ≥ 2 the replicas use batch-aware schedule tuning
+//! (`scheduler::tune_graph_batch`). `--closed K` switches the cameras to
+//! the closed-loop client model with a window of K outstanding frames.
 
 use gemmini_edge::coordinator::{deploy, DeployOptions};
 use gemmini_edge::dataset::detector::{build_detector, default_weights};
@@ -111,10 +120,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
         Some("fleet") => {
             use gemmini_edge::baselines::xavier;
+            use gemmini_edge::fpga::resources::Board;
             use gemmini_edge::report::fleet_table;
+            use gemmini_edge::scheduler::tuner::tune_graph_batch;
             use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
             use gemmini_edge::serving::{
-                multi_camera_trace, simulate, BaselineDevice, BatchPolicy, ShardPool, SimConfig,
+                multi_camera_trace, simulate, simulate_autoscaled, simulate_closed_loop,
+                simulate_closed_loop_autoscaled, AutoscaleConfig, Autoscaler, Backend,
+                BaselineDevice, BatchPolicy, ClosedLoopConfig, GemminiDevice, ShardPool,
+                SimConfig, SloTracking, TargetUtilization,
             };
             let cameras: usize =
                 arg_val(&args, "--cameras").and_then(|v| v.parse().ok()).unwrap_or(24);
@@ -125,28 +139,120 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 arg_val(&args, "--wait").and_then(|v| v.parse().ok()).unwrap_or(15.0);
             let seconds: f64 =
                 arg_val(&args, "--seconds").and_then(|v| v.parse().ok()).unwrap_or(10.0);
+            let autoscale = args.iter().any(|a| a == "--autoscale");
+            let policy = arg_val(&args, "--policy").unwrap_or_else(|| "util".into());
+            let max_devices: usize =
+                arg_val(&args, "--max-devices").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let epoch_s: f64 = arg_val(&args, "--epoch")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0.5)
+                .max(0.05);
+            let delay_s: f64 = arg_val(&args, "--delay")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1.0)
+                .max(0.0);
+            let closed: Option<usize> = arg_val(&args, "--closed").and_then(|v| v.parse().ok());
 
-            // Tune the detector once per distinct architecture.
+            // Tune the detector once per distinct architecture; with
+            // batching, tune once more *for* the serving batch size so
+            // autoscaled replicas carry measured batch latencies.
             let mut g = build_detector(96, &default_weights());
             gemmini_edge::passes::replace_activations(&mut g);
             let cfg102 = GemminiConfig::ours_zcu102();
             let tuning = tune_graph(&cfg102, &g, 2);
+            // Only the autoscale replica factory consumes the batched
+            // tuning; skip the second schedule search otherwise.
+            let batch_tuning = if autoscale && batch >= 2 {
+                Some(tune_graph_batch(&cfg102, &g, 2, batch))
+            } else {
+                None
+            };
 
             let mut pool = ShardPool::paper_boards(&tuning, DEFAULT_DISPATCH_S);
             pool.register(Box::new(BaselineDevice::new(xavier(), g.gops(), 8)));
 
-            let scene = SceneConfig { size: 96, ..Default::default() };
-            let trace = multi_camera_trace(&scene, cameras, fps, seconds, 20240710);
             let cfg = SimConfig {
                 batch: BatchPolicy::new(batch, wait_ms * 1e-3),
                 ..Default::default()
             };
+            let mode = if let Some(k) = closed {
+                format!("closed-loop (window {k})")
+            } else {
+                "open-loop".into()
+            };
             println!(
-                "fleet: {} devices | {cameras} cameras × {fps:.0} FPS × {seconds:.0} s = {} frames | batch≤{batch}, wait≤{wait_ms:.0} ms",
+                "fleet: {} devices | {cameras} cameras × {fps:.0} FPS × {seconds:.0} s ({mode}) | batch≤{batch}, wait≤{wait_ms:.0} ms | autoscale: {}",
                 pool.len(),
-                trace.len()
+                if autoscale { policy.as_str() } else { "off" }
             );
-            let r = simulate(&mut pool, &trace, &cfg);
+
+            // The open-loop trace is only needed when not closed-loop.
+            let trace = if closed.is_none() {
+                let scene = SceneConfig { size: 96, ..Default::default() };
+                multi_camera_trace(&scene, cameras, fps, seconds, 20240710)
+            } else {
+                Vec::new()
+            };
+            let clients = ClosedLoopConfig {
+                cameras,
+                max_outstanding: closed.unwrap_or(2).max(1),
+                period_s: 1.0 / fps,
+                think_s: 0.005,
+                horizon_s: seconds,
+                seed: 20240710,
+            };
+
+            let r = if autoscale {
+                let acfg = AutoscaleConfig {
+                    epoch_s,
+                    provision_delay_s: delay_s,
+                    min_devices: pool.len(),
+                    max_devices: max_devices.max(pool.len()),
+                    cooldown_epochs: 1,
+                };
+                let mut auto = if policy == "slo" {
+                    Autoscaler::new(acfg, Box::new(SloTracking::new(cfg.slo_s)))
+                } else {
+                    Autoscaler::new(acfg, Box::new(TargetUtilization::default()))
+                };
+                let mut factory = |i: usize| -> Box<dyn Backend> {
+                    let label = format!("ZCU102-Gemmini (replica {i})");
+                    Box::new(match &batch_tuning {
+                        Some(tb) => GemminiDevice::from_batch_tuning(
+                            &label,
+                            Board::Zcu102,
+                            GemminiConfig::ours_zcu102(),
+                            &tuning,
+                            tb,
+                            batch,
+                            DEFAULT_DISPATCH_S,
+                        ),
+                        None => GemminiDevice::from_tuning(
+                            &label,
+                            Board::Zcu102,
+                            GemminiConfig::ours_zcu102(),
+                            &tuning,
+                            DEFAULT_DISPATCH_S,
+                        ),
+                    })
+                };
+                if closed.is_some() {
+                    simulate_closed_loop_autoscaled(
+                        &mut pool,
+                        &clients,
+                        &cfg,
+                        &mut auto,
+                        &mut factory,
+                    )
+                } else {
+                    simulate_autoscaled(&mut pool, &trace, &cfg, &mut auto, &mut factory)
+                }
+            } else if closed.is_some() {
+                simulate_closed_loop(&mut pool, &clients, &cfg)
+            } else {
+                simulate(&mut pool, &trace, &cfg)
+            };
+            println!("offered {} frames", r.offered);
             print!("{}", fleet_table(&r));
         }
         _ => {

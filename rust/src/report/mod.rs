@@ -94,15 +94,17 @@ pub fn table4(rows: &[EnergyReport]) -> String {
 }
 
 /// Render a fleet-serving run: per-device rows + fleet totals (the
-/// fleet-level analogue of Table IV; see `serving::metrics`).
+/// fleet-level analogue of Table IV; see `serving::metrics`), then the
+/// pool-size trajectory and any autoscaling events.
 pub fn fleet_table(r: &FleetReport) -> String {
     let mut s = String::from(
-        "| Device                    | Served | Batches | Mean batch | Busy | Power [W] | Stolen |\n",
+        "| Device                    | State    | Served | Batches | Mean batch | Busy | Power [W] | Stolen |\n",
     );
     for d in &r.devices {
         s += &format!(
-            "| {:<25} | {:>6} | {:>7} | {:>10.2} | {:>3.0}% | {:>9.1} | {:>6} |\n",
+            "| {:<25} | {:<8} | {:>6} | {:>7} | {:>10.2} | {:>3.0}% | {:>9.1} | {:>6} |\n",
             d.name,
+            d.state,
             d.completed,
             d.batches,
             d.mean_batch,
@@ -122,6 +124,16 @@ pub fn fleet_table(r: &FleetReport) -> String {
         r.slo_s * 1e3,
         r.slo_attainment() * 100.0
     );
+    s += &format!(
+        "devices: {} start | {} peak | {} final | {} scaling events\n",
+        r.devices_start,
+        r.devices_peak,
+        r.devices_final,
+        r.scaling.len()
+    );
+    for e in &r.scaling {
+        s += &format!("  [{:>8.3} s] {} -> {} serving\n", e.t_s, e.kind, e.serving_after);
+    }
     s
 }
 
@@ -189,8 +201,10 @@ mod tests {
 
     #[test]
     fn fleet_table_renders_devices_and_totals() {
+        use crate::serving::autoscale::{ScaleEventKind, ScalingEvent};
         use crate::serving::metrics::DeviceReport;
         let r = FleetReport {
+            offered: 1000,
             completed: 900,
             shed: 100,
             makespan_s: 10.0,
@@ -201,8 +215,17 @@ mod tests {
             max_s: 0.090,
             slo_s: 0.100,
             slo_violations: 0,
+            devices_start: 1,
+            devices_peak: 2,
+            devices_final: 2,
+            scaling: vec![ScalingEvent {
+                t_s: 2.5,
+                kind: ScaleEventKind::Provisioning { device: 1 },
+                serving_after: 1,
+            }],
             devices: vec![DeviceReport {
                 name: "ZCU102-ours".into(),
+                state: "active",
                 completed: 900,
                 batches: 150,
                 mean_batch: 6.0,
@@ -213,9 +236,12 @@ mod tests {
         };
         let s = fleet_table(&r);
         assert!(s.contains("ZCU102-ours"));
+        assert!(s.contains("| active"), "{s}");
         assert!(s.contains("90.0 FPS"), "{s}");
         assert!(s.contains("p99 70.0 ms"), "{s}");
         assert!(s.contains("attainment 90.0%"), "{s}");
+        assert!(s.contains("1 start | 2 peak | 2 final | 1 scaling events"), "{s}");
+        assert!(s.contains("provision device 1"), "{s}");
     }
 
     #[test]

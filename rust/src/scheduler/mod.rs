@@ -23,4 +23,4 @@ pub mod tuner;
 
 pub use codegen::{layer_geometry, lower_cisc, lower_risc, ConvGeom};
 pub use space::{LoopOrder, RiscSchedule};
-pub use tuner::{tune_graph, LayerTuning, TuningResult};
+pub use tuner::{tune_graph, tune_graph_batch, LayerTuning, TuningResult};

@@ -1,0 +1,384 @@
+//! Closed-loop autoscaling: grow/shrink the shard pool between DES epochs.
+//!
+//! The paper sizes one board for one camera; PR 1 made the fleet size a
+//! *static* knob. This module closes the loop: at every epoch boundary the
+//! simulator hands a [`ScalePolicy`] what it observed (utilization, epoch
+//! p99, sheds, backlog) and the policy answers grow/shrink/hold. Growing
+//! provisions a new device through a caller-supplied factory with a
+//! modeled warm-up delay (bitstream programming + runtime attach — a
+//! ZCU102 does not join a fleet instantly); shrinking drains the
+//! newest-provisioned active device (replicas retire before the seed
+//! boards) and retires it once its queue and in-flight batch are empty.
+//! Everything is deterministic: no wall clock, no randomness, so an
+//! autoscaled run is as reproducible as a fixed-pool run.
+
+use std::fmt;
+
+/// What a policy sees at one epoch boundary.
+#[derive(Debug, Clone)]
+pub struct EpochObservation {
+    /// Virtual time of the boundary, s.
+    pub now_s: f64,
+    /// Epoch length, s.
+    pub epoch_s: f64,
+    /// Devices currently serving *and* accepting new work.
+    pub active_devices: usize,
+    /// Devices serving their backlog but on the way out (their busy time
+    /// is in `utilization`, their capacity is not staying).
+    pub draining_devices: usize,
+    /// Devices still warming up (capacity already on the way).
+    pub provisioning_devices: usize,
+    /// Mean busy fraction of serving devices over the epoch, in `[0, 1]`
+    /// (service time credited at dispatch, so a batch spanning the
+    /// boundary counts toward the epoch that dispatched it).
+    pub utilization: f64,
+    /// Requests completed during the epoch.
+    pub completed: u64,
+    /// Requests shed during the epoch.
+    pub shed: u64,
+    /// p99 latency over the epoch's completions, s (0 when none).
+    pub p99_s: f64,
+    /// Requests queued across the pool at the boundary.
+    pub backlog: usize,
+}
+
+/// A policy's verdict for one epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Provision this many new devices.
+    Grow(usize),
+    /// Drain (then retire) this many active devices.
+    Shrink(usize),
+    Hold,
+}
+
+/// An autoscaling policy: observation in, action out. Implementations may
+/// keep state (e.g. consecutive-calm counters) but must stay
+/// deterministic.
+pub trait ScalePolicy {
+    fn name(&self) -> &'static str;
+    fn decide(&mut self, obs: &EpochObservation) -> ScaleAction;
+}
+
+/// Size the pool so mean busy fraction sits near `target`: grow when the
+/// epoch's demand (in device-equivalents) needs more devices than are
+/// active or already provisioning, shrink when it needs fewer than
+/// `target - band` would. Shedding means utilization understates true
+/// demand (a saturated device reads 1.0 no matter the overload), so any
+/// shed forces at least one grow.
+#[derive(Debug, Clone)]
+pub struct TargetUtilization {
+    pub target: f64,
+    pub band: f64,
+}
+
+impl Default for TargetUtilization {
+    fn default() -> Self {
+        Self { target: 0.60, band: 0.15 }
+    }
+}
+
+impl ScalePolicy for TargetUtilization {
+    fn name(&self) -> &'static str {
+        "target-utilization"
+    }
+
+    fn decide(&mut self, obs: &EpochObservation) -> ScaleAction {
+        // Same capacity base the Autoscaler clamp uses: active devices
+        // can legitimately be 0 while a replacement is provisioning.
+        let planned = obs.active_devices + obs.provisioning_devices;
+        // Device-equivalents of observed work, sized to the target.
+        // Utilization is normalized over *serving* devices (active +
+        // draining), so demand must be reconstructed over the same base —
+        // a saturated drainer's load needs replacing, not ignoring.
+        let serving = (obs.active_devices + obs.draining_devices).max(1);
+        let demand = obs.utilization * serving as f64;
+        let mut desired = (demand / self.target).ceil() as usize;
+        if obs.shed > 0 {
+            desired = desired.max(planned + 1);
+        }
+        if desired > planned {
+            ScaleAction::Grow(desired - planned)
+        } else if obs.provisioning_devices == 0
+            && obs.utilization < self.target - self.band
+            && desired < planned
+        {
+            // Shrink one device at a time: scale-in mistakes cost a
+            // provisioning delay to undo, so be conservative.
+            ScaleAction::Shrink(1)
+        } else {
+            ScaleAction::Hold
+        }
+    }
+}
+
+/// Track the latency objective directly: grow when the epoch p99 breaches
+/// the SLO (two devices at once when requests were shed — a shed frame is
+/// a hard breach), shrink only after `calm_epochs` consecutive epochs
+/// comfortably under it with low utilization.
+#[derive(Debug, Clone)]
+pub struct SloTracking {
+    /// The latency objective, s.
+    pub slo_s: f64,
+    /// "Comfortably under": p99 below `margin × slo`.
+    pub margin: f64,
+    /// Consecutive calm epochs required before a shrink.
+    pub calm_epochs: usize,
+    calm: usize,
+}
+
+impl SloTracking {
+    pub fn new(slo_s: f64) -> Self {
+        Self { slo_s, margin: 0.5, calm_epochs: 3, calm: 0 }
+    }
+}
+
+impl ScalePolicy for SloTracking {
+    fn name(&self) -> &'static str {
+        "slo-tracking"
+    }
+
+    fn decide(&mut self, obs: &EpochObservation) -> ScaleAction {
+        if obs.shed > 0 || obs.p99_s > self.slo_s {
+            self.calm = 0;
+            if obs.provisioning_devices > 0 {
+                // Capacity is already on the way; adding more before it
+                // lands overshoots.
+                return ScaleAction::Hold;
+            }
+            return ScaleAction::Grow(if obs.shed > 0 { 2 } else { 1 });
+        }
+        if obs.completed > 0 && obs.p99_s < self.margin * self.slo_s && obs.utilization < 0.5 {
+            self.calm += 1;
+            if self.calm >= self.calm_epochs {
+                self.calm = 0;
+                return ScaleAction::Shrink(1);
+            }
+        } else {
+            self.calm = 0;
+        }
+        ScaleAction::Hold
+    }
+}
+
+/// Fleet-level autoscaling knobs (policy-independent).
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Policy evaluation interval, virtual s.
+    pub epoch_s: f64,
+    /// Warm-up between a grow decision and the device serving, s.
+    pub provision_delay_s: f64,
+    /// Never drain below this many serving devices (treated as ≥ 1: the
+    /// fleet must always keep or be provisioning at least one device, or
+    /// late arrivals would have nowhere to go).
+    pub min_devices: usize,
+    /// Never provision beyond this many active + provisioning devices.
+    pub max_devices: usize,
+    /// Epochs to stay quiet after any action (damps oscillation).
+    pub cooldown_epochs: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            epoch_s: 1.0,
+            provision_delay_s: 2.0,
+            min_devices: 1,
+            max_devices: 8,
+            cooldown_epochs: 1,
+        }
+    }
+}
+
+/// A policy plus the clamps the simulator consults each epoch.
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    pub policy: Box<dyn ScalePolicy>,
+    cooldown: usize,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig, policy: Box<dyn ScalePolicy>) -> Self {
+        // A non-positive epoch would pin the DES clock at the first
+        // boundary (the driver clamps each time step to the next epoch).
+        assert!(cfg.epoch_s > 0.0, "epoch_s must be positive (got {})", cfg.epoch_s);
+        assert!(
+            cfg.provision_delay_s >= 0.0,
+            "provision_delay_s must be non-negative (got {})",
+            cfg.provision_delay_s
+        );
+        Self { cfg, policy, cooldown: 0 }
+    }
+
+    /// The policy's decision clamped to `[min_devices, max_devices]` and
+    /// gated by the cooldown.
+    pub fn decide(&mut self, obs: &EpochObservation) -> ScaleAction {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return ScaleAction::Hold;
+        }
+        let planned = obs.active_devices + obs.provisioning_devices;
+        let action = match self.policy.decide(obs) {
+            ScaleAction::Grow(n) => {
+                let n = n.min(self.cfg.max_devices.saturating_sub(planned));
+                if n == 0 {
+                    ScaleAction::Hold
+                } else {
+                    ScaleAction::Grow(n)
+                }
+            }
+            ScaleAction::Shrink(n) => {
+                let n = n.min(planned.saturating_sub(self.cfg.min_devices.max(1)));
+                if n == 0 {
+                    ScaleAction::Hold
+                } else {
+                    ScaleAction::Shrink(n)
+                }
+            }
+            ScaleAction::Hold => ScaleAction::Hold,
+        };
+        if action != ScaleAction::Hold {
+            self.cooldown = self.cfg.cooldown_epochs;
+        }
+        action
+    }
+}
+
+/// One scaling action, recorded into the [`super::metrics::FleetReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingEvent {
+    /// Virtual time of the event, s.
+    pub t_s: f64,
+    pub kind: ScaleEventKind,
+    /// Serving (active + draining) devices right after the event.
+    pub serving_after: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleEventKind {
+    /// A new device began its warm-up.
+    Provisioning { device: usize },
+    /// A provisioned device finished warm-up and joined the pool.
+    Activated { device: usize },
+    /// An active device stopped taking new work.
+    DrainStarted { device: usize },
+    /// A draining device went idle and left service.
+    Retired { device: usize },
+}
+
+impl fmt::Display for ScaleEventKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScaleEventKind::Provisioning { device } => write!(f, "provision device {device}"),
+            ScaleEventKind::Activated { device } => write!(f, "activate device {device}"),
+            ScaleEventKind::DrainStarted { device } => write!(f, "drain device {device}"),
+            ScaleEventKind::Retired { device } => write!(f, "retire device {device}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(
+        active: usize,
+        provisioning: usize,
+        util: f64,
+        shed: u64,
+        p99_s: f64,
+    ) -> EpochObservation {
+        EpochObservation {
+            now_s: 1.0,
+            epoch_s: 1.0,
+            active_devices: active,
+            draining_devices: 0,
+            provisioning_devices: provisioning,
+            utilization: util,
+            completed: 100,
+            shed,
+            p99_s,
+            backlog: 0,
+        }
+    }
+
+    #[test]
+    fn target_utilization_replaces_draining_capacity() {
+        let mut p = TargetUtilization::default();
+        // One saturated active device + one saturated drainer: demand is
+        // 2 device-equivalents, so the pool must grow toward 4, not 2.
+        let mut o = obs(1, 0, 1.0, 0, 0.01);
+        o.draining_devices = 1;
+        assert_eq!(p.decide(&o), ScaleAction::Grow(3));
+    }
+
+    #[test]
+    fn target_utilization_tracks_demand() {
+        let mut p = TargetUtilization::default();
+        // In band: hold.
+        assert_eq!(p.decide(&obs(2, 0, 0.55, 0, 0.01)), ScaleAction::Hold);
+        // Saturated: 2 devices at 1.0 need ceil(2/0.6)=4 → grow 2.
+        assert_eq!(p.decide(&obs(2, 0, 1.0, 0, 0.01)), ScaleAction::Grow(2));
+        // Shedding forces a grow even if utilization looks tame.
+        assert!(matches!(p.decide(&obs(2, 0, 0.6, 5, 0.01)), ScaleAction::Grow(_)));
+        // Idle: shrink one at a time.
+        assert_eq!(p.decide(&obs(4, 0, 0.10, 0, 0.01)), ScaleAction::Shrink(1));
+        // Capacity already provisioning: no double-grow at mild pressure.
+        assert_eq!(p.decide(&obs(2, 2, 0.70, 0, 0.01)), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn slo_tracking_breach_grows_and_calm_shrinks() {
+        let mut p = SloTracking::new(0.100);
+        assert_eq!(p.decide(&obs(2, 0, 0.8, 0, 0.150)), ScaleAction::Grow(1));
+        // Sheds are a hard breach: bigger step.
+        assert_eq!(p.decide(&obs(2, 0, 1.0, 9, 0.150)), ScaleAction::Grow(2));
+        // Breach with capacity on the way: hold.
+        assert_eq!(p.decide(&obs(2, 1, 1.0, 0, 0.150)), ScaleAction::Hold);
+        // Three consecutive calm epochs, then shrink.
+        assert_eq!(p.decide(&obs(3, 0, 0.2, 0, 0.020)), ScaleAction::Hold);
+        assert_eq!(p.decide(&obs(3, 0, 0.2, 0, 0.020)), ScaleAction::Hold);
+        assert_eq!(p.decide(&obs(3, 0, 0.2, 0, 0.020)), ScaleAction::Shrink(1));
+        // A breach resets the calm streak.
+        assert_eq!(p.decide(&obs(2, 0, 0.2, 0, 0.020)), ScaleAction::Hold);
+        assert_eq!(p.decide(&obs(2, 0, 0.9, 0, 0.200)), ScaleAction::Grow(1));
+        assert_eq!(p.decide(&obs(2, 0, 0.2, 0, 0.020)), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn autoscaler_clamps_and_cools_down() {
+        let cfg = AutoscaleConfig {
+            epoch_s: 1.0,
+            provision_delay_s: 1.0,
+            min_devices: 2,
+            max_devices: 4,
+            cooldown_epochs: 1,
+        };
+        let mut a = Autoscaler::new(cfg, Box::new(TargetUtilization::default()));
+        // Wants 4 devices (2 at util 1.0 → ceil(2/0.6)=4) but max is 4 → grow 2.
+        assert_eq!(a.decide(&obs(2, 0, 1.0, 0, 0.0)), ScaleAction::Grow(2));
+        // Cooldown epoch: hold regardless of pressure.
+        assert_eq!(a.decide(&obs(2, 2, 1.0, 50, 0.0)), ScaleAction::Hold);
+        // At max: a further grow clamps to hold.
+        assert_eq!(a.decide(&obs(4, 0, 1.0, 50, 0.0)), ScaleAction::Hold);
+        // Shrink clamps at min_devices.
+        let mut b = Autoscaler::new(
+            AutoscaleConfig { min_devices: 3, cooldown_epochs: 0, ..AutoscaleConfig::default() },
+            Box::new(TargetUtilization::default()),
+        );
+        assert_eq!(b.decide(&obs(3, 0, 0.05, 0, 0.0)), ScaleAction::Hold);
+        assert_eq!(b.decide(&obs(4, 0, 0.05, 0, 0.0)), ScaleAction::Shrink(1));
+    }
+
+    #[test]
+    fn event_kinds_render() {
+        let e = ScalingEvent {
+            t_s: 1.5,
+            kind: ScaleEventKind::Provisioning { device: 3 },
+            serving_after: 2,
+        };
+        assert_eq!(format!("{}", e.kind), "provision device 3");
+        assert_eq!(format!("{}", ScaleEventKind::Retired { device: 1 }), "retire device 1");
+        assert!((e.t_s - 1.5).abs() < 1e-15);
+    }
+}

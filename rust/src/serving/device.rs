@@ -93,6 +93,47 @@ impl GemminiDevice {
             batch_cap,
         }
     }
+
+    /// Build a device whose batch-latency decomposition is *measured* by
+    /// batch-aware tuning instead of analytically split: `single` is the
+    /// graph tuned at batch 1 ([`crate::scheduler::tune_graph`]) and
+    /// `batched` the same graph tuned for `batch` frames per invocation
+    /// ([`crate::scheduler::tune_graph_batch`]). The marginal per-frame
+    /// cost is the measured slope between the two operating points (on
+    /// schedules searched for the batched GEMM shapes), and the per-batch
+    /// intercept is whatever those schedules could *not* amortize — so
+    /// the serving model inherits the cycle model's view of batching
+    /// rather than assuming the weight stream is the only shared cost.
+    pub fn from_batch_tuning(
+        label: &str,
+        board: Board,
+        config: GemminiConfig,
+        single: &TuningResult,
+        batched: &TuningResult,
+        batch: usize,
+        dispatch_s: f64,
+    ) -> Self {
+        assert!(batch >= 2, "batch-aware tuning needs batch >= 2 (got {batch})");
+        let t1 = single.latency_s(&config, true);
+        let tb = batched.latency_s(&config, true);
+        // Slope/intercept of the measured (1, t1) → (batch, tb) line,
+        // floored so the model stays strictly monotone in batch size.
+        let per_frame_s = ((tb - t1) / (batch as f64 - 1.0)).max(0.01 * t1).min(t1);
+        let weights_s = (t1 - per_frame_s).max(0.0);
+        let compute_util = batched.utilization(&config, true);
+        // A device tuned for `batch` must admit at least that batch.
+        let batch_cap = (config.accumulator_kib / 16).clamp(1, 64).max(batch);
+        Self {
+            label: label.to_string(),
+            board,
+            config,
+            dispatch_s,
+            weights_s,
+            per_frame_s,
+            compute_util,
+            batch_cap,
+        }
+    }
 }
 
 impl Backend for GemminiDevice {
@@ -197,6 +238,52 @@ mod tests {
         // bandwidth.
         assert!(d.weights_s > 0.0 && d.weights_s < frame_s);
         assert!(d.per_frame_s > 0.0);
+    }
+
+    #[test]
+    fn batch_tuned_device_reproduces_measured_operating_points() {
+        let cfg = GemminiConfig::ours_zcu102();
+        let mut g = yolov7_tiny(160, ModelVariant::Pruned88, 8);
+        crate::passes::replace_activations(&mut g);
+        let t1 = tune_graph(&cfg, &g, 1);
+        let batch = 4;
+        let tb = crate::scheduler::tuner::tune_graph_batch(&cfg, &g, 1, batch);
+        let d = GemminiDevice::from_batch_tuning(
+            "zcu102-b4",
+            Board::Zcu102,
+            cfg.clone(),
+            &t1,
+            &tb,
+            batch,
+            DEFAULT_DISPATCH_S,
+        );
+        // The linear model passes through the measured batch point
+        // (exactly, unless the monotonicity floor kicked in).
+        let at_batch = d.batch_latency_s(batch) - d.dispatch_s;
+        let measured = tb.latency_s(&cfg, true);
+        assert!(
+            (at_batch - measured).abs() <= 0.05 * measured,
+            "batched point {at_batch} drifted from measured {measured}"
+        );
+        // Still monotone and sub-linear, and it can hold its own batch.
+        assert!(d.per_frame_s > 0.0 && d.weights_s >= 0.0);
+        assert!(d.batch_latency_s(batch) < batch as f64 * d.batch_latency_s(1));
+        assert!(d.max_batch() >= batch);
+        // Anchored to the same single-frame point as the analytic split:
+        // intercept + slope reconstructs t1 at batch 1 (up to the floor).
+        let analytic = GemminiDevice::from_tuning(
+            "zcu102-analytic",
+            Board::Zcu102,
+            cfg,
+            &t1,
+            DEFAULT_DISPATCH_S,
+        );
+        let b1_tuned = d.batch_latency_s(1);
+        let b1_analytic = analytic.batch_latency_s(1);
+        assert!(
+            (b1_tuned - b1_analytic).abs() <= 0.06 * b1_analytic,
+            "batch-1 anchors diverge: {b1_tuned} vs {b1_analytic}"
+        );
     }
 
     #[test]

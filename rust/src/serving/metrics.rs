@@ -10,6 +10,7 @@
 //! [`super::device::Backend::power_w`] rather than duplicating the
 //! formula.
 
+use super::autoscale::ScalingEvent;
 use super::device::Backend;
 
 /// Streaming latency histogram with log-spaced bins.
@@ -103,6 +104,8 @@ impl Default for LatencyHistogram {
 #[derive(Debug, Clone)]
 pub struct DeviceReport {
     pub name: String,
+    /// Lifecycle state at the end of the run ("active" for fixed pools).
+    pub state: &'static str,
     pub completed: u64,
     pub batches: u64,
     /// Mean closed-batch size.
@@ -118,6 +121,9 @@ pub struct DeviceReport {
 /// Fleet-level summary of one simulated run.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
+    /// Requests offered to the front door (every one either completes or
+    /// is shed — the conservation law the property tests pin down).
+    pub offered: u64,
     pub completed: u64,
     pub shed: u64,
     /// Time from first arrival to last completion, s.
@@ -131,6 +137,16 @@ pub struct FleetReport {
     pub slo_s: f64,
     /// Completed requests whose end-to-end latency exceeded the SLO.
     pub slo_violations: u64,
+    /// Serving devices at the start of the run.
+    pub devices_start: usize,
+    /// Peak concurrently-*active* devices over the run (draining
+    /// remnants excluded, so the autoscaler's max-devices clamp bounds
+    /// this exactly).
+    pub devices_peak: usize,
+    /// Serving devices at the end of the run.
+    pub devices_final: usize,
+    /// Autoscaler actions in time order (empty for fixed pools).
+    pub scaling: Vec<ScalingEvent>,
     pub devices: Vec<DeviceReport>,
 }
 
@@ -164,6 +180,18 @@ pub(super) struct DeviceStats {
     pub stolen: u64,
 }
 
+/// Snapshot of one autoscaling epoch (what [`FleetMetrics::take_epoch`]
+/// returns and resets).
+#[derive(Debug, Clone, Copy)]
+pub struct EpochStats {
+    pub completed: u64,
+    pub shed: u64,
+    /// p99 of the epoch's completions, s (0 when none completed).
+    pub p99_s: f64,
+    /// Service time dispatched during the epoch, device-seconds.
+    pub busy_s: f64,
+}
+
 #[derive(Debug)]
 pub struct FleetMetrics {
     pub(super) hist: LatencyHistogram,
@@ -171,6 +199,10 @@ pub struct FleetMetrics {
     pub(super) slo_s: f64,
     pub(super) slo_violations: u64,
     pub(super) per_device: Vec<DeviceStats>,
+    /// Rolling per-epoch window the autoscaler observes.
+    epoch_hist: LatencyHistogram,
+    epoch_shed: u64,
+    epoch_busy_s: f64,
 }
 
 impl FleetMetrics {
@@ -183,12 +215,21 @@ impl FleetMetrics {
             per_device: (0..n_devices)
                 .map(|_| DeviceStats { busy_s: 0.0, completed: 0, batches: 0, stolen: 0 })
                 .collect(),
+            epoch_hist: LatencyHistogram::new(),
+            epoch_shed: 0,
+            epoch_busy_s: 0.0,
         }
+    }
+
+    /// Start tracking one more device (autoscaler provisioning).
+    pub fn add_device(&mut self) {
+        self.per_device.push(DeviceStats { busy_s: 0.0, completed: 0, batches: 0, stolen: 0 });
     }
 
     /// Record one completed request on `device`.
     pub fn record_completion(&mut self, device: usize, latency_s: f64) {
         self.hist.record(latency_s);
+        self.epoch_hist.record(latency_s);
         if latency_s > self.slo_s {
             self.slo_violations += 1;
         }
@@ -199,17 +240,36 @@ impl FleetMetrics {
     pub fn record_batch(&mut self, device: usize, service_s: f64) {
         self.per_device[device].batches += 1;
         self.per_device[device].busy_s += service_s;
+        self.epoch_busy_s += service_s;
     }
 
     pub fn record_shed(&mut self) {
         self.shed += 1;
+        self.epoch_shed += 1;
     }
 
     pub fn record_steal(&mut self, device: usize, n: usize) {
         self.per_device[device].stolen += n as u64;
     }
 
-    /// Finalize against the devices that produced the stats.
+    /// Snapshot the current epoch window and reset it (called at every
+    /// autoscaling epoch boundary).
+    pub fn take_epoch(&mut self) -> EpochStats {
+        let stats = EpochStats {
+            completed: self.epoch_hist.count(),
+            shed: self.epoch_shed,
+            p99_s: self.epoch_hist.quantile(0.99),
+            busy_s: self.epoch_busy_s,
+        };
+        self.epoch_hist = LatencyHistogram::new();
+        self.epoch_shed = 0;
+        self.epoch_busy_s = 0.0;
+        stats
+    }
+
+    /// Finalize against the devices that produced the stats. Fleet-sizing
+    /// fields default to a fixed pool (`backends.len()` throughout, no
+    /// scaling events); the autoscaled driver overwrites them.
     pub fn report(&self, backends: &[&dyn Backend], makespan_s: f64) -> FleetReport {
         let devices = self
             .per_device
@@ -223,6 +283,7 @@ impl FleetMetrics {
                 };
                 DeviceReport {
                     name: b.name().to_string(),
+                    state: "active",
                     completed: s.completed,
                     batches: s.batches,
                     mean_batch: if s.batches == 0 {
@@ -237,6 +298,7 @@ impl FleetMetrics {
             })
             .collect();
         FleetReport {
+            offered: self.hist.count() + self.shed,
             completed: self.hist.count(),
             shed: self.shed,
             makespan_s,
@@ -247,6 +309,10 @@ impl FleetMetrics {
             max_s: self.hist.max_s(),
             slo_s: self.slo_s,
             slo_violations: self.slo_violations,
+            devices_start: backends.len(),
+            devices_peak: backends.len(),
+            devices_final: backends.len(),
+            scaling: Vec::new(),
             devices,
         }
     }
@@ -319,5 +385,47 @@ mod tests {
         m.record_completion(0, 0.015);
         m.record_completion(0, 0.020);
         assert_eq!(m.slo_violations, 2);
+    }
+
+    #[test]
+    fn epoch_window_snapshots_and_resets() {
+        let mut m = FleetMetrics::new(1, 0.100);
+        m.record_completion(0, 0.010);
+        m.record_completion(0, 0.030);
+        m.record_shed();
+        m.record_batch(0, 0.040);
+        let e = m.take_epoch();
+        assert_eq!(e.completed, 2);
+        assert_eq!(e.shed, 1);
+        assert!((e.busy_s - 0.040).abs() < 1e-15);
+        assert!(e.p99_s > 0.0);
+        // Window is empty again; cumulative totals are untouched.
+        let e2 = m.take_epoch();
+        assert_eq!(e2.completed, 0);
+        assert_eq!(e2.shed, 0);
+        assert_eq!(e2.busy_s, 0.0);
+        assert_eq!(m.hist.count(), 2);
+        assert_eq!(m.shed, 1);
+    }
+
+    #[test]
+    fn add_device_extends_per_device_stats() {
+        let mut m = FleetMetrics::new(1, 0.1);
+        m.add_device();
+        m.record_completion(1, 0.005);
+        m.record_batch(1, 0.005);
+        let p = crate::baselines::Platform {
+            name: "a",
+            overhead_s: 1e-3,
+            sustained_gops: 10.0,
+            power_w: 1.0,
+        };
+        let d0 = crate::serving::device::BaselineDevice::new(p.clone(), 0.1, 4);
+        let d1 = crate::serving::device::BaselineDevice::new(p, 0.1, 4);
+        let backends: Vec<&dyn Backend> = vec![&d0, &d1];
+        let r = m.report(&backends, 1.0);
+        assert_eq!(r.devices.len(), 2);
+        assert_eq!(r.devices[1].completed, 1);
+        assert_eq!(r.offered, r.completed + r.shed);
     }
 }

@@ -13,18 +13,26 @@
 //! Module map (see `rust/src/serving/README.md` for the fleet model):
 //!
 //! - [`device`] — the [`Backend`] trait + Gemmini/baseline impls; batch
-//!   service times derived from the existing cycle model;
+//!   service times derived from the existing cycle model, or measured by
+//!   batch-aware schedule tuning
+//!   ([`GemminiDevice::from_batch_tuning`]);
 //! - [`batcher`] — max-batch/max-wait dynamic batching policy;
-//! - [`shard`] — the device pool: least-outstanding-work routing and
-//!   work stealing;
+//! - [`shard`] — the device pool: least-outstanding-work routing, work
+//!   stealing, and the provision → serve → drain → retire
+//!   [`shard::Lifecycle`];
 //! - [`admission`] — bounded per-device queues with shed policies
 //!   (generalizing [`crate::pipeline::Topic`]'s overflow handling);
+//! - [`autoscale`] — closed-loop pool sizing between DES epochs
+//!   (target-utilization and p99-SLO-tracking policies, modeled
+//!   provisioning delay);
 //! - [`metrics`] — streaming p50/p95/p99, throughput, utilization, SLO
-//!   violation counters;
-//! - [`sim`] — the discrete-event driver + arrival-trace generators
-//!   (open-loop Poisson, bursty multi-camera).
+//!   violation counters, per-epoch windows, scaling events;
+//! - [`sim`] — the discrete-event driver + arrival models (open-loop
+//!   Poisson / bursty multi-camera traces, closed-loop window-limited
+//!   clients), with fixed-pool and autoscaled entry points.
 
 pub mod admission;
+pub mod autoscale;
 pub mod batcher;
 pub mod device;
 pub mod metrics;
@@ -32,11 +40,18 @@ pub mod shard;
 pub mod sim;
 
 pub use admission::ShedPolicy;
+pub use autoscale::{
+    AutoscaleConfig, Autoscaler, ScaleAction, ScaleEventKind, ScalePolicy, ScalingEvent,
+    SloTracking, TargetUtilization,
+};
 pub use batcher::BatchPolicy;
 pub use device::{Backend, BaselineDevice, GemminiDevice};
 pub use metrics::{FleetReport, LatencyHistogram};
-pub use shard::ShardPool;
-pub use sim::{multi_camera_trace, poisson_trace, simulate, SimConfig};
+pub use shard::{Lifecycle, ShardPool};
+pub use sim::{
+    multi_camera_trace, poisson_trace, simulate, simulate_autoscaled, simulate_closed_loop,
+    simulate_closed_loop_autoscaled, ClosedLoopConfig, SimConfig,
+};
 
 /// One inference request: a camera frame arriving at the fleet front door.
 #[derive(Debug, Clone, PartialEq)]

@@ -1,5 +1,6 @@
 //! The shard pool: N heterogeneous devices, least-outstanding-work
-//! routing, and work stealing.
+//! routing, work stealing, and the device lifecycle the autoscaler
+//! drives.
 //!
 //! Routing estimates each device's time-to-drain (remaining service of
 //! the in-flight batch plus the estimated service of its queue with the
@@ -8,6 +9,11 @@
 //! board, without static weights. When a device goes idle with an empty
 //! queue, it steals the newer half of the most-backlogged sibling's
 //! queue (FIFO order is preserved for the victim's older requests).
+//!
+//! Devices move through a [`Lifecycle`]: `Provisioning` (warming up,
+//! invisible to routing) → `Active` (serving + accepting) → `Draining`
+//! (serving its backlog, accepting nothing) → `Retired` (kept in the vec
+//! so device indices and per-device metrics stay stable across scaling).
 
 use std::collections::VecDeque;
 
@@ -17,6 +23,42 @@ use crate::scheduler::TuningResult;
 
 use super::device::{Backend, GemminiDevice};
 use super::Request;
+
+/// Where a device sits in the provision → serve → drain → retire arc.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Lifecycle {
+    /// Serving and accepting new work.
+    Active,
+    /// Warming up (bitstream programming + runtime attach); joins the
+    /// pool at `ready_at`.
+    Provisioning { ready_at: f64 },
+    /// Serving its backlog but accepting no new work.
+    Draining,
+    /// Drained and out of service (kept for stable indices/reports).
+    Retired,
+}
+
+impl Lifecycle {
+    /// Whether the device currently executes batches.
+    pub fn serves(self) -> bool {
+        matches!(self, Lifecycle::Active | Lifecycle::Draining)
+    }
+
+    /// Whether new requests may be routed or stolen into the device.
+    pub fn accepts_new(self) -> bool {
+        matches!(self, Lifecycle::Active)
+    }
+
+    /// Short state label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Lifecycle::Active => "active",
+            Lifecycle::Provisioning { .. } => "warming",
+            Lifecycle::Draining => "draining",
+            Lifecycle::Retired => "retired",
+        }
+    }
+}
 
 /// One registered device plus its serving state.
 pub struct DeviceState {
@@ -29,11 +71,20 @@ pub struct DeviceState {
     pub free_at: f64,
     /// The in-flight batch's requests (latencies recorded at completion).
     pub in_flight: Vec<Request>,
+    /// Autoscaling lifecycle state (always `Active` in fixed pools).
+    pub lifecycle: Lifecycle,
 }
 
 impl DeviceState {
     fn new(backend: Box<dyn Backend>) -> Self {
-        Self { backend, queue: VecDeque::new(), busy: false, free_at: 0.0, in_flight: Vec::new() }
+        Self {
+            backend,
+            queue: VecDeque::new(),
+            busy: false,
+            free_at: 0.0,
+            in_flight: Vec::new(),
+            lifecycle: Lifecycle::Active,
+        }
     }
 
     /// Estimated seconds until this device could finish one more request
@@ -55,9 +106,18 @@ impl ShardPool {
         Self { devices: Vec::new() }
     }
 
-    /// Register a device; returns its index.
+    /// Register an active device; returns its index.
     pub fn register(&mut self, backend: Box<dyn Backend>) -> usize {
         self.devices.push(DeviceState::new(backend));
+        self.devices.len() - 1
+    }
+
+    /// Register a device that is still warming up; it starts serving at
+    /// `ready_at` (the autoscaler's provisioning path). Returns its index.
+    pub fn register_provisioning(&mut self, backend: Box<dyn Backend>, ready_at: f64) -> usize {
+        let mut d = DeviceState::new(backend);
+        d.lifecycle = Lifecycle::Provisioning { ready_at };
+        self.devices.push(d);
         self.devices.len() - 1
     }
 
@@ -93,20 +153,60 @@ impl ShardPool {
         self.devices.is_empty()
     }
 
-    /// Least-outstanding-work routing: the device that would finish the
-    /// new request soonest. Ties break to the lowest index
-    /// (deterministic).
+    /// Devices currently accepting new work.
+    pub fn active_count(&self) -> usize {
+        self.devices.iter().filter(|d| d.lifecycle.accepts_new()).count()
+    }
+
+    /// Devices currently executing batches (active + draining).
+    pub fn serving_count(&self) -> usize {
+        self.devices.iter().filter(|d| d.lifecycle.serves()).count()
+    }
+
+    /// Devices still warming up.
+    pub fn provisioning_count(&self) -> usize {
+        self.devices
+            .iter()
+            .filter(|d| matches!(d.lifecycle, Lifecycle::Provisioning { .. }))
+            .count()
+    }
+
+    /// Total queued (not yet dispatched) requests across the pool.
+    pub fn backlog(&self) -> usize {
+        self.devices.iter().map(|d| d.queue.len()).sum()
+    }
+
+    /// Least-outstanding-work routing over devices accepting new work:
+    /// the device that would finish the new request soonest. Ties break
+    /// to the lowest index (deterministic). If scale-in transiently left
+    /// none active, fall back to a still-serving (draining) device, then
+    /// to one that is warming up — it will serve once it activates, so a
+    /// request parked there is never stranded (the autoscaler's
+    /// min-devices clamp guarantees active + provisioning ≥ 1).
     pub fn route(&self, now: f64) -> usize {
-        let mut best = 0;
+        let mut best = None;
         let mut best_s = f64::INFINITY;
         for (i, d) in self.devices.iter().enumerate() {
+            if !d.lifecycle.accepts_new() {
+                continue;
+            }
             let est = d.outstanding_s(now);
             if est < best_s {
                 best_s = est;
-                best = i;
+                best = Some(i);
             }
         }
-        best
+        best.unwrap_or_else(|| {
+            self.devices
+                .iter()
+                .position(|d| d.lifecycle.serves())
+                .or_else(|| {
+                    self.devices
+                        .iter()
+                        .position(|d| matches!(d.lifecycle, Lifecycle::Provisioning { .. }))
+                })
+                .unwrap_or(0)
+        })
     }
 
     /// Steal the newer half of the most-backlogged sibling's queue into
@@ -195,5 +295,42 @@ mod tests {
         p.devices[0].queue.push_back(req(0, 0.0));
         assert_eq!(p.steal_into(1), 0);
         assert_eq!(p.devices[0].queue.len(), 1);
+    }
+
+    #[test]
+    fn routing_skips_non_active_devices() {
+        let mut p = pool2();
+        // Fast device warming up: everything routes to the slow one.
+        p.devices[0].lifecycle = Lifecycle::Provisioning { ready_at: 5.0 };
+        assert_eq!(p.route(0.0), 1);
+        // Draining devices take no new work either.
+        p.devices[0].lifecycle = Lifecycle::Draining;
+        assert_eq!(p.route(0.0), 1);
+        // With nothing active, fall back to a still-serving device.
+        p.devices[1].lifecycle = Lifecycle::Retired;
+        assert_eq!(p.route(0.0), 0);
+    }
+
+    #[test]
+    fn lifecycle_predicates() {
+        assert!(Lifecycle::Active.serves() && Lifecycle::Active.accepts_new());
+        assert!(Lifecycle::Draining.serves() && !Lifecycle::Draining.accepts_new());
+        let warming = Lifecycle::Provisioning { ready_at: 1.0 };
+        assert!(!warming.serves() && !warming.accepts_new());
+        assert!(!Lifecycle::Retired.serves());
+        assert_eq!(warming.label(), "warming");
+    }
+
+    #[test]
+    fn provisioning_registration_is_invisible_until_activated() {
+        let mut p = pool2();
+        let idx = p.register_provisioning(Box::new(BaselineDevice::new(xavier(), 0.5, 8)), 2.0);
+        assert_eq!(idx, 2);
+        assert_eq!(p.active_count(), 2);
+        assert_eq!(p.serving_count(), 2);
+        assert_eq!(p.provisioning_count(), 1);
+        p.devices[idx].lifecycle = Lifecycle::Active;
+        assert_eq!(p.active_count(), 3);
+        assert_eq!(p.provisioning_count(), 0);
     }
 }

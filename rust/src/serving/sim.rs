@@ -1,20 +1,33 @@
-//! Deterministic discrete-event fleet simulator + arrival traces.
+//! Deterministic discrete-event fleet simulator + arrival models.
 //!
-//! Open-loop: requests arrive on a pre-generated trace regardless of the
-//! fleet's state (cameras don't wait), which is what exposes tail
-//! latency and shedding. The driver advances time event-to-event —
-//! arrivals, batch completions, batch-wait deadlines — so results are
-//! exact for the service model and bit-reproducible for a seed
-//! ([`crate::util::rng::Rng`] everywhere, no wall clock).
+//! Two client models feed the same driver:
+//!
+//! - **Open-loop** traces ([`poisson_trace`], [`multi_camera_trace`]):
+//!   requests arrive on a pre-generated schedule regardless of fleet
+//!   state (cameras don't wait), which is what exposes tail latency and
+//!   shedding.
+//! - **Closed-loop** clients ([`ClosedLoopConfig`]): each camera holds at
+//!   most K frames in flight and emits its next frame a think-time after
+//!   a completion hands the window token back — the arrival rate adapts
+//!   to fleet capacity, which is what exposes end-to-end goodput.
+//!
+//! The driver advances time event-to-event — arrivals, batch
+//! completions, batch-wait deadlines, provisioning warm-ups, autoscaler
+//! epochs — so results are exact for the service model and
+//! bit-reproducible for a seed ([`crate::util::rng::Rng`] everywhere, no
+//! wall clock). With an [`Autoscaler`] attached ([`simulate_autoscaled`]),
+//! the pool grows and shrinks between epochs through the device
+//! [`Lifecycle`](super::shard::Lifecycle).
 
 use crate::dataset::scenes::SceneConfig;
 use crate::util::Rng;
 
 use super::admission::{admit, Admission, ShedPolicy};
+use super::autoscale::{Autoscaler, EpochObservation, ScaleAction, ScaleEventKind, ScalingEvent};
 use super::batcher::{BatchPolicy, Decision};
 use super::device::Backend;
-use super::metrics::{FleetMetrics, FleetReport};
-use super::shard::ShardPool;
+use super::metrics::{EpochStats, FleetMetrics, FleetReport};
+use super::shard::{Lifecycle, ShardPool};
 use super::Request;
 
 /// Fleet-wide serving configuration for one simulated run.
@@ -38,6 +51,40 @@ impl Default for SimConfig {
             shed: ShedPolicy::DropOldest,
             slo_s: 0.100,
             work_stealing: true,
+        }
+    }
+}
+
+/// Closed-loop client model: `cameras` streams that each keep at most
+/// `max_outstanding` frames in flight. While the window has room a camera
+/// free-runs at its frame period (±10% jitter); at the limit it stalls
+/// until a completion (or shed) returns the token, then waits `think_s`
+/// (±10%) before the next frame. New frames stop at `horizon_s`; the
+/// simulation then drains.
+#[derive(Debug, Clone)]
+pub struct ClosedLoopConfig {
+    pub cameras: usize,
+    /// The per-camera window K (≥ 1).
+    pub max_outstanding: usize,
+    /// Nominal inter-frame period while the window has room, s.
+    pub period_s: f64,
+    /// Pause between a completion and the next frame when the camera was
+    /// stalled at the window limit, s.
+    pub think_s: f64,
+    /// Stop emitting new frames at this virtual time, s.
+    pub horizon_s: f64,
+    pub seed: u64,
+}
+
+impl Default for ClosedLoopConfig {
+    fn default() -> Self {
+        Self {
+            cameras: 8,
+            max_outstanding: 2,
+            period_s: 1.0 / 30.0,
+            think_s: 0.005,
+            horizon_s: 10.0,
+            seed: 0,
         }
     }
 }
@@ -103,27 +150,157 @@ pub fn multi_camera_trace(
     out
 }
 
-/// Complete any batch finished by `now`, then let idle devices steal and
-/// dispatch until nothing changes.
-fn settle(pool: &mut ShardPool, now: f64, cfg: &SimConfig, metrics: &mut FleetMetrics) {
+/// One camera's closed-loop window state.
+#[derive(Debug, Clone)]
+struct CamState {
+    outstanding: usize,
+    /// Next emission time; `None` while stalled at the window limit or
+    /// past the horizon.
+    next_at: Option<f64>,
+}
+
+/// The driver's pluggable arrival source.
+enum Arrivals<'a> {
+    Open { trace: &'a [Request], next: usize },
+    Closed { cl: ClosedLoopConfig, cams: Vec<CamState>, rng: Rng, next_id: u64 },
+}
+
+impl Arrivals<'_> {
+    fn closed(cl: ClosedLoopConfig) -> Arrivals<'static> {
+        assert!(cl.cameras > 0 && cl.max_outstanding > 0 && cl.period_s > 0.0);
+        let mut rng = Rng::new(cl.seed);
+        let cams = (0..cl.cameras)
+            .map(|_| {
+                // Phase offsets past a (very short) horizon emit nothing.
+                let t0 = rng.f64() * cl.period_s;
+                CamState { outstanding: 0, next_at: (t0 < cl.horizon_s).then_some(t0) }
+            })
+            .collect();
+        Arrivals::Closed { cl, cams, rng, next_id: 0 }
+    }
+
+    /// Earliest pending emission time, if any.
+    fn peek(&self) -> Option<f64> {
+        match self {
+            Arrivals::Open { trace, next } => trace.get(*next).map(|r| r.arrival_s),
+            Arrivals::Closed { cams, .. } => cams
+                .iter()
+                .filter_map(|c| c.next_at)
+                .min_by(|a, b| a.partial_cmp(b).unwrap()),
+        }
+    }
+
+    /// The next request due at or before `now` (in emission order; closed
+    /// loop breaks time ties to the lowest camera index).
+    fn pop_due(&mut self, now: f64) -> Option<Request> {
+        match self {
+            Arrivals::Open { trace, next } => {
+                if *next < trace.len() && trace[*next].arrival_s <= now {
+                    let r = trace[*next].clone();
+                    *next += 1;
+                    Some(r)
+                } else {
+                    None
+                }
+            }
+            Arrivals::Closed { cl, cams, rng, next_id } => {
+                let mut best: Option<(usize, f64)> = None;
+                for (i, c) in cams.iter().enumerate() {
+                    if let Some(t) = c.next_at {
+                        let earlier = match best {
+                            None => true,
+                            Some((_, bt)) => t < bt,
+                        };
+                        if t <= now && earlier {
+                            best = Some((i, t));
+                        }
+                    }
+                }
+                let (i, t) = best?;
+                let cam = &mut cams[i];
+                cam.outstanding += 1;
+                cam.next_at = if cam.outstanding < cl.max_outstanding {
+                    let tn = t + cl.period_s * rng.range_f64(0.9, 1.1);
+                    if tn < cl.horizon_s {
+                        Some(tn)
+                    } else {
+                        None
+                    }
+                } else {
+                    None
+                };
+                let id = *next_id;
+                *next_id += 1;
+                Some(Request { id, camera: i, arrival_s: t, objects: 1 })
+            }
+        }
+    }
+
+    /// A request left the system (completed or shed) at time `t`: return
+    /// the window token to its closed-loop camera.
+    fn on_done(&mut self, r: &Request, t: f64) {
+        if let Arrivals::Closed { cl, cams, rng, .. } = self {
+            let cam = &mut cams[r.camera];
+            // Revive only cameras stalled *at the window limit* — a
+            // camera whose next frame was dropped by the horizon stays
+            // stopped (its window still had room, so a completion is not
+            // what it was waiting for).
+            let was_limited = cam.outstanding == cl.max_outstanding;
+            cam.outstanding = cam.outstanding.saturating_sub(1);
+            if was_limited && cam.next_at.is_none() && t < cl.horizon_s {
+                // Floor the think time at 1 µs: a zero think-time would
+                // let a shed frame re-arm its camera at the *same*
+                // instant, and a full queue could then shed it again
+                // without virtual time ever advancing (a DES livelock).
+                let tn = t + cl.think_s.max(1e-6) * rng.range_f64(0.9, 1.1);
+                if tn < cl.horizon_s {
+                    cam.next_at = Some(tn);
+                }
+            }
+        }
+    }
+
+    fn pending(&self) -> bool {
+        match self {
+            Arrivals::Open { trace, next } => *next < trace.len(),
+            Arrivals::Closed { cams, .. } => cams.iter().any(|c| c.next_at.is_some()),
+        }
+    }
+}
+
+/// Complete any batch finished by `now`, then let idle active devices
+/// steal and serving devices dispatch until nothing changes. Requests
+/// that completed are appended to `done` (with their completion time) so
+/// closed-loop cameras get their window tokens back.
+fn settle(
+    pool: &mut ShardPool,
+    now: f64,
+    cfg: &SimConfig,
+    metrics: &mut FleetMetrics,
+    done: &mut Vec<(Request, f64)>,
+) {
     loop {
         let mut progressed = false;
         for i in 0..pool.devices.len() {
-            // 1. Completion.
+            // 1. Completion (any lifecycle: draining devices finish too).
             if pool.devices[i].busy && pool.devices[i].free_at <= now {
                 let done_at = pool.devices[i].free_at;
                 let batch = std::mem::take(&mut pool.devices[i].in_flight);
                 for r in batch {
                     metrics.record_completion(i, done_at - r.arrival_s);
+                    done.push((r, done_at));
                 }
                 pool.devices[i].busy = false;
                 progressed = true;
             }
-            if pool.devices[i].busy {
+            if pool.devices[i].busy || !pool.devices[i].lifecycle.serves() {
                 continue;
             }
-            // 2. Work stealing into an idle, empty device.
-            if cfg.work_stealing && pool.devices[i].queue.is_empty() {
+            // 2. Work stealing into an idle, empty, *accepting* device.
+            if cfg.work_stealing
+                && pool.devices[i].lifecycle.accepts_new()
+                && pool.devices[i].queue.is_empty()
+            {
                 let n = pool.steal_into(i);
                 if n > 0 {
                     metrics.record_steal(i, n);
@@ -150,70 +327,260 @@ fn settle(pool: &mut ShardPool, now: f64, cfg: &SimConfig, metrics: &mut FleetMe
 }
 
 /// The next event after `now`: the earliest of the next arrival, any
-/// in-flight completion, or any idle device's batch-wait deadline.
+/// in-flight completion, any serving device's batch-wait deadline, or any
+/// provisioning device's warm-up end.
 fn next_event(pool: &ShardPool, next_arrival: Option<f64>, batch: &BatchPolicy, now: f64) -> f64 {
     let mut t = next_arrival.unwrap_or(f64::INFINITY);
     for d in &pool.devices {
+        if let Lifecycle::Provisioning { ready_at } = d.lifecycle {
+            t = t.min(ready_at);
+            continue;
+        }
         if d.busy {
             t = t.min(d.free_at);
-        } else if let Decision::WaitUntil(w) = batch.decide(&d.queue, now, d.backend.max_batch()) {
-            t = t.min(w);
+        } else if d.lifecycle.serves() {
+            if let Decision::WaitUntil(w) = batch.decide(&d.queue, now, d.backend.max_batch()) {
+                t = t.min(w);
+            }
         }
     }
     t
 }
 
-/// Run a trace through the pool. The pool's queues may be pre-loaded
-/// (tests use this to create skew); devices are expected idle at start.
-pub fn simulate(pool: &mut ShardPool, trace: &[Request], cfg: &SimConfig) -> FleetReport {
+/// The autoscaler driver state handed to [`drive`].
+struct ScalingCtx<'a> {
+    auto: &'a mut Autoscaler,
+    /// Builds the `i`-th provisioned device (`i` counts grows over the
+    /// whole run, for unique labels).
+    factory: &'a mut dyn FnMut(usize) -> Box<dyn Backend>,
+}
+
+fn observe(pool: &ShardPool, stats: EpochStats, now: f64, epoch_s: f64) -> EpochObservation {
+    let active = pool.active_count();
+    let serving = pool.serving_count();
+    EpochObservation {
+        now_s: now,
+        epoch_s,
+        active_devices: active,
+        draining_devices: serving - active,
+        provisioning_devices: pool.provisioning_count(),
+        utilization: (stats.busy_s / (epoch_s * serving.max(1) as f64)).clamp(0.0, 1.0),
+        completed: stats.completed,
+        shed: stats.shed,
+        p99_s: stats.p99_s,
+        backlog: pool.backlog(),
+    }
+}
+
+/// The unified DES driver behind every `simulate*` entry point.
+fn drive(
+    pool: &mut ShardPool,
+    mut arrivals: Arrivals<'_>,
+    cfg: &SimConfig,
+    mut scaling: Option<ScalingCtx<'_>>,
+) -> FleetReport {
     assert!(!pool.is_empty(), "simulate needs at least one device");
     let mut metrics = FleetMetrics::new(pool.len(), cfg.slo_s);
-    let mut next = 0usize; // next trace index
+    let mut events: Vec<ScalingEvent> = Vec::new();
     let mut now = 0.0f64;
     let mut last_completion = 0.0f64;
+    // Pre-loaded queues (tests seed skew this way) count as offered, so
+    // the conservation law offered == completed + shed holds for them too.
+    let mut offered = pool.backlog() as u64;
+    let mut grows = 0usize;
+    let mut next_epoch = scaling.as_ref().map(|s| s.auto.cfg.epoch_s);
+    let devices_start = pool.serving_count();
+    let mut devices_peak = pool.active_count();
+    let mut done: Vec<(Request, f64)> = Vec::new();
 
     loop {
-        // Admit every arrival due by `now`.
-        while next < trace.len() && trace[next].arrival_s <= now {
-            let idx = pool.route(now);
-            let d = &mut pool.devices[idx];
-            match admit(&mut d.queue, cfg.queue_depth, cfg.shed, trace[next].clone()) {
-                Admission::Admitted => {}
-                Admission::AdmittedEvicted(_) | Admission::Rejected => metrics.record_shed(),
+        // 0. Provisioned devices whose warm-up has finished join the pool.
+        for i in 0..pool.devices.len() {
+            if let Lifecycle::Provisioning { ready_at } = pool.devices[i].lifecycle {
+                if ready_at <= now {
+                    pool.devices[i].lifecycle = Lifecycle::Active;
+                    devices_peak = devices_peak.max(pool.active_count());
+                    events.push(ScalingEvent {
+                        t_s: ready_at,
+                        kind: ScaleEventKind::Activated { device: i },
+                        serving_after: pool.serving_count(),
+                    });
+                }
             }
-            next += 1;
         }
 
-        settle(pool, now, cfg, &mut metrics);
+        // 1. Admit every arrival due by `now`.
+        while let Some(req) = arrivals.pop_due(now) {
+            offered += 1;
+            let idx = pool.route(now);
+            let d = &mut pool.devices[idx];
+            match admit(&mut d.queue, cfg.queue_depth, cfg.shed, req.clone()) {
+                Admission::Admitted => {}
+                Admission::AdmittedEvicted(old) => {
+                    metrics.record_shed();
+                    done.push((old, now));
+                }
+                Admission::Rejected => {
+                    metrics.record_shed();
+                    done.push((req, now));
+                }
+            }
+        }
+
+        // 2. Complete / steal / dispatch until quiescent.
+        settle(pool, now, cfg, &mut metrics, &mut done);
         for d in &pool.devices {
             if d.busy {
                 last_completion = last_completion.max(d.free_at);
             }
         }
+        for (r, t) in done.drain(..) {
+            arrivals.on_done(&r, t);
+        }
 
-        let arrivals_left = next < trace.len();
+        // 3. Retire draining devices that went idle.
+        for i in 0..pool.devices.len() {
+            if matches!(pool.devices[i].lifecycle, Lifecycle::Draining)
+                && !pool.devices[i].busy
+                && pool.devices[i].queue.is_empty()
+            {
+                pool.devices[i].lifecycle = Lifecycle::Retired;
+                let serving_after = pool.serving_count();
+                events.push(ScalingEvent {
+                    t_s: now,
+                    kind: ScaleEventKind::Retired { device: i },
+                    serving_after,
+                });
+            }
+        }
+
+        // 4. Epoch boundary: let the autoscaler resize the pool.
+        if let (Some(ctx), Some(epoch_end)) = (scaling.as_mut(), next_epoch) {
+            if now + 1e-12 >= epoch_end {
+                let epoch_s = ctx.auto.cfg.epoch_s;
+                let obs = observe(pool, metrics.take_epoch(), now, epoch_s);
+                match ctx.auto.decide(&obs) {
+                    ScaleAction::Grow(n) => {
+                        for _ in 0..n {
+                            let backend = (ctx.factory)(grows);
+                            grows += 1;
+                            let ready_at = now + ctx.auto.cfg.provision_delay_s;
+                            let idx = pool.register_provisioning(backend, ready_at);
+                            metrics.add_device();
+                            let serving_after = pool.serving_count();
+                            events.push(ScalingEvent {
+                                t_s: now,
+                                kind: ScaleEventKind::Provisioning { device: idx },
+                                serving_after,
+                            });
+                        }
+                    }
+                    ScaleAction::Shrink(n) => {
+                        for _ in 0..n {
+                            // Newest active device drains first: replicas
+                            // retire before the seed boards.
+                            let Some(idx) = pool
+                                .devices
+                                .iter()
+                                .rposition(|d| matches!(d.lifecycle, Lifecycle::Active))
+                            else {
+                                break;
+                            };
+                            pool.devices[idx].lifecycle = Lifecycle::Draining;
+                            let serving_after = pool.serving_count();
+                            events.push(ScalingEvent {
+                                t_s: now,
+                                kind: ScaleEventKind::DrainStarted { device: idx },
+                                serving_after,
+                            });
+                        }
+                    }
+                    ScaleAction::Hold => {}
+                }
+                next_epoch = Some(epoch_end + epoch_s);
+            }
+        }
+
+        let arrivals_left = arrivals.pending();
         let work_left = pool.devices.iter().any(|d| d.busy || !d.queue.is_empty());
         if !arrivals_left && !work_left {
             break;
         }
 
-        let t = next_event(pool, trace.get(next).map(|r| r.arrival_s), &cfg.batch, now);
+        // 5. Advance virtual time to the next event.
+        let mut t = next_event(pool, arrivals.peek(), &cfg.batch, now);
+        if let Some(epoch_end) = next_epoch {
+            t = t.min(epoch_end);
+        }
         if !t.is_finite() {
             // Only possible if every queue emptied and nothing is busy —
             // already handled above, but guard against a stall.
             break;
         }
+        // The DES invariant the property tests lean on: virtual time
+        // never runs backwards.
+        assert!(t + 1e-12 >= now, "virtual time went backwards: {t} < {now}");
         now = t.max(now);
     }
 
     let backends: Vec<&dyn Backend> = pool.devices.iter().map(|d| d.backend.as_ref()).collect();
-    metrics.report(&backends, last_completion.max(now))
+    let mut report = metrics.report(&backends, last_completion.max(now));
+    report.offered = offered;
+    report.devices_start = devices_start;
+    report.devices_peak = devices_peak;
+    report.devices_final = pool.serving_count();
+    report.scaling = events;
+    for (dr, ds) in report.devices.iter_mut().zip(&pool.devices) {
+        dr.state = ds.lifecycle.label();
+    }
+    report
+}
+
+/// Run an open-loop trace through a fixed pool. The pool's queues may be
+/// pre-loaded (tests use this to create skew); devices are expected idle
+/// at start.
+pub fn simulate(pool: &mut ShardPool, trace: &[Request], cfg: &SimConfig) -> FleetReport {
+    drive(pool, Arrivals::Open { trace, next: 0 }, cfg, None)
+}
+
+/// Run an open-loop trace with the autoscaler resizing the pool between
+/// epochs. `factory` builds the `i`-th provisioned device.
+pub fn simulate_autoscaled(
+    pool: &mut ShardPool,
+    trace: &[Request],
+    cfg: &SimConfig,
+    auto: &mut Autoscaler,
+    factory: &mut dyn FnMut(usize) -> Box<dyn Backend>,
+) -> FleetReport {
+    drive(pool, Arrivals::Open { trace, next: 0 }, cfg, Some(ScalingCtx { auto, factory }))
+}
+
+/// Run closed-loop clients against a fixed pool.
+pub fn simulate_closed_loop(
+    pool: &mut ShardPool,
+    clients: &ClosedLoopConfig,
+    cfg: &SimConfig,
+) -> FleetReport {
+    drive(pool, Arrivals::closed(clients.clone()), cfg, None)
+}
+
+/// Closed-loop clients plus autoscaling: the full feedback system — load
+/// adapts to capacity while capacity adapts to load.
+pub fn simulate_closed_loop_autoscaled(
+    pool: &mut ShardPool,
+    clients: &ClosedLoopConfig,
+    cfg: &SimConfig,
+    auto: &mut Autoscaler,
+    factory: &mut dyn FnMut(usize) -> Box<dyn Backend>,
+) -> FleetReport {
+    drive(pool, Arrivals::closed(clients.clone()), cfg, Some(ScalingCtx { auto, factory }))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::baselines::Platform;
+    use crate::serving::autoscale::{AutoscaleConfig, SloTracking, TargetUtilization};
     use crate::serving::device::BaselineDevice;
 
     /// A deterministic synthetic device: 5 ms overhead + 5 ms/frame.
@@ -398,7 +765,165 @@ mod tests {
         let cfg = SimConfig { queue_depth: 8, ..Default::default() };
         let r = simulate(&mut one_device_pool(), &trace, &cfg);
         assert_eq!(r.completed + r.shed, trace.len() as u64);
+        assert_eq!(r.offered, trace.len() as u64);
         let per_dev: u64 = r.devices.iter().map(|d| d.completed).sum();
         assert_eq!(per_dev, r.completed);
+    }
+
+    // ---- autoscaling ----
+
+    fn grow_setup() -> (Vec<Request>, SimConfig) {
+        // 3× overload on one 100/s device for 8 s.
+        let trace = poisson_trace(300.0, 8.0, 17);
+        let cfg = SimConfig {
+            batch: BatchPolicy::unbatched(),
+            queue_depth: 16,
+            shed: ShedPolicy::DropOldest,
+            slo_s: 0.500,
+            work_stealing: true,
+        };
+        (trace, cfg)
+    }
+
+    fn util_autoscaler(max: usize) -> Autoscaler {
+        Autoscaler::new(
+            AutoscaleConfig {
+                epoch_s: 0.25,
+                provision_delay_s: 0.4,
+                min_devices: 1,
+                max_devices: max,
+                cooldown_epochs: 0,
+            },
+            Box::new(TargetUtilization::default()),
+        )
+    }
+
+    #[test]
+    fn autoscaler_grows_under_overload_and_sheds_less() {
+        let (trace, cfg) = grow_setup();
+        let fixed = simulate(&mut one_device_pool(), &trace, &cfg);
+        assert!(fixed.shed > 0, "fixed pool must shed at 3× overload");
+
+        let mut auto = util_autoscaler(6);
+        let mut factory =
+            |_i: usize| -> Box<dyn Backend> { Box::new(test_device()) };
+        let r = simulate_autoscaled(&mut one_device_pool(), &trace, &cfg, &mut auto, &mut factory);
+
+        assert_eq!(r.offered, r.completed + r.shed, "conservation with autoscaling");
+        assert!(r.shed < fixed.shed / 2, "autoscaled shed {} !< {}/2", r.shed, fixed.shed);
+        assert!(r.completed > fixed.completed);
+        assert!(r.devices_peak > r.devices_start, "pool must actually grow");
+        assert!(r.devices_peak <= 6);
+        assert!(
+            r.scaling.iter().any(|e| matches!(e.kind, ScaleEventKind::Provisioning { .. })),
+            "scaling events must be recorded"
+        );
+        assert!(
+            r.scaling.iter().any(|e| matches!(e.kind, ScaleEventKind::Activated { .. })),
+            "provisioned devices must activate"
+        );
+        assert!(r.p99_s <= cfg.slo_s, "grown pool holds p99 {} under SLO", r.p99_s);
+    }
+
+    #[test]
+    fn autoscaler_drains_and_retires_when_load_drops() {
+        // 2.5 s of 3× overload, then 6 s of light load: the pool must
+        // grow, then drain back down, conserving every request.
+        let mut trace = poisson_trace(300.0, 2.5, 5);
+        for mut r in poisson_trace(20.0, 6.0, 6) {
+            r.arrival_s += 2.5;
+            r.id += 10_000_000; // keep ids unique across the two segments
+            trace.push(r);
+        }
+        let cfg = SimConfig {
+            batch: BatchPolicy::unbatched(),
+            queue_depth: 16,
+            shed: ShedPolicy::DropOldest,
+            slo_s: 0.500,
+            work_stealing: true,
+        };
+        let mut auto = util_autoscaler(6);
+        let mut factory =
+            |_i: usize| -> Box<dyn Backend> { Box::new(test_device()) };
+        let r = simulate_autoscaled(&mut one_device_pool(), &trace, &cfg, &mut auto, &mut factory);
+
+        assert_eq!(r.offered, r.completed + r.shed);
+        assert!(r.devices_peak > 1);
+        assert!(
+            r.scaling.iter().any(|e| matches!(e.kind, ScaleEventKind::DrainStarted { .. })),
+            "idle capacity must start draining"
+        );
+        assert!(
+            r.scaling.iter().any(|e| matches!(e.kind, ScaleEventKind::Retired { .. })),
+            "drained devices must retire"
+        );
+        assert!(r.devices_final < r.devices_peak, "pool must shrink back");
+        assert!(r.devices.iter().any(|d| d.state == "retired"));
+    }
+
+    #[test]
+    fn autoscaled_run_is_deterministic() {
+        let (trace, cfg) = grow_setup();
+        let run = || {
+            let mut auto = Autoscaler::new(
+                AutoscaleConfig {
+                    epoch_s: 0.25,
+                    provision_delay_s: 0.4,
+                    min_devices: 1,
+                    max_devices: 5,
+                    cooldown_epochs: 1,
+                },
+                Box::new(SloTracking::new(0.100)),
+            );
+            let mut factory =
+                |_i: usize| -> Box<dyn Backend> { Box::new(test_device()) };
+            simulate_autoscaled(&mut one_device_pool(), &trace, &cfg, &mut auto, &mut factory)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert!(!a.scaling.is_empty());
+    }
+
+    // ---- closed loop ----
+
+    #[test]
+    fn closed_loop_adapts_to_capacity_and_conserves() {
+        // 8 cameras × window 2 on one 100/s device: a 30 FPS open-loop
+        // fleet would need 240/s; the closed loop self-paces instead.
+        let cl = ClosedLoopConfig {
+            cameras: 8,
+            max_outstanding: 2,
+            period_s: 1.0 / 30.0,
+            think_s: 0.002,
+            horizon_s: 6.0,
+            seed: 9,
+        };
+        let cfg = SimConfig {
+            batch: BatchPolicy::new(4, 0.010),
+            queue_depth: 64,
+            shed: ShedPolicy::DropOldest,
+            slo_s: 0.250,
+            work_stealing: false,
+        };
+        let r = simulate_closed_loop(&mut one_device_pool(), &cl, &cfg);
+        assert_eq!(r.offered, r.completed + r.shed, "closed-loop conservation");
+        assert!(r.completed > 0);
+        // The in-system population is capped at cameras × K = 16, well
+        // under the 64-deep queue: the closed loop can never shed.
+        assert_eq!(r.shed, 0, "window cap must prevent shedding");
+        // Offered load adapted: far below the open-loop 240/s × 6 s.
+        assert!(r.offered < 240 * 6, "offered {} should self-pace", r.offered);
+        // But the device stayed saturated: roughly its capacity served.
+        assert!(r.throughput_fps() > 50.0, "throughput {}", r.throughput_fps());
+    }
+
+    #[test]
+    fn closed_loop_is_deterministic() {
+        let cl = ClosedLoopConfig { cameras: 4, horizon_s: 3.0, seed: 31, ..Default::default() };
+        let cfg = SimConfig::default();
+        let a = simulate_closed_loop(&mut one_device_pool(), &cl, &cfg);
+        let b = simulate_closed_loop(&mut one_device_pool(), &cl, &cfg);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 }

@@ -1,0 +1,343 @@
+//! Fleet invariants, property-tested across random seeds and configs
+//! (`util::prop::check` is the offline proptest stand-in).
+//!
+//! The serving DES is the benchmark harness every fleet policy is judged
+//! on, so the harness itself needs invariants pinned down:
+//!
+//! - **Conservation**: every offered request is either completed or shed,
+//!   exactly once, across the batcher / shard / steal / drain paths.
+//! - **Monotone virtual time**: the driver asserts internally that the
+//!   event clock never runs backwards; these tests drive it across random
+//!   configs (including autoscaling churn) and also check the observable
+//!   consequences (event timestamps ordered, makespan covers arrivals).
+//! - **Determinism**: same trace + same config ⇒ byte-identical report,
+//!   autoscaler included.
+//! - **Quantile accuracy**: the streaming histogram stays within bounded
+//!   relative error of exact sorted quantiles on adversarial samples.
+
+use gemmini_edge::baselines::Platform;
+use gemmini_edge::dataset::scenes::SceneConfig;
+use gemmini_edge::serving::{
+    multi_camera_trace, poisson_trace, simulate, simulate_autoscaled, simulate_closed_loop,
+    AutoscaleConfig, Autoscaler, Backend, BaselineDevice, BatchPolicy, ClosedLoopConfig,
+    FleetReport, LatencyHistogram, Request, ShardPool, ShedPolicy, SimConfig, SloTracking,
+    TargetUtilization,
+};
+use gemmini_edge::util::{prop, Rng};
+
+/// A synthetic device: `overhead_ms` per invocation + `frame_ms` per
+/// frame (Platform models are linear in the workload's GOP).
+fn device(overhead_ms: f64, frame_ms: f64, cap: usize) -> BaselineDevice {
+    let p = Platform {
+        name: "prop-dev",
+        overhead_s: overhead_ms * 1e-3,
+        sustained_gops: 100.0,
+        power_w: 5.0,
+    };
+    BaselineDevice::new(p, 0.1 * frame_ms, cap)
+}
+
+#[derive(Debug, Clone)]
+struct FleetCase {
+    seed: u64,
+    devices: Vec<(f64, f64, usize)>,
+    queue_depth: usize,
+    shed: ShedPolicy,
+    max_batch: usize,
+    wait_ms: f64,
+    work_stealing: bool,
+    rate_hz: f64,
+    bursty: bool,
+}
+
+fn gen_case(r: &mut Rng) -> FleetCase {
+    let n_dev = r.range(1, 4);
+    let devices = (0..n_dev)
+        .map(|_| (r.range_f64(1.0, 5.0), r.range_f64(2.0, 10.0), r.range(2, 17)))
+        .collect();
+    FleetCase {
+        seed: r.next_u64(),
+        devices,
+        queue_depth: r.range(1, 33),
+        shed: if r.chance(0.5) { ShedPolicy::DropOldest } else { ShedPolicy::RejectNewest },
+        max_batch: r.range(1, 9),
+        wait_ms: r.range_f64(0.0, 20.0),
+        work_stealing: r.chance(0.5),
+        rate_hz: r.range_f64(50.0, 400.0),
+        bursty: r.chance(0.5),
+    }
+}
+
+fn build(case: &FleetCase) -> (ShardPool, Vec<Request>, SimConfig) {
+    let mut pool = ShardPool::new();
+    for &(ov, fr, cap) in &case.devices {
+        pool.register(Box::new(device(ov, fr, cap)));
+    }
+    let trace = if case.bursty {
+        let scene = SceneConfig::default();
+        multi_camera_trace(&scene, 4, case.rate_hz / 4.0, 2.0, case.seed)
+    } else {
+        poisson_trace(case.rate_hz, 2.0, case.seed)
+    };
+    let cfg = SimConfig {
+        batch: BatchPolicy::new(case.max_batch, case.wait_ms * 1e-3),
+        queue_depth: case.queue_depth,
+        shed: case.shed,
+        slo_s: 0.050,
+        work_stealing: case.work_stealing,
+    };
+    (pool, trace, cfg)
+}
+
+/// The shared conservation + sanity checks on a finished report.
+fn check_report(r: &FleetReport, offered: u64) -> Result<(), String> {
+    if r.offered != offered {
+        return Err(format!("offered {} != trace len {offered}", r.offered));
+    }
+    if r.completed + r.shed != offered {
+        return Err(format!(
+            "conservation violated: {} completed + {} shed != {offered} offered",
+            r.completed, r.shed
+        ));
+    }
+    let per_dev: u64 = r.devices.iter().map(|d| d.completed).sum();
+    if per_dev != r.completed {
+        return Err(format!("per-device sum {per_dev} != fleet completed {}", r.completed));
+    }
+    // Quantiles of one histogram are monotone in q by construction; a
+    // violation means ranks ran backwards somewhere.
+    if !(r.p50_s <= r.p95_s && r.p95_s <= r.p99_s && r.p99_s <= r.max_s + 1e-12) {
+        return Err(format!(
+            "quantiles out of order: p50 {} p95 {} p99 {} max {}",
+            r.p50_s, r.p95_s, r.p99_s, r.max_s
+        ));
+    }
+    // Scaling events (if any) are stamped in nondecreasing virtual time —
+    // the externally visible face of the DES monotone-clock invariant.
+    for w in r.scaling.windows(2) {
+        if w[1].t_s + 1e-12 < w[0].t_s {
+            return Err(format!("event times regress: {} after {}", w[1].t_s, w[0].t_s));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn requests_are_conserved_across_random_fleets() {
+    prop::check(0xC0FFEE, 24, gen_case, |case| {
+        let (mut pool, trace, cfg) = build(case);
+        let r = simulate(&mut pool, &trace, &cfg);
+        check_report(&r, trace.len() as u64)?;
+        if let Some(last) = trace.last() {
+            // The driver visited every arrival: virtual time reached it.
+            if r.makespan_s + 1e-9 < last.arrival_s {
+                return Err(format!(
+                    "makespan {} stops before the last arrival {}",
+                    r.makespan_s, last.arrival_s
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn requests_are_conserved_under_autoscaling_churn() {
+    // Overload then lull, so every lifecycle edge (provision, activate,
+    // drain, retire) is crossed while requests are in flight.
+    prop::check(0xAB5C, 20, |r| (gen_case(r), r.next_u64()), |(case, seed2)| {
+        let (mut pool, mut trace, cfg) = build(case);
+        for mut req in poisson_trace(20.0, 2.0, *seed2) {
+            req.arrival_s += 2.0;
+            trace.push(req);
+        }
+        for (i, req) in trace.iter_mut().enumerate() {
+            req.id = i as u64;
+        }
+        let mut auto = Autoscaler::new(
+            AutoscaleConfig {
+                epoch_s: 0.2,
+                provision_delay_s: 0.3,
+                min_devices: 1,
+                max_devices: 5,
+                cooldown_epochs: 0,
+            },
+            Box::new(TargetUtilization::default()),
+        );
+        let mut factory = |_i: usize| -> Box<dyn Backend> { Box::new(device(2.0, 4.0, 8)) };
+        let r = simulate_autoscaled(&mut pool, &trace, &cfg, &mut auto, &mut factory);
+        check_report(&r, trace.len() as u64)?;
+        if r.devices_peak > 5 {
+            return Err(format!("peak {} devices exceeds max 5", r.devices_peak));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn closed_loop_conserves_and_respects_the_window() {
+    prop::check(
+        0x10AD,
+        20,
+        |r| {
+            let cameras = r.range(2, 7);
+            let window = r.range(1, 5);
+            ClosedLoopConfig {
+                cameras,
+                max_outstanding: window,
+                period_s: r.range_f64(0.01, 0.05),
+                think_s: r.range_f64(0.0, 0.01),
+                horizon_s: 2.0,
+                seed: r.next_u64(),
+            }
+        },
+        |cl| {
+            let mut pool = ShardPool::new();
+            pool.register(Box::new(device(2.0, 5.0, 8)));
+            // Queue deep enough for the whole closed-loop population:
+            // the window bound makes shedding impossible.
+            let cfg = SimConfig {
+                batch: BatchPolicy::new(4, 0.005),
+                queue_depth: cl.cameras * cl.max_outstanding,
+                shed: ShedPolicy::DropOldest,
+                slo_s: 0.100,
+                work_stealing: false,
+            };
+            let r = simulate_closed_loop(&mut pool, cl, &cfg);
+            check_report(&r, r.offered)?;
+            // Real teeth for offered: with zero sheds, the admission
+            // counter must agree exactly with the independently-kept
+            // completion histogram count.
+            if r.offered != r.completed {
+                return Err(format!(
+                    "offered {} != completed {} with nothing shed",
+                    r.offered, r.completed
+                ));
+            }
+            if r.shed != 0 {
+                return Err(format!(
+                    "{} sheds despite queue covering the {}-frame window",
+                    r.shed,
+                    cl.cameras * cl.max_outstanding
+                ));
+            }
+            if r.completed == 0 {
+                return Err("closed loop served nothing".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn reports_are_byte_identical_across_reruns() {
+    // Same trace + same SimConfig seed ⇒ byte-identical FleetReport
+    // (Debug formatting of f64 is shortest-roundtrip, so equal strings
+    // mean bit-equal numbers), with and without the autoscaler.
+    let scene = SceneConfig::default();
+    for seed in 0..20u64 {
+        let trace = multi_camera_trace(&scene, 4, 40.0, 2.0, seed);
+        let mk_pool = || {
+            let mut pool = ShardPool::new();
+            pool.register(Box::new(device(2.0, 4.0, 8)));
+            pool.register(Box::new(device(1.0, 7.0, 4)));
+            pool
+        };
+        let cfg = SimConfig {
+            batch: BatchPolicy::new(4, 0.008),
+            queue_depth: 8,
+            shed: ShedPolicy::DropOldest,
+            slo_s: 0.050,
+            work_stealing: true,
+        };
+        let a = simulate(&mut mk_pool(), &trace, &cfg);
+        let b = simulate(&mut mk_pool(), &trace, &cfg);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "fixed pool diverged at seed {seed}");
+
+        let run_scaled = || {
+            let mut auto = Autoscaler::new(
+                AutoscaleConfig {
+                    epoch_s: 0.25,
+                    provision_delay_s: 0.3,
+                    min_devices: 2,
+                    max_devices: 6,
+                    cooldown_epochs: 1,
+                },
+                Box::new(SloTracking::new(cfg.slo_s)),
+            );
+            let mut factory = |_i: usize| -> Box<dyn Backend> { Box::new(device(2.0, 4.0, 8)) };
+            simulate_autoscaled(&mut mk_pool(), &trace, &cfg, &mut auto, &mut factory)
+        };
+        let sa = run_scaled();
+        let sb = run_scaled();
+        assert_eq!(
+            format!("{sa:?}"),
+            format!("{sb:?}"),
+            "autoscaled run diverged at seed {seed}"
+        );
+
+        let cl = ClosedLoopConfig { cameras: 5, horizon_s: 2.0, seed, ..Default::default() };
+        let ca = simulate_closed_loop(&mut mk_pool(), &cl, &cfg);
+        let cb = simulate_closed_loop(&mut mk_pool(), &cl, &cfg);
+        assert_eq!(format!("{ca:?}"), format!("{cb:?}"), "closed loop diverged at seed {seed}");
+    }
+}
+
+/// Brute-force nearest-rank percentile for cross-checking.
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+#[test]
+fn quantiles_stay_accurate_on_adversarial_distributions() {
+    // Bimodal (two narrow modes a decade apart) and heavy-tailed
+    // (Pareto-ish) samples are where a log-binned histogram would show
+    // its seams; 4% bins must keep p50/p95/p99 within 8% of exact.
+    prop::check(
+        0x9A17,
+        24,
+        |r| {
+            let bimodal = r.chance(0.5);
+            let lo_mode = r.range_f64(0.5e-3, 4e-3);
+            let hi_mode = lo_mode * r.range_f64(8.0, 40.0);
+            let mix = r.range_f64(0.2, 0.8);
+            let alpha = r.range_f64(1.2, 2.5);
+            let seed = r.next_u64();
+            (bimodal, lo_mode, hi_mode, mix, alpha, seed)
+        },
+        |&(bimodal, lo_mode, hi_mode, mix, alpha, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut h = LatencyHistogram::new();
+            let mut samples = Vec::with_capacity(20_000);
+            for _ in 0..20_000 {
+                let s = if bimodal {
+                    // Narrow log-normal jitter around each mode.
+                    let mode = if rng.f64() < mix { lo_mode } else { hi_mode };
+                    mode * (0.05 * rng.normal()).exp()
+                } else {
+                    // Pareto tail: base × (1-u)^(-1/alpha).
+                    lo_mode * (1.0 - rng.f64()).powf(-1.0 / alpha)
+                };
+                h.record(s);
+                samples.push(s);
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.50, 0.95, 0.99] {
+                let exact = exact_quantile(&samples, q);
+                let approx = h.quantile(q);
+                let rel = (approx - exact).abs() / exact;
+                if rel > 0.08 {
+                    return Err(format!(
+                        "q{q}: approx {approx} vs exact {exact} (rel {rel:.3}, \
+                         bimodal={bimodal})"
+                    ));
+                }
+            }
+            if h.count() != 20_000 {
+                return Err("histogram lost samples".into());
+            }
+            Ok(())
+        },
+    );
+}
