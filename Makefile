@@ -3,8 +3,13 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy fmt fmt-drift featurecheck artifacts fleet
+.PHONY: check build test clippy fmt fmt-drift featurecheck perfsmoke artifacts fleet
 
+# The perf smoke gate (`perfsmoke`) is enforced by `check` through the
+# `test` target: `cargo test -q` runs the gate assertion
+# (tests/tuning_cache.rs::perf_smoke_memoized_instruction_budget), so a
+# memoization regression fails `make check` without re-running the
+# suite's heaviest test twice. `make perfsmoke` runs the gate alone.
 check: build test clippy fmt-drift featurecheck
 
 build:
@@ -38,6 +43,14 @@ featurecheck:
 	else \
 		echo "featurecheck: skipping --features pjrt (vendored xla not configured; stub Executor covered by the default build/test)"; \
 	fi
+
+# Perf smoke gate, standalone: memoized + cache-warm whole-graph tuning
+# must simulate ≤ 40 % of the cold path's instructions on YOLOv7-tiny.
+# Deterministic — the assertion counts simulated instructions, never
+# wall clock, so the gate cannot flake on a loaded CI box. (Also runs as
+# part of `make check` via the `test` target.)
+perfsmoke:
+	$(CARGO) test -q --test tuning_cache perf_smoke_memoized_instruction_budget
 
 # AOT-compile the JAX/Pallas detector to artifacts/ (PJRT runtime input).
 artifacts:

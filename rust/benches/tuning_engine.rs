@@ -1,0 +1,121 @@
+//! Tuning-engine performance harness: cold vs memoized vs cache-warm
+//! whole-graph tuning on YOLOv7-tiny, timed in wall clock and — the
+//! deterministic proxy the perf gate uses — simulated instructions.
+//! Emits `BENCH_tuning.json` at the repo root to seed the perf
+//! trajectory.
+//!
+//! Knobs: `TE_SIZE` (input resolution, default 160), `TE_TRIALS`
+//! (measure_k, default 2), `TE_VARIANT` (`base|p40|p88`, default p88).
+
+use std::time::Instant;
+
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::passes::replace_activations;
+use gemmini_edge::report::tuning_engine_table;
+use gemmini_edge::scheduler::{EngineStats, TuningCache, TuningEngine, TuningResult};
+use gemmini_edge::util::json::Json;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn phase_json(stats: &EngineStats, wall_s: f64, t: &TuningResult) -> Json {
+    Json::obj(vec![
+        ("sim_instrs", Json::Num(stats.sim_instrs as f64)),
+        ("wall_s", Json::Num(wall_s)),
+        ("tuned", Json::Num(stats.tuned as f64)),
+        ("memo_hits", Json::Num(stats.memo_hits as f64)),
+        ("cache_hits", Json::Num(stats.cache_hits as f64)),
+        ("threads", Json::Num(stats.threads_used as f64)),
+        ("tuned_conv_cycles", Json::Num(t.tuned_conv_cycles() as f64)),
+    ])
+}
+
+fn main() {
+    let size = env_usize("TE_SIZE", 160);
+    let trials = env_usize("TE_TRIALS", 2);
+    let variant = match std::env::var("TE_VARIANT").as_deref() {
+        Ok("base") => ModelVariant::Base,
+        Ok("p40") => ModelVariant::Pruned40,
+        _ => ModelVariant::Pruned88,
+    };
+    let mut g = yolov7_tiny(size, variant, 8);
+    replace_activations(&mut g);
+    let cfg = GemminiConfig::ours_zcu102();
+    println!(
+        "tuning engine bench: {} @{size}px, measure_k={trials}, config fp {:016x}",
+        variant.label(),
+        cfg.fingerprint()
+    );
+
+    // --- cold: no memoization, the pre-engine behavior ---
+    let mut cold_e = TuningEngine::new(cfg.clone()).with_memoization(false);
+    let t0 = Instant::now();
+    let t_cold = cold_e.tune_graph(&g, trials);
+    let cold_s = t0.elapsed().as_secs_f64();
+    let cold = cold_e.last_stats();
+    println!("\n[cold — no memoization] {cold_s:.2} s");
+    print!("{}", tuning_engine_table(&cold));
+
+    // --- memoized: intra-graph dedup + parallel search, cache persisted ---
+    let cache_path = std::env::temp_dir().join("gemmini_edge_bench_tuning_cache.json");
+    let _ = std::fs::remove_file(&cache_path);
+    let mut memo_e =
+        TuningEngine::new(cfg.clone()).with_cache(TuningCache::load(&cache_path));
+    let t0 = Instant::now();
+    let t_memo = memo_e.tune_graph(&g, trials);
+    let memo_s = t0.elapsed().as_secs_f64();
+    let memo = memo_e.last_stats();
+    memo_e.save_cache().expect("write bench tuning cache");
+    println!("\n[memoized — unique geometries only] {memo_s:.2} s");
+    print!("{}", tuning_engine_table(&memo));
+
+    // --- warm: fresh engine, cache file from the previous run ---
+    let mut warm_e = TuningEngine::new(cfg).with_cache(TuningCache::load(&cache_path));
+    let t0 = Instant::now();
+    let t_warm = warm_e.tune_graph(&g, trials);
+    let warm_s = t0.elapsed().as_secs_f64();
+    let warm = warm_e.last_stats();
+    println!("\n[cache-warm — loaded from file] {warm_s:.2} s");
+    print!("{}", tuning_engine_table(&warm));
+    let _ = std::fs::remove_file(&cache_path);
+
+    // Identical results are the contract that makes the speedup free.
+    let identical = t_cold.to_json().dump() == t_memo.to_json().dump()
+        && t_cold.to_json().dump() == t_warm.to_json().dump()
+        && t_cold.move_cycles == t_memo.move_cycles
+        && t_cold.move_cycles == t_warm.move_cycles;
+    assert!(identical, "cold/memoized/warm tuning outputs diverged");
+
+    let memo_ratio = memo.sim_instrs as f64 / cold.sim_instrs as f64;
+    let warm_ratio = warm.sim_instrs as f64 / cold.sim_instrs as f64;
+    println!(
+        "\ninstrs: cold {} | memoized {} ({:.0}%) | warm {} ({:.0}%)",
+        cold.sim_instrs,
+        memo.sim_instrs,
+        memo_ratio * 100.0,
+        warm.sim_instrs,
+        warm_ratio * 100.0
+    );
+    println!(
+        "wall:   cold {cold_s:.2} s | memoized {memo_s:.2} s ({:.1}×) | warm {warm_s:.2} s ({:.0}×)",
+        cold_s / memo_s.max(1e-9),
+        cold_s / warm_s.max(1e-9)
+    );
+
+    let out = Json::obj(vec![
+        ("workload", Json::Str(format!("{}@{size}", variant.label()))),
+        ("measure_k", Json::Num(trials as f64)),
+        ("conv_layers", Json::Num(memo.conv_layers as f64)),
+        ("unique_geometries", Json::Num(memo.unique_geometries as f64)),
+        ("cold", phase_json(&cold, cold_s, &t_cold)),
+        ("memoized", phase_json(&memo, memo_s, &t_memo)),
+        ("warm", phase_json(&warm, warm_s, &t_warm)),
+        ("memo_instr_ratio", Json::Num(memo_ratio)),
+        ("warm_instr_ratio", Json::Num(warm_ratio)),
+        ("identical_json", Json::Bool(identical)),
+    ]);
+    std::fs::write("BENCH_tuning.json", out.dump() + "\n").expect("write BENCH_tuning.json");
+    println!("wrote BENCH_tuning.json");
+}

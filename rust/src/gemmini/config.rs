@@ -155,6 +155,56 @@ impl GemminiConfig {
         (2 * self.peak_macs_per_cycle()) as f64 * self.clock_mhz * 1e6 / 1e9
     }
 
+    /// Stable 64-bit fingerprint over every parameter that can influence
+    /// simulated timing. The schedule-tuning cache
+    /// ([`crate::scheduler::TuningCache`]) keys entries by this value, so
+    /// changing *any* field — array size, memory geometry, clock, DDR
+    /// bandwidth, feature toggles — invalidates cached tunings for the old
+    /// configuration without touching entries of other configurations.
+    /// FNV-1a over a fixed field encoding (not `DefaultHasher`, whose seed
+    /// is randomized per process and would break cross-run persistence).
+    /// [`super::sim::TIMING_MODEL_VERSION`] is mixed in too, so cached
+    /// cycles are also invalidated when the simulator or search space
+    /// changes, not just the configuration.
+    pub fn fingerprint(&self) -> u64 {
+        fn mix(mut h: u64, v: u64) -> u64 {
+            for b in v.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+            }
+            h
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        h = mix(h, super::sim::TIMING_MODEL_VERSION);
+        h = mix(h, self.dim as u64);
+        h = mix(
+            h,
+            match self.dataflow {
+                Dataflow::WeightStationary => 0,
+                Dataflow::OutputStationary => 1,
+                Dataflow::Both => 2,
+            },
+        );
+        h = mix(h, self.scratchpad_kib as u64);
+        h = mix(h, self.accumulator_kib as u64);
+        h = mix(h, self.scratchpad_ports as u64);
+        h = mix(h, self.scratchpad_read_delay as u64);
+        h = mix(h, self.spatial_output_bits as u64);
+        h = mix(h, self.max_in_flight as u64);
+        h = mix(h, self.input_bits as u64);
+        h = mix(h, self.acc_bits as u64);
+        h = mix(h, matches!(self.scale_dtype, ScaleDtype::F16) as u64);
+        let flags = (self.has_normalization as u64)
+            | (self.has_transposer as u64) << 1
+            | (self.has_virtual_addr as u64) << 2
+            | (self.has_dilation as u64) << 3
+            | (self.dsp_packing as u64) << 4;
+        h = mix(h, flags);
+        h = mix(h, self.clock_mhz.to_bits());
+        h = mix(h, self.ddr_gbs.to_bits());
+        h = mix(h, self.dram_latency as u64);
+        h
+    }
+
     /// Validate internal consistency.
     pub fn validate(&self) -> Result<(), String> {
         if !self.dim.is_power_of_two() {
@@ -235,6 +285,20 @@ mod tests {
         // 4× PEs × 1.5× clock = 6× peak.
         let ratio = ours.peak_gops() / orig.peak_gops();
         assert!((ratio - 6.0).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_configs_and_is_stable() {
+        let a = GemminiConfig::ours_zcu102();
+        let b = GemminiConfig::original_zcu102();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // Same parameters → same fingerprint (pure function of fields).
+        assert_eq!(a.fingerprint(), GemminiConfig::ours_zcu102().fingerprint());
+        // Any single timing-relevant field flips it.
+        let clocked = GemminiConfig { clock_mhz: 151.0, ..a.clone() };
+        assert_ne!(a.fingerprint(), clocked.fingerprint());
+        let ported = GemminiConfig { scratchpad_ports: 1, ..a.clone() };
+        assert_ne!(a.fingerprint(), ported.fingerprint());
     }
 
     #[test]

@@ -5,7 +5,18 @@
 //! overlap freely unless they conflict on a resource. Conflicts are tracked
 //! at scratchpad-row / accumulator-row / DRAM-block granularity with
 //! last-writer and last-reader completion times — exactly the hazard
-//! information Gemmini's ROB tracks between its queues.
+//! information Gemmini's ROB tracks between its queues. All hazard tables
+//! are dense `Vec`s indexed directly by row / block (the scratchpad and
+//! accumulator tables are sized from the config, the DRAM-block table from
+//! the simulated DRAM size and grown on demand): the per-instruction
+//! lookups sit on the tuner's hottest path, where hashing a `HashMap` key
+//! per touched block dominated the old profile.
+//!
+//! A `Simulator` is reusable across streams: `run` measures cycles relative
+//! to the stream's own start, and because every recorded hazard time is
+//! bounded by the previous stream's horizon, a reused simulator is
+//! cycle-identical to a fresh one (what lets the tuner keep one simulator
+//! per worker instead of reallocating DRAM per candidate).
 //!
 //! Shared resources beyond memory rows:
 //! - the **DMA engine** (one AXI port to PS DDR) serializes mvin/mvout
@@ -17,14 +28,21 @@
 //! actually move and the PE array actually multiplies, so instruction
 //! streams can be verified against a software reference.
 
-use std::collections::HashMap;
-
 use super::config::GemminiConfig;
 use super::isa::{Activation, Instr, MvinDst};
 use super::memory::Dram;
 use super::pe_array::PeArray;
 use super::scratchpad::{Accumulator, Scratchpad};
 use crate::ir::tensor::f16_round;
+
+/// Version of the cycle/timing model (and, by contract, the schedule
+/// search space that measures against it). Mixed into
+/// [`GemminiConfig::fingerprint`], so bumping it invalidates every
+/// persistent tuning-cache entry measured under the old model — cached
+/// cycles must never outlive the simulator that produced them. Bump on
+/// any change to this file's timing semantics, `pe_array` cycle
+/// formulas, CISC expansion, or `scheduler::space::enumerate`.
+pub const TIMING_MODEL_VERSION: u64 = 1;
 
 const DRAM_BLOCK: usize = 4096;
 const IDX_LOAD: usize = 0;
@@ -98,7 +116,11 @@ pub struct Simulator {
     sp_read: Vec<u64>,
     acc_write: Vec<u64>,
     acc_read: Vec<u64>,
-    dram_rw: HashMap<usize, (u64, u64)>, // block -> (write_fin, read_fin)
+    /// Dense per-DRAM-block last-write / last-read completion times,
+    /// indexed by `addr / DRAM_BLOCK` (grown on demand past the initial
+    /// DRAM size; an untouched block reads as 0, like a map miss did).
+    dram_write: Vec<u64>,
+    dram_read: Vec<u64>,
     horizon: u64,
     t0: u64,
     // --- execute-pipeline architectural state ---
@@ -128,6 +150,7 @@ impl Simulator {
         let pe = PeArray::new(&cfg);
         let sp_rows = sp.num_rows();
         let acc_rows = acc.num_rows();
+        let dram_blocks = dram_size.div_ceil(DRAM_BLOCK).max(1);
         Self {
             dram: Dram::new(dram_size),
             functional,
@@ -141,7 +164,8 @@ impl Simulator {
             sp_read: vec![0; sp_rows],
             acc_write: vec![0; acc_rows],
             acc_read: vec![0; acc_rows],
-            dram_rw: HashMap::new(),
+            dram_write: vec![0; dram_blocks],
+            dram_read: vec![0; dram_blocks],
             horizon: 0,
             t0: 0,
             cur_acc_row: 0,
@@ -205,12 +229,12 @@ impl Simulator {
         let mut t = 0;
         let b0 = addr / DRAM_BLOCK;
         let b1 = (addr + bytes.max(1) - 1) / DRAM_BLOCK;
-        for b in b0..=b1 {
-            if let Some(&(w, r)) = self.dram_rw.get(&b) {
-                t = t.max(w); // RAW / WAW
-                if is_write {
-                    t = t.max(r); // WAR
-                }
+        // Blocks past the table were never touched → contribute 0.
+        let hi = b1.min(self.dram_write.len() - 1);
+        for b in b0..=hi {
+            t = t.max(self.dram_write[b]); // RAW / WAW
+            if is_write {
+                t = t.max(self.dram_read[b]); // WAR
             }
         }
         t
@@ -219,13 +243,13 @@ impl Simulator {
     fn dram_touch(&mut self, addr: usize, bytes: usize, is_write: bool, fin: u64) {
         let b0 = addr / DRAM_BLOCK;
         let b1 = (addr + bytes.max(1) - 1) / DRAM_BLOCK;
-        for b in b0..=b1 {
-            let e = self.dram_rw.entry(b).or_insert((0, 0));
-            if is_write {
-                e.0 = e.0.max(fin);
-            } else {
-                e.1 = e.1.max(fin);
-            }
+        if b1 >= self.dram_write.len() {
+            self.dram_write.resize(b1 + 1, 0);
+            self.dram_read.resize(b1 + 1, 0);
+        }
+        let table = if is_write { &mut self.dram_write } else { &mut self.dram_read };
+        for slot in &mut table[b0..=b1] {
+            *slot = (*slot).max(fin);
         }
     }
 

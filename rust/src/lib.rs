@@ -18,7 +18,9 @@
 //! - [`passes`] — the model-optimization chain (Section IV-B): activation
 //!   replacement, quantization, pruning, layout and framework conversion;
 //! - [`scheduler`] — the AutoTVM-analogue schedule tuner + Gemmini codegen
-//!   (Sections IV-C, V-A);
+//!   (Sections IV-C, V-A), driven by a memoized, parallel tuning engine
+//!   with a persistent warm-start cache (`repro … --tuning-cache`; see
+//!   the module docs and the README's "Tuning engine" section);
 //! - [`partition`] — dtype-based PS/PL model partitioning (Section IV-D);
 //! - [`energy`] / [`baselines`] — platform power/latency models used by the
 //!   cross-hardware comparison (Table IV, Figures 7/8);

@@ -7,9 +7,10 @@
 //! repro deploy [--size N] [--trials K]  run the full workflow on the detector
 //! repro infer [--hlo PATH]            run the AOT artifact on a scene (PJRT)
 //! repro tune [--size N] [--variant base|p40|p88] [--trials K]
+//!            [--tuning-cache PATH]
 //! repro fleet [--cameras N] [--fps F] [--batch B] [--wait MS] [--seconds S]
 //!             [--autoscale] [--policy util|slo] [--max-devices N]
-//!             [--epoch S] [--delay S] [--closed K]
+//!             [--epoch S] [--delay S] [--closed K] [--tuning-cache PATH]
 //! ```
 //!
 //! `repro fleet --autoscale` runs the same fleet behind the closed-loop
@@ -18,6 +19,13 @@
 //! `--batch B` is ≥ 2 the replicas use batch-aware schedule tuning
 //! (`scheduler::tune_graph_batch`). `--closed K` switches the cameras to
 //! the closed-loop client model with a window of K outstanding frames.
+//!
+//! `--tuning-cache PATH` (on `tune` and `fleet`) loads/saves the
+//! persistent schedule-tuning cache (`scheduler::cache`): the first run
+//! writes an AutoTVM-log-style JSON file, repeated runs warm-start from
+//! it and skip the cycle-simulator measurements entirely. Entries are
+//! keyed by the accelerator-config fingerprint, so editing the config
+//! invalidates stale entries automatically.
 
 use gemmini_edge::coordinator::{deploy, DeployOptions};
 use gemmini_edge::dataset::detector::{build_detector, default_weights};
@@ -27,11 +35,39 @@ use gemmini_edge::ir::interp::Value;
 use gemmini_edge::postproc::nms::{decode_and_nms, NmsConfig};
 use gemmini_edge::report;
 use gemmini_edge::runtime::Executor;
-use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::scheduler::{TuningCache, TuningEngine};
 use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
 
 fn arg_val(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Build a tuning engine, warm-started from `--tuning-cache` when given.
+fn engine_with_cache(cfg: GemminiConfig, cache_path: Option<&String>) -> TuningEngine {
+    let mut engine = TuningEngine::new(cfg);
+    if let Some(path) = cache_path {
+        let cache = TuningCache::load(path);
+        if !cache.is_empty() {
+            eprintln!(
+                "tuning cache: {} layer + {} move entries from {path}",
+                cache.layer_entries(),
+                cache.move_entries()
+            );
+        }
+        engine = engine.with_cache(cache);
+    }
+    engine
+}
+
+/// Persist the cache (if file-backed) and print the engine's work
+/// accounting for *every* tuning call of the run (replica tunings
+/// included), via the shared renderer so the format lives in one place.
+fn finish_engine(engine: &TuningEngine) {
+    if let Err(e) = engine.save_cache() {
+        eprintln!("warning: could not write tuning cache: {e}");
+    }
+    eprintln!("tuning engine:");
+    eprint!("{}", report::tuning_engine_table(&engine.total_stats()));
 }
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -109,7 +145,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let mut g = yolov7_tiny(size, variant, 80);
             gemmini_edge::passes::replace_activations(&mut g);
             let cfg = GemminiConfig::ours_zcu102();
-            let t = tune_graph(&cfg, &g, trials);
+            let mut engine = engine_with_cache(cfg.clone(), arg_val(&args, "--tuning-cache").as_ref());
+            let t = engine.tune_graph(&g, trials);
+            finish_engine(&engine);
             println!("{}", t.to_json().dump());
             println!(
                 "# conv improvement {:.1}% | layers improved {:.0}% | latency {:.1} ms",
@@ -122,7 +160,6 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             use gemmini_edge::baselines::xavier;
             use gemmini_edge::fpga::resources::Board;
             use gemmini_edge::report::fleet_table;
-            use gemmini_edge::scheduler::tuner::tune_graph_batch;
             use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
             use gemmini_edge::serving::{
                 multi_camera_trace, simulate, simulate_autoscaled, simulate_closed_loop,
@@ -153,20 +190,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .max(0.0);
             let closed: Option<usize> = arg_val(&args, "--closed").and_then(|v| v.parse().ok());
 
-            // Tune the detector once per distinct architecture; with
-            // batching, tune once more *for* the serving batch size so
-            // autoscaled replicas carry measured batch latencies.
+            // Tune the detector through the shared engine: repeated
+            // geometries, autoscaled replicas and (with --tuning-cache)
+            // repeated `repro fleet` invocations all reuse one search.
             let mut g = build_detector(96, &default_weights());
             gemmini_edge::passes::replace_activations(&mut g);
-            let cfg102 = GemminiConfig::ours_zcu102();
-            let tuning = tune_graph(&cfg102, &g, 2);
-            // Only the autoscale replica factory consumes the batched
-            // tuning; skip the second schedule search otherwise.
-            let batch_tuning = if autoscale && batch >= 2 {
-                Some(tune_graph_batch(&cfg102, &g, 2, batch))
-            } else {
-                None
-            };
+            let mut engine = engine_with_cache(
+                GemminiConfig::ours_zcu102(),
+                arg_val(&args, "--tuning-cache").as_ref(),
+            );
+            let tuning = engine.tune_graph(&g, 2);
 
             let mut pool = ShardPool::paper_boards(&tuning, DEFAULT_DISPATCH_S);
             pool.register(Box::new(BaselineDevice::new(xavier(), g.gops(), 8)));
@@ -215,26 +248,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 } else {
                     Autoscaler::new(acfg, Box::new(TargetUtilization::default()))
                 };
+                // Each replica tunes through the shared engine: replica 0
+                // pays for the batched search once (batch >= 2), later
+                // replicas are pure cache hits.
                 let mut factory = |i: usize| -> Box<dyn Backend> {
                     let label = format!("ZCU102-Gemmini (replica {i})");
-                    Box::new(match &batch_tuning {
-                        Some(tb) => GemminiDevice::from_batch_tuning(
-                            &label,
-                            Board::Zcu102,
-                            GemminiConfig::ours_zcu102(),
-                            &tuning,
-                            tb,
-                            batch,
-                            DEFAULT_DISPATCH_S,
-                        ),
-                        None => GemminiDevice::from_tuning(
-                            &label,
-                            Board::Zcu102,
-                            GemminiConfig::ours_zcu102(),
-                            &tuning,
-                            DEFAULT_DISPATCH_S,
-                        ),
-                    })
+                    Box::new(GemminiDevice::from_engine(
+                        &label,
+                        Board::Zcu102,
+                        &mut engine,
+                        &g,
+                        2,
+                        batch,
+                        DEFAULT_DISPATCH_S,
+                    ))
                 };
                 if closed.is_some() {
                     simulate_closed_loop_autoscaled(
@@ -252,6 +279,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             } else {
                 simulate(&mut pool, &trace, &cfg)
             };
+            finish_engine(&engine);
             println!("offered {} frames", r.offered);
             print!("{}", fleet_table(&r));
         }

@@ -5,6 +5,7 @@
 use crate::energy::EnergyReport;
 use crate::fpga::resources::ResourceReport;
 use crate::gemmini::config::{Dataflow, GemminiConfig, ScaleDtype};
+use crate::scheduler::EngineStats;
 use crate::serving::FleetReport;
 
 /// Render Table II (resource consumption).
@@ -137,6 +138,31 @@ pub fn fleet_table(r: &FleetReport) -> String {
     s
 }
 
+/// Render one tuning-engine run's work accounting (`scheduler::tuner`):
+/// how much schedule search the memoization/cache layers actually saved,
+/// with simulated instructions as the deterministic cost proxy.
+pub fn tuning_engine_table(s: &EngineStats) -> String {
+    format!(
+        "| conv/dense layers        | {:>10} |\n\
+         | unique geometries        | {:>10} |\n\
+         | searched (cache misses)  | {:>10} |\n\
+         | intra-graph memo hits    | {:>10} |\n\
+         | warm cache hits          | {:>10} |\n\
+         | movement ops (memoized)  | {:>4} ({:>3}) |\n\
+         | instructions simulated   | {:>10} |\n\
+         | worker threads           | {:>10} |\n",
+        s.conv_layers,
+        s.unique_geometries,
+        s.tuned,
+        s.memo_hits,
+        s.cache_hits,
+        s.move_ops,
+        s.move_memo_hits,
+        s.sim_instrs,
+        s.threads_used
+    )
+}
+
 /// A generic two-column series (figure data as rows).
 pub fn series(title: &str, xlabel: &str, ylabel: &str, points: &[(String, f64)]) -> String {
     let mut s = format!("# {title}\n| {xlabel} | {ylabel} |\n");
@@ -242,6 +268,26 @@ mod tests {
         assert!(s.contains("attainment 90.0%"), "{s}");
         assert!(s.contains("1 start | 2 peak | 2 final | 1 scaling events"), "{s}");
         assert!(s.contains("provision device 1"), "{s}");
+    }
+
+    #[test]
+    fn tuning_engine_table_renders_accounting() {
+        let s = EngineStats {
+            conv_layers: 58,
+            unique_geometries: 36,
+            tuned: 36,
+            memo_hits: 22,
+            cache_hits: 0,
+            move_ops: 12,
+            move_memo_hits: 4,
+            sim_instrs: 123_456,
+            threads_used: 4,
+        };
+        let t = tuning_engine_table(&s);
+        assert!(t.contains("unique geometries"), "{t}");
+        assert!(t.contains("58"), "{t}");
+        assert!(t.contains("123456"), "{t}");
+        assert!(t.lines().count() == 8, "{t}");
     }
 
     #[test]

@@ -1,0 +1,408 @@
+//! Persistent tuning cache + memoization keys (the AutoTVM-log analogue).
+//!
+//! AutoTVM keeps a JSON log of measured schedules so repeated tuning runs
+//! warm-start instead of re-measuring; this module is that idea for our
+//! native tuner. A [`TuningCache`] maps [`CacheKey`]s — `(GemminiConfig`
+//! fingerprint, GEMM shape key, trial budget)` — to the [`SearchResult`]
+//! the search produced, plus a parallel table of data-movement-op cycle
+//! results keyed by `(fingerprint, bytes_in, bytes_out)`. Because every
+//! entry carries the config fingerprint
+//! ([`crate::gemmini::config::GemminiConfig::fingerprint`]), entries from
+//! a different accelerator configuration are simply never hit —
+//! fingerprint invalidation without destroying other configs' entries
+//! (one cache file can serve a whole heterogeneous fleet).
+//!
+//! File format (version 1, written/parsed with [`crate::util::json`]):
+//!
+//! ```json
+//! {"version":1,
+//!  "layers":[{"cfg":"<16-hex fingerprint>","m":..,"n":..,"k":..,
+//!             "kernel":..,"bias":false,"measure_k":..,
+//!             "default_cycles":..,"best_cycles":..,"measured":..,
+//!             "space_size":..,
+//!             "schedule":{"mb":..,"dba":..,"dbb":..,"order":"n"}}],
+//!  "moves":[{"cfg":"<16-hex>","bytes_in":..,"bytes_out":..,"cycles":..}]}
+//! ```
+//!
+//! Loading is fail-soft: a missing, unreadable, corrupt or
+//! wrong-version file yields an empty cache (tuning proceeds cold and the
+//! next save rewrites the file) — a stale cache must never make tuning
+//! fail or change its results.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::codegen::ConvGeom;
+// (The config type itself is only named in docs/tests; keys carry its
+// `fingerprint()` as a plain u64.)
+use super::search::SearchResult;
+use super::space::{LoopOrder, RiscSchedule};
+
+const CACHE_VERSION: f64 = 1.0;
+
+/// The timing-relevant shape of a GEMM-shaped layer. Two layers with equal
+/// keys produce identical instruction streams modulo the store-path
+/// parameters (`scale`, `activation`), which cost a fixed one-cycle
+/// `ConfigSt` regardless of value — so their measured cycles, and
+/// therefore their [`SearchResult`], are identical. That is what makes
+/// per-shape memoization exact: YOLOv7-tiny's 58 conv layers collapse to
+/// ~36 unique keys, and post-quantization per-layer scales don't defeat
+/// the dedup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GeomKey {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Kernel size drives the A-load DMA fragmentation.
+    pub kernel: usize,
+    /// Bias adds accumulator-preload mvins to the stream.
+    pub bias: bool,
+}
+
+impl ConvGeom {
+    /// The memoization key of this layer's geometry (drops the label and
+    /// the timing-invariant store-path parameters).
+    pub fn shape_key(&self) -> GeomKey {
+        GeomKey { m: self.m, n: self.n, k: self.k, kernel: self.kernel, bias: self.bias }
+    }
+}
+
+/// Full memoization key of one layer-tuning result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// [`crate::gemmini::config::GemminiConfig::fingerprint`] of the
+    /// config the result was measured on.
+    pub config_fp: u64,
+    pub geom: GeomKey,
+    /// The AutoTVM trial budget the search ran with.
+    pub measure_k: usize,
+}
+
+/// In-memory + optionally file-backed store of tuning results.
+#[derive(Debug, Default)]
+pub struct TuningCache {
+    layers: HashMap<CacheKey, SearchResult>,
+    moves: HashMap<(u64, usize, usize), u64>,
+    path: Option<PathBuf>,
+}
+
+impl TuningCache {
+    /// A cache that lives only for this process (no file backing).
+    pub fn in_memory() -> Self {
+        Self::default()
+    }
+
+    /// Load a cache from `path`, remembering the path for [`save`].
+    /// Fail-soft: any read/parse/version problem yields an empty cache.
+    ///
+    /// [`save`]: TuningCache::save
+    pub fn load(path: impl AsRef<Path>) -> Self {
+        let path = path.as_ref().to_path_buf();
+        let mut cache = Self { path: Some(path.clone()), ..Self::default() };
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return cache;
+        };
+        let Ok(root) = Json::parse(&text) else {
+            return cache;
+        };
+        if root.get("version").and_then(Json::as_f64) != Some(CACHE_VERSION) {
+            return cache;
+        }
+        if let Some(arr) = root.get("layers").and_then(Json::as_arr) {
+            for e in arr {
+                if let Some((key, result)) = parse_layer_entry(e) {
+                    cache.layers.insert(key, result);
+                }
+            }
+        }
+        if let Some(arr) = root.get("moves").and_then(Json::as_arr) {
+            for e in arr {
+                if let Some((key, cycles)) = parse_move_entry(e) {
+                    cache.moves.insert(key, cycles);
+                }
+            }
+        }
+        cache
+    }
+
+    /// Write the cache to its backing file (no-op for in-memory caches).
+    /// Entries are sorted so the file is deterministic and diff-friendly.
+    /// Written via a per-process temp file + rename, so readers never see
+    /// a torn file and a crash mid-write cannot destroy the previous
+    /// cache (concurrent writers still resolve last-writer-wins on the
+    /// whole file).
+    pub fn save(&self) -> std::io::Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(format!(".{}.tmp", std::process::id()));
+        let tmp = PathBuf::from(tmp);
+        std::fs::write(&tmp, self.to_json().dump())?;
+        std::fs::rename(&tmp, path)
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn get_layer(&self, key: &CacheKey) -> Option<&SearchResult> {
+        self.layers.get(key)
+    }
+
+    pub fn insert_layer(&mut self, key: CacheKey, result: SearchResult) {
+        self.layers.insert(key, result);
+    }
+
+    pub fn get_move(&self, config_fp: u64, bytes_in: usize, bytes_out: usize) -> Option<u64> {
+        self.moves.get(&(config_fp, bytes_in, bytes_out)).copied()
+    }
+
+    pub fn insert_move(&mut self, config_fp: u64, bytes_in: usize, bytes_out: usize, cycles: u64) {
+        self.moves.insert((config_fp, bytes_in, bytes_out), cycles);
+    }
+
+    pub fn layer_entries(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn move_entries(&self) -> usize {
+        self.moves.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty() && self.moves.is_empty()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut lkeys: Vec<&CacheKey> = self.layers.keys().collect();
+        lkeys.sort_by_key(|c| {
+            (c.config_fp, c.geom.m, c.geom.n, c.geom.k, c.geom.kernel, c.geom.bias, c.measure_k)
+        });
+        let layers: Vec<Json> = lkeys
+            .into_iter()
+            .map(|key| layer_entry_json(key, &self.layers[key]))
+            .collect();
+        let mut mkeys: Vec<&(u64, usize, usize)> = self.moves.keys().collect();
+        mkeys.sort();
+        let moves: Vec<Json> = mkeys
+            .into_iter()
+            .map(|&(fp, bi, bo)| {
+                Json::obj(vec![
+                    ("cfg", Json::Str(format!("{fp:016x}"))),
+                    ("bytes_in", Json::Num(bi as f64)),
+                    ("bytes_out", Json::Num(bo as f64)),
+                    ("cycles", Json::Num(self.moves[&(fp, bi, bo)] as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(CACHE_VERSION)),
+            ("layers", Json::Arr(layers)),
+            ("moves", Json::Arr(moves)),
+        ])
+    }
+}
+
+fn layer_entry_json(key: &CacheKey, r: &SearchResult) -> Json {
+    let schedule = match &r.best_schedule {
+        None => Json::Null,
+        Some(s) => Json::obj(vec![
+            ("mb", Json::Num(s.mb as f64)),
+            ("dba", Json::Bool(s.double_buffer_a)),
+            ("dbb", Json::Bool(s.double_buffer_b)),
+            (
+                "order",
+                Json::Str(
+                    match s.order {
+                        LoopOrder::NOuter => "n",
+                        LoopOrder::KOuter => "k",
+                    }
+                    .into(),
+                ),
+            ),
+        ]),
+    };
+    Json::obj(vec![
+        ("cfg", Json::Str(format!("{:016x}", key.config_fp))),
+        ("m", Json::Num(key.geom.m as f64)),
+        ("n", Json::Num(key.geom.n as f64)),
+        ("k", Json::Num(key.geom.k as f64)),
+        ("kernel", Json::Num(key.geom.kernel as f64)),
+        ("bias", Json::Bool(key.geom.bias)),
+        ("measure_k", Json::Num(key.measure_k as f64)),
+        ("default_cycles", Json::Num(r.default_cycles as f64)),
+        ("best_cycles", Json::Num(r.best_cycles as f64)),
+        ("measured", Json::Num(r.measured as f64)),
+        ("space_size", Json::Num(r.space_size as f64)),
+        ("schedule", schedule),
+    ])
+}
+
+fn parse_layer_entry(e: &Json) -> Option<(CacheKey, SearchResult)> {
+    let config_fp = u64::from_str_radix(e.get("cfg")?.as_str()?, 16).ok()?;
+    let num = |field: &str| -> Option<usize> {
+        let v = e.get(field)?.as_f64()?;
+        (v >= 0.0 && v.fract() == 0.0).then_some(v as usize)
+    };
+    let geom = GeomKey {
+        m: num("m")?,
+        n: num("n")?,
+        k: num("k")?,
+        kernel: num("kernel")?,
+        bias: e.get("bias")?.as_bool()?,
+    };
+    let measure_k = num("measure_k")?;
+    let default_cycles = num("default_cycles")? as u64;
+    let best_cycles = num("best_cycles")? as u64;
+    // Reject inconsistent entries (the tuner never regresses below CISC).
+    if best_cycles > default_cycles {
+        return None;
+    }
+    let best_schedule = match e.get("schedule")? {
+        Json::Null => None,
+        s => {
+            let mb = s.get("mb")?.as_f64()?;
+            // Same integrality guard as the other numeric fields, plus
+            // the space's invariant that blocks hold ≥ 1 m-tile.
+            if mb < 1.0 || mb.fract() != 0.0 {
+                return None;
+            }
+            Some(RiscSchedule {
+                mb: mb as usize,
+                double_buffer_a: s.get("dba")?.as_bool()?,
+                double_buffer_b: s.get("dbb")?.as_bool()?,
+                order: match s.get("order")?.as_str()? {
+                    "n" => LoopOrder::NOuter,
+                    "k" => LoopOrder::KOuter,
+                    _ => return None,
+                },
+            })
+        }
+    };
+    Some((
+        CacheKey { config_fp, geom, measure_k },
+        SearchResult {
+            default_cycles,
+            best_cycles,
+            best_schedule,
+            measured: num("measured")?,
+            space_size: num("space_size")?,
+        },
+    ))
+}
+
+fn parse_move_entry(e: &Json) -> Option<((u64, usize, usize), u64)> {
+    let fp = u64::from_str_radix(e.get("cfg")?.as_str()?, 16).ok()?;
+    let num = |field: &str| -> Option<u64> {
+        let v = e.get(field)?.as_f64()?;
+        (v >= 0.0 && v.fract() == 0.0).then_some(v as u64)
+    };
+    Some((
+        (fp, num("bytes_in")? as usize, num("bytes_out")? as usize),
+        num("cycles")?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemmini::config::GemminiConfig;
+
+    fn sample_key(fp: u64) -> CacheKey {
+        CacheKey {
+            config_fp: fp,
+            geom: GeomKey { m: 1600, n: 24, k: 72, kernel: 3, bias: false },
+            measure_k: 4,
+        }
+    }
+
+    fn sample_result(sched: Option<RiscSchedule>) -> SearchResult {
+        SearchResult {
+            default_cycles: 1000,
+            best_cycles: if sched.is_some() { 700 } else { 1000 },
+            best_schedule: sched,
+            measured: 4,
+            space_size: 18,
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let path = std::env::temp_dir()
+            .join(format!("gemmini_edge_cache_rt_{}.json", std::process::id()));
+        let fp = GemminiConfig::ours_zcu102().fingerprint();
+        let mut c = TuningCache::load(&path);
+        let sched = RiscSchedule {
+            mb: 4,
+            double_buffer_a: true,
+            double_buffer_b: false,
+            order: LoopOrder::KOuter,
+        };
+        c.insert_layer(sample_key(fp), sample_result(Some(sched)));
+        c.insert_layer(
+            CacheKey { measure_k: 2, ..sample_key(fp) },
+            sample_result(None),
+        );
+        c.insert_move(fp, 4096, 1024, 555);
+        c.save().unwrap();
+        let back = TuningCache::load(&path);
+        assert_eq!(back.layer_entries(), 2);
+        assert_eq!(back.move_entries(), 1);
+        let got = back.get_layer(&sample_key(fp)).unwrap();
+        assert_eq!(got, &sample_result(Some(sched)));
+        assert_eq!(back.get_move(fp, 4096, 1024), Some(555));
+        // Different fingerprint → miss (config invalidation).
+        assert!(back.get_layer(&sample_key(fp ^ 1)).is_none());
+        assert_eq!(back.get_move(fp ^ 1, 4096, 1024), None);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_and_wrong_version_files_yield_empty_cache() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        for (tag, text) in [
+            ("garbage", "not json {{{"),
+            ("truncated", "{\"version\":1,\"layers\":[{\"cfg\":"),
+            ("wrong_version", "{\"version\":99,\"layers\":[],\"moves\":[]}"),
+            ("wrong_shape", "[1,2,3]"),
+        ] {
+            let path = dir.join(format!("gemmini_edge_cache_{tag}_{pid}.json"));
+            std::fs::write(&path, text).unwrap();
+            let c = TuningCache::load(&path);
+            assert!(c.is_empty(), "{tag} should load empty");
+            // The cache remains usable: it can be saved over the bad file.
+            assert!(c.save().is_ok());
+            std::fs::remove_file(&path).ok();
+        }
+        // Missing file: also empty, also fine.
+        let c = TuningCache::load(dir.join(format!("gemmini_edge_cache_missing_{pid}.json")));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn malformed_entries_are_skipped_not_fatal() {
+        let good = layer_entry_json(&sample_key(7), &sample_result(None)).dump();
+        let text = format!(
+            "{{\"version\":1,\"layers\":[{{\"cfg\":\"zz\"}},{good},{{\"m\":1}}],\"moves\":[{{}}]}}"
+        );
+        let path = std::env::temp_dir()
+            .join(format!("gemmini_edge_cache_partial_{}.json", std::process::id()));
+        std::fs::write(&path, text).unwrap();
+        let c = TuningCache::load(&path);
+        assert_eq!(c.layer_entries(), 1);
+        assert_eq!(c.move_entries(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn in_memory_save_is_noop() {
+        let mut c = TuningCache::in_memory();
+        c.insert_move(1, 2, 3, 4);
+        assert!(c.save().is_ok());
+        assert!(c.path().is_none());
+    }
+}

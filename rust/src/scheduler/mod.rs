@@ -13,14 +13,55 @@
 //! - [`cost_model`] — analytic latency estimate used to prune the search;
 //! - [`search`] — random + local search, with the top candidates measured
 //!   on the cycle-approximate simulator (AutoTVM's measure step);
-//! - [`tuner`] — whole-model orchestration producing the Figure 5 data.
+//! - [`cache`] — the persistent tuning cache (AutoTVM-log analogue) and
+//!   the memoization keys;
+//! - [`tuner`] — whole-model orchestration producing the Figure 5 data,
+//!   built on the [`TuningEngine`].
+//!
+//! # The tuning engine
+//!
+//! Whole-graph tuning is the workflow's dominant cost (measuring 58
+//! YOLOv7-tiny layers × candidates on the cycle simulator), so the tuner
+//! itself is an optimized hot path:
+//!
+//! - **Geometry memoization.** A layer's measured cycles depend only on
+//!   its GEMM shape `(m, n, k)`, kernel fragmentation, bias presence, the
+//!   accelerator config and the trial budget — so results are keyed by
+//!   `(`[`GemminiConfig::fingerprint`]`, `[`GeomKey`]`, measure_k)` and
+//!   repeated shapes (YOLO's ELAN blocks repeat heavily) are tuned once.
+//! - **Parallel search.** Unique geometries are measured concurrently
+//!   with `std::thread::scope` (no external crates); each worker owns one
+//!   reused simulator, and results land in per-job slots, so per-layer
+//!   cycles, report ordering and JSON bytes are identical at any thread
+//!   count.
+//! - **Persistent cache.** [`TuningCache`] reads/writes an
+//!   AutoTVM-log-style JSON file so repeated `repro` / `repro fleet` runs
+//!   warm-start (`repro tune --tuning-cache <path>`); the config
+//!   fingerprint in every key invalidates entries when the accelerator
+//!   changes, and corrupt/stale files degrade to a cold run, never an
+//!   error.
+//! - **Simulator reuse.** One timing simulator per worker (and one for
+//!   movement ops) replaces the old fresh-256 MiB-DRAM-per-candidate
+//!   path; reuse is cycle-exact (see [`crate::gemmini::sim`]).
+//!
+//! The free functions [`tune_graph`] / [`tune_graph_batch`] keep the
+//! original API on a throwaway engine; hold a [`TuningEngine`] across
+//! calls (or attach a cache file) to also reuse results *between* graphs,
+//! batch sizes and fleet replicas.
+//!
+//! [`GemminiConfig::fingerprint`]: crate::gemmini::config::GemminiConfig::fingerprint
 
+pub mod cache;
 pub mod codegen;
 pub mod cost_model;
 pub mod search;
 pub mod space;
 pub mod tuner;
 
+pub use cache::{CacheKey, GeomKey, TuningCache};
 pub use codegen::{layer_geometry, lower_cisc, lower_risc, ConvGeom};
+pub use search::{tune_layer, MeasureCtx, SearchResult};
 pub use space::{LoopOrder, RiscSchedule};
-pub use tuner::{tune_graph, tune_graph_batch, LayerTuning, TuningResult};
+pub use tuner::{
+    tune_graph, tune_graph_batch, EngineStats, LayerTuning, TuningEngine, TuningResult,
+};

@@ -16,7 +16,7 @@ use super::cost_model::{estimate_cisc, estimate_risc};
 use super::space::{enumerate, RiscSchedule};
 
 /// Result of tuning one layer.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SearchResult {
     /// Cycles of the CISC default schedule (measured).
     pub default_cycles: u64,
@@ -60,27 +60,76 @@ impl SearchResult {
     }
 }
 
-/// Measure one schedule on a fresh simulator (timing-only).
-fn measure(cfg: &GemminiConfig, geom: &ConvGeom, sched: Option<&RiscSchedule>) -> u64 {
-    let mut alloc = DramAllocator::new(1 << 28);
-    let bufs = alloc_buffers(geom, &mut alloc);
-    let mut sim = Simulator::new(cfg.clone(), 1 << 28);
-    let stream = match sched {
-        Some(s) => lower_risc(cfg, geom, &bufs, s),
-        None => lower_cisc(geom, &bufs),
-    };
-    sim.run(&stream).cycles
+/// Simulated DRAM capacity for layer measurements (fits the largest
+/// batched YOLOv7 GEMM with room to spare).
+const MEASURE_DRAM_BYTES: usize = 1 << 28;
+
+/// Reusable measurement state for schedule search: one timing-only
+/// simulator shared across every candidate (and every layer) a tuning
+/// worker measures, instead of reallocating the 256 MiB simulated DRAM
+/// per candidate. Reuse is cycle-exact: `Simulator::run` measures from
+/// the stream's own start and all residual hazard state is bounded by
+/// the previous stream's horizon (see `gemmini::sim` module docs).
+/// `sim_instrs` accumulates instructions simulated through this context —
+/// the deterministic work proxy the tuning engine's perf gate checks.
+pub struct MeasureCtx {
+    cfg: GemminiConfig,
+    sim: Simulator,
+    /// Instructions simulated (post CISC expansion) since construction.
+    pub sim_instrs: u64,
+}
+
+impl MeasureCtx {
+    pub fn new(cfg: &GemminiConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            sim: Simulator::new(cfg.clone(), MEASURE_DRAM_BYTES),
+            sim_instrs: 0,
+        }
+    }
+
+    /// Measure one schedule (timing-only).
+    fn measure(
+        &mut self,
+        geom: &ConvGeom,
+        bufs: &super::codegen::LayerBuffers,
+        sched: Option<&RiscSchedule>,
+    ) -> u64 {
+        let stream = match sched {
+            Some(s) => lower_risc(&self.cfg, geom, bufs, s),
+            None => lower_cisc(geom, bufs),
+        };
+        let res = self.sim.run(&stream);
+        self.sim_instrs += res.instrs;
+        res.cycles
+    }
 }
 
 /// Tune one layer: cost-model ranking + top-k measurement + CISC fallback.
 pub fn tune_layer(cfg: &GemminiConfig, geom: &ConvGeom, measure_k: usize) -> SearchResult {
-    let default_cycles = measure(cfg, geom, None);
-    let space = enumerate(cfg, geom.kt(cfg.dim), geom.nt(cfg.dim));
+    tune_layer_with(&mut MeasureCtx::new(cfg), geom, measure_k)
+}
+
+/// [`tune_layer`] against a caller-owned [`MeasureCtx`] (the tuning
+/// engine keeps one per worker thread so simulator state is reused across
+/// layers).
+pub fn tune_layer_with(
+    ctx: &mut MeasureCtx,
+    geom: &ConvGeom,
+    measure_k: usize,
+) -> SearchResult {
+    // Buffers are allocated once per layer from a fresh bump allocator,
+    // so every candidate (and every layer) sees identical addresses.
+    let mut alloc = DramAllocator::new(MEASURE_DRAM_BYTES);
+    let bufs = alloc_buffers(geom, &mut alloc);
+    let default_cycles = ctx.measure(geom, &bufs, None);
+    let dim = ctx.cfg.dim;
+    let space = enumerate(&ctx.cfg, geom.kt(dim), geom.nt(dim));
     let mut ranked: Vec<(f64, RiscSchedule)> =
-        space.iter().map(|s| (estimate_risc(cfg, geom, s), *s)).collect();
+        space.iter().map(|s| (estimate_risc(&ctx.cfg, geom, s), *s)).collect();
     ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     // Skip measuring candidates the model says are far worse than CISC.
-    let cisc_est = estimate_cisc(cfg, geom);
+    let cisc_est = estimate_cisc(&ctx.cfg, geom);
     let mut best_cycles = default_cycles;
     let mut best_schedule = None;
     let mut measured = 0;
@@ -88,7 +137,7 @@ pub fn tune_layer(cfg: &GemminiConfig, geom: &ConvGeom, measure_k: usize) -> Sea
         if *est > 3.0 * cisc_est {
             break;
         }
-        let cycles = measure(cfg, geom, Some(s));
+        let cycles = ctx.measure(geom, &bufs, Some(s));
         measured += 1;
         if cycles < best_cycles {
             best_cycles = cycles;
@@ -138,6 +187,23 @@ mod tests {
         assert!(r.improved(), "{r:?}");
         assert!(r.speedup() > 1.2, "speedup {}", r.speedup());
         assert!(r.best_schedule.is_some());
+    }
+
+    #[test]
+    fn reused_context_matches_fresh_measurements() {
+        // One simulator reused across layers and candidates must be
+        // cycle-identical to the fresh-simulator-per-measurement path.
+        let cfg = small_cfg();
+        let mut ctx = MeasureCtx::new(&cfg);
+        for g in [geom(64, 16, 32, 1), geom(16, 8, 72, 3), geom(256, 8, 8, 1)] {
+            let shared = tune_layer_with(&mut ctx, &g, 4);
+            let fresh = tune_layer(&cfg, &g, 4);
+            assert_eq!(shared.default_cycles, fresh.default_cycles, "{}", g.label);
+            assert_eq!(shared.best_cycles, fresh.best_cycles, "{}", g.label);
+            assert_eq!(shared.best_schedule, fresh.best_schedule, "{}", g.label);
+            assert_eq!(shared.measured, fresh.measured, "{}", g.label);
+        }
+        assert!(ctx.sim_instrs > 0);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 use crate::gemmini::config::GemminiConfig;
 
 /// Loop nesting inside one m-block: which of the (n, k) loops is outer.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LoopOrder {
     /// `for n { for k { preload B(k,n); for m: compute } }` — B loaded
     /// kt times per (block, n); accumulator written once per n.
@@ -14,8 +14,10 @@ pub enum LoopOrder {
     KOuter,
 }
 
-/// A RISC-type schedule for one GEMM-shaped layer.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// A RISC-type schedule for one GEMM-shaped layer. `Eq`/`Hash` so tuned
+/// schedules can serve as memoization-cache values/keys
+/// (see [`super::cache`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct RiscSchedule {
     /// m-tiles processed per block (A block cached in scratchpad across
     /// the whole n/k loop — the reuse CISC's fixed schedule lacks).

@@ -15,7 +15,8 @@ use crate::baselines::Platform;
 use crate::energy::FpgaPowerModel;
 use crate::fpga::resources::Board;
 use crate::gemmini::config::GemminiConfig;
-use crate::scheduler::TuningResult;
+use crate::ir::Graph;
+use crate::scheduler::{TuningEngine, TuningResult};
 
 /// Default host-dispatch overhead per accelerator invocation, seconds
 /// (runtime dispatch + request marshalling; the Section VI system pays
@@ -91,6 +92,33 @@ impl GemminiDevice {
             per_frame_s,
             compute_util,
             batch_cap,
+        }
+    }
+
+    /// Build a device through a shared [`TuningEngine`]: tunes the graph
+    /// at batch 1 (and, when `batch >= 2`, at the serving batch size) and
+    /// derives the latency decomposition like
+    /// [`from_tuning`](Self::from_tuning) /
+    /// [`from_batch_tuning`](Self::from_batch_tuning). Because the engine
+    /// memoizes by geometry (and can be cache-file backed), stamping out N
+    /// fleet replicas costs one schedule search, not N — replicas 2..N are
+    /// pure cache hits.
+    pub fn from_engine(
+        label: &str,
+        board: Board,
+        engine: &mut TuningEngine,
+        g: &Graph,
+        measure_k: usize,
+        batch: usize,
+        dispatch_s: f64,
+    ) -> Self {
+        let config = engine.config().clone();
+        let single = engine.tune_graph(g, measure_k);
+        if batch >= 2 {
+            let batched = engine.tune_graph_batch(g, measure_k, batch);
+            Self::from_batch_tuning(label, board, config, &single, &batched, batch, dispatch_s)
+        } else {
+            Self::from_tuning(label, board, config, &single, dispatch_s)
         }
     }
 
@@ -284,6 +312,32 @@ mod tests {
             (b1_tuned - b1_analytic).abs() <= 0.06 * b1_analytic,
             "batch-1 anchors diverge: {b1_tuned} vs {b1_analytic}"
         );
+    }
+
+    #[test]
+    fn engine_built_replicas_are_cache_hits_and_match_manual_path() {
+        let cfg = GemminiConfig::ours_zcu102();
+        let mut g = yolov7_tiny(96, ModelVariant::Pruned88, 8);
+        crate::passes::replace_activations(&mut g);
+        let batch = 4;
+        let mut engine = crate::scheduler::TuningEngine::new(cfg.clone());
+        let d1 = GemminiDevice::from_engine(
+            "replica 0", Board::Zcu102, &mut engine, &g, 1, batch, DEFAULT_DISPATCH_S,
+        );
+        let d2 = GemminiDevice::from_engine(
+            "replica 1", Board::Zcu102, &mut engine, &g, 1, batch, DEFAULT_DISPATCH_S,
+        );
+        // Replica 2 simulated nothing: its last tuning call was all hits.
+        assert_eq!(engine.last_stats().sim_instrs, 0);
+        assert_eq!(engine.last_stats().tuned, 0);
+        assert!(d1.weights_s == d2.weights_s && d1.per_frame_s == d2.per_frame_s);
+        // And the decomposition equals the manual two-tuning construction.
+        let t1 = tune_graph(&cfg, &g, 1);
+        let tb = crate::scheduler::tune_graph_batch(&cfg, &g, 1, batch);
+        let manual = GemminiDevice::from_batch_tuning(
+            "manual", Board::Zcu102, cfg, &t1, &tb, batch, DEFAULT_DISPATCH_S,
+        );
+        assert!(manual.weights_s == d1.weights_s && manual.per_frame_s == d1.per_frame_s);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Tuning-engine invariants: persistent-cache correctness (cold vs warm
+//! byte-identical output, fingerprint invalidation, corrupt-file
+//! tolerance), parallel determinism across thread counts, and the perf
+//! smoke gate `make check` runs (memoized + warm tuning must simulate a
+//! small fraction of the cold path's instructions — wall-clock-free).
+
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::ir::{ActivationKind, Graph, GraphBuilder, PaddingMode};
+use gemmini_edge::passes::replace_activations;
+use gemmini_edge::scheduler::{tune_graph, TuningCache, TuningEngine};
+use gemmini_edge::util::Rng;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gemmini_edge_tc_{tag}_{}.json", std::process::id()))
+}
+
+/// A small random CNN: a few convs (some repeated shapes thanks to the
+/// limited channel/kernel palette), occasional pools so movement ops are
+/// exercised too.
+fn small_graph(seed: u64) -> Graph {
+    let mut r = Rng::new(seed);
+    let mut b = GraphBuilder::new(format!("rand-{seed}"));
+    let mut x = b.input("x", vec![1, 32, 32, 8]);
+    let layers = r.range(3, 7);
+    for _ in 0..layers {
+        let oc = 8 * r.range(1, 4);
+        let k = *r.choose(&[1usize, 3]);
+        let stride = if b.shape(x)[1] >= 8 && r.chance(0.3) { 2 } else { 1 };
+        x = b.conv2d(x, oc, k, stride, PaddingMode::Same, ActivationKind::Relu, None, None);
+        if b.shape(x)[1] >= 4 && r.chance(0.3) {
+            x = b.maxpool(x, 2, 2);
+        }
+    }
+    b.finish(&[x])
+}
+
+fn cfg_for(i: usize) -> GemminiConfig {
+    match i % 5 {
+        0 => GemminiConfig::ours_zcu102(),
+        1 => GemminiConfig::original_zcu102(),
+        2 => GemminiConfig::ours_zcu111(),
+        3 => GemminiConfig {
+            dim: 8,
+            scratchpad_kib: 64,
+            accumulator_kib: 32,
+            ..GemminiConfig::original_zcu102()
+        },
+        _ => GemminiConfig {
+            dim: 16,
+            scratchpad_kib: 128,
+            accumulator_kib: 64,
+            ..GemminiConfig::ours_zcu102()
+        },
+    }
+}
+
+#[test]
+fn parallel_tuning_is_deterministic_across_thread_counts() {
+    for seed in 0..5u64 {
+        let g = small_graph(seed + 100);
+        let cfg = cfg_for(seed as usize);
+        let mut serial = TuningEngine::new(cfg.clone()).with_threads(1);
+        let t1 = serial.tune_graph(&g, 3);
+        let mut wide = TuningEngine::new(cfg.clone()).with_threads(8);
+        let t8 = wide.tune_graph(&g, 3);
+        // Identical per-layer results AND identical report ordering.
+        assert_eq!(t1.layers.len(), t8.layers.len(), "seed {seed}");
+        for (a, b) in t1.layers.iter().zip(&t8.layers) {
+            assert_eq!(a.label, b.label, "seed {seed}");
+            assert_eq!(a.result.best_cycles, b.result.best_cycles, "seed {seed} {}", a.label);
+            assert_eq!(
+                a.result.default_cycles, b.result.default_cycles,
+                "seed {seed} {}",
+                a.label
+            );
+        }
+        assert_eq!(t1.move_cycles, t8.move_cycles, "seed {seed}");
+        assert_eq!(t1.to_json().dump(), t8.to_json().dump(), "seed {seed}");
+        // The free function (auto thread count) agrees too.
+        let t_free = tune_graph(&cfg, &g, 3);
+        assert_eq!(t_free.to_json().dump(), t1.to_json().dump(), "seed {seed}");
+    }
+}
+
+#[test]
+fn cold_and_cache_warm_runs_are_byte_identical() {
+    let g = small_graph(7);
+    let cfg = GemminiConfig::ours_zcu102();
+    let path = tmp_path("warm");
+    let _ = std::fs::remove_file(&path);
+
+    // Cold run against an (empty) file-backed cache, then persist.
+    let mut cold = TuningEngine::new(cfg.clone()).with_cache(TuningCache::load(&path));
+    let t_cold = cold.tune_graph(&g, 3);
+    assert!(cold.last_stats().tuned > 0);
+    cold.save_cache().unwrap();
+    assert!(path.exists());
+
+    // Warm run in a fresh engine: zero simulation, identical bytes.
+    let mut warm = TuningEngine::new(cfg).with_cache(TuningCache::load(&path));
+    let t_warm = warm.tune_graph(&g, 3);
+    let s = warm.last_stats();
+    assert_eq!(s.tuned, 0, "{s:?}");
+    assert_eq!(s.cache_hits, s.conv_layers, "{s:?}");
+    assert_eq!(s.move_memo_hits, s.move_ops, "{s:?}");
+    assert_eq!(s.sim_instrs, 0, "{s:?}");
+    assert_eq!(t_cold.to_json().dump(), t_warm.to_json().dump());
+    assert_eq!(t_cold.move_cycles, t_warm.move_cycles);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn config_fingerprint_mismatch_invalidates_cache_entries() {
+    let g = small_graph(11);
+    let path = tmp_path("fp");
+    let _ = std::fs::remove_file(&path);
+
+    let cfg_a = GemminiConfig::ours_zcu102();
+    let mut e_a = TuningEngine::new(cfg_a.clone()).with_cache(TuningCache::load(&path));
+    e_a.tune_graph(&g, 2);
+    e_a.save_cache().unwrap();
+
+    // A different accelerator config sees none of those entries…
+    let cfg_b = GemminiConfig::original_zcu102();
+    assert_ne!(cfg_a.fingerprint(), cfg_b.fingerprint());
+    let mut e_b = TuningEngine::new(cfg_b).with_cache(TuningCache::load(&path));
+    e_b.tune_graph(&g, 2);
+    let s = e_b.last_stats();
+    assert_eq!(s.cache_hits, 0, "{s:?}");
+    assert_eq!(s.move_memo_hits, 0, "{s:?}");
+    assert_eq!(s.tuned, s.unique_geometries, "{s:?}");
+    e_b.save_cache().unwrap();
+
+    // …while the original config's entries survive alongside B's.
+    let mut e_a2 = TuningEngine::new(cfg_a).with_cache(TuningCache::load(&path));
+    e_a2.tune_graph(&g, 2);
+    let s = e_a2.last_stats();
+    assert_eq!(s.tuned, 0, "{s:?}");
+    assert_eq!(s.sim_instrs, 0, "{s:?}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn corrupted_cache_files_are_ignored_gracefully() {
+    let g = small_graph(13);
+    let cfg = GemminiConfig::ours_zcu102();
+    let reference = tune_graph(&cfg, &g, 2).to_json().dump();
+    for text in ["not json at all {{{", "{\"version\":42,\"layers\":[]}", "", "[]"] {
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, text).unwrap();
+        let mut e = TuningEngine::new(cfg.clone()).with_cache(TuningCache::load(&path));
+        let t = e.tune_graph(&g, 2);
+        // Degrades to a cold run with identical results…
+        assert!(e.last_stats().tuned > 0);
+        assert_eq!(t.to_json().dump(), reference);
+        // …and the next save repairs the file for a warm follow-up.
+        e.save_cache().unwrap();
+        let mut warm = TuningEngine::new(cfg.clone()).with_cache(TuningCache::load(&path));
+        warm.tune_graph(&g, 2);
+        assert_eq!(warm.last_stats().sim_instrs, 0);
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// The `make check` perf smoke gate (deterministic — counts simulated
+/// instructions, no wall clock): on YOLOv7-tiny, memoized tuning must
+/// beat the cold path outright, and a cache-warm repeat must simulate
+/// ≤ 40 % of the cold path's instructions (it is in fact 0) while
+/// producing bit-identical JSON.
+#[test]
+fn perf_smoke_memoized_instruction_budget() {
+    let cfg = GemminiConfig::ours_zcu102();
+    let mut g = yolov7_tiny(160, ModelVariant::Pruned88, 8);
+    replace_activations(&mut g);
+
+    let mut cold = TuningEngine::new(cfg.clone()).with_memoization(false);
+    let t_cold = cold.tune_graph(&g, 2);
+    let cold_instrs = cold.last_stats().sim_instrs;
+    assert!(cold_instrs > 0);
+
+    let mut engine = TuningEngine::new(cfg);
+    let t_memo = engine.tune_graph(&g, 2);
+    let memo_instrs = engine.last_stats().sim_instrs;
+    let t_warm = engine.tune_graph(&g, 2);
+    let warm_instrs = engine.last_stats().sim_instrs;
+
+    // Memoization strictly reduces simulated work (YOLO repeats shapes).
+    assert!(
+        memo_instrs < cold_instrs,
+        "memoized {memo_instrs} !< cold {cold_instrs}"
+    );
+    // The gate: a memoized+warm rerun stays within 40 % of cold.
+    assert!(
+        warm_instrs * 100 <= cold_instrs * 40,
+        "warm {warm_instrs} > 40% of cold {cold_instrs}"
+    );
+    assert_eq!(warm_instrs, 0, "a warm rerun should be simulation-free");
+    // Bit-identical tuning output across all three paths.
+    let cold_json = t_cold.to_json().dump();
+    assert_eq!(cold_json, t_memo.to_json().dump());
+    assert_eq!(cold_json, t_warm.to_json().dump());
+}
