@@ -3,13 +3,17 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy fmt fmt-drift featurecheck perfsmoke artifacts fleet
+.PHONY: check build test clippy fmt fmt-drift featurecheck perfsmoke energysmoke artifacts fleet
 
-# The perf smoke gate (`perfsmoke`) is enforced by `check` through the
-# `test` target: `cargo test -q` runs the gate assertion
-# (tests/tuning_cache.rs::perf_smoke_memoized_instruction_budget), so a
-# memoization regression fails `make check` without re-running the
-# suite's heaviest test twice. `make perfsmoke` runs the gate alone.
+# The perf smoke gate (`perfsmoke`) and the energy smoke gate
+# (`energysmoke`) are enforced by `check` through the `test` target:
+# `cargo test -q` runs both gate assertions
+# (tests/tuning_cache.rs::perf_smoke_memoized_instruction_budget and
+# tests/energy_ledger.rs::hetero_policy_never_picks_dominated_device,
+# plus the rest of tests/energy_ledger.rs and the per-class properties
+# in tests/serving_invariants.rs), so a memoization or device-selection
+# regression fails `make check` without re-running the suite's heaviest
+# tests twice. `make perfsmoke` / `make energysmoke` run the gates alone.
 check: build test clippy fmt-drift featurecheck
 
 build:
@@ -51,6 +55,14 @@ featurecheck:
 # part of `make check` via the `test` target.)
 perfsmoke:
 	$(CARGO) test -q --test tuning_cache perf_smoke_memoized_instruction_budget
+
+# Energy smoke gate, standalone: the heterogeneous cheapest-feasible
+# policy must never provision a strictly dominated device (another
+# catalog entry at least as fast, at least as cool, with one strict),
+# across 200 random catalogs/deficits. Deterministic — seeded property
+# test, no wall clock. (Also runs as part of `make check` via `test`.)
+energysmoke:
+	$(CARGO) test -q --test energy_ledger hetero_policy_never_picks_dominated_device
 
 # AOT-compile the JAX/Pallas detector to artifacts/ (PJRT runtime input).
 artifacts:

@@ -11,12 +11,17 @@
 //!    a 4-device heterogeneous shard pool.
 //! 3. A bursty multi-camera trace (object counts from the scene
 //!    generator's distribution) is served open-loop through dynamic
-//!    batching, bounded admission and work stealing; the report prints
-//!    p50/p99 latency, aggregate FPS, per-device utilization and power.
+//!    batching, bounded admission and work stealing — with per-camera
+//!    SLO classes (interactive / standard / batchable) carried through
+//!    class-aware shedding and batching; the report prints p50/p99
+//!    latency, aggregate FPS, per-class SLO attainment, per-device
+//!    utilization/power, and the fleet energy ledger.
 //! 4. The same city grows: twice the cameras arrive as *closed-loop*
 //!    clients (each holds ≤ K frames in flight) and the autoscaler
-//!    provisions extra ZCU102 replicas between DES epochs — scaling
-//!    events and the device-count trajectory land in the fleet table.
+//!    provisions from a heterogeneous device catalog between DES epochs
+//!    — each grow takes the cheapest device predicted to restore the
+//!    SLO, scale-in drains the most expensive device first, and the
+//!    scaling events land in the fleet table next to the joules.
 
 use gemmini_edge::baselines::xavier;
 use gemmini_edge::coordinator::{deploy, DeployOptions};
@@ -25,20 +30,15 @@ use gemmini_edge::dataset::scenes::{validation_set, SceneConfig};
 use gemmini_edge::fpga::resources::Board;
 use gemmini_edge::gemmini::config::GemminiConfig;
 use gemmini_edge::ir::interp::Value;
-use gemmini_edge::report::fleet_table;
+use gemmini_edge::report::{catalog_table, fleet_table};
 use gemmini_edge::scheduler::tune_graph;
 use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
 use gemmini_edge::serving::{
-    multi_camera_trace, simulate, simulate_closed_loop_autoscaled, AutoscaleConfig, Autoscaler,
-    Backend, BaselineDevice, BatchPolicy, ClosedLoopConfig, GemminiDevice, ShardPool, SimConfig,
-    TargetUtilization,
+    assign_slo_classes, capacity_fps, multi_camera_trace, simulate,
+    simulate_closed_loop_autoscaled_hetero, AutoscaleConfig, Autoscaler, BaselineDevice,
+    BatchPolicy, ClosedLoopConfig, DeviceCatalog, DrainOrder, GemminiDevice, ShardPool,
+    ShedPolicy, SimConfig, TargetUtilization,
 };
-
-/// Sustainable FPS of a device under a batching cap.
-fn capacity_fps(dev: &dyn Backend, max_batch: usize) -> f64 {
-    let b = max_batch.min(dev.max_batch()).max(1);
-    b as f64 / dev.batch_latency_s(b)
-}
 
 fn main() {
     let size = 96;
@@ -82,9 +82,12 @@ fn main() {
     let cameras = ((0.8 * fleet_fps / fps_per_cam) as usize).max(3);
     let horizon = 10.0;
     let scene_cfg = SceneConfig { size, ..Default::default() };
-    let trace = multi_camera_trace(&scene_cfg, cameras, fps_per_cam, horizon, 20240710);
+    let mut trace = multi_camera_trace(&scene_cfg, cameras, fps_per_cam, horizon, 20240710);
+    // Per-camera SLO classes: cameras cycle interactive / standard /
+    // batchable, and overload sheds the lowest class first.
+    assign_slo_classes(&mut trace);
     println!(
-        "\n== fleet: {} devices, {:.0} FPS capacity, {} cameras × {:.0} FPS for {:.0} s ({} frames) ==",
+        "\n== fleet: {} devices, {:.0} FPS capacity, {} cameras × {:.0} FPS for {:.0} s ({} frames, classed) ==",
         pool.len(),
         fleet_fps,
         cameras,
@@ -98,6 +101,7 @@ fn main() {
         queue_depth: 64,
         slo_s: 0.100,
         work_stealing: true,
+        shed: ShedPolicy::ClassAware,
         ..Default::default()
     };
     let report = simulate(&mut pool, &trace, &cfg);
@@ -115,11 +119,13 @@ fn main() {
         100.0 * (report.throughput_fps() / r1.throughput_fps() - 1.0)
     );
 
-    // ---- 4. the city doubles: closed-loop cameras + autoscaling ----
+    // ---- 4. the city doubles: closed-loop cameras + heterogeneous
+    // autoscaling ----
     // Twice the cameras, each a closed-loop client holding ≤ 3 frames in
     // flight; the pool starts from the two tuned boards and the
-    // autoscaler provisions ZCU102 replicas (1 s warm-up) as utilization
-    // climbs.
+    // autoscaler provisions from a device catalog (1 s warm-up): the
+    // cheapest device predicted to restore the SLO wins each grow, and
+    // the most expensive device drains first on scale-in.
     let clients = ClosedLoopConfig {
         cameras: 2 * cameras,
         max_outstanding: 3,
@@ -127,6 +133,7 @@ fn main() {
         think_s: 0.005,
         horizon_s: horizon,
         seed: 20240711,
+        classed: true,
     };
     let mut auto = Autoscaler::new(
         AutoscaleConfig {
@@ -135,24 +142,31 @@ fn main() {
             min_devices: 2,
             max_devices: 8,
             cooldown_epochs: 0,
+            drain_order: DrainOrder::MostExpensiveFirst,
         },
         Box::new(TargetUtilization::default()),
     );
-    let mut factory = |i: usize| -> Box<dyn Backend> {
-        Box::new(GemminiDevice::from_tuning(
-            &format!("ZCU102-Gemmini (replica {i})"),
-            Board::Zcu102,
-            GemminiConfig::ours_zcu102(),
-            &dep.tuning,
-            DEFAULT_DISPATCH_S,
-        ))
-    };
+    let catalog = DeviceCatalog::paper_catalog(
+        cfg.batch.max_batch,
+        &dep.tuning,
+        None,
+        false,
+        &t_orig,
+        Some(g.gops()),
+        DEFAULT_DISPATCH_S,
+    );
     let mut small_pool = ShardPool::paper_boards(&dep.tuning, DEFAULT_DISPATCH_S);
-    let scaled =
-        simulate_closed_loop_autoscaled(&mut small_pool, &clients, &cfg, &mut auto, &mut factory);
     println!(
-        "\n== {} closed-loop cameras (window 3) on an autoscaled pool ==",
+        "\n== {} closed-loop cameras (window 3, classed) on a heterogeneous autoscaled pool ==",
         clients.cameras
+    );
+    print!("{}", catalog_table(&catalog));
+    let scaled = simulate_closed_loop_autoscaled_hetero(
+        &mut small_pool,
+        &clients,
+        &cfg,
+        &mut auto,
+        &catalog,
     );
     println!("offered {} frames (self-paced by the window)", scaled.offered);
     print!("{}", fleet_table(&scaled));

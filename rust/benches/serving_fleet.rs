@@ -9,6 +9,12 @@
 //!    two-board pool sheds once the ramp passes its capacity; the
 //!    autoscaler provisions batch-tuned ZCU102 replicas (with a warm-up
 //!    delay) and holds p99 under the SLO through the top of the ramp.
+//! 3. Homogeneous vs *energy-aware heterogeneous* scale-out on a mild
+//!    ramp: the homogeneous policy can only add more tuned ZCU102
+//!    replicas; the heterogeneous policy provisions from a device
+//!    catalog and picks the cheapest device that restores the SLO — a
+//!    small deficit gets the cooler original-config board, not another
+//!    full-power replica, and the fleet energy ledger shows the joules.
 //!
 //! Knobs: `SF_SIZE`, `SF_TRIALS`, `SF_RATE_X` (offered load as a multiple
 //! of unbatched capacity).
@@ -16,13 +22,14 @@
 use gemmini_edge::fpga::resources::Board;
 use gemmini_edge::gemmini::config::GemminiConfig;
 use gemmini_edge::passes::replace_activations;
-use gemmini_edge::report::fleet_table;
+use gemmini_edge::report::{catalog_table, fleet_table};
 use gemmini_edge::scheduler::{tune_graph, tune_graph_batch};
 use gemmini_edge::serving::admission::ShedPolicy;
 use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
 use gemmini_edge::serving::{
-    poisson_trace, simulate, simulate_autoscaled, AutoscaleConfig, Autoscaler, Backend,
-    BatchPolicy, GemminiDevice, Request, ShardPool, SimConfig, TargetUtilization,
+    capacity_fps, poisson_trace, simulate, simulate_autoscaled, simulate_autoscaled_hetero,
+    AutoscaleConfig, Autoscaler, Backend, BatchPolicy, DeviceCatalog, DrainOrder, GemminiDevice,
+    Request, ShardPool, SimConfig, TargetUtilization,
 };
 use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
 
@@ -62,7 +69,7 @@ fn main() {
 
     // Unbatched fleet capacity: 1 / single-invocation latency per device.
     let pool = mk_pool();
-    let cap_1: f64 = pool.devices.iter().map(|d| 1.0 / d.backend.batch_latency_s(1)).sum();
+    let cap_1: f64 = pool.devices.iter().map(|d| capacity_fps(d.backend.as_ref(), 1)).sum();
     drop(pool);
     let rate = rate_x * cap_1;
     let horizon = 20.0;
@@ -133,14 +140,8 @@ fn main() {
     // *and* replicas) bound the experiment: rates are multiples of
     // capacity, and the SLO sits a safe factor above the full-queue
     // sojourn so bounded queues + drop-oldest keep it achievable.
-    let cap_b: f64 = pool
-        .devices
-        .iter()
-        .map(|d| {
-            let b = batch.min(d.backend.max_batch()).max(1);
-            b as f64 / d.backend.batch_latency_s(b)
-        })
-        .sum();
+    let cap_b: f64 =
+        pool.devices.iter().map(|d| capacity_fps(d.backend.as_ref(), batch)).sum();
     let probe = mk_replica(0);
     let bl8_max = pool
         .devices
@@ -164,6 +165,7 @@ fn main() {
         shed: ShedPolicy::DropOldest,
         slo_s: slo,
         work_stealing: true,
+        ..Default::default()
     };
 
     let mut fixed_pool = mk_pool();
@@ -177,6 +179,7 @@ fn main() {
             min_devices: 2,
             max_devices: 10,
             cooldown_epochs: 0,
+            ..Default::default()
         },
         Box::new(TargetUtilization::default()),
     );
@@ -207,4 +210,97 @@ fn main() {
     );
     assert!(scaled.devices_peak > scaled.devices_start, "the pool must actually grow");
     assert!(!scaled.scaling.is_empty(), "scaling events must be visible in the report");
+
+    // ---- experiment 3: homogeneous vs energy-aware heterogeneous ----
+    // Catalog: the full-power replica, the paper boards, the original
+    // 16×16 config (cooler, slower) and nothing else exotic — exactly
+    // the hardware the paper tables compare.
+    let orig_cfg = GemminiConfig::original_zcu102();
+    let t_orig = tune_graph(&orig_cfg, &g, trials);
+    // Two-entry catalog (no ZCU111, no GPU): the experiment isolates the
+    // full-replica-vs-original choice.
+    let catalog = DeviceCatalog::paper_catalog(
+        batch,
+        &tuning,
+        Some(&tuning_b),
+        false,
+        &t_orig,
+        None,
+        DEFAULT_DISPATCH_S,
+    );
+    print!("\n{}", catalog_table(&catalog));
+    let replica_w = catalog.entries()[0].busy_power_w;
+    let orig_entry = &catalog.entries()[1];
+    assert!(
+        orig_entry.busy_power_w < replica_w,
+        "the original config must be the cheaper catalog entry: {} !< {replica_w}",
+        orig_entry.busy_power_w
+    );
+    // A mild overload whose deficit the cheap entry can cover by itself
+    // (0.35× its capacity, so even a Poisson burst in the demand
+    // estimate stays under it): the cheapest-feasible rule must then
+    // prefer it over another full-power replica. The SLO leaves room
+    // for the slower device's batched service time.
+    let slo3 = 5.0 * orig_entry.service_latency_s.max(bl8_max) + 0.050;
+    let rate3 = cap_b + 0.35 * orig_entry.fps_capacity;
+    let ramp3 = [(0.5 * cap_b, 10.0), (rate3, 20.0)];
+    let trace3 = ramp_trace(&ramp3, 20240712);
+    let cfg3 = SimConfig { slo_s: slo3, ..cfg.clone() };
+    println!(
+        "\n== hetero vs homogeneous: ramp 0.5x -> {:.0} FPS (deficit ≈ {:.0} FPS), SLO {:.0} ms ==",
+        rate3,
+        0.35 * orig_entry.fps_capacity,
+        slo3 * 1e3
+    );
+    let mk_auto = |drain: DrainOrder| {
+        Autoscaler::new(
+            AutoscaleConfig {
+                epoch_s: 0.5,
+                provision_delay_s: 1.0,
+                min_devices: 2,
+                max_devices: 10,
+                cooldown_epochs: 0,
+                drain_order: drain,
+            },
+            Box::new(TargetUtilization::default()),
+        )
+    };
+    let mut homo_auto = mk_auto(DrainOrder::NewestFirst);
+    let mut homo_factory = |i: usize| -> Box<dyn Backend> { Box::new(mk_replica(i)) };
+    let homo =
+        simulate_autoscaled(&mut mk_pool(), &trace3, &cfg3, &mut homo_auto, &mut homo_factory);
+    println!("-- homogeneous (always a full ZCU102 replica) --");
+    print!("{}", fleet_table(&homo));
+    let mut het_auto = mk_auto(DrainOrder::MostExpensiveFirst);
+    let het = simulate_autoscaled_hetero(&mut mk_pool(), &trace3, &cfg3, &mut het_auto, &catalog);
+    println!("\n-- heterogeneous (cheapest feasible device) --");
+    print!("{}", fleet_table(&het));
+
+    let het_provisioned: Vec<&str> =
+        het.devices.iter().skip(2).map(|d| d.name.as_ref()).collect();
+    println!(
+        "\nhetero verdict: provisioned {:?}; energy {:.0} J vs homogeneous {:.0} J; \
+         fleet {:.2} vs {:.2} GOP/s/W",
+        het_provisioned,
+        het.energy.total_j(),
+        homo.energy.total_j(),
+        het.energy.fleet_gops_per_w(),
+        homo.energy.fleet_gops_per_w(),
+    );
+    assert_eq!(het.offered, het.completed + het.shed, "hetero conservation");
+    assert!(het.devices_peak > het.devices_start, "the hetero pool must grow");
+    assert!(
+        het_provisioned.iter().any(|n| n.contains("original")),
+        "the small deficit must be served by the cheaper original-config board, got {het_provisioned:?}"
+    );
+    assert!(
+        homo.devices.iter().skip(2).all(|d| d.name.contains("replica")),
+        "the homogeneous policy only knows full replicas"
+    );
+    assert!(
+        het.p99_s <= slo3,
+        "the hetero pool must hold p99 {:.1} ms under the {:.0} ms SLO",
+        het.p99_s * 1e3,
+        slo3 * 1e3
+    );
 }

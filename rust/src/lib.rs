@@ -34,13 +34,18 @@
 //! - [`serving`] — the fleet layer above one board: N heterogeneous
 //!   devices (tuned Gemmini configs and/or CPU/GPU baselines) behind a
 //!   shard pool with dynamic batching, bounded admission queues with
-//!   load shedding, streaming p50/p95/p99 + SLO metrics, closed-loop
-//!   autoscaling (target-utilization / SLO-tracking policies with
-//!   modeled provisioning delays and drain-to-retire scale-in), open-
-//!   and closed-loop client models, and a deterministic discrete-event
-//!   simulator driving it all offline (see `rust/src/serving/README.md`;
-//!   fleet invariants are property-tested in
-//!   `rust/tests/serving_invariants.rs`);
+//!   load shedding, per-camera SLO classes (class-aware shedding and
+//!   batching, per-class quantiles/violations), streaming p50/p95/p99 +
+//!   SLO metrics, closed-loop autoscaling (target-utilization /
+//!   SLO-tracking policies, modeled provisioning delays,
+//!   drain-to-retire scale-in) over a heterogeneous device catalog
+//!   (cheapest-feasible scale-out, most-expensive-first energy-aware
+//!   drain), a fleet-wide energy ledger (joules per epoch per device
+//!   state, fleet GOP/s/W), open- and closed-loop client models, and a
+//!   deterministic discrete-event simulator driving it all offline (see
+//!   `rust/src/serving/README.md`; fleet invariants are property-tested
+//!   in `rust/tests/serving_invariants.rs` and
+//!   `rust/tests/energy_ledger.rs`);
 //! - [`report`] — renderers that print each paper table/figure, plus the
 //!   fleet-throughput table for [`serving`].
 

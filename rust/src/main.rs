@@ -7,10 +7,11 @@
 //! repro deploy [--size N] [--trials K]  run the full workflow on the detector
 //! repro infer [--hlo PATH]            run the AOT artifact on a scene (PJRT)
 //! repro tune [--size N] [--variant base|p40|p88] [--trials K]
-//!            [--tuning-cache PATH]
+//!            [--tuning-cache PATH] [--threads N]
 //! repro fleet [--cameras N] [--fps F] [--batch B] [--wait MS] [--seconds S]
 //!             [--autoscale] [--policy util|slo] [--max-devices N]
 //!             [--epoch S] [--delay S] [--closed K] [--tuning-cache PATH]
+//!             [--hetero] [--classes]
 //! ```
 //!
 //! `repro fleet --autoscale` runs the same fleet behind the closed-loop
@@ -19,6 +20,23 @@
 //! `--batch B` is ≥ 2 the replicas use batch-aware schedule tuning
 //! (`scheduler::tune_graph_batch`). `--closed K` switches the cameras to
 //! the closed-loop client model with a window of K outstanding frames.
+//!
+//! `--hetero` (with `--autoscale`) provisions from a heterogeneous
+//! device catalog instead of identical replicas: tuned ZCU102/ZCU111
+//! builds, the original 16×16 Gemmini config, and an embedded-GPU
+//! baseline, each stamped with capacity, power and J/frame. Every grow
+//! picks the lowest-power device predicted to restore the SLO
+//! (`serving::DeviceCatalog`), and scale-in drains the most expensive
+//! device first. `--classes` assigns each camera an SLO class
+//! (interactive / standard / batchable, cycling by camera index): class
+//! travels through admission (class-aware shedding), batching (scaled
+//! wait deadlines) and the report (per-class p50/p95/p99, violations).
+//! The fleet table always ends with the energy ledger — joules per
+//! epoch per device state and fleet-wide GOP/s/W.
+//!
+//! `repro tune --threads N` pins the engine's worker-thread count (the
+//! tuned result is byte-identical at any N); the JSON report carries the
+//! engine's work accounting under `"engine_stats"`.
 //!
 //! `--tuning-cache PATH` (on `tune` and `fleet`) loads/saves the
 //! persistent schedule-tuning cache (`scheduler::cache`): the first run
@@ -146,9 +164,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             gemmini_edge::passes::replace_activations(&mut g);
             let cfg = GemminiConfig::ours_zcu102();
             let mut engine = engine_with_cache(cfg.clone(), arg_val(&args, "--tuning-cache").as_ref());
+            if let Some(n) = arg_val(&args, "--threads").and_then(|v| v.parse::<usize>().ok()) {
+                engine = engine.with_threads(n);
+            }
             let t = engine.tune_graph(&g, trials);
+            let stats = engine.last_stats();
             finish_engine(&engine);
-            println!("{}", t.to_json().dump());
+            let report_json = gemmini_edge::util::json::Json::obj(vec![
+                ("tuning", t.to_json()),
+                ("engine_stats", stats.to_json()),
+            ]);
+            println!("{}", report_json.dump());
             println!(
                 "# conv improvement {:.1}% | layers improved {:.0}% | latency {:.1} ms",
                 t.conv_improvement() * 100.0,
@@ -159,13 +185,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         Some("fleet") => {
             use gemmini_edge::baselines::xavier;
             use gemmini_edge::fpga::resources::Board;
-            use gemmini_edge::report::fleet_table;
+            use gemmini_edge::report::{catalog_table, fleet_table};
             use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
             use gemmini_edge::serving::{
-                multi_camera_trace, simulate, simulate_autoscaled, simulate_closed_loop,
-                simulate_closed_loop_autoscaled, AutoscaleConfig, Autoscaler, Backend,
-                BaselineDevice, BatchPolicy, ClosedLoopConfig, GemminiDevice, ShardPool,
-                SimConfig, SloTracking, TargetUtilization,
+                assign_slo_classes, multi_camera_trace, simulate, simulate_autoscaled,
+                simulate_autoscaled_hetero, simulate_closed_loop, simulate_closed_loop_autoscaled,
+                simulate_closed_loop_autoscaled_hetero, AutoscaleConfig, Autoscaler, Backend,
+                BaselineDevice, BatchPolicy, ClosedLoopConfig, DeviceCatalog, DrainOrder,
+                GemminiDevice, ShardPool, ShedPolicy, SimConfig, SloTracking, TargetUtilization,
             };
             let cameras: usize =
                 arg_val(&args, "--cameras").and_then(|v| v.parse().ok()).unwrap_or(24);
@@ -189,12 +216,34 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .unwrap_or(1.0)
                 .max(0.0);
             let closed: Option<usize> = arg_val(&args, "--closed").and_then(|v| v.parse().ok());
+            let hetero = args.iter().any(|a| a == "--hetero");
+            if hetero && !autoscale {
+                eprintln!("warning: --hetero only affects scale-out; pass --autoscale too (ignoring --hetero)");
+            }
+            let hetero = hetero && autoscale;
+            let classes = args.iter().any(|a| a == "--classes");
 
             // Tune the detector through the shared engine: repeated
             // geometries, autoscaled replicas and (with --tuning-cache)
             // repeated `repro fleet` invocations all reuse one search.
             let mut g = build_detector(96, &default_weights());
             gemmini_edge::passes::replace_activations(&mut g);
+            // A heterogeneous catalog needs the original config tuned
+            // too. That runs through its own cache-backed engine (one
+            // cache file serves both fingerprints) and saves *before*
+            // the main engine loads, so `--tuning-cache` warm-starts
+            // both configs on the next run.
+            let t_orig = hetero.then(|| {
+                let mut e = engine_with_cache(
+                    GemminiConfig::original_zcu102(),
+                    arg_val(&args, "--tuning-cache").as_ref(),
+                );
+                let t = e.tune_graph(&g, 2);
+                if let Err(err) = e.save_cache() {
+                    eprintln!("warning: could not write tuning cache: {err}");
+                }
+                t
+            });
             let mut engine = engine_with_cache(
                 GemminiConfig::ours_zcu102(),
                 arg_val(&args, "--tuning-cache").as_ref(),
@@ -206,6 +255,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
             let cfg = SimConfig {
                 batch: BatchPolicy::new(batch, wait_ms * 1e-3),
+                shed: if classes { ShedPolicy::ClassAware } else { ShedPolicy::DropOldest },
                 ..Default::default()
             };
             let mode = if let Some(k) = closed {
@@ -214,15 +264,21 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 "open-loop".into()
             };
             println!(
-                "fleet: {} devices | {cameras} cameras × {fps:.0} FPS × {seconds:.0} s ({mode}) | batch≤{batch}, wait≤{wait_ms:.0} ms | autoscale: {}",
+                "fleet: {} devices | {cameras} cameras × {fps:.0} FPS × {seconds:.0} s ({mode}) | batch≤{batch}, wait≤{wait_ms:.0} ms | autoscale: {}{}{}",
                 pool.len(),
-                if autoscale { policy.as_str() } else { "off" }
+                if autoscale { policy.as_str() } else { "off" },
+                if hetero { " (hetero catalog)" } else { "" },
+                if classes { " | SLO classes on" } else { "" }
             );
 
             // The open-loop trace is only needed when not closed-loop.
             let trace = if closed.is_none() {
                 let scene = SceneConfig { size: 96, ..Default::default() };
-                multi_camera_trace(&scene, cameras, fps, seconds, 20240710)
+                let mut t = multi_camera_trace(&scene, cameras, fps, seconds, 20240710);
+                if classes {
+                    assign_slo_classes(&mut t);
+                }
+                t
             } else {
                 Vec::new()
             };
@@ -233,6 +289,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 think_s: 0.005,
                 horizon_s: seconds,
                 seed: 20240710,
+                classed: classes,
             };
 
             let r = if autoscale {
@@ -242,37 +299,69 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     min_devices: pool.len(),
                     max_devices: max_devices.max(pool.len()),
                     cooldown_epochs: 1,
+                    drain_order: if hetero {
+                        DrainOrder::MostExpensiveFirst
+                    } else {
+                        DrainOrder::NewestFirst
+                    },
                 };
                 let mut auto = if policy == "slo" {
                     Autoscaler::new(acfg, Box::new(SloTracking::new(cfg.slo_s)))
                 } else {
                     Autoscaler::new(acfg, Box::new(TargetUtilization::default()))
                 };
-                // Each replica tunes through the shared engine: replica 0
-                // pays for the batched search once (batch >= 2), later
-                // replicas are pure cache hits.
-                let mut factory = |i: usize| -> Box<dyn Backend> {
-                    let label = format!("ZCU102-Gemmini (replica {i})");
-                    Box::new(GemminiDevice::from_engine(
-                        &label,
-                        Board::Zcu102,
-                        &mut engine,
-                        &g,
-                        2,
+                if hetero {
+                    // The heterogeneous catalog: the tuned paper boards,
+                    // the original 16×16 config (slower, cooler), and an
+                    // embedded-GPU baseline. Tunings are computed once
+                    // (the original's through its own cache-backed
+                    // engine, above); replica construction re-labels.
+                    let tb = (batch >= 2).then(|| engine.tune_graph_batch(&g, 2, batch));
+                    let t_orig = t_orig.expect("tuned before the main engine loaded");
+                    let catalog = DeviceCatalog::paper_catalog(
                         batch,
+                        &tuning,
+                        tb.as_ref(),
+                        true,
+                        &t_orig,
+                        Some(g.gops()),
                         DEFAULT_DISPATCH_S,
-                    ))
-                };
-                if closed.is_some() {
-                    simulate_closed_loop_autoscaled(
-                        &mut pool,
-                        &clients,
-                        &cfg,
-                        &mut auto,
-                        &mut factory,
-                    )
+                    );
+                    print!("{}", catalog_table(&catalog));
+                    if closed.is_some() {
+                        simulate_closed_loop_autoscaled_hetero(
+                            &mut pool, &clients, &cfg, &mut auto, &catalog,
+                        )
+                    } else {
+                        simulate_autoscaled_hetero(&mut pool, &trace, &cfg, &mut auto, &catalog)
+                    }
                 } else {
-                    simulate_autoscaled(&mut pool, &trace, &cfg, &mut auto, &mut factory)
+                    // Each replica tunes through the shared engine:
+                    // replica 0 pays for the batched search once
+                    // (batch >= 2), later replicas are pure cache hits.
+                    let mut factory = |i: usize| -> Box<dyn Backend> {
+                        let label = format!("ZCU102-Gemmini (replica {i})");
+                        Box::new(GemminiDevice::from_engine(
+                            &label,
+                            Board::Zcu102,
+                            &mut engine,
+                            &g,
+                            2,
+                            batch,
+                            DEFAULT_DISPATCH_S,
+                        ))
+                    };
+                    if closed.is_some() {
+                        simulate_closed_loop_autoscaled(
+                            &mut pool,
+                            &clients,
+                            &cfg,
+                            &mut auto,
+                            &mut factory,
+                        )
+                    } else {
+                        simulate_autoscaled(&mut pool, &trace, &cfg, &mut auto, &mut factory)
+                    }
                 }
             } else if closed.is_some() {
                 simulate_closed_loop(&mut pool, &clients, &cfg)

@@ -6,7 +6,7 @@ use crate::energy::EnergyReport;
 use crate::fpga::resources::ResourceReport;
 use crate::gemmini::config::{Dataflow, GemminiConfig, ScaleDtype};
 use crate::scheduler::EngineStats;
-use crate::serving::FleetReport;
+use crate::serving::{DeviceCatalog, FleetReport};
 
 /// Render Table II (resource consumption).
 pub fn table2(rows: &[ResourceReport]) -> String {
@@ -135,6 +135,80 @@ pub fn fleet_table(r: &FleetReport) -> String {
     for e in &r.scaling {
         s += &format!("  [{:>8.3} s] {} -> {} serving\n", e.t_s, e.kind, e.serving_after);
     }
+    // Per-class SLO breakdown (only classes that saw traffic; a
+    // class-unaware run prints just the standard row).
+    let active: Vec<_> = r.classes.iter().filter(|c| c.offered > 0).collect();
+    if !active.is_empty() {
+        s += "| Class       | Offered | Served | Shed | p50 [ms] | p95 [ms] | p99 [ms] | SLO [ms] | Viol | Attain |\n";
+        for c in active {
+            s += &format!(
+                "| {:<11} | {:>7} | {:>6} | {:>4} | {:>8.1} | {:>8.1} | {:>8.1} | {:>8.0} | {:>4} | {:>5.1}% |\n",
+                c.class.label(),
+                c.offered,
+                c.completed,
+                c.shed,
+                c.p50_s * 1e3,
+                c.p95_s * 1e3,
+                c.p99_s * 1e3,
+                c.slo_s * 1e3,
+                c.violations,
+                c.attainment() * 100.0
+            );
+        }
+    }
+    // The energy ledger: fleet totals per device state, the paper's
+    // efficiency metric at fleet scope, then per-epoch rows (elided in
+    // the middle for long runs).
+    let e = &r.energy;
+    if e.total_j() > 0.0 {
+        s += &format!(
+            "energy: {:.1} J total | {:.1} J provisioning | {:.1} J active | {:.1} J draining | fleet {:.2} GOP/s/W\n",
+            e.total_j(),
+            e.provisioning_j(),
+            e.active_j(),
+            e.draining_j(),
+            e.fleet_gops_per_w()
+        );
+        const SHOWN: usize = 12;
+        for (i, b) in e.epochs.iter().enumerate() {
+            if e.epochs.len() > 2 * SHOWN && (SHOWN..e.epochs.len() - SHOWN).contains(&i) {
+                if i == SHOWN {
+                    s += &format!("  … {} epochs elided …\n", e.epochs.len() - 2 * SHOWN);
+                }
+                continue;
+            }
+            s += &format!(
+                "  [{:>7.2}-{:>7.2} s] {:>8.2} J  (prov {:.2} | active {:.2} | drain {:.2})\n",
+                i as f64 * e.epoch_s,
+                (i + 1) as f64 * e.epoch_s,
+                b.total_j(),
+                b.provisioning_j,
+                b.active_j,
+                b.draining_j
+            );
+        }
+    }
+    s
+}
+
+/// Render a heterogeneous device catalog: what the energy-aware
+/// autoscaler chooses between ([`DeviceCatalog::pick`]).
+pub fn catalog_table(c: &DeviceCatalog) -> String {
+    let mut s = format!(
+        "| Catalog device (batch {:>2})       | FPS cap | Busy [W] | Idle [W] | Service [ms] | J/frame |\n",
+        c.batch
+    );
+    for e in c.entries() {
+        s += &format!(
+            "| {:<31} | {:>7.0} | {:>8.1} | {:>8.1} | {:>12.1} | {:>7.3} |\n",
+            e.label,
+            e.fps_capacity,
+            e.busy_power_w,
+            e.idle_power_w,
+            e.service_latency_s * 1e3,
+            e.energy_per_frame_j
+        );
+    }
     s
 }
 
@@ -225,11 +299,11 @@ mod tests {
         assert!(s.contains("0.500")); // 0.05 s × 10 W
     }
 
-    #[test]
-    fn fleet_table_renders_devices_and_totals() {
+    fn sample_fleet_report() -> FleetReport {
         use crate::serving::autoscale::{ScaleEventKind, ScalingEvent};
         use crate::serving::metrics::DeviceReport;
-        let r = FleetReport {
+        use crate::serving::EnergyLedger;
+        FleetReport {
             offered: 1000,
             completed: 900,
             shed: 100,
@@ -259,7 +333,14 @@ mod tests {
                 power_w: 9.5,
                 stolen: 12,
             }],
-        };
+            classes: Vec::new(),
+            energy: EnergyLedger::empty(),
+        }
+    }
+
+    #[test]
+    fn fleet_table_renders_devices_and_totals() {
+        let r = sample_fleet_report();
         let s = fleet_table(&r);
         assert!(s.contains("ZCU102-ours"));
         assert!(s.contains("| active"), "{s}");
@@ -268,6 +349,80 @@ mod tests {
         assert!(s.contains("attainment 90.0%"), "{s}");
         assert!(s.contains("1 start | 2 peak | 2 final | 1 scaling events"), "{s}");
         assert!(s.contains("provision device 1"), "{s}");
+        // No classed traffic and a zero ledger: neither section prints.
+        assert!(!s.contains("| Class"), "{s}");
+        assert!(!s.contains("energy:"), "{s}");
+    }
+
+    #[test]
+    fn fleet_table_renders_classes_and_energy() {
+        use crate::serving::metrics::{ClassReport, EnergyLedger, EpochEnergy};
+        use crate::serving::SloClass;
+        let mut r = sample_fleet_report();
+        r.classes = vec![
+            ClassReport {
+                class: SloClass::Interactive,
+                offered: 300,
+                completed: 290,
+                shed: 10,
+                p50_s: 0.010,
+                p95_s: 0.030,
+                p99_s: 0.045,
+                mean_s: 0.012,
+                max_s: 0.050,
+                slo_s: 0.050,
+                violations: 3,
+            },
+            ClassReport {
+                class: SloClass::Standard,
+                offered: 0,
+                completed: 0,
+                shed: 0,
+                p50_s: 0.0,
+                p95_s: 0.0,
+                p99_s: 0.0,
+                mean_s: 0.0,
+                max_s: 0.0,
+                slo_s: 0.100,
+                violations: 0,
+            },
+        ];
+        let mut ledger = EnergyLedger::new(5.0);
+        ledger.epochs = vec![
+            EpochEnergy { provisioning_j: 1.5, active_j: 40.0, draining_j: 0.5 },
+            EpochEnergy { provisioning_j: 0.0, active_j: 38.0, draining_j: 0.0 },
+        ];
+        ledger.per_device_j = vec![80.0];
+        ledger.served_gop = 160.0;
+        r.energy = ledger;
+        let s = fleet_table(&r);
+        // The interactive row prints; the empty standard row is elided.
+        assert!(s.contains("interactive"), "{s}");
+        assert!(!s.contains("| standard"), "{s}");
+        assert!(s.contains("| Class"), "{s}");
+        // Energy totals and the fleet efficiency (160 GOP / 80 J = 2).
+        assert!(s.contains("energy: 80.0 J total"), "{s}");
+        assert!(s.contains("1.5 J provisioning"), "{s}");
+        assert!(s.contains("fleet 2.00 GOP/s/W"), "{s}");
+        // Two epoch rows, no elision at this length.
+        assert!(s.contains("[   0.00-   5.00 s]"), "{s}");
+        assert!(!s.contains("elided"), "{s}");
+    }
+
+    #[test]
+    fn catalog_table_lists_entries() {
+        use crate::baselines::xavier;
+        use crate::serving::{BaselineDevice, DeviceCatalog};
+        let mut c = DeviceCatalog::new(8);
+        c.register(
+            "NVIDIA Jetson AGX Xavier",
+            Box::new(|_| Box::new(BaselineDevice::new(xavier(), 0.5, 8))),
+        );
+        let s = catalog_table(&c);
+        assert!(s.contains("Catalog device (batch  8)"), "{s}");
+        assert!(s.contains("Xavier"), "{s}");
+        assert!(s.contains("30.0"), "{s}"); // busy power
+        assert_eq!(s.lines().count(), 2, "{s}");
     }
 
     #[test]

@@ -28,8 +28,20 @@
 //! wrong-version file yields an empty cache (tuning proceeds cold and the
 //! next save rewrites the file) — a stale cache must never make tuning
 //! fail or change its results.
+//!
+//! **Compaction on save.** Fingerprints accumulate: every config edit
+//! and every `TIMING_MODEL_VERSION` bump strands the old fingerprint's
+//! entries in the file, unreachable forever (nothing can ever look them
+//! up again), so a long-lived cache file only grows. When a save would
+//! exceed [`TuningCache::max_entries`], entries whose fingerprint was
+//! never *touched* this process (attached by an engine or written to —
+//! see [`TuningCache::touch`]) are treated as superseded and dropped
+//! first; if the live set alone still exceeds the cap, a deterministic
+//! sorted prefix is kept. The in-memory cache is never compacted — only
+//! what gets persisted — so dropping never changes a running process's
+//! results, and a dropped entry merely costs a cold re-tune later.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
@@ -80,18 +92,52 @@ pub struct CacheKey {
     pub measure_k: usize,
 }
 
+/// Persisted-entry cap a save compacts down to (see the module docs).
+const DEFAULT_MAX_ENTRIES: usize = 4096;
+
 /// In-memory + optionally file-backed store of tuning results.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct TuningCache {
     layers: HashMap<CacheKey, SearchResult>,
     moves: HashMap<(u64, usize, usize), u64>,
     path: Option<PathBuf>,
+    /// Fingerprints in active use this process (engines attach theirs;
+    /// inserts record theirs) — what compaction keeps under pressure.
+    touched: HashSet<u64>,
+    /// Persisted-entry budget enforced by [`save`](TuningCache::save).
+    max_entries: usize,
+}
+
+impl Default for TuningCache {
+    fn default() -> Self {
+        Self {
+            layers: HashMap::new(),
+            moves: HashMap::new(),
+            path: None,
+            touched: HashSet::new(),
+            max_entries: DEFAULT_MAX_ENTRIES,
+        }
+    }
 }
 
 impl TuningCache {
     /// A cache that lives only for this process (no file backing).
     pub fn in_memory() -> Self {
         Self::default()
+    }
+
+    /// Override the persisted-entry budget (tests exercise small caps;
+    /// the default is [`DEFAULT_MAX_ENTRIES`]).
+    pub fn with_max_entries(mut self, max_entries: usize) -> Self {
+        self.max_entries = max_entries.max(1);
+        self
+    }
+
+    /// Mark a config fingerprint as live: its entries survive
+    /// compaction. [`crate::scheduler::TuningEngine::with_cache`] calls
+    /// this with the engine's fingerprint; inserts imply it.
+    pub fn touch(&mut self, config_fp: u64) {
+        self.touched.insert(config_fp);
     }
 
     /// Load a cache from `path`, remembering the path for [`save`].
@@ -128,11 +174,13 @@ impl TuningCache {
     }
 
     /// Write the cache to its backing file (no-op for in-memory caches).
-    /// Entries are sorted so the file is deterministic and diff-friendly.
-    /// Written via a per-process temp file + rename, so readers never see
-    /// a torn file and a crash mid-write cannot destroy the previous
-    /// cache (concurrent writers still resolve last-writer-wins on the
-    /// whole file).
+    /// Entries are sorted so the file is deterministic and diff-friendly,
+    /// and compacted to [`max_entries`](Self::with_max_entries): under
+    /// pressure, superseded fingerprints (never touched this process)
+    /// are evicted first. Written via a per-process temp file + rename,
+    /// so readers never see a torn file and a crash mid-write cannot
+    /// destroy the previous cache (concurrent writers still resolve
+    /// last-writer-wins on the whole file).
     pub fn save(&self) -> std::io::Result<()> {
         let Some(path) = &self.path else {
             return Ok(());
@@ -153,6 +201,7 @@ impl TuningCache {
     }
 
     pub fn insert_layer(&mut self, key: CacheKey, result: SearchResult) {
+        self.touched.insert(key.config_fp);
         self.layers.insert(key, result);
     }
 
@@ -161,6 +210,7 @@ impl TuningCache {
     }
 
     pub fn insert_move(&mut self, config_fp: u64, bytes_in: usize, bytes_out: usize, cycles: u64) {
+        self.touched.insert(config_fp);
         self.moves.insert((config_fp, bytes_in, bytes_out), cycles);
     }
 
@@ -176,17 +226,38 @@ impl TuningCache {
         self.layers.is_empty() && self.moves.is_empty()
     }
 
-    fn to_json(&self) -> Json {
+    /// The deterministic, compacted entry selection [`save`] persists
+    /// (see the module docs for the eviction order).
+    ///
+    /// [`save`]: TuningCache::save
+    fn persisted_keys(&self) -> (Vec<&CacheKey>, Vec<&(u64, usize, usize)>) {
         let mut lkeys: Vec<&CacheKey> = self.layers.keys().collect();
         lkeys.sort_by_key(|c| {
             (c.config_fp, c.geom.m, c.geom.n, c.geom.k, c.geom.kernel, c.geom.bias, c.measure_k)
         });
+        let mut mkeys: Vec<&(u64, usize, usize)> = self.moves.keys().collect();
+        mkeys.sort();
+        if lkeys.len() + mkeys.len() > self.max_entries {
+            lkeys.retain(|k| self.touched.contains(&k.config_fp));
+            mkeys.retain(|k| self.touched.contains(&k.0));
+        }
+        if lkeys.len() + mkeys.len() > self.max_entries {
+            // The live set alone is over budget: keep a deterministic
+            // sorted prefix, layer entries first (they are the ones
+            // that skip whole schedule searches).
+            let keep_l = lkeys.len().min(self.max_entries);
+            lkeys.truncate(keep_l);
+            mkeys.truncate(self.max_entries - keep_l);
+        }
+        (lkeys, mkeys)
+    }
+
+    fn to_json(&self) -> Json {
+        let (lkeys, mkeys) = self.persisted_keys();
         let layers: Vec<Json> = lkeys
             .into_iter()
             .map(|key| layer_entry_json(key, &self.layers[key]))
             .collect();
-        let mut mkeys: Vec<&(u64, usize, usize)> = self.moves.keys().collect();
-        mkeys.sort();
         let moves: Vec<Json> = mkeys
             .into_iter()
             .map(|&(fp, bi, bo)| {
@@ -404,5 +475,74 @@ mod tests {
         c.insert_move(1, 2, 3, 4);
         assert!(c.save().is_ok());
         assert!(c.path().is_none());
+    }
+
+    #[test]
+    fn save_compacts_untouched_fingerprints_under_pressure() {
+        let path = std::env::temp_dir()
+            .join(format!("gemmini_edge_cache_compact_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // Writer: 30 junk fingerprints + 1 real one (all touched here,
+        // because inserting implies touching).
+        let mut w = TuningCache::load(&path);
+        for fp in 1..=30u64 {
+            w.insert_layer(sample_key(fp), sample_result(None));
+            w.insert_move(fp, 100, 50, fp);
+        }
+        w.insert_layer(sample_key(0xFEED), sample_result(None));
+        w.save().unwrap();
+        assert_eq!(TuningCache::load(&path).layer_entries(), 31);
+
+        // Reader with a tight budget touches only the real fingerprint:
+        // the junk is evicted from the file, the live entries survive.
+        let mut r = TuningCache::load(&path).with_max_entries(8);
+        r.touch(0xFEED);
+        r.insert_move(0xFEED, 7, 7, 7);
+        r.save().unwrap();
+        let back = TuningCache::load(&path);
+        assert_eq!(back.layer_entries(), 1);
+        assert_eq!(back.move_entries(), 1);
+        assert!(back.get_layer(&sample_key(0xFEED)).is_some());
+        assert_eq!(back.get_move(0xFEED, 7, 7), Some(7));
+        // The in-memory cache was never compacted.
+        assert_eq!(r.layer_entries(), 31);
+
+        // Live set over budget: deterministic prefix truncation, and
+        // repeated saves of the same cache produce identical bytes.
+        let mut big = TuningCache::load(&path).with_max_entries(4);
+        for m in 0..10usize {
+            big.insert_layer(
+                CacheKey {
+                    config_fp: 0xFEED,
+                    geom: GeomKey { m, n: 1, k: 1, kernel: 1, bias: false },
+                    measure_k: 1,
+                },
+                sample_result(None),
+            );
+        }
+        big.save().unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        big.save().unwrap();
+        assert_eq!(first, std::fs::read_to_string(&path).unwrap());
+        assert_eq!(TuningCache::load(&path).layer_entries(), 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn small_caches_never_compact() {
+        let path = std::env::temp_dir()
+            .join(format!("gemmini_edge_cache_nocompact_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut w = TuningCache::load(&path);
+        for fp in 1..=5u64 {
+            w.insert_layer(sample_key(fp), sample_result(None));
+        }
+        w.save().unwrap();
+        // A reader that touches nothing still persists everything while
+        // under budget: compaction only fires under pressure.
+        let r = TuningCache::load(&path);
+        r.save().unwrap();
+        assert_eq!(TuningCache::load(&path).layer_entries(), 5);
+        std::fs::remove_file(&path).ok();
     }
 }

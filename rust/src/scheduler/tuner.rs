@@ -125,6 +125,22 @@ pub struct EngineStats {
 }
 
 impl EngineStats {
+    /// JSON object for the CLI's machine-readable report (`repro tune`
+    /// prints it alongside the tuning result).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("conv_layers", Json::Num(self.conv_layers as f64)),
+            ("unique_geometries", Json::Num(self.unique_geometries as f64)),
+            ("tuned", Json::Num(self.tuned as f64)),
+            ("memo_hits", Json::Num(self.memo_hits as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("move_ops", Json::Num(self.move_ops as f64)),
+            ("move_memo_hits", Json::Num(self.move_memo_hits as f64)),
+            ("sim_instrs", Json::Num(self.sim_instrs as f64)),
+            ("threads_used", Json::Num(self.threads_used as f64)),
+        ])
+    }
+
     /// Fold another call's accounting into this one (counters add;
     /// `threads_used` takes the max).
     fn fold(&mut self, o: &EngineStats) {
@@ -193,8 +209,11 @@ impl TuningEngine {
     }
 
     /// Attach a cache (typically [`TuningCache::load`]ed from disk).
+    /// Marks this engine's config fingerprint live in the cache, so its
+    /// entries survive save-time compaction even on a pure-hit run.
     pub fn with_cache(mut self, cache: TuningCache) -> Self {
         self.cache = cache;
+        self.cache.touch(self.config_fp);
         self
     }
 

@@ -23,14 +23,23 @@ pub enum ShedPolicy {
     /// frames win — the right call for perception pipelines where a
     /// stale frame is worthless once a newer one exists).
     DropOldest,
+    /// Shed the lowest [`super::SloClass`] first: evict the oldest
+    /// queued request of the lowest-priority class present, provided the
+    /// incoming request's class is at least that low — otherwise the
+    /// incoming request itself is the cheapest frame to lose and is
+    /// rejected. Within one class this degenerates to drop-oldest, so a
+    /// single-class fleet behaves like [`ShedPolicy::DropOldest`].
+    ClassAware,
 }
 
 impl ShedPolicy {
-    /// The equivalent live-pipeline overflow policy.
+    /// The equivalent live-pipeline overflow policy (the live `Topic`
+    /// front door carries no class metadata, so class-aware shedding
+    /// degrades to its single-class behavior, drop-oldest).
     pub fn overflow(self) -> OverflowPolicy {
         match self {
             ShedPolicy::RejectNewest => OverflowPolicy::Reject,
-            ShedPolicy::DropOldest => OverflowPolicy::DropOldest,
+            ShedPolicy::DropOldest | ShedPolicy::ClassAware => OverflowPolicy::DropOldest,
         }
     }
 }
@@ -67,6 +76,22 @@ pub fn admit(
             queue.push_back(req);
             Admission::AdmittedEvicted(evicted)
         }
+        ShedPolicy::ClassAware => {
+            // The cheapest frame to lose is the oldest of the lowest
+            // priority present (queue is non-empty: capacity >= 1).
+            let worst = queue.iter().map(|r| r.class.priority()).min().expect("non-empty");
+            if req.class.priority() >= worst {
+                let pos = queue
+                    .iter()
+                    .position(|r| r.class.priority() == worst)
+                    .expect("a request of the worst class exists");
+                let evicted = queue.remove(pos).expect("position is in range");
+                queue.push_back(req);
+                Admission::AdmittedEvicted(evicted)
+            } else {
+                Admission::Rejected
+            }
+        }
     }
 }
 
@@ -81,9 +106,14 @@ pub fn admit_via_topic<T>(topic: &Topic<T>, msg: T, policy: ShedPolicy) -> bool 
 mod tests {
     use super::*;
     use crate::pipeline::topic;
+    use crate::serving::SloClass;
 
     fn req(id: u64, t: f64) -> Request {
-        Request { id, camera: 0, arrival_s: t, objects: 1 }
+        Request { id, camera: 0, arrival_s: t, objects: 1, class: SloClass::Standard }
+    }
+
+    fn classed(id: u64, class: SloClass) -> Request {
+        Request { id, camera: 0, arrival_s: id as f64, objects: 1, class }
     }
 
     #[test]
@@ -106,6 +136,52 @@ mod tests {
         match admit(&mut q, 2, ShedPolicy::DropOldest, req(2, 2.0)) {
             Admission::AdmittedEvicted(old) => assert_eq!(old.id, 0),
             other => panic!("expected eviction, got {other:?}"),
+        }
+        let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn class_aware_evicts_lowest_class_first() {
+        let mut q = VecDeque::new();
+        admit(&mut q, 3, ShedPolicy::ClassAware, classed(0, SloClass::Batchable));
+        admit(&mut q, 3, ShedPolicy::ClassAware, classed(1, SloClass::Interactive));
+        admit(&mut q, 3, ShedPolicy::ClassAware, classed(2, SloClass::Batchable));
+        // A standard frame displaces the *oldest batchable*, not the
+        // oldest overall (which is also batchable here) nor the
+        // interactive one.
+        match admit(&mut q, 3, ShedPolicy::ClassAware, classed(3, SloClass::Standard)) {
+            Admission::AdmittedEvicted(old) => {
+                assert_eq!(old.id, 0);
+                assert_eq!(old.class, SloClass::Batchable);
+            }
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        // An incoming interactive evicts the remaining batchable (2),
+        // leaving [interactive 1, standard 3, interactive 4].
+        admit(&mut q, 3, ShedPolicy::ClassAware, classed(4, SloClass::Interactive));
+        assert_eq!(q.len(), 3);
+        let classes: Vec<SloClass> = q.iter().map(|r| r.class).collect();
+        assert!(!classes.contains(&SloClass::Batchable));
+        // With only higher classes queued, an incoming batchable is
+        // itself the cheapest frame, and is rejected.
+        assert_eq!(
+            admit(&mut q, 3, ShedPolicy::ClassAware, classed(5, SloClass::Batchable)),
+            Admission::Rejected
+        );
+    }
+
+    #[test]
+    fn class_aware_degenerates_to_drop_oldest_within_one_class() {
+        let mut q = VecDeque::new();
+        for i in 0..2 {
+            admit(&mut q, 2, ShedPolicy::ClassAware, req(i, i as f64));
+        }
+        match admit(&mut q, 2, ShedPolicy::ClassAware, req(2, 2.0)) {
+            Admission::AdmittedEvicted(old) => assert_eq!(old.id, 0),
+            other => panic!("expected drop-oldest eviction, got {other:?}"),
         }
         let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![1, 2]);

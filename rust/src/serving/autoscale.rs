@@ -161,6 +161,21 @@ impl ScalePolicy for SloTracking {
     }
 }
 
+/// Which active device a shrink decision drains first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainOrder {
+    /// Newest-provisioned active device first (replicas retire before
+    /// the seed boards) — the homogeneous default.
+    NewestFirst,
+    /// Energy-aware: the most expensive device first — highest idle
+    /// power among active devices, idle-right-now breaking power ties
+    /// ([`super::shard::ShardPool::most_expensive_active`]). What the
+    /// heterogeneous fleet uses: a 30 W embedded GPU drains before a
+    /// 6 W FPGA when both are surplus, even if the GPU happens to be
+    /// mid-batch at the epoch instant.
+    MostExpensiveFirst,
+}
+
 /// Fleet-level autoscaling knobs (policy-independent).
 #[derive(Debug, Clone)]
 pub struct AutoscaleConfig {
@@ -176,6 +191,9 @@ pub struct AutoscaleConfig {
     pub max_devices: usize,
     /// Epochs to stay quiet after any action (damps oscillation).
     pub cooldown_epochs: usize,
+    /// Scale-in ordering (energy-aware fleets drain the most expensive
+    /// device first).
+    pub drain_order: DrainOrder,
 }
 
 impl Default for AutoscaleConfig {
@@ -186,6 +204,7 @@ impl Default for AutoscaleConfig {
             min_devices: 1,
             max_devices: 8,
             cooldown_epochs: 1,
+            drain_order: DrainOrder::NewestFirst,
         }
     }
 }
@@ -353,6 +372,7 @@ mod tests {
             min_devices: 2,
             max_devices: 4,
             cooldown_epochs: 1,
+            drain_order: DrainOrder::NewestFirst,
         };
         let mut a = Autoscaler::new(cfg, Box::new(TargetUtilization::default()));
         // Wants 4 devices (2 at util 1.0 → ceil(2/0.6)=4) but max is 4 → grow 2.

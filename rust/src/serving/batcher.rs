@@ -8,6 +8,13 @@
 //! head request's queueing delay against amortizing the per-invocation
 //! overhead (dispatch + weight streaming) measured by
 //! [`crate::serving::device`].
+//!
+//! The wait deadline is class-aware: each queued request's deadline is
+//! `arrival + max_wait × class.wait_factor()` and the batch closes at
+//! the *earliest* deadline in the queue, so an interactive frame stuck
+//! behind patient batchable traffic still pulls its batch closed early.
+//! All-[`Standard`](crate::serving::SloClass::Standard) queues (factor
+//! 1) behave exactly as the class-unaware policy did.
 
 use std::collections::VecDeque;
 
@@ -57,20 +64,25 @@ impl BatchPolicy {
     /// backend's activation-memory bound on batch size.
     pub fn decide(&self, queue: &VecDeque<Request>, now: f64, device_cap: usize) -> Decision {
         let cap = self.max_batch.min(device_cap.max(1));
-        match queue.front() {
-            None => Decision::Idle,
-            Some(oldest) => {
-                if queue.len() >= cap {
-                    Decision::Dispatch(cap)
-                } else {
-                    let deadline = oldest.arrival_s + self.max_wait_s;
-                    if now >= deadline {
-                        Decision::Dispatch(queue.len())
-                    } else {
-                        Decision::WaitUntil(deadline)
-                    }
-                }
-            }
+        if queue.is_empty() {
+            return Decision::Idle;
+        }
+        if queue.len() >= cap {
+            return Decision::Dispatch(cap);
+        }
+        // Earliest class-scaled deadline across the queue (for a
+        // uniform-class FIFO queue this is the head request's deadline,
+        // the pre-class behavior). This scan only runs on queues
+        // shorter than the batch cap — longer ones dispatched above —
+        // so the cost is O(max_batch), not O(queue_depth).
+        let deadline = queue
+            .iter()
+            .map(|r| r.arrival_s + self.max_wait_s * r.class.wait_factor())
+            .fold(f64::INFINITY, f64::min);
+        if now >= deadline {
+            Decision::Dispatch(queue.len())
+        } else {
+            Decision::WaitUntil(deadline)
         }
     }
 }
@@ -79,11 +91,19 @@ impl BatchPolicy {
 mod tests {
     use super::*;
 
+    use crate::serving::SloClass;
+
     fn queue(arrivals: &[f64]) -> VecDeque<Request> {
         arrivals
             .iter()
             .enumerate()
-            .map(|(i, &t)| Request { id: i as u64, camera: 0, arrival_s: t, objects: 1 })
+            .map(|(i, &t)| Request {
+                id: i as u64,
+                camera: 0,
+                arrival_s: t,
+                objects: 1,
+                class: SloClass::Standard,
+            })
             .collect()
     }
 
@@ -129,5 +149,26 @@ mod tests {
     fn zero_wait_greedily_flushes() {
         let p = BatchPolicy::new(8, 0.0);
         assert_eq!(p.decide(&queue(&[2.0, 2.1, 2.2]), 2.2, 32), Decision::Dispatch(3));
+    }
+
+    #[test]
+    fn interactive_frame_pulls_the_deadline_forward() {
+        let p = BatchPolicy::new(8, 0.020);
+        let mut q = queue(&[1.000, 1.004]);
+        // A later interactive arrival deadlines at 1.004 + 0.25×20 ms =
+        // 1.009, earlier than the head's 1.020.
+        q[1].class = SloClass::Interactive;
+        match p.decide(&q, 1.005, 32) {
+            Decision::WaitUntil(t) => assert!((t - 1.009).abs() < 1e-12, "{t}"),
+            other => panic!("expected WaitUntil, got {other:?}"),
+        }
+        assert_eq!(p.decide(&q, 1.009, 32), Decision::Dispatch(2));
+        // A batchable queue waits longer than a standard one.
+        let mut qb = queue(&[1.000]);
+        qb[0].class = SloClass::Batchable;
+        match p.decide(&qb, 1.001, 32) {
+            Decision::WaitUntil(t) => assert!((t - 1.030).abs() < 1e-12, "{t}"),
+            other => panic!("expected WaitUntil, got {other:?}"),
+        }
     }
 }

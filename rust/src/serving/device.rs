@@ -39,6 +39,12 @@ pub trait Backend {
 
     /// Average board power at a busy fraction in `[0, 1]`.
     fn power_w(&self, busy_frac: f64) -> f64;
+
+    /// Giga-operations one served frame performs on this device (the
+    /// workload's arithmetic volume; what the fleet [energy
+    /// ledger](crate::serving::EnergyLedger) credits per completion when
+    /// computing fleet-wide GOP/s/W).
+    fn gop_per_frame(&self) -> f64;
 }
 
 /// A tuned Gemmini accelerator as a serving device.
@@ -57,6 +63,9 @@ pub struct GemminiDevice {
     /// MAC-array utilization of the tuned schedule while computing
     /// (from [`TuningResult::utilization`]); scales dynamic power.
     pub compute_util: f64,
+    /// Giga-operations per served frame (2 ops per MAC over the tuned
+    /// layers).
+    pub gop: f64,
     batch_cap: usize,
 }
 
@@ -80,6 +89,7 @@ impl GemminiDevice {
         // else (compute, activation movement) repeats per frame.
         let per_frame_s = (frame_s - weights_s).max(frame_s * 0.05);
         let compute_util = tuning.utilization(&config, true);
+        let gop = frame_gop(tuning);
         // Batch activations must fit the accumulator working set; a
         // coarse bound that scales with on-chip memory.
         let batch_cap = (config.accumulator_kib / 16).clamp(1, 64);
@@ -91,6 +101,7 @@ impl GemminiDevice {
             weights_s,
             per_frame_s,
             compute_util,
+            gop,
             batch_cap,
         }
     }
@@ -149,6 +160,9 @@ impl GemminiDevice {
         let per_frame_s = ((tb - t1) / (batch as f64 - 1.0)).max(0.01 * t1).min(t1);
         let weights_s = (t1 - per_frame_s).max(0.0);
         let compute_util = batched.utilization(&config, true);
+        // Per-frame arithmetic comes from the batch-1 tuning (the
+        // batched geometry's MACs are `batch ×` one frame's).
+        let gop = frame_gop(single);
         // A device tuned for `batch` must admit at least that batch.
         let batch_cap = (config.accumulator_kib / 16).clamp(1, 64).max(batch);
         Self {
@@ -159,9 +173,27 @@ impl GemminiDevice {
             weights_s,
             per_frame_s,
             compute_util,
+            gop,
             batch_cap,
         }
     }
+}
+
+/// GOP of one frame under a tuning: 2 ops per MAC over the tuned layers.
+fn frame_gop(tuning: &TuningResult) -> f64 {
+    let macs: u64 = tuning.layers.iter().map(|l| l.geom.macs()).sum();
+    2.0 * macs as f64 / 1e9
+}
+
+/// Sustainable throughput of one device under a batching cap, frames/s.
+/// The single definition every capacity consumer shares — the
+/// autoscaler's demand deficit ([`crate::serving::sim`]), the catalog's
+/// feasibility probe ([`DeviceCatalog::register`]), and the bench /
+/// example sizing all must agree for [`DeviceCatalog::pick`] to mean
+/// what it says.
+pub fn capacity_fps(backend: &dyn Backend, max_batch: usize) -> f64 {
+    let b = max_batch.min(backend.max_batch()).max(1);
+    b as f64 / backend.batch_latency_s(b)
 }
 
 impl Backend for GemminiDevice {
@@ -180,6 +212,10 @@ impl Backend for GemminiDevice {
     fn power_w(&self, busy_frac: f64) -> f64 {
         let model = FpgaPowerModel::for_board(self.board);
         model.power_w(&self.config, busy_frac.clamp(0.0, 1.0) * self.compute_util)
+    }
+
+    fn gop_per_frame(&self) -> f64 {
+        self.gop
     }
 }
 
@@ -216,12 +252,278 @@ impl Backend for BaselineDevice {
     fn power_w(&self, _busy_frac: f64) -> f64 {
         self.platform.power_w
     }
+
+    fn gop_per_frame(&self) -> f64 {
+        self.gop
+    }
+}
+
+/// One provisionable device kind in a [`DeviceCatalog`], stamped with the
+/// static figures the cheapest-feasible policy decides on. The figures
+/// are probed from a prototype instance at registration, so they always
+/// agree with what the built replicas will actually do.
+pub struct CatalogEntry {
+    /// Label prefix (replica labels append an index).
+    pub label: String,
+    /// Sustainable throughput at the catalog's serving batch, frames/s.
+    pub fps_capacity: f64,
+    /// Board power while serving (busy fraction 1), W.
+    pub busy_power_w: f64,
+    /// Board power while idle/provisioning, W.
+    pub idle_power_w: f64,
+    /// Full-batch service latency, s (a device whose batch already
+    /// misses the SLO can never restore it).
+    pub service_latency_s: f64,
+    /// Energy one frame costs at saturation, J (= busy W / capacity).
+    pub energy_per_frame_j: f64,
+    build: Box<dyn Fn(usize) -> Box<dyn Backend>>,
+}
+
+impl std::fmt::Debug for CatalogEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CatalogEntry")
+            .field("label", &self.label)
+            .field("fps_capacity", &self.fps_capacity)
+            .field("busy_power_w", &self.busy_power_w)
+            .field("idle_power_w", &self.idle_power_w)
+            .field("service_latency_s", &self.service_latency_s)
+            .field("energy_per_frame_j", &self.energy_per_frame_j)
+            .finish()
+    }
+}
+
+/// The device kinds the heterogeneous autoscaler may provision, with the
+/// selection rule the ISSUE's energy-smoke gate pins down: **scale out
+/// with the lowest-power device the policy predicts restores the SLO**.
+///
+/// A grow decision arrives with a capacity deficit (demanded FPS minus
+/// planned FPS). An entry is *feasible* when its capacity covers the
+/// deficit and its full-batch service latency fits under the SLO; among
+/// feasible entries the minimum busy power wins (ties: larger capacity,
+/// then registration order). When nothing is feasible the largest
+/// capacity wins (ties: lower power) — the deficit is then split across
+/// several grows. Both rules prefer a dominating entry over a dominated
+/// one, so the policy can never pick a device that another entry beats
+/// on both power and capacity (`tests/energy_ledger.rs` property-tests
+/// this).
+pub struct DeviceCatalog {
+    /// The serving batch size capacities were probed at.
+    pub batch: usize,
+    entries: Vec<CatalogEntry>,
+}
+
+impl DeviceCatalog {
+    pub fn new(batch: usize) -> Self {
+        Self { batch: batch.max(1), entries: Vec::new() }
+    }
+
+    /// Register a device kind, probing capacity/power/latency from a
+    /// prototype built with `build(0)`. `build` must be deterministic —
+    /// the prototype's figures stand in for every later replica's.
+    pub fn register(&mut self, label: &str, build: Box<dyn Fn(usize) -> Box<dyn Backend>>) {
+        let probe = build(0);
+        let b = self.batch.min(probe.max_batch()).max(1);
+        let service_latency_s = probe.batch_latency_s(b);
+        let fps_capacity = capacity_fps(probe.as_ref(), self.batch);
+        let busy_power_w = probe.power_w(1.0);
+        let idle_power_w = probe.power_w(0.0);
+        self.register_with(
+            label,
+            fps_capacity,
+            busy_power_w,
+            idle_power_w,
+            service_latency_s,
+            build,
+        );
+    }
+
+    /// Register an entry with explicit figures (tests and synthetic
+    /// fleets; [`register`](Self::register) probes them from a prototype).
+    pub fn register_with(
+        &mut self,
+        label: &str,
+        fps_capacity: f64,
+        busy_power_w: f64,
+        idle_power_w: f64,
+        service_latency_s: f64,
+        build: Box<dyn Fn(usize) -> Box<dyn Backend>>,
+    ) {
+        assert!(fps_capacity > 0.0 && busy_power_w > 0.0);
+        self.entries.push(CatalogEntry {
+            label: label.to_string(),
+            fps_capacity,
+            busy_power_w,
+            idle_power_w,
+            service_latency_s,
+            energy_per_frame_j: busy_power_w / fps_capacity,
+            build,
+        });
+    }
+
+    pub fn entries(&self) -> &[CatalogEntry] {
+        &self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The cheapest-feasible selection rule (see the type docs). Returns
+    /// the index of the entry to provision for a capacity deficit of
+    /// `deficit_fps` under a latency objective of `slo_s`.
+    pub fn pick(&self, deficit_fps: f64, slo_s: f64) -> usize {
+        assert!(!self.entries.is_empty(), "pick on an empty catalog");
+        let deficit = deficit_fps.max(0.0);
+        let feasible = |e: &CatalogEntry| e.fps_capacity >= deficit && e.service_latency_s <= slo_s;
+        let mut best: Option<usize> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(j) => {
+                    let b = &self.entries[j];
+                    // Lexicographic preference; the final latency key
+                    // makes every strict-dominance axis a tie-breaker,
+                    // so a dominated entry can never win.
+                    let key = |e: &CatalogEntry, feas: bool| {
+                        if feas {
+                            (e.busy_power_w, -e.fps_capacity, e.service_latency_s)
+                        } else {
+                            (-e.fps_capacity, e.busy_power_w, e.service_latency_s)
+                        }
+                    };
+                    match (feasible(e), feasible(b)) {
+                        (true, false) => true,
+                        (false, true) => false,
+                        (f, _) => key(e, f) < key(b, f),
+                    }
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best.expect("non-empty catalog")
+    }
+
+    /// Whether entry `a` is strictly dominated by entry `b`: no worse on
+    /// both axes the policy optimizes (power down, capacity up) and
+    /// strictly worse on at least one. The `make check` energy-smoke
+    /// gate asserts [`pick`](Self::pick) never returns a dominated entry.
+    pub fn is_dominated(&self, a: usize, b: usize) -> bool {
+        let (ea, eb) = (&self.entries[a], &self.entries[b]);
+        eb.busy_power_w <= ea.busy_power_w
+            && eb.fps_capacity >= ea.fps_capacity
+            && eb.service_latency_s <= ea.service_latency_s
+            && (eb.busy_power_w < ea.busy_power_w
+                || eb.fps_capacity > ea.fps_capacity
+                || eb.service_latency_s < ea.service_latency_s)
+    }
+
+    /// Build replica `i` of entry `idx` (labels append the replica
+    /// index the driver hands in).
+    pub fn build(&self, idx: usize, i: usize) -> Box<dyn Backend> {
+        (self.entries[idx].build)(i)
+    }
+
+    /// The paper's hardware as a provisioning catalog — the one
+    /// registration the CLI, bench and example all share:
+    ///
+    /// 1. the tuned "ours" ZCU102 build (batch-aware when
+    ///    `ours_batched` is given; requires `batch >= 2` then),
+    /// 2. optionally the same architecture at the ZCU111 clock
+    ///    (schedules transfer: identical architecture, only the clock
+    ///    differs, as in [`super::shard::ShardPool::paper_boards`]),
+    /// 3. the original 16×16 configuration (slower, cooler — the entry
+    ///    that makes cheapest-feasible scale-out interesting),
+    /// 4. optionally an embedded-GPU baseline serving `baseline_gop`
+    ///    GOP per frame.
+    pub fn paper_catalog(
+        batch: usize,
+        ours: &TuningResult,
+        ours_batched: Option<&TuningResult>,
+        with_zcu111: bool,
+        original: &TuningResult,
+        baseline_gop: Option<f64>,
+        dispatch_s: f64,
+    ) -> Self {
+        let mut cat = Self::new(batch);
+        let batch = cat.batch;
+        {
+            let cfg = GemminiConfig::ours_zcu102();
+            let t1 = ours.clone();
+            let tb = ours_batched.cloned();
+            cat.register(
+                "ZCU102-Gemmini (ours)",
+                Box::new(move |i| {
+                    let label = format!("ZCU102-Gemmini (hetero {i})");
+                    Box::new(match &tb {
+                        Some(tb) => GemminiDevice::from_batch_tuning(
+                            &label,
+                            Board::Zcu102,
+                            cfg.clone(),
+                            &t1,
+                            tb,
+                            batch,
+                            dispatch_s,
+                        ),
+                        None => GemminiDevice::from_tuning(
+                            &label,
+                            Board::Zcu102,
+                            cfg.clone(),
+                            &t1,
+                            dispatch_s,
+                        ),
+                    })
+                }),
+            );
+        }
+        if with_zcu111 {
+            let t1 = ours.clone();
+            cat.register(
+                "ZCU111-Gemmini (ours)",
+                Box::new(move |i| {
+                    Box::new(GemminiDevice::from_tuning(
+                        &format!("ZCU111-Gemmini (hetero {i})"),
+                        Board::Zcu111,
+                        GemminiConfig::ours_zcu111(),
+                        &t1,
+                        dispatch_s,
+                    ))
+                }),
+            );
+        }
+        {
+            let cfg = GemminiConfig::original_zcu102();
+            let t = original.clone();
+            cat.register(
+                "ZCU102-Gemmini (original)",
+                Box::new(move |i| {
+                    Box::new(GemminiDevice::from_tuning(
+                        &format!("ZCU102-Gemmini (original {i})"),
+                        Board::Zcu102,
+                        cfg.clone(),
+                        &t,
+                        dispatch_s,
+                    ))
+                }),
+            );
+        }
+        if let Some(gop) = baseline_gop {
+            cat.register(
+                "NVIDIA Jetson AGX Xavier",
+                Box::new(move |_i| {
+                    Box::new(BaselineDevice::new(crate::baselines::xavier(), gop, 8))
+                }),
+            );
+        }
+        cat
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::xavier;
+    use crate::baselines::{xavier, Platform};
     use crate::scheduler::tune_graph;
     use crate::workload::{yolov7_tiny, ModelVariant};
 
@@ -355,5 +657,138 @@ mod tests {
         assert!(d.batch_latency_s(4) < 4.0 * b1);
         assert_eq!(d.max_batch(), 8);
         assert!(d.power_w(0.5) > 0.0);
+        assert!((d.gop_per_frame() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gemmini_device_reports_frame_gop() {
+        let (d, _) = tuned_device();
+        // 2 ops per MAC over the tuned layers, in giga-ops.
+        assert!(d.gop_per_frame() > 0.0);
+        assert_eq!(d.gop_per_frame(), d.gop);
+    }
+
+    /// A synthetic catalog entry: `fps` capacity at `watts` busy power.
+    fn synth(cat: &mut DeviceCatalog, fps: f64, watts: f64) {
+        let p = Platform {
+            name: "synth",
+            overhead_s: 0.0,
+            sustained_gops: fps, // 1 GOP per frame → fps frames/s
+            power_w: watts,
+        };
+        let label = format!("synth-{fps:.0}fps-{watts:.0}w");
+        cat.register_with(
+            &label,
+            fps,
+            watts,
+            watts,
+            1.0 / fps,
+            Box::new(move |_| Box::new(BaselineDevice::new(p.clone(), 1.0, 1))),
+        );
+    }
+
+    #[test]
+    fn catalog_picks_cheapest_feasible_device() {
+        let mut cat = DeviceCatalog::new(1);
+        synth(&mut cat, 50.0, 6.0); // cheap, small
+        synth(&mut cat, 200.0, 9.0); // fast, mid
+        synth(&mut cat, 300.0, 30.0); // fastest, hot
+        let slo = 1.0;
+        // Small deficit: the 6 W device suffices and wins.
+        assert_eq!(cat.pick(30.0, slo), 0);
+        // Deficit past the cheap device's capacity: next-cheapest
+        // feasible.
+        assert_eq!(cat.pick(120.0, slo), 1);
+        assert_eq!(cat.pick(250.0, slo), 2);
+        // Nothing feasible: the largest capacity takes the first bite.
+        assert_eq!(cat.pick(1000.0, slo), 2);
+        // Zero deficit (shed-forced grow): cheapest overall.
+        assert_eq!(cat.pick(0.0, slo), 0);
+    }
+
+    #[test]
+    fn catalog_latency_infeasibility_excludes_slow_devices() {
+        let mut cat = DeviceCatalog::new(1);
+        synth(&mut cat, 50.0, 6.0); // service latency 20 ms
+        synth(&mut cat, 200.0, 9.0); // service latency 5 ms
+        // With a 10 ms SLO the 6 W device can never restore it.
+        assert_eq!(cat.pick(10.0, 0.010), 1);
+        // With a roomy SLO it is back on the table.
+        assert_eq!(cat.pick(10.0, 0.100), 0);
+    }
+
+    #[test]
+    fn catalog_dominance_is_detected() {
+        let mut cat = DeviceCatalog::new(1);
+        synth(&mut cat, 100.0, 10.0);
+        synth(&mut cat, 90.0, 12.0); // dominated: slower and hotter
+        synth(&mut cat, 300.0, 12.0); // not dominated: faster
+        assert!(cat.is_dominated(1, 0));
+        assert!(!cat.is_dominated(0, 1));
+        assert!(!cat.is_dominated(2, 0));
+        assert!(!cat.is_dominated(0, 2));
+        // The dominated entry is never picked at any deficit.
+        for deficit in [0.0, 50.0, 95.0, 150.0, 500.0] {
+            assert_ne!(cat.pick(deficit, 1.0), 1, "deficit {deficit}");
+        }
+    }
+
+    #[test]
+    fn paper_catalog_registers_expected_entries() {
+        let cfg = GemminiConfig::ours_zcu102();
+        let mut g = yolov7_tiny(96, ModelVariant::Pruned88, 8);
+        crate::passes::replace_activations(&mut g);
+        let t = tune_graph(&cfg, &g, 1);
+        let t_orig = tune_graph(&GemminiConfig::original_zcu102(), &g, 1);
+        let full = DeviceCatalog::paper_catalog(
+            4,
+            &t,
+            None,
+            true,
+            &t_orig,
+            Some(g.gops()),
+            DEFAULT_DISPATCH_S,
+        );
+        let labels: Vec<&str> = full.entries().iter().map(|e| e.label.as_str()).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "ZCU102-Gemmini (ours)",
+                "ZCU111-Gemmini (ours)",
+                "ZCU102-Gemmini (original)",
+                "NVIDIA Jetson AGX Xavier",
+            ]
+        );
+        // The original config is the cheaper FPGA entry but slower; the
+        // GPU is the hottest.
+        let (ours, orig, gpu) = (&full.entries()[0], &full.entries()[2], &full.entries()[3]);
+        assert!(orig.busy_power_w < ours.busy_power_w);
+        assert!(orig.fps_capacity < ours.fps_capacity);
+        assert!(gpu.busy_power_w > ours.busy_power_w);
+        // Replica labels carry the grow index.
+        assert!(full.build(2, 7).name().contains("original 7"));
+        // Minimal form: just the ours/original pair.
+        let pair =
+            DeviceCatalog::paper_catalog(1, &t, None, false, &t_orig, None, DEFAULT_DISPATCH_S);
+        assert_eq!(pair.entries().len(), 2);
+        assert_eq!(pair.batch, 1);
+    }
+
+    #[test]
+    fn catalog_probe_matches_built_replicas() {
+        let mut cat = DeviceCatalog::new(4);
+        cat.register(
+            "xavier",
+            Box::new(|_i| Box::new(BaselineDevice::new(xavier(), 0.5, 8))),
+        );
+        let e = &cat.entries()[0];
+        let built = cat.build(0, 3);
+        let b = 4.min(built.max_batch());
+        assert!((e.service_latency_s - built.batch_latency_s(b)).abs() < 1e-12);
+        assert!((e.fps_capacity - b as f64 / built.batch_latency_s(b)).abs() < 1e-9);
+        assert!((e.busy_power_w - built.power_w(1.0)).abs() < 1e-12);
+        assert!(
+            (e.energy_per_frame_j - e.busy_power_w / e.fps_capacity).abs() < 1e-12
+        );
     }
 }

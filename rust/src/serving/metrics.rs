@@ -1,5 +1,6 @@
 //! Streaming fleet metrics: latency quantiles, throughput, per-device
-//! utilization, SLO violations.
+//! utilization, SLO violations (fleet-wide and per [`SloClass`]), and
+//! the fleet [`EnergyLedger`].
 //!
 //! Quantiles come from a log-spaced streaming histogram (constant memory,
 //! one pass — the shape HDRHistogram uses) so the fleet can track p99
@@ -9,9 +10,20 @@
 //! [`crate::scheduler::TuningResult::utilization`] through
 //! [`super::device::Backend::power_w`] rather than duplicating the
 //! formula.
+//!
+//! The energy ledger is the fleet-level face of the paper's headline
+//! metric (GOP/s/W, Table IV / Figure 8): the DES driver accrues
+//! `power × time` per device into per-epoch bins split by lifecycle
+//! state — provisioning (warm-up paid at idle power), active and
+//! draining — and credits each completion with the frame's
+//! giga-operations ([`super::device::Backend::gop_per_frame`]), so a
+//! whole fleet's efficiency is `served GOP / total J`, the same
+//! GOP-per-joule the paper reports for one board.
 
 use super::autoscale::ScalingEvent;
 use super::device::Backend;
+use super::shard::Lifecycle;
+use super::SloClass;
 
 /// Streaming latency histogram with log-spaced bins.
 #[derive(Debug, Clone)]
@@ -100,6 +112,173 @@ impl Default for LatencyHistogram {
     }
 }
 
+/// Energy accrued over one ledger epoch, split by device lifecycle
+/// state (J).
+#[derive(Debug, Clone, Default)]
+pub struct EpochEnergy {
+    /// Warm-up energy: devices provisioning during the epoch.
+    pub provisioning_j: f64,
+    /// Serving energy of active devices (busy and idle time both —
+    /// static board power burns either way, which is why scale-in is an
+    /// energy decision).
+    pub active_j: f64,
+    /// Energy of draining devices finishing their backlog.
+    pub draining_j: f64,
+}
+
+impl EpochEnergy {
+    pub fn total_j(&self) -> f64 {
+        self.provisioning_j + self.active_j + self.draining_j
+    }
+}
+
+/// The fleet-wide energy ledger: joules per epoch per device state, plus
+/// the served arithmetic volume, accrued exactly by the DES driver
+/// (power is piecewise-constant between events).
+#[derive(Debug, Clone)]
+pub struct EnergyLedger {
+    /// Ledger bin width, virtual s ([`crate::serving::SimConfig`]'s
+    /// `energy_epoch_s`).
+    pub epoch_s: f64,
+    /// Energy per epoch bin (bin `i` covers `[i·epoch_s, (i+1)·epoch_s)`).
+    pub epochs: Vec<EpochEnergy>,
+    /// Total energy per device slot (same indices as the device reports;
+    /// sums to the same total as `epochs`).
+    pub per_device_j: Vec<f64>,
+    /// Giga-operations of every completed frame.
+    pub served_gop: f64,
+}
+
+impl EnergyLedger {
+    /// Minimum bin width: bins are allocated densely over the whole run
+    /// (`horizon / epoch_s` of them), so sub-millisecond widths would
+    /// let one long trace exhaust memory.
+    pub const MIN_EPOCH_S: f64 = 1e-3;
+
+    pub fn new(epoch_s: f64) -> Self {
+        assert!(
+            epoch_s >= Self::MIN_EPOCH_S,
+            "ledger epoch must be at least {} s (got {epoch_s})",
+            Self::MIN_EPOCH_S
+        );
+        Self { epoch_s, epochs: Vec::new(), per_device_j: Vec::new(), served_gop: 0.0 }
+    }
+
+    /// A zero ledger (what [`FleetMetrics::report`] defaults to; the DES
+    /// driver replaces it with the accrued one).
+    pub fn empty() -> Self {
+        Self { epoch_s: 0.0, epochs: Vec::new(), per_device_j: Vec::new(), served_gop: 0.0 }
+    }
+
+    /// Accrue `power_w` over `[from_s, to_s)` for `device` in lifecycle
+    /// `state`, split across epoch bins. Retired devices draw nothing.
+    pub(super) fn accrue(
+        &mut self,
+        device: usize,
+        state: Lifecycle,
+        from_s: f64,
+        to_s: f64,
+        power_w: f64,
+    ) {
+        if matches!(state, Lifecycle::Retired) || to_s <= from_s {
+            return;
+        }
+        while self.per_device_j.len() <= device {
+            self.per_device_j.push(0.0);
+        }
+        let mut t = from_s;
+        let mut bin = (t / self.epoch_s).floor() as usize;
+        loop {
+            let seg_end = ((bin + 1) as f64 * self.epoch_s).min(to_s);
+            if seg_end <= t {
+                // Floating-point bin edge: `fl((bin+1)·epoch_s)` can
+                // equal `t` while `t / epoch_s` still floors into
+                // `bin` — step to the next bin instead of spinning on a
+                // zero-length segment.
+                bin += 1;
+                continue;
+            }
+            let j = power_w * (seg_end - t);
+            while self.epochs.len() <= bin {
+                self.epochs.push(EpochEnergy::default());
+            }
+            match state {
+                Lifecycle::Provisioning { .. } => self.epochs[bin].provisioning_j += j,
+                Lifecycle::Active => self.epochs[bin].active_j += j,
+                Lifecycle::Draining => self.epochs[bin].draining_j += j,
+                Lifecycle::Retired => unreachable!("filtered above"),
+            }
+            self.per_device_j[device] += j;
+            if seg_end >= to_s {
+                break;
+            }
+            t = seg_end;
+            bin += 1;
+        }
+    }
+
+    /// Total fleet energy over the run (sum of the epoch bins).
+    pub fn total_j(&self) -> f64 {
+        self.epochs.iter().map(EpochEnergy::total_j).sum()
+    }
+
+    pub fn provisioning_j(&self) -> f64 {
+        self.epochs.iter().map(|e| e.provisioning_j).sum()
+    }
+
+    pub fn active_j(&self) -> f64 {
+        self.epochs.iter().map(|e| e.active_j).sum()
+    }
+
+    pub fn draining_j(&self) -> f64 {
+        self.epochs.iter().map(|e| e.draining_j).sum()
+    }
+
+    /// The paper's efficiency metric at fleet scope: served GOP per
+    /// joule (numerically GOP/s/W). Zero when nothing was accrued.
+    pub fn fleet_gops_per_w(&self) -> f64 {
+        let j = self.total_j();
+        if j <= 0.0 {
+            0.0
+        } else {
+            self.served_gop / j
+        }
+    }
+}
+
+/// Final per-class figures: the latency quantiles and the class-scaled
+/// SLO verdicts for one [`SloClass`]'s traffic.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: SloClass,
+    /// Requests of this class offered to the front door.
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+    pub max_s: f64,
+    /// The class-scaled objective (fleet SLO × [`SloClass::slo_factor`]).
+    pub slo_s: f64,
+    /// Completions that exceeded the class-scaled objective.
+    pub violations: u64,
+}
+
+impl ClassReport {
+    /// Fraction of offered requests of this class that met the class
+    /// SLO (sheds count as violations). 1.0 when the class saw no
+    /// traffic.
+    pub fn attainment(&self) -> f64 {
+        let offered = self.completed + self.shed;
+        if offered == 0 {
+            return 1.0;
+        }
+        (self.completed - self.violations) as f64 / offered as f64
+    }
+}
+
 /// Final per-device figures.
 #[derive(Debug, Clone)]
 pub struct DeviceReport {
@@ -148,6 +327,11 @@ pub struct FleetReport {
     /// Autoscaler actions in time order (empty for fixed pools).
     pub scaling: Vec<ScalingEvent>,
     pub devices: Vec<DeviceReport>,
+    /// Per-class latency/SLO breakdown, indexed like [`SloClass::ALL`].
+    pub classes: Vec<ClassReport>,
+    /// The fleet energy ledger (zero for reports built outside the DES
+    /// driver).
+    pub energy: EnergyLedger,
 }
 
 impl FleetReport {
@@ -192,6 +376,14 @@ pub struct EpochStats {
     pub busy_s: f64,
 }
 
+/// Per-[`SloClass`] streaming stats.
+#[derive(Debug)]
+struct ClassStats {
+    hist: LatencyHistogram,
+    shed: u64,
+    violations: u64,
+}
+
 #[derive(Debug)]
 pub struct FleetMetrics {
     pub(super) hist: LatencyHistogram,
@@ -199,6 +391,8 @@ pub struct FleetMetrics {
     pub(super) slo_s: f64,
     pub(super) slo_violations: u64,
     pub(super) per_device: Vec<DeviceStats>,
+    /// Per-class streams, indexed like [`SloClass::ALL`].
+    per_class: Vec<ClassStats>,
     /// Rolling per-epoch window the autoscaler observes.
     epoch_hist: LatencyHistogram,
     epoch_shed: u64,
@@ -215,6 +409,10 @@ impl FleetMetrics {
             per_device: (0..n_devices)
                 .map(|_| DeviceStats { busy_s: 0.0, completed: 0, batches: 0, stolen: 0 })
                 .collect(),
+            per_class: SloClass::ALL
+                .iter()
+                .map(|_| ClassStats { hist: LatencyHistogram::new(), shed: 0, violations: 0 })
+                .collect(),
             epoch_hist: LatencyHistogram::new(),
             epoch_shed: 0,
             epoch_busy_s: 0.0,
@@ -226,12 +424,20 @@ impl FleetMetrics {
         self.per_device.push(DeviceStats { busy_s: 0.0, completed: 0, batches: 0, stolen: 0 });
     }
 
-    /// Record one completed request on `device`.
-    pub fn record_completion(&mut self, device: usize, latency_s: f64) {
+    /// Record one completed request of `class` on `device`. The
+    /// fleet-wide violation counter judges against the base SLO (as
+    /// before classes existed); the per-class counter judges against the
+    /// class-scaled SLO.
+    pub fn record_completion(&mut self, device: usize, latency_s: f64, class: SloClass) {
         self.hist.record(latency_s);
         self.epoch_hist.record(latency_s);
         if latency_s > self.slo_s {
             self.slo_violations += 1;
+        }
+        let c = &mut self.per_class[class.index()];
+        c.hist.record(latency_s);
+        if latency_s > self.slo_s * class.slo_factor() {
+            c.violations += 1;
         }
         self.per_device[device].completed += 1;
     }
@@ -243,9 +449,10 @@ impl FleetMetrics {
         self.epoch_busy_s += service_s;
     }
 
-    pub fn record_shed(&mut self) {
+    pub fn record_shed(&mut self, class: SloClass) {
         self.shed += 1;
         self.epoch_shed += 1;
+        self.per_class[class.index()].shed += 1;
     }
 
     pub fn record_steal(&mut self, device: usize, n: usize) {
@@ -267,9 +474,36 @@ impl FleetMetrics {
         stats
     }
 
+    /// Per-class reports from the streaming class stats. `offered`
+    /// defaults to `completed + shed` (the DES driver overwrites it with
+    /// its independently-counted admissions, which the conservation
+    /// property tests compare).
+    pub(super) fn class_reports(&self) -> Vec<ClassReport> {
+        SloClass::ALL
+            .iter()
+            .map(|&class| {
+                let s = &self.per_class[class.index()];
+                ClassReport {
+                    class,
+                    offered: s.hist.count() + s.shed,
+                    completed: s.hist.count(),
+                    shed: s.shed,
+                    p50_s: s.hist.quantile(0.50),
+                    p95_s: s.hist.quantile(0.95),
+                    p99_s: s.hist.quantile(0.99),
+                    mean_s: s.hist.mean_s(),
+                    max_s: s.hist.max_s(),
+                    slo_s: self.slo_s * class.slo_factor(),
+                    violations: s.violations,
+                }
+            })
+            .collect()
+    }
+
     /// Finalize against the devices that produced the stats. Fleet-sizing
     /// fields default to a fixed pool (`backends.len()` throughout, no
-    /// scaling events); the autoscaled driver overwrites them.
+    /// scaling events); the autoscaled driver overwrites them, and fills
+    /// in the energy ledger it accrued.
     pub fn report(&self, backends: &[&dyn Backend], makespan_s: f64) -> FleetReport {
         let devices = self
             .per_device
@@ -314,6 +548,8 @@ impl FleetMetrics {
             devices_final: backends.len(),
             scaling: Vec::new(),
             devices,
+            classes: self.class_reports(),
+            energy: EnergyLedger::empty(),
         }
     }
 }
@@ -381,18 +617,74 @@ mod tests {
     #[test]
     fn slo_violations_counted() {
         let mut m = FleetMetrics::new(1, 0.010);
-        m.record_completion(0, 0.005);
-        m.record_completion(0, 0.015);
-        m.record_completion(0, 0.020);
+        m.record_completion(0, 0.005, SloClass::Standard);
+        m.record_completion(0, 0.015, SloClass::Standard);
+        m.record_completion(0, 0.020, SloClass::Standard);
         assert_eq!(m.slo_violations, 2);
+    }
+
+    #[test]
+    fn class_violations_judged_against_scaled_slo() {
+        let mut m = FleetMetrics::new(1, 0.100);
+        // 70 ms: under the fleet SLO (100 ms) and the batchable SLO
+        // (200 ms), but over the interactive SLO (50 ms).
+        m.record_completion(0, 0.070, SloClass::Interactive);
+        m.record_completion(0, 0.070, SloClass::Standard);
+        m.record_completion(0, 0.070, SloClass::Batchable);
+        m.record_shed(SloClass::Batchable);
+        assert_eq!(m.slo_violations, 0, "fleet-wide counter uses the base SLO");
+        let classes = m.class_reports();
+        assert_eq!(classes[SloClass::Interactive.index()].violations, 1);
+        assert_eq!(classes[SloClass::Standard.index()].violations, 0);
+        assert_eq!(classes[SloClass::Batchable.index()].violations, 0);
+        assert_eq!(classes[SloClass::Batchable.index()].shed, 1);
+        assert_eq!(classes[SloClass::Batchable.index()].offered, 2);
+        assert!((classes[SloClass::Interactive.index()].slo_s - 0.050).abs() < 1e-15);
+        // Attainment: interactive 0/1 met, batchable 1 of 2 offered met.
+        assert_eq!(classes[SloClass::Interactive.index()].attainment(), 0.0);
+        assert_eq!(classes[SloClass::Batchable.index()].attainment(), 0.5);
+        let std = &classes[SloClass::Standard.index()];
+        assert!(std.p99_s > 0.0);
+        assert_eq!(std.attainment(), 1.0);
+    }
+
+    #[test]
+    fn energy_ledger_bins_across_epochs_and_states() {
+        let mut l = EnergyLedger::new(0.5);
+        // 10 W active from 0.2 s to 1.3 s: bins get 3 J / 5 J / 3 J.
+        l.accrue(0, Lifecycle::Active, 0.2, 1.3, 10.0);
+        assert_eq!(l.epochs.len(), 3);
+        assert!((l.epochs[0].active_j - 3.0).abs() < 1e-12);
+        assert!((l.epochs[1].active_j - 5.0).abs() < 1e-12);
+        assert!((l.epochs[2].active_j - 3.0).abs() < 1e-12);
+        // A provisioning device lands in its own column.
+        l.accrue(1, Lifecycle::Provisioning { ready_at: 1.0 }, 0.0, 0.5, 4.0);
+        assert!((l.epochs[0].provisioning_j - 2.0).abs() < 1e-12);
+        l.accrue(0, Lifecycle::Draining, 1.3, 1.4, 10.0);
+        assert!((l.epochs[2].draining_j - 1.0).abs() < 1e-12);
+        // Retired draws nothing; zero-length intervals are no-ops.
+        l.accrue(0, Lifecycle::Retired, 0.0, 10.0, 10.0);
+        l.accrue(0, Lifecycle::Active, 2.0, 2.0, 10.0);
+        // Totals agree across the two accumulation views.
+        let total = l.total_j();
+        let per_dev: f64 = l.per_device_j.iter().sum();
+        assert!((total - per_dev).abs() < 1e-9 * total.max(1.0));
+        assert!((total - (11.0 + 2.0 + 1.0)).abs() < 1e-9);
+        assert!(
+            (l.provisioning_j() + l.active_j() + l.draining_j() - total).abs() < 1e-12
+        );
+        // Efficiency: served GOP over joules.
+        l.served_gop = 28.0;
+        assert!((l.fleet_gops_per_w() - 28.0 / total).abs() < 1e-12);
+        assert_eq!(EnergyLedger::empty().fleet_gops_per_w(), 0.0);
     }
 
     #[test]
     fn epoch_window_snapshots_and_resets() {
         let mut m = FleetMetrics::new(1, 0.100);
-        m.record_completion(0, 0.010);
-        m.record_completion(0, 0.030);
-        m.record_shed();
+        m.record_completion(0, 0.010, SloClass::Standard);
+        m.record_completion(0, 0.030, SloClass::Standard);
+        m.record_shed(SloClass::Standard);
         m.record_batch(0, 0.040);
         let e = m.take_epoch();
         assert_eq!(e.completed, 2);
@@ -412,7 +704,7 @@ mod tests {
     fn add_device_extends_per_device_stats() {
         let mut m = FleetMetrics::new(1, 0.1);
         m.add_device();
-        m.record_completion(1, 0.005);
+        m.record_completion(1, 0.005, SloClass::Standard);
         m.record_batch(1, 0.005);
         let p = crate::baselines::Platform {
             name: "a",

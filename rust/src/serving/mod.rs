@@ -15,21 +15,27 @@
 //! - [`device`] — the [`Backend`] trait + Gemmini/baseline impls; batch
 //!   service times derived from the existing cycle model, or measured by
 //!   batch-aware schedule tuning
-//!   ([`GemminiDevice::from_batch_tuning`]);
-//! - [`batcher`] — max-batch/max-wait dynamic batching policy;
+//!   ([`GemminiDevice::from_batch_tuning`]); plus the [`DeviceCatalog`]
+//!   the heterogeneous autoscaler provisions from (cheapest-feasible
+//!   device choice);
+//! - [`batcher`] — max-batch/max-wait dynamic batching policy
+//!   (class-aware wait deadlines);
 //! - [`shard`] — the device pool: least-outstanding-work routing, work
 //!   stealing, and the provision → serve → drain → retire
 //!   [`shard::Lifecycle`];
 //! - [`admission`] — bounded per-device queues with shed policies
-//!   (generalizing [`crate::pipeline::Topic`]'s overflow handling);
+//!   (generalizing [`crate::pipeline::Topic`]'s overflow handling;
+//!   [`ShedPolicy::ClassAware`] sheds the lowest [`SloClass`] first);
 //! - [`autoscale`] — closed-loop pool sizing between DES epochs
 //!   (target-utilization and p99-SLO-tracking policies, modeled
-//!   provisioning delay);
+//!   provisioning delay, energy-aware drain ordering);
 //! - [`metrics`] — streaming p50/p95/p99, throughput, utilization, SLO
-//!   violation counters, per-epoch windows, scaling events;
+//!   violation counters (fleet-wide and per [`SloClass`]), per-epoch
+//!   windows, scaling events, and the per-epoch [`EnergyLedger`];
 //! - [`sim`] — the discrete-event driver + arrival models (open-loop
 //!   Poisson / bursty multi-camera traces, closed-loop window-limited
-//!   clients), with fixed-pool and autoscaled entry points.
+//!   clients), with fixed-pool, autoscaled and heterogeneous-autoscaled
+//!   entry points.
 
 pub mod admission;
 pub mod autoscale;
@@ -41,17 +47,105 @@ pub mod sim;
 
 pub use admission::ShedPolicy;
 pub use autoscale::{
-    AutoscaleConfig, Autoscaler, ScaleAction, ScaleEventKind, ScalePolicy, ScalingEvent,
-    SloTracking, TargetUtilization,
+    AutoscaleConfig, Autoscaler, DrainOrder, ScaleAction, ScaleEventKind, ScalePolicy,
+    ScalingEvent, SloTracking, TargetUtilization,
 };
 pub use batcher::BatchPolicy;
-pub use device::{Backend, BaselineDevice, GemminiDevice};
-pub use metrics::{FleetReport, LatencyHistogram};
+pub use device::{capacity_fps, Backend, BaselineDevice, CatalogEntry, DeviceCatalog, GemminiDevice};
+pub use metrics::{ClassReport, EnergyLedger, EpochEnergy, FleetReport, LatencyHistogram};
 pub use shard::{Lifecycle, ShardPool};
 pub use sim::{
-    multi_camera_trace, poisson_trace, simulate, simulate_autoscaled, simulate_closed_loop,
-    simulate_closed_loop_autoscaled, ClosedLoopConfig, SimConfig,
+    multi_camera_trace, poisson_trace, simulate, simulate_autoscaled, simulate_autoscaled_hetero,
+    simulate_closed_loop, simulate_closed_loop_autoscaled, simulate_closed_loop_autoscaled_hetero,
+    ClosedLoopConfig, SimConfig,
 };
+
+/// The latency class a camera's frames are served under. The paper's
+/// Section VI system has one camera and one implicit deadline; a fleet
+/// serves many streams with different stakes — an operator watching a
+/// junction live (interactive), routine monitoring (standard), and
+/// offline analytics that only need eventual throughput (batchable).
+/// The class scales the fleet SLO ([`SloClass::slo_factor`]), tightens
+/// or relaxes the batcher's wait deadline ([`SloClass::wait_factor`]),
+/// and orders shedding under overload ([`ShedPolicy::ClassAware`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SloClass {
+    /// Tight deadline: half the fleet SLO, minimal batching delay.
+    Interactive,
+    /// The fleet SLO as-is (the default; class-unaware runs behave
+    /// exactly as before classes existed).
+    Standard,
+    /// Throughput-oriented: double the fleet SLO, patient batching.
+    Batchable,
+}
+
+impl SloClass {
+    /// All classes, in priority order (highest first). Indexes match
+    /// [`SloClass::index`].
+    pub const ALL: [SloClass; 3] = [SloClass::Interactive, SloClass::Standard, SloClass::Batchable];
+
+    /// Dense index for per-class tables.
+    pub fn index(self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batchable => 2,
+        }
+    }
+
+    /// Shedding priority: higher keeps its frames longer under overload.
+    pub fn priority(self) -> u8 {
+        match self {
+            SloClass::Interactive => 2,
+            SloClass::Standard => 1,
+            SloClass::Batchable => 0,
+        }
+    }
+
+    /// Multiplier on the fleet SLO this class is judged against.
+    pub fn slo_factor(self) -> f64 {
+        match self {
+            SloClass::Interactive => 0.5,
+            SloClass::Standard => 1.0,
+            SloClass::Batchable => 2.0,
+        }
+    }
+
+    /// Multiplier on the batcher's max-wait deadline for this class's
+    /// frames (interactive frames pull the batch closed sooner).
+    pub fn wait_factor(self) -> f64 {
+        match self {
+            SloClass::Interactive => 0.25,
+            SloClass::Standard => 1.0,
+            SloClass::Batchable => 1.5,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batchable => "batchable",
+        }
+    }
+
+    /// The default camera → class assignment (`repro fleet --classes`,
+    /// [`assign_slo_classes`]): cameras cycle through the classes so a
+    /// trace offers all three symmetrically.
+    pub fn for_camera(camera: usize) -> SloClass {
+        SloClass::ALL[camera % 3]
+    }
+}
+
+/// Stamp every request's class from its camera via
+/// [`SloClass::for_camera`]. Trace generators emit [`SloClass::Standard`]
+/// by default so class-unaware experiments are unchanged; call this on a
+/// trace to turn on the class mix.
+pub fn assign_slo_classes(trace: &mut [Request]) {
+    for r in trace {
+        r.class = SloClass::for_camera(r.camera);
+    }
+}
 
 /// One inference request: a camera frame arriving at the fleet front door.
 #[derive(Debug, Clone, PartialEq)]
@@ -65,4 +159,46 @@ pub struct Request {
     /// Objects in the frame (scene-complexity hint from the trace
     /// generator; drives burstiness, not service time).
     pub objects: usize,
+    /// The latency class the frame is admitted, batched, shed and judged
+    /// under.
+    pub class: SloClass,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_orderings_are_consistent() {
+        // Priority strictly decreases along ALL; slo/wait factors grow.
+        for w in SloClass::ALL.windows(2) {
+            assert!(w[0].priority() > w[1].priority());
+            assert!(w[0].slo_factor() < w[1].slo_factor());
+            assert!(w[0].wait_factor() <= w[1].wait_factor());
+        }
+        // Standard is the do-nothing class: factors of exactly 1.
+        assert_eq!(SloClass::Standard.slo_factor(), 1.0);
+        assert_eq!(SloClass::Standard.wait_factor(), 1.0);
+        for (i, c) in SloClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+        }
+    }
+
+    #[test]
+    fn camera_assignment_cycles_classes() {
+        let mut trace: Vec<Request> = (0..6)
+            .map(|i| Request {
+                id: i as u64,
+                camera: i,
+                arrival_s: i as f64,
+                objects: 1,
+                class: SloClass::Standard,
+            })
+            .collect();
+        assign_slo_classes(&mut trace);
+        assert_eq!(trace[0].class, SloClass::Interactive);
+        assert_eq!(trace[1].class, SloClass::Standard);
+        assert_eq!(trace[2].class, SloClass::Batchable);
+        assert_eq!(trace[3].class, SloClass::Interactive);
+    }
 }

@@ -209,6 +209,35 @@ impl ShardPool {
         })
     }
 
+    /// The active device the energy-aware autoscaler drains first: the
+    /// highest idle power among active devices. Power ranks first —
+    /// whether a device happens to be mid-batch at the epoch instant is
+    /// a transient, while its board watts burn for as long as it stays
+    /// in the pool (a draining device finishes its backlog anyway, so
+    /// draining a busy board costs only delayed retirement, never lost
+    /// work). Idle-right-now breaks power ties, then the newest index
+    /// (replicas before seed boards, matching the homogeneous drain
+    /// order). `None` when nothing is active.
+    pub fn most_expensive_active(&self) -> Option<usize> {
+        let mut best: Option<(f64, bool, usize)> = None;
+        for (i, d) in self.devices.iter().enumerate() {
+            if !matches!(d.lifecycle, Lifecycle::Active) {
+                continue;
+            }
+            let idle_now = !d.busy && d.queue.is_empty();
+            let key = (d.backend.power_w(0.0), idle_now, i);
+            let better = match &best {
+                None => true,
+                // Tuple order: hottest, then idle-now, then newest.
+                Some(b) => key > *b,
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+
     /// Steal the newer half of the most-backlogged sibling's queue into
     /// idle device `idx`. Returns how many requests moved.
     pub fn steal_into(&mut self, idx: usize) -> usize {
@@ -240,7 +269,7 @@ mod tests {
     use crate::serving::device::BaselineDevice;
 
     fn req(id: u64, t: f64) -> Request {
-        Request { id, camera: 0, arrival_s: t, objects: 1 }
+        Request { id, camera: 0, arrival_s: t, objects: 1, class: crate::serving::SloClass::Standard }
     }
 
     fn pool2() -> ShardPool {
@@ -319,6 +348,30 @@ mod tests {
         assert!(!warming.serves() && !warming.accepts_new());
         assert!(!Lifecycle::Retired.serves());
         assert_eq!(warming.label(), "warming");
+    }
+
+    #[test]
+    fn most_expensive_active_ranks_power_then_idleness_then_newest() {
+        let mut p = pool2(); // xavier (30 W) then rpi4 (6.5 W)
+        // Both idle: the hotter xavier drains first.
+        assert_eq!(p.most_expensive_active(), Some(0));
+        // Xavier busy, rpi4 idle: the 30 W board *still* drains first —
+        // busy-at-this-instant is a transient, its watts are not.
+        p.devices[0].busy = true;
+        assert_eq!(p.most_expensive_active(), Some(0));
+        // Nothing active → None.
+        p.devices[0].lifecycle = Lifecycle::Draining;
+        p.devices[1].lifecycle = Lifecycle::Retired;
+        assert_eq!(p.most_expensive_active(), None);
+        // Equal power: the idle device beats the busy one…
+        let mut q = ShardPool::new();
+        q.register(Box::new(BaselineDevice::new(rpi4(), 0.5, 8)));
+        q.register(Box::new(BaselineDevice::new(rpi4(), 0.5, 8)));
+        q.devices[1].busy = true;
+        assert_eq!(q.most_expensive_active(), Some(0));
+        // …and with idleness equal too, the newest index wins.
+        q.devices[1].busy = false;
+        assert_eq!(q.most_expensive_active(), Some(1));
     }
 
     #[test]

@@ -23,12 +23,14 @@ use crate::dataset::scenes::SceneConfig;
 use crate::util::Rng;
 
 use super::admission::{admit, Admission, ShedPolicy};
-use super::autoscale::{Autoscaler, EpochObservation, ScaleAction, ScaleEventKind, ScalingEvent};
+use super::autoscale::{
+    Autoscaler, DrainOrder, EpochObservation, ScaleAction, ScaleEventKind, ScalingEvent,
+};
 use super::batcher::{BatchPolicy, Decision};
-use super::device::Backend;
-use super::metrics::{EpochStats, FleetMetrics, FleetReport};
+use super::device::{Backend, DeviceCatalog};
+use super::metrics::{EnergyLedger, EpochStats, FleetMetrics, FleetReport};
 use super::shard::{Lifecycle, ShardPool};
-use super::Request;
+use super::{Request, SloClass};
 
 /// Fleet-wide serving configuration for one simulated run.
 #[derive(Debug, Clone)]
@@ -37,10 +39,14 @@ pub struct SimConfig {
     /// Per-device admission queue bound.
     pub queue_depth: usize,
     pub shed: ShedPolicy,
-    /// Latency objective completed requests are judged against, s.
+    /// Latency objective completed requests are judged against, s
+    /// (scaled per class by [`SloClass::slo_factor`]).
     pub slo_s: f64,
     /// Idle devices steal from backlogged siblings.
     pub work_stealing: bool,
+    /// Bin width of the fleet [`EnergyLedger`], virtual s (at least
+    /// [`EnergyLedger::MIN_EPOCH_S`] — bins are dense over the run).
+    pub energy_epoch_s: f64,
 }
 
 impl Default for SimConfig {
@@ -51,6 +57,7 @@ impl Default for SimConfig {
             shed: ShedPolicy::DropOldest,
             slo_s: 0.100,
             work_stealing: true,
+            energy_epoch_s: 0.5,
         }
     }
 }
@@ -74,6 +81,9 @@ pub struct ClosedLoopConfig {
     /// Stop emitting new frames at this virtual time, s.
     pub horizon_s: f64,
     pub seed: u64,
+    /// Stamp each camera's frames with [`SloClass::for_camera`] instead
+    /// of [`SloClass::Standard`].
+    pub classed: bool,
 }
 
 impl Default for ClosedLoopConfig {
@@ -85,6 +95,7 @@ impl Default for ClosedLoopConfig {
             think_s: 0.005,
             horizon_s: 10.0,
             seed: 0,
+            classed: false,
         }
     }
 }
@@ -101,7 +112,13 @@ pub fn poisson_trace(rate_hz: f64, horizon_s: f64, seed: u64) -> Vec<Request> {
         if t >= horizon_s {
             break;
         }
-        out.push(Request { id: out.len() as u64, camera: 0, arrival_s: t, objects: 1 });
+        out.push(Request {
+            id: out.len() as u64,
+            camera: 0,
+            arrival_s: t,
+            objects: 1,
+            class: SloClass::Standard,
+        });
     }
     out
 }
@@ -130,11 +147,23 @@ pub fn multi_camera_trace(
         let mut t = rng.f64() * period; // phase offset
         while t < horizon_s {
             let objects = rng.range(scene.min_objects, scene.max_objects + 1);
-            out.push(Request { id: 0, camera: cam, arrival_s: t, objects });
+            out.push(Request {
+                id: 0,
+                camera: cam,
+                arrival_s: t,
+                objects,
+                class: SloClass::Standard,
+            });
             if objects as f64 > midpoint {
                 let t2 = t + 0.1 * period;
                 if t2 < horizon_s {
-                    out.push(Request { id: 0, camera: cam, arrival_s: t2, objects });
+                    out.push(Request {
+                        id: 0,
+                        camera: cam,
+                        arrival_s: t2,
+                        objects,
+                        class: SloClass::Standard,
+                    });
                 }
             }
             // ±10% frame jitter around the nominal period.
@@ -231,7 +260,9 @@ impl Arrivals<'_> {
                 };
                 let id = *next_id;
                 *next_id += 1;
-                Some(Request { id, camera: i, arrival_s: t, objects: 1 })
+                let class =
+                    if cl.classed { SloClass::for_camera(i) } else { SloClass::Standard };
+                Some(Request { id, camera: i, arrival_s: t, objects: 1, class })
             }
         }
     }
@@ -287,7 +318,7 @@ fn settle(
                 let done_at = pool.devices[i].free_at;
                 let batch = std::mem::take(&mut pool.devices[i].in_flight);
                 for r in batch {
-                    metrics.record_completion(i, done_at - r.arrival_s);
+                    metrics.record_completion(i, done_at - r.arrival_s, r.class);
                     done.push((r, done_at));
                 }
                 pool.devices[i].busy = false;
@@ -347,12 +378,36 @@ fn next_event(pool: &ShardPool, next_arrival: Option<f64>, batch: &BatchPolicy, 
     t
 }
 
+/// Where grown devices come from.
+enum Provisioner<'a> {
+    /// Homogeneous: a factory builds the `i`-th provisioned device (`i`
+    /// counts grows over the whole run, for unique labels).
+    Factory(&'a mut dyn FnMut(usize) -> Box<dyn Backend>),
+    /// Heterogeneous: each grow picks the cheapest catalog entry whose
+    /// capacity covers the current demand deficit (and whose service
+    /// latency fits the SLO) — see [`DeviceCatalog::pick`].
+    Catalog(&'a DeviceCatalog),
+}
+
 /// The autoscaler driver state handed to [`drive`].
 struct ScalingCtx<'a> {
     auto: &'a mut Autoscaler,
-    /// Builds the `i`-th provisioned device (`i` counts grows over the
-    /// whole run, for unique labels).
-    factory: &'a mut dyn FnMut(usize) -> Box<dyn Backend>,
+    provisioner: Provisioner<'a>,
+}
+
+/// Sustainable throughput of the capacity that is staying (active +
+/// provisioning devices) at the run's batching policy, frames/s — what
+/// the heterogeneous grow path measures its deficit against (the same
+/// [`capacity_fps`](super::device::capacity_fps) definition the catalog
+/// probes with, so deficit and feasibility agree).
+fn planned_capacity_fps(pool: &ShardPool, batch: &BatchPolicy) -> f64 {
+    pool.devices
+        .iter()
+        .filter(|d| {
+            d.lifecycle.accepts_new() || matches!(d.lifecycle, Lifecycle::Provisioning { .. })
+        })
+        .map(|d| super::device::capacity_fps(d.backend.as_ref(), batch.max_batch))
+        .sum()
 }
 
 fn observe(pool: &ShardPool, stats: EpochStats, now: f64, epoch_s: f64) -> EpochObservation {
@@ -387,11 +442,25 @@ fn drive(
     // Pre-loaded queues (tests seed skew this way) count as offered, so
     // the conservation law offered == completed + shed holds for them too.
     let mut offered = pool.backlog() as u64;
+    let mut offered_by_class = [0u64; 3];
+    for d in &pool.devices {
+        for r in &d.queue {
+            offered_by_class[r.class.index()] += 1;
+        }
+    }
     let mut grows = 0usize;
     let mut next_epoch = scaling.as_ref().map(|s| s.auto.cfg.epoch_s);
     let devices_start = pool.serving_count();
     let mut devices_peak = pool.active_count();
     let mut done: Vec<(Request, f64)> = Vec::new();
+    // Energy accounting: per-device idle/busy power and frame GOP are
+    // static per backend, cached once per registration.
+    let mut ledger = EnergyLedger::new(cfg.energy_epoch_s);
+    let mut powers: Vec<(f64, f64, f64)> = pool
+        .devices
+        .iter()
+        .map(|d| (d.backend.power_w(0.0), d.backend.power_w(1.0), d.backend.gop_per_frame()))
+        .collect();
 
     loop {
         // 0. Provisioned devices whose warm-up has finished join the pool.
@@ -412,16 +481,17 @@ fn drive(
         // 1. Admit every arrival due by `now`.
         while let Some(req) = arrivals.pop_due(now) {
             offered += 1;
+            offered_by_class[req.class.index()] += 1;
             let idx = pool.route(now);
             let d = &mut pool.devices[idx];
             match admit(&mut d.queue, cfg.queue_depth, cfg.shed, req.clone()) {
                 Admission::Admitted => {}
                 Admission::AdmittedEvicted(old) => {
-                    metrics.record_shed();
+                    metrics.record_shed(old.class);
                     done.push((old, now));
                 }
                 Admission::Rejected => {
-                    metrics.record_shed();
+                    metrics.record_shed(req.class);
                     done.push((req, now));
                 }
             }
@@ -461,8 +531,27 @@ fn drive(
                 let obs = observe(pool, metrics.take_epoch(), now, epoch_s);
                 match ctx.auto.decide(&obs) {
                     ScaleAction::Grow(n) => {
+                        // The epoch's demand in frames/s (sheds are
+                        // demand the fleet failed to serve).
+                        let demand_fps = (obs.completed + obs.shed) as f64 / epoch_s;
                         for _ in 0..n {
-                            let backend = (ctx.factory)(grows);
+                            let backend = match &mut ctx.provisioner {
+                                Provisioner::Factory(factory) => factory(grows),
+                                Provisioner::Catalog(catalog) => {
+                                    // Deficit shrinks as this loop adds
+                                    // capacity, so a 2-device grow can
+                                    // mix device kinds.
+                                    let deficit = demand_fps
+                                        - planned_capacity_fps(pool, &cfg.batch);
+                                    let e = catalog.pick(deficit, cfg.slo_s);
+                                    catalog.build(e, grows)
+                                }
+                            };
+                            powers.push((
+                                backend.power_w(0.0),
+                                backend.power_w(1.0),
+                                backend.gop_per_frame(),
+                            ));
                             grows += 1;
                             let ready_at = now + ctx.auto.cfg.provision_delay_s;
                             let idx = pool.register_provisioning(backend, ready_at);
@@ -477,13 +566,18 @@ fn drive(
                     }
                     ScaleAction::Shrink(n) => {
                         for _ in 0..n {
-                            // Newest active device drains first: replicas
-                            // retire before the seed boards.
-                            let Some(idx) = pool
-                                .devices
-                                .iter()
-                                .rposition(|d| matches!(d.lifecycle, Lifecycle::Active))
-                            else {
+                            let idx = match ctx.auto.cfg.drain_order {
+                                // Newest active device drains first:
+                                // replicas retire before the seed boards.
+                                DrainOrder::NewestFirst => pool
+                                    .devices
+                                    .iter()
+                                    .rposition(|d| matches!(d.lifecycle, Lifecycle::Active)),
+                                // Energy-aware: the hottest (preferably
+                                // already idle) device drains first.
+                                DrainOrder::MostExpensiveFirst => pool.most_expensive_active(),
+                            };
+                            let Some(idx) = idx else {
                                 break;
                             };
                             pool.devices[idx].lifecycle = Lifecycle::Draining;
@@ -520,9 +614,26 @@ fn drive(
         // The DES invariant the property tests lean on: virtual time
         // never runs backwards.
         assert!(t + 1e-12 >= now, "virtual time went backwards: {t} < {now}");
-        now = t.max(now);
+        let t = t.max(now);
+        // Accrue energy over the step: between events every device's
+        // lifecycle and busy state are constant (the next event is
+        // clamped to every free_at / ready_at), so power is piecewise
+        // constant and the ledger is exact.
+        for (i, d) in pool.devices.iter().enumerate() {
+            let (idle_w, busy_w, _) = powers[i];
+            ledger.accrue(i, d.lifecycle, now, t, if d.busy { busy_w } else { idle_w });
+        }
+        now = t;
     }
 
+    for (stats, &(_, _, gop)) in metrics.per_device.iter().zip(&powers) {
+        ledger.served_gop += stats.completed as f64 * gop;
+    }
+    // Devices registered in the run's last instant never accrued: give
+    // them explicit zero rows so ledger and device reports align.
+    while ledger.per_device_j.len() < pool.devices.len() {
+        ledger.per_device_j.push(0.0);
+    }
     let backends: Vec<&dyn Backend> = pool.devices.iter().map(|d| d.backend.as_ref()).collect();
     let mut report = metrics.report(&backends, last_completion.max(now));
     report.offered = offered;
@@ -533,6 +644,10 @@ fn drive(
     for (dr, ds) in report.devices.iter_mut().zip(&pool.devices) {
         dr.state = ds.lifecycle.label();
     }
+    for (i, c) in report.classes.iter_mut().enumerate() {
+        c.offered = offered_by_class[i];
+    }
+    report.energy = ledger;
     report
 }
 
@@ -552,7 +667,48 @@ pub fn simulate_autoscaled(
     auto: &mut Autoscaler,
     factory: &mut dyn FnMut(usize) -> Box<dyn Backend>,
 ) -> FleetReport {
-    drive(pool, Arrivals::Open { trace, next: 0 }, cfg, Some(ScalingCtx { auto, factory }))
+    drive(
+        pool,
+        Arrivals::Open { trace, next: 0 },
+        cfg,
+        Some(ScalingCtx { auto, provisioner: Provisioner::Factory(factory) }),
+    )
+}
+
+/// Heterogeneous autoscaling on an open-loop trace: every grow picks the
+/// cheapest catalog device predicted to restore the SLO
+/// ([`DeviceCatalog::pick`]); pair with
+/// [`DrainOrder::MostExpensiveFirst`] for energy-aware scale-in.
+pub fn simulate_autoscaled_hetero(
+    pool: &mut ShardPool,
+    trace: &[Request],
+    cfg: &SimConfig,
+    auto: &mut Autoscaler,
+    catalog: &DeviceCatalog,
+) -> FleetReport {
+    check_catalog(catalog, cfg);
+    drive(
+        pool,
+        Arrivals::Open { trace, next: 0 },
+        cfg,
+        Some(ScalingCtx { auto, provisioner: Provisioner::Catalog(catalog) }),
+    )
+}
+
+/// The heterogeneous entry points' contract: a non-empty catalog whose
+/// capacities were probed at the batch size this run actually serves —
+/// otherwise the grow path's deficit (measured at `cfg.batch`) and the
+/// entries' feasibility (probed at `catalog.batch`) silently disagree
+/// and "cheapest feasible" stops meaning anything.
+fn check_catalog(catalog: &DeviceCatalog, cfg: &SimConfig) {
+    assert!(!catalog.is_empty(), "heterogeneous autoscaling needs a non-empty catalog");
+    assert_eq!(
+        catalog.batch,
+        cfg.batch.max_batch.max(1),
+        "catalog probed at batch {} but the fleet batches up to {}",
+        catalog.batch,
+        cfg.batch.max_batch
+    );
 }
 
 /// Run closed-loop clients against a fixed pool.
@@ -573,7 +729,29 @@ pub fn simulate_closed_loop_autoscaled(
     auto: &mut Autoscaler,
     factory: &mut dyn FnMut(usize) -> Box<dyn Backend>,
 ) -> FleetReport {
-    drive(pool, Arrivals::closed(clients.clone()), cfg, Some(ScalingCtx { auto, factory }))
+    drive(
+        pool,
+        Arrivals::closed(clients.clone()),
+        cfg,
+        Some(ScalingCtx { auto, provisioner: Provisioner::Factory(factory) }),
+    )
+}
+
+/// Closed-loop clients plus heterogeneous autoscaling.
+pub fn simulate_closed_loop_autoscaled_hetero(
+    pool: &mut ShardPool,
+    clients: &ClosedLoopConfig,
+    cfg: &SimConfig,
+    auto: &mut Autoscaler,
+    catalog: &DeviceCatalog,
+) -> FleetReport {
+    check_catalog(catalog, cfg);
+    drive(
+        pool,
+        Arrivals::closed(clients.clone()),
+        cfg,
+        Some(ScalingCtx { auto, provisioner: Provisioner::Catalog(catalog) }),
+    )
 }
 
 #[cfg(test)]
@@ -689,7 +867,13 @@ mod tests {
             for i in 0..40 {
                 pool.devices[0]
                     .queue
-                    .push_back(Request { id: i, camera: 0, arrival_s: 0.0, objects: 1 });
+                    .push_back(Request {
+                        id: i,
+                        camera: 0,
+                        arrival_s: 0.0,
+                        objects: 1,
+                        class: SloClass::Standard,
+                    });
             }
             pool
         };
@@ -729,6 +913,7 @@ mod tests {
             shed: ShedPolicy::DropOldest,
             slo_s: 0.015,
             work_stealing: false,
+            ..Default::default()
         };
         let r = simulate(&mut one_device_pool(), &trace, &cfg);
         assert!(r.shed > 0, "overload must shed");
@@ -781,6 +966,7 @@ mod tests {
             shed: ShedPolicy::DropOldest,
             slo_s: 0.500,
             work_stealing: true,
+            ..Default::default()
         };
         (trace, cfg)
     }
@@ -793,6 +979,7 @@ mod tests {
                 min_devices: 1,
                 max_devices: max,
                 cooldown_epochs: 0,
+                ..Default::default()
             },
             Box::new(TargetUtilization::default()),
         )
@@ -841,6 +1028,7 @@ mod tests {
             shed: ShedPolicy::DropOldest,
             slo_s: 0.500,
             work_stealing: true,
+            ..Default::default()
         };
         let mut auto = util_autoscaler(6);
         let mut factory =
@@ -872,6 +1060,7 @@ mod tests {
                     min_devices: 1,
                     max_devices: 5,
                     cooldown_epochs: 1,
+                    ..Default::default()
                 },
                 Box::new(SloTracking::new(0.100)),
             );
@@ -898,6 +1087,7 @@ mod tests {
             think_s: 0.002,
             horizon_s: 6.0,
             seed: 9,
+            ..Default::default()
         };
         let cfg = SimConfig {
             batch: BatchPolicy::new(4, 0.010),
@@ -905,6 +1095,7 @@ mod tests {
             shed: ShedPolicy::DropOldest,
             slo_s: 0.250,
             work_stealing: false,
+            ..Default::default()
         };
         let r = simulate_closed_loop(&mut one_device_pool(), &cl, &cfg);
         assert_eq!(r.offered, r.completed + r.shed, "closed-loop conservation");
@@ -925,5 +1116,165 @@ mod tests {
         let a = simulate_closed_loop(&mut one_device_pool(), &cl, &cfg);
         let b = simulate_closed_loop(&mut one_device_pool(), &cl, &cfg);
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    // ---- SLO classes ----
+
+    #[test]
+    fn classes_flow_from_trace_to_report() {
+        let scene = SceneConfig::default();
+        let mut trace = multi_camera_trace(&scene, 6, 20.0, 3.0, 13);
+        crate::serving::assign_slo_classes(&mut trace);
+        let cfg = SimConfig { shed: ShedPolicy::ClassAware, ..Default::default() };
+        let r = simulate(&mut one_device_pool(), &trace, &cfg);
+        // Per-class conservation and coverage: every class saw traffic
+        // (6 cameras cycle the 3 classes) and offered splits exactly.
+        let mut offered = 0;
+        for c in &r.classes {
+            assert_eq!(c.offered, c.completed + c.shed, "{:?}", c.class);
+            assert!(c.offered > 0, "{:?} saw no traffic", c.class);
+            offered += c.offered;
+        }
+        assert_eq!(offered, r.offered);
+        let per_class_completed: u64 = r.classes.iter().map(|c| c.completed).sum();
+        assert_eq!(per_class_completed, r.completed);
+        // Class SLOs scale off the fleet SLO.
+        assert!((r.classes[0].slo_s - 0.5 * cfg.slo_s).abs() < 1e-15);
+        assert!((r.classes[2].slo_s - 2.0 * cfg.slo_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn unclassed_runs_report_all_traffic_as_standard() {
+        let trace = poisson_trace(100.0, 2.0, 3);
+        let r = simulate(&mut one_device_pool(), &trace, &SimConfig::default());
+        assert_eq!(r.classes[SloClass::Standard.index()].offered, r.offered);
+        assert_eq!(r.classes[SloClass::Interactive.index()].offered, 0);
+        assert_eq!(r.classes[SloClass::Batchable.index()].offered, 0);
+        assert_eq!(r.classes[SloClass::Interactive.index()].attainment(), 1.0);
+    }
+
+    // ---- energy ledger ----
+
+    #[test]
+    fn ledger_accrues_makespan_energy_for_a_fixed_pool() {
+        let trace = poisson_trace(80.0, 2.0, 5);
+        let cfg = SimConfig::default();
+        let r = simulate(&mut one_device_pool(), &trace, &cfg);
+        let e = &r.energy;
+        // One 10 W device (BaselineDevice power is load-independent)
+        // over the whole run: total energy == 10 W × final virtual time,
+        // which is at least the makespan.
+        assert!(e.total_j() >= 10.0 * r.makespan_s - 1e-9, "{} vs {}", e.total_j(), r.makespan_s);
+        assert!(e.epochs.iter().all(|b| {
+            b.provisioning_j >= 0.0 && b.active_j >= 0.0 && b.draining_j >= 0.0
+        }));
+        // Fixed pool: all energy is active-state energy.
+        assert_eq!(e.provisioning_j(), 0.0);
+        assert_eq!(e.draining_j(), 0.0);
+        let per_dev: f64 = e.per_device_j.iter().sum();
+        assert!((e.total_j() - per_dev).abs() < 1e-9 * e.total_j().max(1.0));
+        // Served arithmetic: completed × the device's 0.5 GOP per frame.
+        assert!((e.served_gop - 0.5 * r.completed as f64).abs() < 1e-9);
+        assert!(e.fleet_gops_per_w() > 0.0);
+    }
+
+    #[test]
+    fn ledger_splits_states_under_autoscaling() {
+        let (trace, cfg) = grow_setup();
+        let mut auto = util_autoscaler(6);
+        let mut factory = |_i: usize| -> Box<dyn Backend> { Box::new(test_device()) };
+        let r = simulate_autoscaled(&mut one_device_pool(), &trace, &cfg, &mut auto, &mut factory);
+        assert!(r.devices_peak > 1);
+        let e = &r.energy;
+        // Warm-ups and (if any scale-in happened) drains burn joules in
+        // their own columns.
+        assert!(e.provisioning_j() > 0.0, "provisioning energy must be visible");
+        assert!(e.total_j() > e.provisioning_j());
+        assert_eq!(e.per_device_j.len(), r.devices.len());
+    }
+
+    // ---- heterogeneous autoscaling ----
+
+    /// A catalog of two synthetic kinds: a cheap slow device and a fast
+    /// hot one, both comfortably under the SLO.
+    fn synth_catalog() -> DeviceCatalog {
+        let mut cat = DeviceCatalog::new(1);
+        // "small": 50 fps at 6 W.
+        let small = Platform { name: "small", overhead_s: 0.0, sustained_gops: 5.0, power_w: 6.0 };
+        cat.register(
+            "small",
+            Box::new(move |_| Box::new(BaselineDevice::new(small.clone(), 0.1, 1))),
+        );
+        // "big": 200 fps at 20 W.
+        let big = Platform { name: "big", overhead_s: 0.0, sustained_gops: 20.0, power_w: 20.0 };
+        cat.register(
+            "big",
+            Box::new(move |_| Box::new(BaselineDevice::new(big.clone(), 0.1, 1))),
+        );
+        cat
+    }
+
+    #[test]
+    fn hetero_autoscaler_scales_out_with_the_cheapest_sufficient_device() {
+        // One 100 fps device offered 130 fps: a ~30 fps deficit, which
+        // the 50 fps / 6 W catalog entry covers — the 20 W entry would
+        // be a waste of joules.
+        let trace = poisson_trace(130.0, 8.0, 77);
+        let cfg = SimConfig {
+            batch: BatchPolicy::unbatched(),
+            queue_depth: 16,
+            shed: ShedPolicy::DropOldest,
+            slo_s: 0.500,
+            work_stealing: true,
+            ..Default::default()
+        };
+        let mut auto = Autoscaler::new(
+            AutoscaleConfig {
+                epoch_s: 0.25,
+                provision_delay_s: 0.3,
+                min_devices: 1,
+                max_devices: 6,
+                cooldown_epochs: 0,
+                drain_order: DrainOrder::MostExpensiveFirst,
+            },
+            Box::new(TargetUtilization::default()),
+        );
+        let catalog = synth_catalog();
+        let r = simulate_autoscaled_hetero(&mut one_device_pool(), &trace, &cfg, &mut auto, &catalog);
+        assert_eq!(r.offered, r.completed + r.shed, "conservation with hetero autoscaling");
+        assert!(r.devices_peak > 1, "the pool must grow");
+        // Every provisioned device is the cheap kind: the deficit never
+        // exceeded the small entry's capacity.
+        let provisioned: Vec<&str> =
+            r.devices.iter().skip(1).map(|d| d.name.as_ref()).collect();
+        assert!(!provisioned.is_empty());
+        assert!(
+            provisioned.iter().all(|n| *n == "small"),
+            "expected only cheap devices, got {provisioned:?}"
+        );
+    }
+
+    #[test]
+    fn hetero_runs_are_deterministic() {
+        let (trace, cfg) = grow_setup();
+        let run = || {
+            let mut auto = Autoscaler::new(
+                AutoscaleConfig {
+                    epoch_s: 0.25,
+                    provision_delay_s: 0.4,
+                    min_devices: 1,
+                    max_devices: 5,
+                    cooldown_epochs: 0,
+                    drain_order: DrainOrder::MostExpensiveFirst,
+                },
+                Box::new(TargetUtilization::default()),
+            );
+            let catalog = synth_catalog();
+            simulate_autoscaled_hetero(&mut one_device_pool(), &trace, &cfg, &mut auto, &catalog)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert!(!a.scaling.is_empty());
     }
 }

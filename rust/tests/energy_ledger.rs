@@ -1,0 +1,256 @@
+//! Fleet energy-ledger invariants and the energy-smoke gate `make
+//! check` runs:
+//!
+//! - **Non-negativity + view agreement**: every epoch bin of every state
+//!   is ≥ 0 and the per-epoch-state bins sum to the same total as the
+//!   per-device column, across random fleets and ledger bin widths.
+//! - **Golden efficiency**: the ZCU102 "ours" build's accelerator-phase
+//!   efficiency lands on the paper's headline 36.5 GOP/s/W (tolerance
+//!   band), and an end-to-end serving fleet always reports *less* —
+//!   dispatch overhead, idle watts and imperfect schedules are exactly
+//!   what the ledger makes visible.
+//! - **Determinism**: the ledger is part of the report, so same seed ⇒
+//!   byte-identical joules.
+//! - **Dominance (energy smoke gate)**: the heterogeneous cheapest-
+//!   feasible policy never provisions a strictly dominated device, for
+//!   any catalog and any deficit.
+
+use gemmini_edge::baselines::Platform;
+use gemmini_edge::energy::accelerator_phase_efficiency;
+use gemmini_edge::fpga::resources::Board;
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::passes::replace_activations;
+use gemmini_edge::scheduler::tune_graph;
+use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
+use gemmini_edge::serving::{
+    poisson_trace, simulate, simulate_autoscaled, AutoscaleConfig, Autoscaler, Backend,
+    BaselineDevice, BatchPolicy, DeviceCatalog, GemminiDevice, ShardPool, ShedPolicy, SimConfig,
+};
+use gemmini_edge::util::prop;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+/// A synthetic linear device (overhead + per-frame cost at a constant
+/// board power).
+fn device(overhead_ms: f64, frame_ms: f64, power_w: f64, cap: usize) -> BaselineDevice {
+    let p = Platform {
+        name: "ledger-dev",
+        overhead_s: overhead_ms * 1e-3,
+        sustained_gops: 100.0,
+        power_w,
+    };
+    BaselineDevice::new(p, 0.1 * frame_ms, cap)
+}
+
+#[test]
+fn ledger_is_nonnegative_and_epoch_sum_equals_fleet_total() {
+    prop::check(
+        0x1ED6E7,
+        24,
+        |r| {
+            let n_dev = r.range(1, 4);
+            let devices: Vec<(f64, f64, f64)> = (0..n_dev)
+                .map(|_| (r.range_f64(1.0, 5.0), r.range_f64(2.0, 10.0), r.range_f64(4.0, 35.0)))
+                .collect();
+            (r.next_u64(), devices, r.range_f64(50.0, 300.0), r.range_f64(0.1, 1.5))
+        },
+        |case| {
+            let (seed, devices, rate_hz, energy_epoch_s) = case;
+            let mut pool = ShardPool::new();
+            for &(ov, fr, w) in devices {
+                pool.register(Box::new(device(ov, fr, w, 8)));
+            }
+            let trace = poisson_trace(*rate_hz, 2.0, *seed);
+            let cfg = SimConfig { energy_epoch_s: *energy_epoch_s, ..Default::default() };
+            let r = simulate(&mut pool, &trace, &cfg);
+            let e = &r.energy;
+            for (i, b) in e.epochs.iter().enumerate() {
+                if b.provisioning_j < 0.0 || b.active_j < 0.0 || b.draining_j < 0.0 {
+                    return Err(format!("negative energy in epoch {i}: {b:?}"));
+                }
+            }
+            let total = e.total_j();
+            if total <= 0.0 {
+                return Err("a served trace must burn energy".into());
+            }
+            let per_dev: f64 = e.per_device_j.iter().sum();
+            if (total - per_dev).abs() > 1e-9 * total {
+                return Err(format!("epoch-sum {total} != per-device sum {per_dev}"));
+            }
+            let by_state = e.provisioning_j() + e.active_j() + e.draining_j();
+            if (total - by_state).abs() > 1e-9 * total {
+                return Err(format!("state totals {by_state} != total {total}"));
+            }
+            // A fixed pool accrues strictly active energy, covering at
+            // least the makespan at the fleet's *idle* floor.
+            if e.provisioning_j() != 0.0 || e.draining_j() != 0.0 {
+                return Err("fixed pools have no provisioning/draining energy".into());
+            }
+            let idle_floor: f64 = devices.iter().map(|&(_, _, w)| w).sum::<f64>() * r.makespan_s;
+            if total + 1e-9 < idle_floor {
+                return Err(format!("total {total} J below idle floor {idle_floor} J"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ledger_splits_lifecycle_states_under_churn() {
+    // Overload then lull: provisioning and draining both happen while
+    // requests are in flight, and every joule still lands in exactly one
+    // (epoch, state) bin.
+    let mut trace = poisson_trace(300.0, 2.0, 11);
+    for mut r in poisson_trace(15.0, 4.0, 12) {
+        r.arrival_s += 2.0;
+        r.id += 1_000_000;
+        trace.push(r);
+    }
+    let cfg = SimConfig {
+        batch: BatchPolicy::unbatched(),
+        queue_depth: 16,
+        shed: ShedPolicy::DropOldest,
+        slo_s: 0.5,
+        work_stealing: true,
+        energy_epoch_s: 0.25,
+    };
+    let mut pool = ShardPool::new();
+    pool.register(Box::new(device(5.0, 5.0, 10.0, 8)));
+    let mut auto = Autoscaler::new(
+        AutoscaleConfig {
+            epoch_s: 0.25,
+            provision_delay_s: 0.4,
+            min_devices: 1,
+            max_devices: 5,
+            cooldown_epochs: 0,
+            ..Default::default()
+        },
+        Box::new(gemmini_edge::serving::TargetUtilization::default()),
+    );
+    let mut factory = |_i: usize| -> Box<dyn Backend> { Box::new(device(5.0, 5.0, 10.0, 8)) };
+    let r = simulate_autoscaled(&mut pool, &trace, &cfg, &mut auto, &mut factory);
+    assert!(r.devices_peak > 1, "pool must grow");
+    assert!(r.devices_final < r.devices_peak, "pool must shrink back");
+    let e = &r.energy;
+    assert!(e.provisioning_j() > 0.0, "warm-ups burn joules");
+    assert!(e.draining_j() > 0.0, "drains burn joules");
+    assert!(e.active_j() > e.provisioning_j() + e.draining_j());
+    let per_dev: f64 = e.per_device_j.iter().sum();
+    assert!((e.total_j() - per_dev).abs() < 1e-9 * e.total_j());
+    assert_eq!(e.per_device_j.len(), r.devices.len());
+}
+
+#[test]
+fn zcu102_accelerator_phase_efficiency_matches_paper_headline() {
+    // The paper's Figure 8 headline for the tuned ZCU102 build:
+    // 36.5 GOP/s/W. Our analytic power + peak-throughput models must
+    // land inside a 5% band of it — this is the golden anchor the fleet
+    // ledger's numbers hang off.
+    let eff = accelerator_phase_efficiency(&GemminiConfig::ours_zcu102(), Board::Zcu102);
+    let rel = (eff - 36.5).abs() / 36.5;
+    assert!(rel < 0.05, "ZCU102 accelerator-phase efficiency {eff:.2} GOP/s/W is {rel:.3} from 36.5");
+}
+
+#[test]
+fn saturated_fleet_efficiency_sits_below_the_accelerator_phase_bound() {
+    // One tuned ZCU102 serving a saturating open-loop stream: the
+    // fleet's end-to-end GOP/s/W must be positive but strictly below the
+    // accelerator-phase figure — the gap is dispatch overhead, idle
+    // time and the schedule's real (sub-peak) utilization.
+    let cfg102 = GemminiConfig::ours_zcu102();
+    let mut g = yolov7_tiny(96, ModelVariant::Pruned88, 8);
+    replace_activations(&mut g);
+    let tuning = tune_graph(&cfg102, &g, 1);
+    let dev = GemminiDevice::from_tuning(
+        "zcu102",
+        Board::Zcu102,
+        cfg102.clone(),
+        &tuning,
+        DEFAULT_DISPATCH_S,
+    );
+    let frame_s = dev.batch_latency_s(8) / 8.0;
+    let rate = 1.2 / frame_s; // 120% of batched capacity: saturating
+    let mut pool = ShardPool::new();
+    pool.register(Box::new(dev));
+    let trace = poisson_trace(rate, 4.0, 7);
+    let cfg = SimConfig {
+        batch: BatchPolicy::new(8, 0.010),
+        queue_depth: 32,
+        ..Default::default()
+    };
+    let r = simulate(&mut pool, &trace, &cfg);
+    assert!(r.completed > 0);
+    let fleet_eff = r.energy.fleet_gops_per_w();
+    let accel_eff = accelerator_phase_efficiency(&cfg102, Board::Zcu102);
+    assert!(fleet_eff > 0.0, "saturated fleet must report positive efficiency");
+    assert!(
+        fleet_eff < accel_eff,
+        "end-to-end {fleet_eff:.2} GOP/s/W cannot beat the accelerator phase {accel_eff:.2}"
+    );
+}
+
+#[test]
+fn ledger_is_deterministic_across_reruns() {
+    let run = || {
+        let mut pool = ShardPool::new();
+        pool.register(Box::new(device(2.0, 4.0, 12.0, 8)));
+        pool.register(Box::new(device(1.0, 7.0, 30.0, 4)));
+        let trace = poisson_trace(150.0, 3.0, 99);
+        simulate(&mut pool, &trace, &SimConfig::default())
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(format!("{:?}", a.energy), format!("{:?}", b.energy));
+    assert!(a.energy.total_j() > 0.0);
+}
+
+/// The `make check` energy-smoke gate: for any catalog and any deficit,
+/// the cheapest-feasible policy never provisions a strictly dominated
+/// device (one that another entry beats on power, capacity and service
+/// latency with at least one strict).
+#[test]
+fn hetero_policy_never_picks_dominated_device() {
+    prop::check(
+        0xD07,
+        200,
+        |r| {
+            let n = r.range(2, 8);
+            let entries: Vec<(f64, f64)> = (0..n)
+                .map(|_| (r.range_f64(10.0, 500.0), r.range_f64(3.0, 40.0)))
+                .collect();
+            let deficit = if r.chance(0.2) { 0.0 } else { r.range_f64(0.0, 800.0) };
+            let slo_ms = r.range_f64(5.0, 400.0);
+            (entries, deficit, slo_ms)
+        },
+        |(entries, deficit, slo_ms)| {
+            let mut cat = DeviceCatalog::new(1);
+            for (i, &(fps, watts)) in entries.iter().enumerate() {
+                let p = Platform {
+                    name: "gate-dev",
+                    overhead_s: 0.0,
+                    sustained_gops: fps,
+                    power_w: watts,
+                };
+                cat.register_with(
+                    &format!("gate-{i}"),
+                    fps,
+                    watts,
+                    watts,
+                    1.0 / fps,
+                    Box::new(move |_| Box::new(BaselineDevice::new(p.clone(), 1.0, 1))),
+                );
+            }
+            let picked = cat.pick(*deficit, slo_ms * 1e-3);
+            for other in 0..entries.len() {
+                if other != picked && cat.is_dominated(picked, other) {
+                    return Err(format!(
+                        "picked entry {picked} {:?} is dominated by {other} {:?} \
+                         (deficit {deficit}, slo {slo_ms} ms)",
+                        cat.entries()[picked],
+                        cat.entries()[other]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

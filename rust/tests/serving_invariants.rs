@@ -11,16 +11,22 @@
 //!   configs (including autoscaling churn) and also check the observable
 //!   consequences (event timestamps ordered, makespan covers arrivals).
 //! - **Determinism**: same trace + same config ⇒ byte-identical report,
-//!   autoscaler included.
+//!   autoscaler (homogeneous or heterogeneous) included.
+//! - **Per-class conservation and priority**: every [`SloClass`]'s
+//!   offered count splits exactly into completions and sheds, and
+//!   class-aware shedding strongly protects the top class under
+//!   symmetric overload (interactive ≤ standard, and ≤ half of
+//!   batchable).
 //! - **Quantile accuracy**: the streaming histogram stays within bounded
 //!   relative error of exact sorted quantiles on adversarial samples.
 
 use gemmini_edge::baselines::Platform;
 use gemmini_edge::dataset::scenes::SceneConfig;
 use gemmini_edge::serving::{
-    multi_camera_trace, poisson_trace, simulate, simulate_autoscaled, simulate_closed_loop,
-    AutoscaleConfig, Autoscaler, Backend, BaselineDevice, BatchPolicy, ClosedLoopConfig,
-    FleetReport, LatencyHistogram, Request, ShardPool, ShedPolicy, SimConfig, SloTracking,
+    assign_slo_classes, multi_camera_trace, poisson_trace, simulate, simulate_autoscaled,
+    simulate_autoscaled_hetero, simulate_closed_loop, AutoscaleConfig, Autoscaler, Backend,
+    BaselineDevice, BatchPolicy, ClosedLoopConfig, DeviceCatalog, DrainOrder, FleetReport,
+    LatencyHistogram, Request, ShardPool, ShedPolicy, SimConfig, SloClass, SloTracking,
     TargetUtilization,
 };
 use gemmini_edge::util::{prop, Rng};
@@ -48,6 +54,8 @@ struct FleetCase {
     work_stealing: bool,
     rate_hz: f64,
     bursty: bool,
+    /// Stamp the trace with per-camera SLO classes.
+    classed: bool,
 }
 
 fn gen_case(r: &mut Rng) -> FleetCase {
@@ -59,12 +67,17 @@ fn gen_case(r: &mut Rng) -> FleetCase {
         seed: r.next_u64(),
         devices,
         queue_depth: r.range(1, 33),
-        shed: if r.chance(0.5) { ShedPolicy::DropOldest } else { ShedPolicy::RejectNewest },
+        shed: *r.choose(&[
+            ShedPolicy::DropOldest,
+            ShedPolicy::RejectNewest,
+            ShedPolicy::ClassAware,
+        ]),
         max_batch: r.range(1, 9),
         wait_ms: r.range_f64(0.0, 20.0),
         work_stealing: r.chance(0.5),
         rate_hz: r.range_f64(50.0, 400.0),
         bursty: r.chance(0.5),
+        classed: r.chance(0.5),
     }
 }
 
@@ -73,18 +86,22 @@ fn build(case: &FleetCase) -> (ShardPool, Vec<Request>, SimConfig) {
     for &(ov, fr, cap) in &case.devices {
         pool.register(Box::new(device(ov, fr, cap)));
     }
-    let trace = if case.bursty {
+    let mut trace = if case.bursty {
         let scene = SceneConfig::default();
         multi_camera_trace(&scene, 4, case.rate_hz / 4.0, 2.0, case.seed)
     } else {
         poisson_trace(case.rate_hz, 2.0, case.seed)
     };
+    if case.classed {
+        assign_slo_classes(&mut trace);
+    }
     let cfg = SimConfig {
         batch: BatchPolicy::new(case.max_batch, case.wait_ms * 1e-3),
         queue_depth: case.queue_depth,
         shed: case.shed,
         slo_s: 0.050,
         work_stealing: case.work_stealing,
+        ..Default::default()
     };
     (pool, trace, cfg)
 }
@@ -118,6 +135,43 @@ fn check_report(r: &FleetReport, offered: u64) -> Result<(), String> {
         if w[1].t_s + 1e-12 < w[0].t_s {
             return Err(format!("event times regress: {} after {}", w[1].t_s, w[0].t_s));
         }
+    }
+    // Per-class conservation through admission / batch / steal / drain:
+    // each class's offered count (counted independently at the front
+    // door) splits exactly into its completions and sheds, and the
+    // class totals reassemble the fleet totals.
+    let mut class_offered = 0;
+    let mut class_completed = 0;
+    let mut class_shed = 0;
+    for c in &r.classes {
+        if c.offered != c.completed + c.shed {
+            return Err(format!(
+                "class {:?}: offered {} != {} completed + {} shed",
+                c.class, c.offered, c.completed, c.shed
+            ));
+        }
+        class_offered += c.offered;
+        class_completed += c.completed;
+        class_shed += c.shed;
+    }
+    if class_offered != r.offered || class_completed != r.completed || class_shed != r.shed {
+        return Err(format!(
+            "class totals ({class_offered}/{class_completed}/{class_shed}) != fleet totals \
+             ({}/{}/{})",
+            r.offered, r.completed, r.shed
+        ));
+    }
+    // The energy ledger never goes negative, and its two accumulation
+    // views (per-epoch-state bins vs per-device) agree.
+    let e = &r.energy;
+    for (i, b) in e.epochs.iter().enumerate() {
+        if b.provisioning_j < 0.0 || b.active_j < 0.0 || b.draining_j < 0.0 {
+            return Err(format!("negative energy in epoch {i}: {b:?}"));
+        }
+    }
+    let per_dev: f64 = e.per_device_j.iter().sum();
+    if (e.total_j() - per_dev).abs() > 1e-9 * e.total_j().max(1.0) {
+        return Err(format!("ledger views disagree: {} vs {}", e.total_j(), per_dev));
     }
     Ok(())
 }
@@ -161,6 +215,7 @@ fn requests_are_conserved_under_autoscaling_churn() {
                 min_devices: 1,
                 max_devices: 5,
                 cooldown_epochs: 0,
+                ..Default::default()
             },
             Box::new(TargetUtilization::default()),
         );
@@ -189,6 +244,7 @@ fn closed_loop_conserves_and_respects_the_window() {
                 think_s: r.range_f64(0.0, 0.01),
                 horizon_s: 2.0,
                 seed: r.next_u64(),
+                classed: r.chance(0.5),
             }
         },
         |cl| {
@@ -202,6 +258,7 @@ fn closed_loop_conserves_and_respects_the_window() {
                 shed: ShedPolicy::DropOldest,
                 slo_s: 0.100,
                 work_stealing: false,
+                ..Default::default()
             };
             let r = simulate_closed_loop(&mut pool, cl, &cfg);
             check_report(&r, r.offered)?;
@@ -249,6 +306,7 @@ fn reports_are_byte_identical_across_reruns() {
             shed: ShedPolicy::DropOldest,
             slo_s: 0.050,
             work_stealing: true,
+            ..Default::default()
         };
         let a = simulate(&mut mk_pool(), &trace, &cfg);
         let b = simulate(&mut mk_pool(), &trace, &cfg);
@@ -262,6 +320,7 @@ fn reports_are_byte_identical_across_reruns() {
                     min_devices: 2,
                     max_devices: 6,
                     cooldown_epochs: 1,
+                    ..Default::default()
                 },
                 Box::new(SloTracking::new(cfg.slo_s)),
             );
@@ -280,6 +339,138 @@ fn reports_are_byte_identical_across_reruns() {
         let ca = simulate_closed_loop(&mut mk_pool(), &cl, &cfg);
         let cb = simulate_closed_loop(&mut mk_pool(), &cl, &cfg);
         assert_eq!(format!("{ca:?}"), format!("{cb:?}"), "closed loop diverged at seed {seed}");
+    }
+}
+
+#[test]
+fn class_priority_orders_shedding_under_overload() {
+    // Symmetric offered load per class (cameras cycle the classes) at
+    // 2.5–4× a single device's capacity with class-aware shedding: the
+    // top class is strongly protected — interactive never sheds more
+    // than standard, and at most half of what batchable sheds. (The
+    // standard/batchable counts can land close together: once a full
+    // queue is drained of batchable frames, incoming batchables are
+    // rejected and standards evict each other — so only the top class's
+    // protection is asserted, with a 2× margin.)
+    prop::check(
+        0xC1A55,
+        24,
+        |r| {
+            (
+                r.next_u64(),
+                r.range(6, 13) * 3,      // cameras, multiple of 3
+                r.range_f64(2.5, 4.0),   // overload factor
+                r.range(4, 17),          // queue depth
+            )
+        },
+        |&(seed, cameras, overload, queue_depth)| {
+            // One device at ~100 FPS unbatched (10 ms service).
+            let mut pool = ShardPool::new();
+            pool.register(Box::new(device(5.0, 5.0, 8)));
+            let capacity = 100.0;
+            let fps_per_cam = overload * capacity / cameras as f64;
+            let scene = SceneConfig::default();
+            let mut trace =
+                multi_camera_trace(&scene, cameras, fps_per_cam, 3.0, seed);
+            assign_slo_classes(&mut trace);
+            let cfg = SimConfig {
+                batch: BatchPolicy::new(4, 0.005),
+                queue_depth,
+                shed: ShedPolicy::ClassAware,
+                slo_s: 0.100,
+                work_stealing: false,
+                ..Default::default()
+            };
+            let r = simulate(&mut pool, &trace, &cfg);
+            check_report(&r, trace.len() as u64)?;
+            if r.shed == 0 {
+                return Err(format!("no sheds at {overload}x overload"));
+            }
+            let shed_of = |c: SloClass| r.classes[c.index()].shed;
+            let (i, s, b) = (
+                shed_of(SloClass::Interactive),
+                shed_of(SloClass::Standard),
+                shed_of(SloClass::Batchable),
+            );
+            if i > s {
+                return Err(format!(
+                    "interactive shed {i} exceeds standard shed {s} (batchable {b})"
+                ));
+            }
+            if 2 * i > b {
+                return Err(format!(
+                    "interactive shed {i} not at least 2x-protected vs batchable {b}"
+                ));
+            }
+            if b == 0 {
+                return Err("overloaded class-aware fleet must shed batchable first".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A synthetic two-kind catalog for heterogeneous-autoscaler properties
+/// (probed at the batch size the hetero test's `SimConfig` serves — the
+/// entry points assert the two agree).
+fn synth_catalog() -> DeviceCatalog {
+    let mut cat = DeviceCatalog::new(4);
+    let small =
+        Platform { name: "cat-small", overhead_s: 1e-3, sustained_gops: 40.0, power_w: 6.0 };
+    cat.register(
+        "cat-small",
+        Box::new(move |_| Box::new(BaselineDevice::new(small.clone(), 0.2, 4))),
+    );
+    let big =
+        Platform { name: "cat-big", overhead_s: 1e-3, sustained_gops: 200.0, power_w: 25.0 };
+    cat.register(
+        "cat-big",
+        Box::new(move |_| Box::new(BaselineDevice::new(big.clone(), 0.2, 8))),
+    );
+    cat
+}
+
+#[test]
+fn hetero_autoscaled_reports_are_byte_identical_across_reruns() {
+    // Same trace + config + catalog ⇒ byte-identical reports (classes,
+    // scaling events and energy ledger included), across 20 seeds.
+    let scene = SceneConfig::default();
+    for seed in 0..20u64 {
+        let mut trace = multi_camera_trace(&scene, 6, 50.0, 2.5, seed);
+        assign_slo_classes(&mut trace);
+        let cfg = SimConfig {
+            batch: BatchPolicy::new(4, 0.008),
+            queue_depth: 8,
+            shed: ShedPolicy::ClassAware,
+            slo_s: 0.100,
+            work_stealing: true,
+            ..Default::default()
+        };
+        let run = || {
+            let mut pool = ShardPool::new();
+            pool.register(Box::new(device(2.0, 6.0, 8)));
+            let mut auto = Autoscaler::new(
+                AutoscaleConfig {
+                    epoch_s: 0.25,
+                    provision_delay_s: 0.3,
+                    min_devices: 1,
+                    max_devices: 6,
+                    cooldown_epochs: 0,
+                    drain_order: DrainOrder::MostExpensiveFirst,
+                },
+                Box::new(TargetUtilization::default()),
+            );
+            let catalog = synth_catalog();
+            simulate_autoscaled_hetero(&mut pool, &trace, &cfg, &mut auto, &catalog)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "hetero autoscaled run diverged at seed {seed}"
+        );
+        check_report(&a, trace.len() as u64).unwrap();
     }
 }
 

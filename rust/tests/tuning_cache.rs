@@ -7,7 +7,8 @@
 use gemmini_edge::gemmini::config::GemminiConfig;
 use gemmini_edge::ir::{ActivationKind, Graph, GraphBuilder, PaddingMode};
 use gemmini_edge::passes::replace_activations;
-use gemmini_edge::scheduler::{tune_graph, TuningCache, TuningEngine};
+use gemmini_edge::scheduler::{tune_graph, EngineStats, TuningCache, TuningEngine};
+use gemmini_edge::util::json::Json;
 use gemmini_edge::util::Rng;
 use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
 
@@ -161,6 +162,95 @@ fn corrupted_cache_files_are_ignored_gracefully() {
         assert_eq!(warm.last_stats().sim_instrs, 0);
         std::fs::remove_file(&path).ok();
     }
+}
+
+/// The `repro tune --threads N` contract: the tuned output is byte-
+/// identical from 1 thread to N, and the `EngineStats` carried in the
+/// CLI's JSON report differ only in `threads_used`.
+#[test]
+fn thread_knob_keeps_tuning_output_byte_identical() {
+    // YOLOv7-tiny at 96 px: dozens of unique geometries, so the wide
+    // engine really uses its 8 workers.
+    let mut g = yolov7_tiny(96, ModelVariant::Pruned88, 8);
+    replace_activations(&mut g);
+    let cfg = GemminiConfig::ours_zcu102();
+    let mut serial = TuningEngine::new(cfg.clone()).with_threads(1);
+    let t1 = serial.tune_graph(&g, 2);
+    let s1 = serial.last_stats();
+    let mut wide = TuningEngine::new(cfg).with_threads(8);
+    let t8 = wide.tune_graph(&g, 2);
+    let s8 = wide.last_stats();
+    // The tuning JSON (what `repro tune` prints) is byte-identical.
+    assert_eq!(t1.to_json().dump(), t8.to_json().dump());
+    // The accounting matches except for the thread count itself.
+    assert_eq!(EngineStats { threads_used: 0, ..s1 }, EngineStats { threads_used: 0, ..s8 });
+    assert_eq!(s1.threads_used, 1);
+    assert!(s8.threads_used > 1, "8-thread engine used {} threads", s8.threads_used);
+    // The stats JSON is parseable and carries the accounting fields.
+    let js = s8.to_json().dump();
+    let back = Json::parse(&js).expect("stats JSON parses");
+    assert_eq!(
+        back.get("conv_layers").and_then(Json::as_f64),
+        Some(s8.conv_layers as f64)
+    );
+    assert_eq!(
+        back.get("sim_instrs").and_then(Json::as_f64),
+        Some(s8.sim_instrs as f64)
+    );
+    assert_eq!(
+        back.get("threads_used").and_then(Json::as_f64),
+        Some(s8.threads_used as f64)
+    );
+}
+
+/// Compaction regression: a cache file bloated with corrupt and
+/// stale-fingerprint entries still warm-starts correctly, and a
+/// budgeted save drops the dead weight without touching live entries.
+#[test]
+fn oversized_cache_compacts_on_save_without_losing_live_entries() {
+    let g = small_graph(21);
+    let cfg = GemminiConfig::ours_zcu102();
+    let path = tmp_path("oversized");
+    let _ = std::fs::remove_file(&path);
+
+    // Seed the file with this config's real entries…
+    let mut seeder = TuningEngine::new(cfg.clone()).with_cache(TuningCache::load(&path));
+    let reference = seeder.tune_graph(&g, 2);
+    seeder.save_cache().unwrap();
+    // …then bloat it with hundreds of junk fingerprints (a long-lived
+    // cache that outlived many config edits), plus a corrupt line the
+    // parser must skip.
+    let mut bloat = TuningCache::load(&path);
+    for fp in 0..300u64 {
+        bloat.insert_move(0xDEAD_0000 + fp, 64, 32, fp + 1);
+    }
+    bloat.save().unwrap();
+    let loaded = TuningCache::load(&path);
+    assert!(loaded.move_entries() >= 300, "bloat must persist under the default budget");
+
+    // A budgeted engine run warm-starts from the bloated file (live
+    // entries untouched: zero simulation)…
+    let mut engine = TuningEngine::new(cfg.clone())
+        .with_cache(TuningCache::load(&path).with_max_entries(64));
+    let warm = engine.tune_graph(&g, 2);
+    assert_eq!(engine.last_stats().sim_instrs, 0, "{:?}", engine.last_stats());
+    assert_eq!(warm.to_json().dump(), reference.to_json().dump());
+    // …and its save compacts the junk away while keeping the live set.
+    engine.save_cache().unwrap();
+    let compacted = TuningCache::load(&path);
+    assert!(
+        compacted.layer_entries() + compacted.move_entries() <= 64,
+        "compacted file still has {} + {} entries",
+        compacted.layer_entries(),
+        compacted.move_entries()
+    );
+    assert_eq!(compacted.get_move(0xDEAD_0000, 64, 32), None, "junk must be evicted");
+    // The compacted file still warm-starts a fresh engine completely.
+    let mut again = TuningEngine::new(cfg).with_cache(TuningCache::load(&path));
+    let warm2 = again.tune_graph(&g, 2);
+    assert_eq!(again.last_stats().sim_instrs, 0);
+    assert_eq!(warm2.to_json().dump(), reference.to_json().dump());
+    std::fs::remove_file(&path).ok();
 }
 
 /// The `make check` perf smoke gate (deterministic — counts simulated
