@@ -3,17 +3,20 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy fmt fmt-drift featurecheck perfsmoke energysmoke artifacts fleet
+.PHONY: check build test clippy fmt fmt-drift featurecheck perfsmoke energysmoke livesmoke artifacts fleet
 
-# The perf smoke gate (`perfsmoke`) and the energy smoke gate
-# (`energysmoke`) are enforced by `check` through the `test` target:
-# `cargo test -q` runs both gate assertions
-# (tests/tuning_cache.rs::perf_smoke_memoized_instruction_budget and
-# tests/energy_ledger.rs::hetero_policy_never_picks_dominated_device,
-# plus the rest of tests/energy_ledger.rs and the per-class properties
-# in tests/serving_invariants.rs), so a memoization or device-selection
-# regression fails `make check` without re-running the suite's heaviest
-# tests twice. `make perfsmoke` / `make energysmoke` run the gates alone.
+# The perf smoke gate (`perfsmoke`), the energy smoke gate
+# (`energysmoke`) and the live-runtime smoke gate (`livesmoke`) are
+# enforced by `check` through the `test` target: `cargo test -q` runs
+# the gate assertions
+# (tests/tuning_cache.rs::perf_smoke_memoized_instruction_budget,
+# tests/energy_ledger.rs::hetero_policy_never_picks_dominated_device and
+# tests/live_vs_des.rs::live_smoke_wall_clock, plus the rest of the
+# differential live-vs-DES harness and the per-class properties in
+# tests/serving_invariants.rs), so a memoization, device-selection or
+# live-runtime regression fails `make check` without re-running the
+# suite's heaviest tests twice. `make perfsmoke` / `make energysmoke` /
+# `make livesmoke` run the gates alone.
 check: build test clippy fmt-drift featurecheck
 
 build:
@@ -63,6 +66,16 @@ perfsmoke:
 # test, no wall clock. (Also runs as part of `make check` via `test`.)
 energysmoke:
 	$(CARGO) test -q --test energy_ledger hetero_policy_never_picks_dominated_device
+
+# Live-runtime smoke gate, standalone: the threaded serving runtime
+# (wall clock, real worker threads + channels + condvars) replays a
+# short trace at a compressed time scale and must conserve every
+# request and produce a populated fleet table. Bounded wall clock:
+# ~1 s of scaled serving, well under 30 s even on a loaded box; only
+# counting invariants are asserted, so scheduling jitter cannot flake
+# it. (Also runs as part of `make check` via the `test` target.)
+livesmoke:
+	$(CARGO) test -q --test live_vs_des live_smoke_wall_clock
 
 # AOT-compile the JAX/Pallas detector to artifacts/ (PJRT runtime input).
 artifacts:

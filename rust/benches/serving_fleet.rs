@@ -27,9 +27,9 @@ use gemmini_edge::scheduler::{tune_graph, tune_graph_batch};
 use gemmini_edge::serving::admission::ShedPolicy;
 use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
 use gemmini_edge::serving::{
-    capacity_fps, poisson_trace, simulate, simulate_autoscaled, simulate_autoscaled_hetero,
-    AutoscaleConfig, Autoscaler, Backend, BatchPolicy, DeviceCatalog, DrainOrder, GemminiDevice,
-    Request, ShardPool, SimConfig, TargetUtilization,
+    capacity_fps, poisson_trace, serve_live, simulate, simulate_autoscaled,
+    simulate_autoscaled_hetero, AutoscaleConfig, Autoscaler, Backend, BatchPolicy, DeviceCatalog,
+    DrainOrder, GemminiDevice, LiveConfig, Request, ShardPool, SimConfig, TargetUtilization,
 };
 use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
 
@@ -302,5 +302,40 @@ fn main() {
         "the hetero pool must hold p99 {:.1} ms under the {:.0} ms SLO",
         het.p99_s * 1e3,
         slo3 * 1e3
+    );
+
+    // ---- experiment 4: live threaded runtime vs DES on the same ramp ----
+    // The exp-2 ramp trace replayed through `serving::live` on the
+    // deterministic virtual clock: the DES (stealing off — the live
+    // path's workers own their queues) is the oracle, and throughput
+    // must agree. This is the bench-level face of tests/live_vs_des.rs.
+    let cfg_live = SimConfig { work_stealing: false, ..cfg.clone() };
+    let mut des_pool = mk_pool();
+    let des = simulate(&mut des_pool, &trace, &cfg_live);
+    let live = serve_live(mk_pool(), &trace, &cfg_live, &LiveConfig::virtual_clock());
+    println!("\n== live threaded runtime vs DES on the exp-2 ramp (virtual clock) ==");
+    print!("{}", fleet_table(&live));
+    println!(
+        "\nlive-vs-DES verdict: completed {} vs {} ({:+.2}%), shed {} vs {}, \
+         {:.0} vs {:.0} FPS, p99 {:.1} vs {:.1} ms",
+        live.completed,
+        des.completed,
+        100.0 * (live.completed as f64 / des.completed.max(1) as f64 - 1.0),
+        live.shed,
+        des.shed,
+        live.throughput_fps(),
+        des.throughput_fps(),
+        live.p99_s * 1e3,
+        des.p99_s * 1e3,
+    );
+    assert_eq!(live.offered, trace.len() as u64, "live front door saw every frame");
+    assert_eq!(live.completed + live.shed, live.offered, "live conservation");
+    assert_eq!(des.completed + des.shed, des.offered, "DES conservation");
+    let rel = (live.completed as f64 - des.completed as f64).abs() / des.completed.max(1) as f64;
+    assert!(
+        rel <= 0.10,
+        "live completed-count must track the DES oracle within 10%: {} vs {} (rel {rel:.3})",
+        live.completed,
+        des.completed
     );
 }

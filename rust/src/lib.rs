@@ -41,11 +41,15 @@
 //!   drain-to-retire scale-in) over a heterogeneous device catalog
 //!   (cheapest-feasible scale-out, most-expensive-first energy-aware
 //!   drain), a fleet-wide energy ledger (joules per epoch per device
-//!   state, fleet GOP/s/W), open- and closed-loop client models, and a
-//!   deterministic discrete-event simulator driving it all offline (see
-//!   `rust/src/serving/README.md`; fleet invariants are property-tested
-//!   in `rust/tests/serving_invariants.rs` and
-//!   `rust/tests/energy_ledger.rs`);
+//!   state, fleet GOP/s/W), per-class admission token buckets, open-
+//!   and closed-loop client models, a deterministic discrete-event
+//!   simulator driving it all offline — and `serving::live`, the *real*
+//!   multi-threaded serving runtime behind the same interfaces (bounded
+//!   `pipeline` topics, wall or deterministic virtual clock,
+//!   drain-to-retire shutdown), differential-tested against the DES
+//!   oracle (see `rust/src/serving/README.md`; fleet invariants are
+//!   property-tested in `rust/tests/serving_invariants.rs`,
+//!   `rust/tests/energy_ledger.rs` and `rust/tests/live_vs_des.rs`);
 //! - [`report`] — renderers that print each paper table/figure, plus the
 //!   fleet-throughput table for [`serving`].
 

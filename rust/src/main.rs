@@ -11,7 +11,8 @@
 //! repro fleet [--cameras N] [--fps F] [--batch B] [--wait MS] [--seconds S]
 //!             [--autoscale] [--policy util|slo] [--max-devices N]
 //!             [--epoch S] [--delay S] [--closed K] [--tuning-cache PATH]
-//!             [--hetero] [--classes]
+//!             [--hetero] [--classes] [--quota FPS]
+//!             [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
 //! ```
 //!
 //! `repro fleet --autoscale` runs the same fleet behind the closed-loop
@@ -33,6 +34,18 @@
 //! wait deadlines) and the report (per-class p50/p95/p99, violations).
 //! The fleet table always ends with the energy ledger — joules per
 //! epoch per device state and fleet-wide GOP/s/W.
+//!
+//! `--live` serves the trace on the *real threaded runtime*
+//! (`serving::live`) instead of the DES: one worker thread per board
+//! consuming a bounded `pipeline` topic, wall-clock batching, and a
+//! drain-to-retire shutdown — the same `FleetReport`/table comes out
+//! the other end. `--time-scale F` maps modeled seconds to wall seconds
+//! (0.25 runs a 10 s trace in ~2.5 s), `--live-threads N` multiplexes
+//! the shards onto N OS threads, and `--virtual-clock` swaps the wall
+//! clock for the deterministic turn-based clock the differential tests
+//! use (reports become byte-reproducible). `--quota FPS` puts per-class
+//! admission token buckets (FPS tokens/s per class) in front of the
+//! queues on either path.
 //!
 //! `repro tune --threads N` pins the engine's worker-thread count (the
 //! tuned result is byte-identical at any N); the JSON report carries the
@@ -188,11 +201,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             use gemmini_edge::report::{catalog_table, fleet_table};
             use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
             use gemmini_edge::serving::{
-                assign_slo_classes, multi_camera_trace, simulate, simulate_autoscaled,
+                assign_slo_classes, multi_camera_trace, serve_live, simulate, simulate_autoscaled,
                 simulate_autoscaled_hetero, simulate_closed_loop, simulate_closed_loop_autoscaled,
-                simulate_closed_loop_autoscaled_hetero, AutoscaleConfig, Autoscaler, Backend,
-                BaselineDevice, BatchPolicy, ClosedLoopConfig, DeviceCatalog, DrainOrder,
-                GemminiDevice, ShardPool, ShedPolicy, SimConfig, SloTracking, TargetUtilization,
+                simulate_closed_loop_autoscaled_hetero, AdmissionPolicy, AutoscaleConfig,
+                Autoscaler, Backend, BaselineDevice, BatchPolicy, ClassQuota, ClockMode,
+                ClosedLoopConfig, DeviceCatalog, DrainOrder, GemminiDevice, LiveConfig, ShardPool,
+                ShedPolicy, SimConfig, SloTracking, TargetUtilization,
             };
             let cameras: usize =
                 arg_val(&args, "--cameras").and_then(|v| v.parse().ok()).unwrap_or(24);
@@ -222,6 +236,30 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             }
             let hetero = hetero && autoscale;
             let classes = args.iter().any(|a| a == "--classes");
+            let live = args.iter().any(|a| a == "--live");
+            if live && (autoscale || closed.is_some()) {
+                eprintln!(
+                    "warning: --live serves open-loop traces on a fixed pool; \
+                     ignoring --autoscale/--closed"
+                );
+            }
+            let autoscale = autoscale && !live;
+            let hetero = hetero && !live;
+            let closed = if live { None } else { closed };
+            let live_threads: usize =
+                arg_val(&args, "--live-threads").and_then(|v| v.parse().ok()).unwrap_or(0);
+            let time_scale: f64 = arg_val(&args, "--time-scale")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1.0)
+                .max(1e-3);
+            let virtual_clock = args.iter().any(|a| a == "--virtual-clock");
+            let quota: Option<f64> = arg_val(&args, "--quota").and_then(|v| v.parse().ok());
+            if let Some(r) = quota {
+                if !r.is_finite() || r <= 0.0 {
+                    eprintln!("warning: --quota wants a positive FPS value (ignoring {r})");
+                }
+            }
+            let quota = quota.filter(|r| r.is_finite() && *r > 0.0);
 
             // Tune the detector through the shared engine: repeated
             // geometries, autoscaled replicas and (with --tuning-cache)
@@ -255,7 +293,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
             let cfg = SimConfig {
                 batch: BatchPolicy::new(batch, wait_ms * 1e-3),
+                queue_depth: 64usize.max(batch),
                 shed: if classes { ShedPolicy::ClassAware } else { ShedPolicy::DropOldest },
+                // The live runtime's workers own their queues (no
+                // cross-shard stealing); the DES keeps its default.
+                work_stealing: !live,
+                admission: match quota {
+                    Some(r) => {
+                        AdmissionPolicy::ClassQuota(ClassQuota::uniform(r, (r * 0.5).max(8.0)))
+                    }
+                    None => AdmissionPolicy::Open,
+                },
                 ..Default::default()
             };
             let mode = if let Some(k) = closed {
@@ -264,11 +312,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 "open-loop".into()
             };
             println!(
-                "fleet: {} devices | {cameras} cameras × {fps:.0} FPS × {seconds:.0} s ({mode}) | batch≤{batch}, wait≤{wait_ms:.0} ms | autoscale: {}{}{}",
+                "fleet: {} devices | {cameras} cameras × {fps:.0} FPS × {seconds:.0} s ({mode}) | batch≤{batch}, wait≤{wait_ms:.0} ms | autoscale: {}{}{}{}",
                 pool.len(),
                 if autoscale { policy.as_str() } else { "off" },
                 if hetero { " (hetero catalog)" } else { "" },
-                if classes { " | SLO classes on" } else { "" }
+                if classes { " | SLO classes on" } else { "" },
+                if live { " | LIVE threaded runtime" } else { "" }
             );
 
             // The open-loop trace is only needed when not closed-loop.
@@ -292,7 +341,24 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 classed: classes,
             };
 
-            let r = if autoscale {
+            let r = if live {
+                let lcfg = LiveConfig {
+                    threads: live_threads,
+                    clock: if virtual_clock { ClockMode::Virtual } else { ClockMode::Wall },
+                    time_scale,
+                };
+                println!(
+                    "live runtime: {} worker thread(s) | {} clock{}",
+                    if live_threads == 0 { pool.len() } else { live_threads.min(pool.len()) },
+                    if virtual_clock { "virtual (deterministic)" } else { "wall" },
+                    if virtual_clock {
+                        String::new()
+                    } else {
+                        format!(" | time scale {time_scale:.2} wall s per modeled s")
+                    }
+                );
+                serve_live(pool, &trace, &cfg, &lcfg)
+            } else if autoscale {
                 let acfg = AutoscaleConfig {
                     epoch_s,
                     provision_delay_s: delay_s,

@@ -9,7 +9,8 @@
 //! thread, and the detector stage runs the AOT artifact through the PJRT
 //! runtime — Python never on the path.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::Mutex;
 use std::thread::JoinHandle;
 
 use crate::ir::interp::Value;
@@ -49,21 +50,28 @@ pub enum OverflowPolicy {
 
 /// Outcome of [`Topic::try_publish`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PublishOutcome {
+pub enum PublishOutcome<T> {
     /// Delivered without displacing anything.
     Delivered,
-    /// Delivered, but the oldest queued message was evicted.
-    DeliveredDroppedOldest,
+    /// Delivered after evicting the oldest queued message, which is
+    /// returned so the caller can account for the shed — a live serving
+    /// front door undercounts drops without it. (With racing cloned
+    /// senders only the *last* evicted message is reported; the live
+    /// path has exactly one publisher per topic, where the first
+    /// eviction always lands.)
+    DeliveredDroppedOldest(T),
     /// Topic full and policy was [`OverflowPolicy::Reject`].
     Rejected,
-    /// The consumer side is gone.
+    /// The consumer side is gone. Any message evicted before the close
+    /// was observed died with the rest of the queue, so none is
+    /// reported.
     Closed,
 }
 
-impl PublishOutcome {
+impl<T> PublishOutcome<T> {
     /// True when `msg` made it into the queue.
-    pub fn delivered(self) -> bool {
-        matches!(self, PublishOutcome::Delivered | PublishOutcome::DeliveredDroppedOldest)
+    pub fn delivered(&self) -> bool {
+        matches!(self, PublishOutcome::Delivered | PublishOutcome::DeliveredDroppedOldest(_))
     }
 }
 
@@ -73,32 +81,105 @@ pub fn topic<T>(depth: usize) -> Topic<T> {
     Topic { tx, rx }
 }
 
+/// The one implementation of the overflow semantics, shared by
+/// [`Topic::try_publish`] (exclusive front door) and
+/// [`SharedTopic::try_publish`] (lockable consumer end): non-blocking
+/// send, and under [`OverflowPolicy::DropOldest`] evict-and-retry until
+/// the message lands, reporting the evicted message.
+fn publish_with<T>(
+    tx: &SyncSender<T>,
+    rx: &Receiver<T>,
+    msg: T,
+    policy: OverflowPolicy,
+) -> PublishOutcome<T> {
+    let mut msg = match tx.try_send(msg) {
+        Ok(()) => return PublishOutcome::Delivered,
+        Err(TrySendError::Disconnected(_)) => return PublishOutcome::Closed,
+        Err(TrySendError::Full(m)) => m,
+    };
+    if policy == OverflowPolicy::Reject {
+        return PublishOutcome::Rejected;
+    }
+    // Drop-oldest: evict and retry until the message lands. Cloned
+    // senders may race the freed slot, in which case the next
+    // iteration sheds the new oldest — drop-oldest semantics hold,
+    // and with a single publisher the first retry always succeeds.
+    let mut evicted = None;
+    loop {
+        if let Ok(old) = rx.try_recv() {
+            evicted = Some(old);
+        }
+        match tx.try_send(msg) {
+            Ok(()) => {
+                return match evicted {
+                    Some(old) => PublishOutcome::DeliveredDroppedOldest(old),
+                    // A racing consumer freed the slot before we evicted
+                    // anything: nothing was displaced after all.
+                    None => PublishOutcome::Delivered,
+                }
+            }
+            Err(TrySendError::Disconnected(_)) => return PublishOutcome::Closed,
+            Err(TrySendError::Full(m)) => msg = m,
+        }
+    }
+}
+
 impl<T> Topic<T> {
     /// Non-blocking publish with an explicit overflow policy. The topic
     /// must still own its `rx` (the admission front door); once `rx` has
-    /// been moved into a consumer stage, use `tx.send`.
+    /// been moved into a consumer stage, use `tx.send` — or use a
+    /// [`SharedTopic`], whose consumer end stays evictable.
     /// `serving::admission` builds its load-shedding front door on this.
-    pub fn try_publish(&self, msg: T, policy: OverflowPolicy) -> PublishOutcome {
-        let mut msg = match self.tx.try_send(msg) {
-            Ok(()) => return PublishOutcome::Delivered,
-            Err(TrySendError::Disconnected(_)) => return PublishOutcome::Closed,
-            Err(TrySendError::Full(m)) => m,
+    pub fn try_publish(&self, msg: T, policy: OverflowPolicy) -> PublishOutcome<T> {
+        publish_with(&self.tx, &self.rx, msg, policy)
+    }
+}
+
+/// A bounded topic whose consumer end is lockable, so a publisher can
+/// run [`Topic::try_publish`]'s drop-oldest eviction *while* another
+/// thread consumes — the shape the live serving runtime
+/// (`serving::live`) needs: its front-door router publishes (and sheds)
+/// into each shard's topic while the shard's worker thread drains it.
+///
+/// Lock order is always `tx` then `rx`; `try_recv` takes only `rx` and
+/// `close` only `tx`, so the pair cannot deadlock.
+pub struct SharedTopic<T> {
+    tx: Mutex<Option<SyncSender<T>>>,
+    rx: Mutex<Receiver<T>>,
+}
+
+impl<T> SharedTopic<T> {
+    /// Bounded topic of `depth` slots.
+    pub fn bounded(depth: usize) -> Self {
+        let (tx, rx) = sync_channel(depth);
+        Self { tx: Mutex::new(Some(tx)), rx: Mutex::new(rx) }
+    }
+
+    /// [`Topic::try_publish`] semantics against the locked consumer end.
+    /// After [`close`](Self::close) every publish reports
+    /// [`PublishOutcome::Closed`].
+    pub fn try_publish(&self, msg: T, policy: OverflowPolicy) -> PublishOutcome<T> {
+        let tx = self.tx.lock().expect("topic tx lock");
+        let Some(tx) = tx.as_ref() else {
+            return PublishOutcome::Closed;
         };
-        if policy == OverflowPolicy::Reject {
-            return PublishOutcome::Rejected;
-        }
-        // Drop-oldest: evict and retry until the message lands. Cloned
-        // senders may race the freed slot, in which case the next
-        // iteration sheds the new oldest — drop-oldest semantics hold,
-        // and with a single publisher the first retry always succeeds.
-        loop {
-            let _ = self.rx.try_recv();
-            match self.tx.try_send(msg) {
-                Ok(()) => return PublishOutcome::DeliveredDroppedOldest,
-                Err(TrySendError::Disconnected(_)) => return PublishOutcome::Closed,
-                Err(TrySendError::Full(m)) => msg = m,
-            }
-        }
+        let rx = self.rx.lock().expect("topic rx lock");
+        publish_with(tx, &rx, msg, policy)
+    }
+
+    /// Non-blocking consume. After [`close`](Self::close), drains the
+    /// remaining queue and then reports
+    /// [`TryRecvError::Disconnected`] — the consumer-visible
+    /// drain-then-hang-up contract [`TrafficPipeline::shutdown_drain`]
+    /// relies on.
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        self.rx.lock().expect("topic rx lock").try_recv()
+    }
+
+    /// Close the producer side: queued messages stay consumable, new
+    /// publishes report [`PublishOutcome::Closed`].
+    pub fn close(&self) {
+        *self.tx.lock().expect("topic tx lock") = None;
     }
 }
 
@@ -239,15 +320,40 @@ mod tests {
         let t = topic::<usize>(2);
         assert_eq!(t.try_publish(0, OverflowPolicy::Reject), PublishOutcome::Delivered);
         assert_eq!(t.try_publish(1, OverflowPolicy::Reject), PublishOutcome::Delivered);
-        // Full: reject keeps the queue, drop-oldest evicts 0.
+        // Full: reject keeps the queue, drop-oldest evicts 0 — and the
+        // outcome names the evicted message, so shed accounting can
+        // count *what* was lost, not just that something was.
         assert_eq!(t.try_publish(2, OverflowPolicy::Reject), PublishOutcome::Rejected);
         assert_eq!(
             t.try_publish(2, OverflowPolicy::DropOldest),
-            PublishOutcome::DeliveredDroppedOldest
+            PublishOutcome::DeliveredDroppedOldest(0)
         );
         assert_eq!(t.rx.try_recv(), Ok(1));
         assert_eq!(t.rx.try_recv(), Ok(2));
         assert!(t.rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn shared_topic_publishes_evicts_and_closes() {
+        let t = SharedTopic::<usize>::bounded(2);
+        assert_eq!(t.try_publish(0, OverflowPolicy::Reject), PublishOutcome::Delivered);
+        assert_eq!(t.try_publish(1, OverflowPolicy::Reject), PublishOutcome::Delivered);
+        assert_eq!(t.try_publish(2, OverflowPolicy::Reject), PublishOutcome::Rejected);
+        assert_eq!(
+            t.try_publish(2, OverflowPolicy::DropOldest),
+            PublishOutcome::DeliveredDroppedOldest(0)
+        );
+        // A consumer on another thread drains while the publisher keeps
+        // shedding into the same topic.
+        assert_eq!(t.try_recv(), Ok(1));
+        assert_eq!(t.try_publish(3, OverflowPolicy::DropOldest), PublishOutcome::Delivered);
+        // Close mid-stream: the queue stays drainable, new publishes
+        // report Closed, and the drained consumer sees Disconnected.
+        t.close();
+        assert_eq!(t.try_publish(4, OverflowPolicy::DropOldest), PublishOutcome::Closed);
+        assert_eq!(t.try_recv(), Ok(2));
+        assert_eq!(t.try_recv(), Ok(3));
+        assert_eq!(t.try_recv(), Err(TryRecvError::Disconnected));
     }
 
     #[test]
@@ -276,6 +382,39 @@ mod tests {
         assert_eq!(results.len(), n, "all in-flight frames must drain");
         for (i, r) in results.iter().enumerate() {
             assert_eq!(r.seq, i);
+        }
+    }
+
+    /// Regression for the closed-mid-drain race: when the input side
+    /// closes while a stage still holds a frame *in its hands* (not in
+    /// any queue), `shutdown_drain` must wait for that frame to flow
+    /// through, not just empty the channels. A slow detector makes the
+    /// window wide enough to hit every run.
+    #[test]
+    fn shutdown_drain_recovers_frames_held_mid_stage() {
+        let slow_detector: DetectFactory = Box::new(|| {
+            Box::new(|img: &Value| {
+                std::thread::sleep(std::time::Duration::from_millis(3));
+                let mean = img.f.iter().sum::<f32>() / img.f.len() as f32;
+                vec![Detection {
+                    bbox: BBox::new(mean.clamp(0.0, 1.0), 0.5, 0.1, 0.1),
+                    score: 0.9,
+                    class: 0,
+                }]
+            })
+        });
+        let p = TrafficPipeline::spawn(slow_detector, Homography::identity(), GmPhdConfig::default());
+        let n = 6;
+        for seq in 0..n {
+            let v = Value::new(vec![1, 4, 4, 1], vec![seq as f32 / 10.0; 16]);
+            p.publish(Frame { seq, image: v }).unwrap();
+        }
+        // Close immediately: the first frame is mid-detection, the rest
+        // are split across the frame and detection queues.
+        let results = p.shutdown_drain();
+        assert_eq!(results.len(), n, "a drain must not lose frames closed mid-stage");
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.seq, i, "drain must preserve order");
         }
     }
 

@@ -139,14 +139,15 @@ pub fn fleet_table(r: &FleetReport) -> String {
     // class-unaware run prints just the standard row).
     let active: Vec<_> = r.classes.iter().filter(|c| c.offered > 0).collect();
     if !active.is_empty() {
-        s += "| Class       | Offered | Served | Shed | p50 [ms] | p95 [ms] | p99 [ms] | SLO [ms] | Viol | Attain |\n";
+        s += "| Class       | Offered | Served | Shed | Quota | p50 [ms] | p95 [ms] | p99 [ms] | SLO [ms] | Viol | Attain |\n";
         for c in active {
             s += &format!(
-                "| {:<11} | {:>7} | {:>6} | {:>4} | {:>8.1} | {:>8.1} | {:>8.1} | {:>8.0} | {:>4} | {:>5.1}% |\n",
+                "| {:<11} | {:>7} | {:>6} | {:>4} | {:>5} | {:>8.1} | {:>8.1} | {:>8.1} | {:>8.0} | {:>4} | {:>5.1}% |\n",
                 c.class.label(),
                 c.offered,
                 c.completed,
                 c.shed,
+                c.quota_shed,
                 c.p50_s * 1e3,
                 c.p95_s * 1e3,
                 c.p99_s * 1e3,
@@ -365,6 +366,7 @@ mod tests {
                 offered: 300,
                 completed: 290,
                 shed: 10,
+                quota_shed: 4,
                 p50_s: 0.010,
                 p95_s: 0.030,
                 p99_s: 0.045,
@@ -378,6 +380,7 @@ mod tests {
                 offered: 0,
                 completed: 0,
                 shed: 0,
+                quota_shed: 0,
                 p50_s: 0.0,
                 p95_s: 0.0,
                 p99_s: 0.0,

@@ -12,7 +12,7 @@ use std::collections::VecDeque;
 
 use crate::pipeline::{OverflowPolicy, Topic};
 
-use super::Request;
+use super::{Request, SloClass};
 
 /// What to do when a bounded queue is full.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,6 +40,109 @@ impl ShedPolicy {
         match self {
             ShedPolicy::RejectNewest => OverflowPolicy::Reject,
             ShedPolicy::DropOldest | ShedPolicy::ClassAware => OverflowPolicy::DropOldest,
+        }
+    }
+
+    /// The live front door's per-class overflow mapping: a FIFO topic
+    /// cannot evict by class the way [`admit`] does, but the publisher
+    /// *does* know the incoming request's class. Under
+    /// [`ShedPolicy::ClassAware`] the lowest class sheds itself
+    /// (mirroring [`admit`]'s "the incoming request is the cheapest
+    /// frame to lose" branch) while higher classes evict the oldest
+    /// queued message — so a live fleet still sheds batchable traffic
+    /// first, it just cannot reach *past* newer high-class frames to do
+    /// it. The other policies ignore the class.
+    pub fn overflow_for(self, class: SloClass) -> OverflowPolicy {
+        match self {
+            ShedPolicy::RejectNewest => OverflowPolicy::Reject,
+            ShedPolicy::DropOldest => OverflowPolicy::DropOldest,
+            ShedPolicy::ClassAware => {
+                if class.priority() == 0 {
+                    OverflowPolicy::Reject
+                } else {
+                    OverflowPolicy::DropOldest
+                }
+            }
+        }
+    }
+}
+
+/// Per-class token buckets ahead of the queue: class `c` may admit a
+/// sustained `rate[c]` requests/s with bursts up to `burst[c]`. Buckets
+/// are independent — one class exhausting its quota cannot consume
+/// another's tokens, which is the starvation-freedom the property tests
+/// pin down ("no class starves while its bucket has tokens"). Shared by
+/// the DES driver and the live threaded front door: both refill off
+/// their own clock (virtual or wall-mapped) through [`try_take`].
+///
+/// [`try_take`]: ClassQuota::try_take
+#[derive(Debug, Clone)]
+pub struct ClassQuota {
+    /// Sustained admits per second, per [`SloClass::index`].
+    pub rate: [f64; 3],
+    /// Bucket capacity (burst headroom), tokens.
+    pub burst: [f64; 3],
+    tokens: [f64; 3],
+    last_s: f64,
+}
+
+impl ClassQuota {
+    /// Buckets start full at `t = 0`.
+    pub fn new(rate: [f64; 3], burst: [f64; 3]) -> Self {
+        assert!(rate.iter().all(|r| *r >= 0.0), "quota rates must be non-negative");
+        assert!(burst.iter().all(|b| *b >= 1.0), "burst must admit at least one request");
+        Self { rate, burst, tokens: burst, last_s: 0.0 }
+    }
+
+    /// One rate/burst for every class.
+    pub fn uniform(rate: f64, burst: f64) -> Self {
+        Self::new([rate; 3], [burst; 3])
+    }
+
+    /// Take one token from `class`'s bucket at time `now_s`. Refills
+    /// every bucket first (time may only move forward; out-of-order
+    /// calls refill nothing rather than going backwards).
+    pub fn try_take(&mut self, class: SloClass, now_s: f64) -> bool {
+        let dt = (now_s - self.last_s).max(0.0);
+        self.last_s = self.last_s.max(now_s);
+        for i in 0..3 {
+            self.tokens[i] = (self.tokens[i] + self.rate[i] * dt).min(self.burst[i]);
+        }
+        let t = &mut self.tokens[class.index()];
+        if *t >= 1.0 {
+            *t -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current token balance of `class` (diagnostics/tests).
+    pub fn tokens(&self, class: SloClass) -> f64 {
+        self.tokens[class.index()]
+    }
+}
+
+/// What stands in front of the bounded queues.
+#[derive(Debug, Clone, Default)]
+pub enum AdmissionPolicy {
+    /// No quotas: every arrival proceeds straight to the shed policy.
+    #[default]
+    Open,
+    /// Per-class token buckets: an arrival whose class is out of tokens
+    /// is shed at the front door (a *quota* shed, counted separately in
+    /// [`super::metrics::ClassReport::quota_shed`]) before it can
+    /// displace queued work of any class.
+    ClassQuota(ClassQuota),
+}
+
+impl AdmissionPolicy {
+    /// The mutable per-run quota state (the config itself stays
+    /// immutable — both drivers clone the buckets at start of run).
+    pub(super) fn runtime_quota(&self) -> Option<ClassQuota> {
+        match self {
+            AdmissionPolicy::Open => None,
+            AdmissionPolicy::ClassQuota(q) => Some(q.clone()),
         }
     }
 }
@@ -185,6 +288,40 @@ mod tests {
         }
         let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn class_quota_refills_and_isolates_buckets() {
+        let mut q = ClassQuota::new([10.0, 10.0, 2.0], [2.0, 2.0, 2.0]);
+        // Burst: two batchable admits at t=0, then the bucket is dry.
+        assert!(q.try_take(SloClass::Batchable, 0.0));
+        assert!(q.try_take(SloClass::Batchable, 0.0));
+        assert!(!q.try_take(SloClass::Batchable, 0.0));
+        // Other buckets are untouched by the batchable flood.
+        assert!(q.try_take(SloClass::Interactive, 0.0));
+        assert!((q.tokens(SloClass::Standard) - 2.0).abs() < 1e-12);
+        // 0.5 s at 2 tokens/s refills one batchable token.
+        assert!(q.try_take(SloClass::Batchable, 0.5));
+        assert!(!q.try_take(SloClass::Batchable, 0.5));
+        // Refill clamps at burst, and time never runs backwards.
+        assert!(q.try_take(SloClass::Standard, 10.0));
+        let before = q.tokens(SloClass::Standard);
+        assert!(q.try_take(SloClass::Standard, 5.0), "stale timestamp still admits");
+        assert!(q.tokens(SloClass::Standard) <= before);
+    }
+
+    #[test]
+    fn class_aware_overflow_maps_lowest_class_to_reject() {
+        use crate::pipeline::OverflowPolicy;
+        let p = ShedPolicy::ClassAware;
+        assert_eq!(p.overflow_for(SloClass::Batchable), OverflowPolicy::Reject);
+        assert_eq!(p.overflow_for(SloClass::Standard), OverflowPolicy::DropOldest);
+        assert_eq!(p.overflow_for(SloClass::Interactive), OverflowPolicy::DropOldest);
+        // The class-blind policies ignore the class.
+        for c in SloClass::ALL {
+            assert_eq!(ShedPolicy::RejectNewest.overflow_for(c), OverflowPolicy::Reject);
+            assert_eq!(ShedPolicy::DropOldest.overflow_for(c), OverflowPolicy::DropOldest);
+        }
     }
 
     #[test]

@@ -60,10 +60,19 @@ pub enum Decision {
 }
 
 impl BatchPolicy {
+    /// The batch size actually closable on a device: the policy's
+    /// `max_batch` clamped to the backend's activation-memory bound.
+    /// The DES dispatcher and the live worker's channel-drain headroom
+    /// must use the same number or live queues would buffer more than
+    /// the simulator models.
+    pub fn effective_cap(&self, device_cap: usize) -> usize {
+        self.max_batch.min(device_cap.max(1))
+    }
+
     /// Evaluate the policy against a device queue. `device_cap` is the
     /// backend's activation-memory bound on batch size.
     pub fn decide(&self, queue: &VecDeque<Request>, now: f64, device_cap: usize) -> Decision {
-        let cap = self.max_batch.min(device_cap.max(1));
+        let cap = self.effective_cap(device_cap);
         if queue.is_empty() {
             return Decision::Idle;
         }

@@ -24,7 +24,13 @@ use crate::scheduler::{TuningEngine, TuningResult};
 pub const DEFAULT_DISPATCH_S: f64 = 2e-3;
 
 /// A serving backend: batch service time + power as a function of load.
-pub trait Backend {
+///
+/// `Send + Sync` is part of the contract: the live threaded runtime
+/// (`serving::live`) shares each backend between its shard worker (for
+/// service times) and the front-door router (for outstanding-work
+/// estimates). Backends are plain calibrated models, so the bound costs
+/// implementors nothing.
+pub trait Backend: Send + Sync {
     /// Human-readable device name (unique within a pool).
     fn name(&self) -> &str;
 

@@ -1,0 +1,860 @@
+//! The live threaded serving runtime: real worker threads behind the
+//! same [`Backend`]/[`FleetReport`] interfaces as the DES.
+//!
+//! Everything else in `serving/` *models* the fleet; this module *runs*
+//! it. One worker thread per shard consumes from a bounded
+//! [`SharedTopic`] front door (the
+//! [`Topic::try_publish`](crate::pipeline::Topic::try_publish) overflow
+//! semantics end to end, per-class
+//! [`OverflowPolicy`](crate::pipeline::OverflowPolicy) mapped from
+//! [`ShedPolicy::overflow_for`](super::ShedPolicy::overflow_for)), a
+//! wall-clock batcher honors the same
+//! max-batch/max-wait/class-`wait_factor` rules as the DES batcher
+//! (literally the same [`BatchPolicy::decide`]), the front-door router
+//! does least-outstanding-work routing over the live shards' queue
+//! depths and busy horizons, and shutdown drains every queued frame
+//! before the shards retire — the
+//! [`TrafficPipeline::shutdown_drain`](crate::pipeline::TrafficPipeline::shutdown_drain)
+//! close-then-drain-then-join contract at fleet scale.
+//!
+//! Two clocks drive it ([`ClockMode`]):
+//!
+//! - **Wall**: threads genuinely sleep and race; `time_scale` maps
+//!   modeled seconds to wall seconds so a 10 s trace can smoke-test in
+//!   2 s. Service time is the backend's *modeled* batch latency (there
+//!   is no FPGA in this container), so what the wall clock exercises is
+//!   the real concurrency structure — channels, eviction under racing
+//!   consumers, condvar wakeups, drain ordering — not device physics.
+//! - **Virtual**: a conservative turn-based protocol serializes the
+//!   threads on a shared virtual clock: the participant with the
+//!   earliest pending event (ties to the lowest index, front door
+//!   first) holds the turn, everyone else waits. Execution order
+//!   becomes a pure function of the trace — byte-identical reports
+//!   across runs *and across worker-thread counts* — which is what lets
+//!   `tests/live_vs_des.rs` use the DES as a differential oracle for
+//!   this runtime.
+//!
+//! The live path deliberately has **no work stealing** (workers own
+//! their queues; cross-thread queue surgery is exactly the shared
+//! mutable state this design avoids), so differential comparisons run
+//! the DES with `work_stealing: false` — [`serve_live`] asserts it.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::TryRecvError;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::pipeline::{PublishOutcome, SharedTopic};
+
+use super::admission::ClassQuota;
+use super::autoscale::{ScaleEventKind, ScalingEvent};
+use super::batcher::{BatchPolicy, Decision};
+use super::device::Backend;
+use super::metrics::{EnergyLedger, FleetMetrics, FleetReport};
+use super::shard::{Lifecycle, ShardPool};
+use super::sim::SimConfig;
+use super::Request;
+
+/// Which clock paces the runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Deterministic turn-based virtual time (tests, differential runs).
+    Virtual,
+    /// Real time, scaled by [`LiveConfig::time_scale`].
+    Wall,
+}
+
+/// Knobs of the live runtime.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    /// Worker threads serving the shards (dealt round-robin);
+    /// `0` means one thread per shard. In virtual-clock mode the report
+    /// is byte-identical for any thread count — a property
+    /// `tests/serving_invariants.rs` pins down.
+    pub threads: usize,
+    pub clock: ClockMode,
+    /// Wall seconds per modeled second (wall mode only): `0.25` runs a
+    /// 10 s trace in ~2.5 s of wall time.
+    pub time_scale: f64,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        Self { threads: 0, clock: ClockMode::Wall, time_scale: 1.0 }
+    }
+}
+
+impl LiveConfig {
+    /// The deterministic test configuration.
+    pub fn virtual_clock() -> Self {
+        Self { clock: ClockMode::Virtual, ..Default::default() }
+    }
+
+    /// Wall clock at `time_scale` wall seconds per modeled second.
+    pub fn wall(time_scale: f64) -> Self {
+        Self { clock: ClockMode::Wall, time_scale: time_scale.max(1e-3), ..Default::default() }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// The virtual clock: a conservative turn-based protocol.
+// ---------------------------------------------------------------------
+
+/// Where a participant stands in the turn protocol.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Slot {
+    /// Holds the turn and is executing its slice.
+    Running,
+    /// Parked until this virtual time (`INFINITY` = waiting for input).
+    Until(f64),
+    /// Left the protocol for good.
+    Done,
+}
+
+struct VcState {
+    now: f64,
+    slots: Vec<Slot>,
+}
+
+/// The shared virtual clock. Invariant: at most one participant is
+/// `Running` at any instant; the turn is handed to the earliest parked
+/// participant (ties to the lowest index, so the front door — index
+/// 0 — admits arrivals before shards complete batches stamped at the
+/// same instant, exactly the DES driver's step order).
+struct VirtualClock {
+    state: Mutex<VcState>,
+    cv: Condvar,
+}
+
+impl VirtualClock {
+    /// Participant 0 (the front door) starts with the turn; shard
+    /// workers start idle-parked.
+    fn new(participants: usize) -> Self {
+        let mut slots = vec![Slot::Until(f64::INFINITY); participants];
+        slots[0] = Slot::Running;
+        Self { state: Mutex::new(VcState { now: 0.0, slots }), cv: Condvar::new() }
+    }
+
+    /// Advance the clock to the earliest parked participant and give it
+    /// the turn. No-op while someone is still running or every live
+    /// participant is idle-parked.
+    fn hand_off(s: &mut VcState) {
+        if s.slots.iter().any(|x| matches!(x, Slot::Running)) {
+            return;
+        }
+        let mut best: Option<(f64, usize)> = None;
+        for (i, x) in s.slots.iter().enumerate() {
+            if let Slot::Until(t) = x {
+                if t.is_finite() && best.map_or(true, |(bt, _)| *t < bt) {
+                    best = Some((*t, i));
+                }
+            }
+        }
+        if let Some((t, i)) = best {
+            s.now = s.now.max(t);
+            s.slots[i] = Slot::Running;
+        }
+    }
+
+    /// Give the turn away until virtual time `t` (never parks in the
+    /// past — a stale deadline re-runs at the current instant).
+    fn park(&self, p: usize, t: f64) {
+        let mut s = self.state.lock().expect("clock lock");
+        let until = t.max(s.now);
+        s.slots[p] = Slot::Until(until);
+        Self::hand_off(&mut s);
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Leave the protocol (drained shard retiring, or the front door
+    /// after the trace closes).
+    fn done(&self, p: usize) {
+        let mut s = self.state.lock().expect("clock lock");
+        s.slots[p] = Slot::Done;
+        Self::hand_off(&mut s);
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Called by the turn holder after publishing into `p`'s queue:
+    /// pull an idle or later-parked consumer forward to the current
+    /// instant so it observes the message in event order.
+    fn nudge(&self, p: usize) {
+        let mut s = self.state.lock().expect("clock lock");
+        if let Slot::Until(t) = s.slots[p] {
+            if t > s.now {
+                let now = s.now;
+                s.slots[p] = Slot::Until(now);
+            }
+        }
+    }
+
+    /// Wake every idle-parked participant at the current instant (the
+    /// shutdown broadcast: they re-check their closed topics).
+    fn wake_idle(&self) {
+        let mut s = self.state.lock().expect("clock lock");
+        let now = s.now;
+        for x in s.slots.iter_mut() {
+            if matches!(x, Slot::Until(t) if t.is_infinite()) {
+                *x = Slot::Until(now);
+            }
+        }
+    }
+
+    /// Block until one of `ids` holds the turn; `None` once all of them
+    /// are done.
+    fn wait_any(&self, ids: &[usize]) -> Option<(usize, f64)> {
+        let mut s = self.state.lock().expect("clock lock");
+        loop {
+            if ids.iter().all(|&p| matches!(s.slots[p], Slot::Done)) {
+                return None;
+            }
+            if let Some(&p) = ids.iter().find(|&&p| matches!(s.slots[p], Slot::Running)) {
+                return Some((p, s.now));
+            }
+            s = self.cv.wait(s).expect("clock wait");
+        }
+    }
+
+    /// The final virtual time (meaningful once every participant is
+    /// done).
+    fn final_now(&self) -> f64 {
+        self.state.lock().expect("clock lock").now
+    }
+}
+
+// ---------------------------------------------------------------------
+// The wall clock + per-thread wakeups.
+// ---------------------------------------------------------------------
+
+/// Monotonic wall time mapped into modeled seconds.
+struct WallClock {
+    start: Instant,
+    /// Wall seconds per modeled second.
+    scale: f64,
+}
+
+impl WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() / self.scale
+    }
+
+    /// Sleep (in bounded slices) until modeled time `t`.
+    fn sleep_until(&self, t: f64) {
+        loop {
+            let now = self.now();
+            if now >= t {
+                return;
+            }
+            let wall = ((t - now) * self.scale).min(0.05);
+            thread::sleep(Duration::from_secs_f64(wall.max(0.0)));
+        }
+    }
+}
+
+/// A counting wakeup: the router kicks the worker thread owning a shard
+/// after publishing to it, so wall-mode workers block instead of
+/// polling.
+struct Kick {
+    count: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Kick {
+    fn new() -> Self {
+        Self { count: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn seen(&self) -> u64 {
+        *self.count.lock().expect("kick lock")
+    }
+
+    fn kick(&self) {
+        *self.count.lock().expect("kick lock") += 1;
+        self.cv.notify_all();
+    }
+
+    /// Wait until the count moves past `seen` or `timeout` elapses
+    /// (spurious wakeups are harmless: the worker re-scans its shards).
+    fn wait(&self, seen: u64, timeout: Option<Duration>) {
+        let g = self.count.lock().expect("kick lock");
+        if *g != seen {
+            return;
+        }
+        match timeout {
+            Some(d) => drop(self.cv.wait_timeout(g, d).expect("kick wait")),
+            None => drop(self.cv.wait(g).expect("kick wait")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shards.
+// ---------------------------------------------------------------------
+
+/// The router-visible face of one live shard.
+struct ShardShared {
+    /// Admitted-but-undispatched requests (topic + worker buffer) —
+    /// the live "queue depth" the router routes on.
+    queued: AtomicUsize,
+    busy: AtomicBool,
+    /// `f64::to_bits` of the in-flight batch's completion time.
+    free_at_bits: AtomicU64,
+}
+
+impl ShardShared {
+    fn new() -> Self {
+        Self { queued: AtomicUsize::new(0), busy: AtomicBool::new(false), free_at_bits: AtomicU64::new(0) }
+    }
+
+    /// The DES [`outstanding_s`](crate::serving::shard::DeviceState::outstanding_s)
+    /// estimate over live state: remaining service of the in-flight
+    /// batch plus the modeled service of the queue with one more
+    /// request appended.
+    fn outstanding_s(&self, backend: &dyn Backend, now: f64) -> f64 {
+        let busy_rem = if self.busy.load(Ordering::SeqCst) {
+            (f64::from_bits(self.free_at_bits.load(Ordering::SeqCst)) - now).max(0.0)
+        } else {
+            0.0
+        };
+        busy_rem + backend.batch_latency_s(self.queued.load(Ordering::SeqCst) + 1)
+    }
+}
+
+/// What a shard's slice of work decided.
+enum Step {
+    /// Re-run the shard at this modeled time (or earlier on a nudge).
+    Park(f64),
+    /// Drained and retired.
+    Done,
+}
+
+/// One live shard's worker-side state machine. `step` runs one slice:
+/// finish a due batch, refill the batching buffer from the topic,
+/// decide (dispatch / wait / idle) — the same sequence the DES driver's
+/// `settle` performs per device, minus stealing.
+struct ShardRuntime {
+    idx: usize,
+    backend: Arc<dyn Backend>,
+    topic: Arc<SharedTopic<Request>>,
+    shared: Arc<ShardShared>,
+    policy: BatchPolicy,
+    /// [`BatchPolicy::effective_cap`] for this backend: the refill
+    /// headroom, so the worker never buffers more than one closable
+    /// batch and the topic keeps playing the DES's bounded queue.
+    cap: usize,
+    local: VecDeque<Request>,
+    in_flight: Vec<Request>,
+    busy: bool,
+    busy_until: f64,
+    closed: bool,
+    idle_w: f64,
+    busy_w: f64,
+    /// Modeled time energy has been accrued to.
+    last_accrued: f64,
+    metrics: Arc<Mutex<FleetMetrics>>,
+    ledger: Arc<Mutex<EnergyLedger>>,
+    max_completion: Arc<Mutex<f64>>,
+    accrued_to: Arc<Mutex<Vec<f64>>>,
+    retire_log: Arc<Mutex<Vec<ScalingEvent>>>,
+    serving_count: Arc<AtomicUsize>,
+}
+
+impl ShardRuntime {
+    /// Accrue device power over `[last_accrued, to]` into the shared
+    /// ledger (all live time is `Active`-state time, like a DES fixed
+    /// pool).
+    fn accrue(&mut self, to: f64, busy: bool) {
+        if to > self.last_accrued {
+            self.ledger.lock().expect("ledger lock").accrue(
+                self.idx,
+                Lifecycle::Active,
+                self.last_accrued,
+                to,
+                if busy { self.busy_w } else { self.idle_w },
+            );
+            self.last_accrued = to;
+            self.accrued_to.lock().expect("accrued lock")[self.idx] = to;
+        }
+    }
+
+    fn step(&mut self, now: f64) -> Step {
+        // 1. Finish the in-flight batch. Completions are stamped at the
+        // modeled service end (`busy_until`), not the thread's wake
+        // time, so wall-mode scheduling jitter paces execution without
+        // polluting the latency model.
+        if self.busy {
+            if self.busy_until > now {
+                // Woken mid-service (a nudge): arrivals just queue.
+                return Step::Park(self.busy_until);
+            }
+            let done_at = self.busy_until;
+            let batch = std::mem::take(&mut self.in_flight);
+            {
+                let mut m = self.metrics.lock().expect("metrics lock");
+                for r in &batch {
+                    m.record_completion(self.idx, done_at - r.arrival_s, r.class);
+                }
+            }
+            {
+                let mut mc = self.max_completion.lock().expect("completion lock");
+                *mc = mc.max(done_at);
+            }
+            self.busy = false;
+            self.shared.busy.store(false, Ordering::SeqCst);
+        }
+        // 2. Refill the batching buffer up to one closable batch. When
+        // the buffer stays short the topic is empty, so the batcher's
+        // deadline scan below always sees the whole undispatched queue.
+        while self.local.len() < self.cap {
+            match self.topic.try_recv() {
+                Ok(r) => self.local.push_back(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        // 3. The same batching decision the DES makes.
+        match self.policy.decide(&self.local, now, self.backend.max_batch()) {
+            Decision::Dispatch(n) => {
+                let batch: Vec<Request> = self.local.drain(..n).collect();
+                let service = self.backend.batch_latency_s(batch.len());
+                self.accrue(now, false);
+                self.busy = true;
+                self.busy_until = now + service;
+                self.accrue(self.busy_until, true);
+                self.shared.free_at_bits.store(self.busy_until.to_bits(), Ordering::SeqCst);
+                self.shared.busy.store(true, Ordering::SeqCst);
+                self.shared.queued.fetch_sub(n, Ordering::SeqCst);
+                self.metrics.lock().expect("metrics lock").record_batch(self.idx, service);
+                self.in_flight = batch;
+                Step::Park(self.busy_until)
+            }
+            Decision::WaitUntil(t) => Step::Park(t),
+            Decision::Idle => {
+                if self.closed {
+                    // Drain-to-retire: the topic closed and everything
+                    // admitted has been served.
+                    self.accrue(now, false);
+                    let serving_after =
+                        self.serving_count.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
+                    self.retire_log.lock().expect("retire lock").push(ScalingEvent {
+                        t_s: now,
+                        kind: ScaleEventKind::Retired { device: self.idx },
+                        serving_after,
+                    });
+                    Step::Done
+                } else {
+                    Step::Park(f64::INFINITY)
+                }
+            }
+        }
+    }
+}
+
+/// Virtual-mode worker: run whichever owned shard holds the turn.
+fn run_virtual(clock: &VirtualClock, mut shards: Vec<ShardRuntime>) {
+    let ids: Vec<usize> = shards.iter().map(|s| s.idx + 1).collect();
+    while let Some((pid, now)) = clock.wait_any(&ids) {
+        let s = shards.iter_mut().find(|s| s.idx + 1 == pid).expect("owned shard");
+        match s.step(now) {
+            Step::Park(t) => clock.park(pid, t),
+            Step::Done => clock.done(pid),
+        }
+    }
+}
+
+/// Wall-mode worker: step the owned shards, sleep until the earliest
+/// park or the next kick. Every wake re-steps *every* live shard, not
+/// just the ones whose park came due — a kick only says "one of your
+/// topics got a message", and an idle shard is parked at infinity, so a
+/// due-time guard would never drain it again (and a batch-waiting shard
+/// could dispatch early once the kick fills its batch). `step` is
+/// idempotent for a shard with nothing to do, so the extra calls are
+/// free.
+fn run_wall(wall: &WallClock, kick: &Kick, mut shards: Vec<ShardRuntime>) {
+    let mut parks: Vec<Option<f64>> = vec![Some(0.0); shards.len()];
+    loop {
+        let seen = kick.seen();
+        let now = wall.now();
+        for (k, s) in shards.iter_mut().enumerate() {
+            if parks[k].is_some() {
+                match s.step(now) {
+                    Step::Park(t) => parks[k] = Some(t),
+                    Step::Done => parks[k] = None,
+                }
+            }
+        }
+        if parks.iter().all(Option::is_none) {
+            return;
+        }
+        let next = parks.iter().flatten().fold(f64::INFINITY, |a, &b| a.min(b));
+        if next <= wall.now() {
+            continue; // a park came due while we were scanning
+        }
+        if next.is_finite() {
+            let wall_wait = ((next - wall.now()).max(0.0) * wall.scale).max(1e-4);
+            kick.wait(seen, Some(Duration::from_secs_f64(wall_wait)));
+        } else {
+            kick.wait(seen, None);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The front door.
+// ---------------------------------------------------------------------
+
+/// Router-side accounting the report assembly needs after the join.
+struct FrontDoor<'a> {
+    cfg: &'a SimConfig,
+    quota: Option<ClassQuota>,
+    backends: &'a [Arc<dyn Backend>],
+    topics: &'a [Arc<SharedTopic<Request>>],
+    shared: &'a [Arc<ShardShared>],
+    metrics: &'a Mutex<FleetMetrics>,
+    offered: u64,
+    offered_by_class: [u64; 3],
+}
+
+impl FrontDoor<'_> {
+    /// Admit one arrival at modeled time `now`: token buckets, then
+    /// least-outstanding-work routing, then the per-class overflow
+    /// policy through the topic. Returns the shard to nudge when the
+    /// message was delivered.
+    fn admit(&mut self, req: Request, now: f64) -> Option<usize> {
+        self.offered += 1;
+        self.offered_by_class[req.class.index()] += 1;
+        if let Some(q) = self.quota.as_mut() {
+            if !q.try_take(req.class, now) {
+                self.metrics.lock().expect("metrics lock").record_quota_shed(req.class);
+                return None;
+            }
+        }
+        // Least outstanding work over live queue depths, ties to the
+        // lowest index (the DES `ShardPool::route`).
+        let mut best = 0usize;
+        let mut best_s = f64::INFINITY;
+        for (i, sh) in self.shared.iter().enumerate() {
+            let est = sh.outstanding_s(self.backends[i].as_ref(), now);
+            if est < best_s {
+                best_s = est;
+                best = i;
+            }
+        }
+        let policy = self.cfg.shed.overflow_for(req.class);
+        let class = req.class;
+        match self.topics[best].try_publish(req, policy) {
+            PublishOutcome::Delivered => {
+                self.shared[best].queued.fetch_add(1, Ordering::SeqCst);
+                Some(best)
+            }
+            PublishOutcome::DeliveredDroppedOldest(old) => {
+                // Net queue depth is unchanged: one in, one out — and
+                // the eviction report is what keeps live shed
+                // accounting exact per class.
+                self.metrics.lock().expect("metrics lock").record_shed(old.class);
+                Some(best)
+            }
+            PublishOutcome::Rejected | PublishOutcome::Closed => {
+                self.metrics.lock().expect("metrics lock").record_shed(class);
+                None
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The entry point.
+// ---------------------------------------------------------------------
+
+/// Serve an open-loop trace on real threads and report through the same
+/// [`FleetReport`] the DES produces. Consumes the pool (the live
+/// runtime owns its devices); the trace must be sorted by arrival time.
+///
+/// Differential configs must set `work_stealing: false` — the live
+/// path has none, and a silent mismatch would make the DES oracle lie.
+pub fn serve_live(
+    pool: ShardPool,
+    trace: &[Request],
+    cfg: &SimConfig,
+    live: &LiveConfig,
+) -> FleetReport {
+    assert!(
+        !cfg.work_stealing,
+        "the live runtime has no work stealing; run it (and any DES oracle) with \
+         work_stealing: false"
+    );
+    assert!(
+        trace.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
+        "live serving replays traces in arrival order"
+    );
+    assert!(
+        cfg.queue_depth >= cfg.batch.max_batch,
+        "live fidelity contract: queue_depth ({}) must cover one full batch ({}) — \
+         shallower topics would let the worker's batching buffer exceed the bound the \
+         DES models",
+        cfg.queue_depth,
+        cfg.batch.max_batch
+    );
+    let backends: Vec<Arc<dyn Backend>> =
+        pool.into_backends().into_iter().map(Arc::from).collect();
+    let n = backends.len();
+    assert!(n > 0, "live serving needs at least one device");
+    let threads = if live.threads == 0 { n } else { live.threads.clamp(1, n) };
+
+    let metrics = Arc::new(Mutex::new(FleetMetrics::new(n, cfg.slo_s)));
+    let ledger = Arc::new(Mutex::new(EnergyLedger::new(cfg.energy_epoch_s)));
+    let max_completion = Arc::new(Mutex::new(0.0f64));
+    let accrued_to = Arc::new(Mutex::new(vec![0.0f64; n]));
+    let retire_log = Arc::new(Mutex::new(Vec::new()));
+    let serving_count = Arc::new(AtomicUsize::new(n));
+    let topics: Vec<Arc<SharedTopic<Request>>> =
+        (0..n).map(|_| Arc::new(SharedTopic::bounded(cfg.queue_depth.max(1)))).collect();
+    let shared: Vec<Arc<ShardShared>> = (0..n).map(|_| Arc::new(ShardShared::new())).collect();
+
+    let mut runtimes: Vec<ShardRuntime> = (0..n)
+        .map(|i| ShardRuntime {
+            idx: i,
+            backend: backends[i].clone(),
+            topic: topics[i].clone(),
+            shared: shared[i].clone(),
+            policy: cfg.batch,
+            cap: cfg.batch.effective_cap(backends[i].max_batch()),
+            local: VecDeque::new(),
+            in_flight: Vec::new(),
+            busy: false,
+            busy_until: 0.0,
+            closed: false,
+            idle_w: backends[i].power_w(0.0),
+            busy_w: backends[i].power_w(1.0),
+            last_accrued: 0.0,
+            metrics: metrics.clone(),
+            ledger: ledger.clone(),
+            max_completion: max_completion.clone(),
+            accrued_to: accrued_to.clone(),
+            retire_log: retire_log.clone(),
+            serving_count: serving_count.clone(),
+        })
+        .collect();
+    // Deal shards round-robin to worker threads (shard i → thread
+    // i % threads), so `--live-threads 1` serializes on one core and
+    // per-shard ownership never changes.
+    let mut per_thread: Vec<Vec<ShardRuntime>> = (0..threads).map(|_| Vec::new()).collect();
+    for rt in runtimes.drain(..) {
+        let t = rt.idx % threads;
+        per_thread[t].push(rt);
+    }
+
+    let mut front = FrontDoor {
+        cfg,
+        quota: cfg.admission.runtime_quota(),
+        backends: &backends,
+        topics: &topics,
+        shared: &shared,
+        metrics: &*metrics,
+        offered: 0,
+        offered_by_class: [0; 3],
+    };
+
+    let final_now = match live.clock {
+        ClockMode::Virtual => {
+            let clock = Arc::new(VirtualClock::new(n + 1));
+            thread::scope(|scope| {
+                for group in per_thread.drain(..) {
+                    let clock = clock.clone();
+                    scope.spawn(move || run_virtual(&clock, group));
+                }
+                // The front door runs on this thread as participant 0.
+                let mut next = 0;
+                while next < trace.len() {
+                    clock.park(0, trace[next].arrival_s);
+                    let (_, now) = clock.wait_any(&[0]).expect("front door active");
+                    while next < trace.len() && trace[next].arrival_s <= now {
+                        let req = trace[next].clone();
+                        next += 1;
+                        if let Some(shard) = front.admit(req, now) {
+                            clock.nudge(shard + 1);
+                        }
+                    }
+                }
+                // Drain-to-retire: close every topic, wake idle shards
+                // so they observe the hang-up, and leave the protocol.
+                for t in &topics {
+                    t.close();
+                }
+                clock.wake_idle();
+                clock.done(0);
+            });
+            clock.final_now()
+        }
+        ClockMode::Wall => {
+            let wall = Arc::new(WallClock { start: Instant::now(), scale: live.time_scale.max(1e-3) });
+            let kicks: Vec<Arc<Kick>> = (0..threads).map(|_| Arc::new(Kick::new())).collect();
+            thread::scope(|scope| {
+                for (t, group) in per_thread.drain(..).enumerate() {
+                    let wall = wall.clone();
+                    let kick = kicks[t].clone();
+                    scope.spawn(move || run_wall(&wall, &kick, group));
+                }
+                for req in trace {
+                    wall.sleep_until(req.arrival_s);
+                    let now = wall.now();
+                    if let Some(shard) = front.admit(req.clone(), now) {
+                        kicks[shard % threads].kick();
+                    }
+                }
+                for t in &topics {
+                    t.close();
+                }
+                for k in &kicks {
+                    k.kick();
+                }
+            });
+            wall.now()
+        }
+    };
+
+    // The front door's counters outlive its borrows of the shared
+    // state (the workers are joined; only accounting remains).
+    let offered = front.offered;
+    let offered_by_class = front.offered_by_class;
+
+    // Trailing idle energy: every shard accrued up to its own last
+    // event; extend to the run's end so the ledger covers the same
+    // span as the DES's (which accrues every device to the final event
+    // time).
+    {
+        let mut led = ledger.lock().expect("ledger lock");
+        let accrued = accrued_to.lock().expect("accrued lock");
+        for (i, &last) in accrued.iter().enumerate() {
+            if final_now > last {
+                led.accrue(i, Lifecycle::Active, last, final_now, backends[i].power_w(0.0));
+            }
+        }
+    }
+
+    let Ok(metrics) = Arc::try_unwrap(metrics) else { unreachable!("workers joined") };
+    let metrics = metrics.into_inner().expect("metrics lock");
+    let Ok(ledger) = Arc::try_unwrap(ledger) else { unreachable!("workers joined") };
+    let mut ledger = ledger.into_inner().expect("ledger lock");
+    for (i, stats) in metrics.per_device.iter().enumerate() {
+        ledger.served_gop += stats.completed as f64 * backends[i].gop_per_frame();
+    }
+    while ledger.per_device_j.len() < n {
+        ledger.per_device_j.push(0.0);
+    }
+    let last_completion = *max_completion.lock().expect("completion lock");
+    let backend_refs: Vec<&dyn Backend> = backends.iter().map(|b| b.as_ref()).collect();
+    let mut report = metrics.report(&backend_refs, last_completion.max(final_now));
+    report.offered = offered;
+    for (i, c) in report.classes.iter_mut().enumerate() {
+        c.offered = offered_by_class[i];
+    }
+    report.devices_start = n;
+    report.devices_peak = n;
+    report.devices_final = serving_count.load(Ordering::SeqCst);
+    let Ok(retire_log) = Arc::try_unwrap(retire_log) else { unreachable!("workers joined") };
+    let mut events = retire_log.into_inner().expect("retire lock");
+    events.sort_by(|a, b| {
+        a.t_s.partial_cmp(&b.t_s).expect("finite event times").then_with(|| {
+            let d = |e: &ScalingEvent| match e.kind {
+                ScaleEventKind::Retired { device } => device,
+                _ => usize::MAX,
+            };
+            d(a).cmp(&d(b))
+        })
+    });
+    report.scaling = events;
+    for d in report.devices.iter_mut() {
+        d.state = "retired";
+    }
+    report.energy = ledger;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Platform;
+    use crate::serving::device::BaselineDevice;
+    use crate::serving::sim::poisson_trace;
+    use crate::serving::ShedPolicy;
+
+    /// 5 ms overhead + 5 ms/frame, 10 W — the DES test device.
+    fn test_device() -> BaselineDevice {
+        let p =
+            Platform { name: "live-dev", overhead_s: 5e-3, sustained_gops: 100.0, power_w: 10.0 };
+        BaselineDevice::new(p, 0.5, 16)
+    }
+
+    fn pool(n: usize) -> ShardPool {
+        let mut pool = ShardPool::new();
+        for _ in 0..n {
+            pool.register(Box::new(test_device()));
+        }
+        pool
+    }
+
+    fn base_cfg() -> SimConfig {
+        SimConfig {
+            batch: BatchPolicy::new(4, 0.010),
+            queue_depth: 16,
+            shed: ShedPolicy::DropOldest,
+            slo_s: 0.250,
+            work_stealing: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn virtual_clock_serves_and_conserves() {
+        let trace = poisson_trace(120.0, 2.0, 42);
+        let r = serve_live(pool(2), &trace, &base_cfg(), &LiveConfig::virtual_clock());
+        assert_eq!(r.offered, trace.len() as u64);
+        assert_eq!(r.completed + r.shed, r.offered, "live conservation");
+        assert!(r.completed > 0);
+        assert!(r.devices.iter().all(|d| d.state == "retired"), "drain-to-retire");
+        assert_eq!(r.devices_final, 0);
+        assert_eq!(r.scaling.len(), 2, "each shard logs its retirement");
+        assert!(r.energy.total_j() > 0.0);
+    }
+
+    #[test]
+    fn virtual_clock_is_deterministic() {
+        let trace = poisson_trace(200.0, 1.5, 7);
+        let cfg = base_cfg();
+        let a = serve_live(pool(3), &trace, &cfg, &LiveConfig::virtual_clock());
+        let b = serve_live(pool(3), &trace, &cfg, &LiveConfig::virtual_clock());
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn wall_clock_smoke_conserves() {
+        // 0.5 s of modeled traffic at 20× speed: finishes in tens of
+        // wall milliseconds; only counting invariants are asserted
+        // (latencies carry scheduling jitter by design).
+        let trace = poisson_trace(150.0, 0.5, 3);
+        let r = serve_live(pool(2), &trace, &base_cfg(), &LiveConfig::wall(0.05));
+        assert_eq!(r.offered, trace.len() as u64);
+        assert_eq!(r.completed + r.shed, r.offered);
+        assert!(r.completed > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "work_stealing")]
+    fn live_rejects_work_stealing_configs() {
+        let cfg = SimConfig { work_stealing: true, ..base_cfg() };
+        let _ = serve_live(pool(1), &[], &cfg, &LiveConfig::virtual_clock());
+    }
+}

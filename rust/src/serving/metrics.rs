@@ -255,6 +255,11 @@ pub struct ClassReport {
     pub offered: u64,
     pub completed: u64,
     pub shed: u64,
+    /// The subset of `shed` turned away by an admission quota
+    /// ([`crate::serving::admission::AdmissionPolicy::ClassQuota`])
+    /// before reaching any queue — zero under
+    /// [`AdmissionPolicy::Open`](crate::serving::admission::AdmissionPolicy::Open).
+    pub quota_shed: u64,
     pub p50_s: f64,
     pub p95_s: f64,
     pub p99_s: f64,
@@ -381,6 +386,7 @@ pub struct EpochStats {
 struct ClassStats {
     hist: LatencyHistogram,
     shed: u64,
+    quota_shed: u64,
     violations: u64,
 }
 
@@ -411,7 +417,12 @@ impl FleetMetrics {
                 .collect(),
             per_class: SloClass::ALL
                 .iter()
-                .map(|_| ClassStats { hist: LatencyHistogram::new(), shed: 0, violations: 0 })
+                .map(|_| ClassStats {
+                    hist: LatencyHistogram::new(),
+                    shed: 0,
+                    quota_shed: 0,
+                    violations: 0,
+                })
                 .collect(),
             epoch_hist: LatencyHistogram::new(),
             epoch_shed: 0,
@@ -455,6 +466,14 @@ impl FleetMetrics {
         self.per_class[class.index()].shed += 1;
     }
 
+    /// A request turned away by the admission quota (still a shed for
+    /// every conservation law; additionally counted per class so quota
+    /// pressure is visible separately from queue pressure).
+    pub fn record_quota_shed(&mut self, class: SloClass) {
+        self.record_shed(class);
+        self.per_class[class.index()].quota_shed += 1;
+    }
+
     pub fn record_steal(&mut self, device: usize, n: usize) {
         self.per_device[device].stolen += n as u64;
     }
@@ -488,6 +507,7 @@ impl FleetMetrics {
                     offered: s.hist.count() + s.shed,
                     completed: s.hist.count(),
                     shed: s.shed,
+                    quota_shed: s.quota_shed,
                     p50_s: s.hist.quantile(0.50),
                     p95_s: s.hist.quantile(0.95),
                     p99_s: s.hist.quantile(0.99),
@@ -632,17 +652,23 @@ mod tests {
         m.record_completion(0, 0.070, SloClass::Standard);
         m.record_completion(0, 0.070, SloClass::Batchable);
         m.record_shed(SloClass::Batchable);
+        m.record_quota_shed(SloClass::Batchable);
         assert_eq!(m.slo_violations, 0, "fleet-wide counter uses the base SLO");
         let classes = m.class_reports();
+        // A quota shed is a shed (conservation) *and* shows up in the
+        // quota column.
+        assert_eq!(classes[SloClass::Batchable.index()].quota_shed, 1);
+        assert_eq!(classes[SloClass::Interactive.index()].quota_shed, 0);
         assert_eq!(classes[SloClass::Interactive.index()].violations, 1);
         assert_eq!(classes[SloClass::Standard.index()].violations, 0);
         assert_eq!(classes[SloClass::Batchable.index()].violations, 0);
-        assert_eq!(classes[SloClass::Batchable.index()].shed, 1);
-        assert_eq!(classes[SloClass::Batchable.index()].offered, 2);
+        assert_eq!(classes[SloClass::Batchable.index()].shed, 2);
+        assert_eq!(classes[SloClass::Batchable.index()].offered, 3);
         assert!((classes[SloClass::Interactive.index()].slo_s - 0.050).abs() < 1e-15);
-        // Attainment: interactive 0/1 met, batchable 1 of 2 offered met.
+        // Attainment: interactive 0/1 met, batchable 1 of 3 offered met
+        // (both kinds of shed count against it).
         assert_eq!(classes[SloClass::Interactive.index()].attainment(), 0.0);
-        assert_eq!(classes[SloClass::Batchable.index()].attainment(), 0.5);
+        assert!((classes[SloClass::Batchable.index()].attainment() - 1.0 / 3.0).abs() < 1e-15);
         let std = &classes[SloClass::Standard.index()];
         assert!(std.p99_s > 0.0);
         assert_eq!(std.attainment(), 1.0);

@@ -35,22 +35,29 @@
 //! - [`sim`] — the discrete-event driver + arrival models (open-loop
 //!   Poisson / bursty multi-camera traces, closed-loop window-limited
 //!   clients), with fixed-pool, autoscaled and heterogeneous-autoscaled
-//!   entry points.
+//!   entry points;
+//! - [`live`] — the *real* multi-threaded serving runtime behind the
+//!   same interfaces: one worker thread per shard consuming a bounded
+//!   [`crate::pipeline::SharedTopic`] front door, wall- or
+//!   virtual-clocked ([`serve_live`]); the DES above is its
+//!   differential oracle (`tests/live_vs_des.rs`).
 
 pub mod admission;
 pub mod autoscale;
 pub mod batcher;
 pub mod device;
+pub mod live;
 pub mod metrics;
 pub mod shard;
 pub mod sim;
 
-pub use admission::ShedPolicy;
+pub use admission::{AdmissionPolicy, ClassQuota, ShedPolicy};
 pub use autoscale::{
     AutoscaleConfig, Autoscaler, DrainOrder, ScaleAction, ScaleEventKind, ScalePolicy,
     ScalingEvent, SloTracking, TargetUtilization,
 };
 pub use batcher::BatchPolicy;
+pub use live::{serve_live, ClockMode, LiveConfig};
 pub use device::{capacity_fps, Backend, BaselineDevice, CatalogEntry, DeviceCatalog, GemminiDevice};
 pub use metrics::{ClassReport, EnergyLedger, EpochEnergy, FleetReport, LatencyHistogram};
 pub use shard::{Lifecycle, ShardPool};

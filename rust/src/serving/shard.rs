@@ -176,6 +176,24 @@ impl ShardPool {
         self.devices.iter().map(|d| d.queue.len()).sum()
     }
 
+    /// Hand the registered backends over to a runtime that owns its own
+    /// serving state — the live threaded path (`serving::live`) spawns
+    /// one worker per backend and has no use for the DES bookkeeping.
+    /// Panics if any DES state is non-trivial (pre-loaded queues or
+    /// in-flight batches belong to simulations, not live startups).
+    pub fn into_backends(self) -> Vec<Box<dyn Backend>> {
+        self.devices
+            .into_iter()
+            .map(|d| {
+                assert!(
+                    d.queue.is_empty() && !d.busy && matches!(d.lifecycle, Lifecycle::Active),
+                    "live serving starts from an idle, active pool"
+                );
+                d.backend
+            })
+            .collect()
+    }
+
     /// Least-outstanding-work routing over devices accepting new work:
     /// the device that would finish the new request soonest. Ties break
     /// to the lowest index (deterministic). If scale-in transiently left

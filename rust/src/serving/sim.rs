@@ -22,7 +22,7 @@
 use crate::dataset::scenes::SceneConfig;
 use crate::util::Rng;
 
-use super::admission::{admit, Admission, ShedPolicy};
+use super::admission::{admit, Admission, AdmissionPolicy, ShedPolicy};
 use super::autoscale::{
     Autoscaler, DrainOrder, EpochObservation, ScaleAction, ScaleEventKind, ScalingEvent,
 };
@@ -39,6 +39,10 @@ pub struct SimConfig {
     /// Per-device admission queue bound.
     pub queue_depth: usize,
     pub shed: ShedPolicy,
+    /// Front-door policy ahead of the queues (per-class token buckets
+    /// or open). Shared verbatim by the DES and the live threaded
+    /// runtime.
+    pub admission: AdmissionPolicy,
     /// Latency objective completed requests are judged against, s
     /// (scaled per class by [`SloClass::slo_factor`]).
     pub slo_s: f64,
@@ -55,6 +59,7 @@ impl Default for SimConfig {
             batch: BatchPolicy::default(),
             queue_depth: 64,
             shed: ShedPolicy::DropOldest,
+            admission: AdmissionPolicy::Open,
             slo_s: 0.100,
             work_stealing: true,
             energy_epoch_s: 0.5,
@@ -436,6 +441,7 @@ fn drive(
 ) -> FleetReport {
     assert!(!pool.is_empty(), "simulate needs at least one device");
     let mut metrics = FleetMetrics::new(pool.len(), cfg.slo_s);
+    let mut quota = cfg.admission.runtime_quota();
     let mut events: Vec<ScalingEvent> = Vec::new();
     let mut now = 0.0f64;
     let mut last_completion = 0.0f64;
@@ -478,10 +484,18 @@ fn drive(
             }
         }
 
-        // 1. Admit every arrival due by `now`.
+        // 1. Admit every arrival due by `now`: token buckets first, then
+        // routing + the bounded queue's shed policy.
         while let Some(req) = arrivals.pop_due(now) {
             offered += 1;
             offered_by_class[req.class.index()] += 1;
+            if let Some(q) = quota.as_mut() {
+                if !q.try_take(req.class, now) {
+                    metrics.record_quota_shed(req.class);
+                    done.push((req, now));
+                    continue;
+                }
+            }
             let idx = pool.route(now);
             let d = &mut pool.devices[idx];
             match admit(&mut d.queue, cfg.queue_depth, cfg.shed, req.clone()) {

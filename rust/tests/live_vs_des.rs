@@ -1,0 +1,304 @@
+//! The differential live-vs-DES harness: the discrete-event simulator —
+//! whose own invariants are property-tested in
+//! `tests/serving_invariants.rs` — becomes the *oracle* for the real
+//! threaded runtime (`serving::live`). Every test replays the same
+//! seeded traces through both paths with identical configs
+//! (`work_stealing: false` — the live path's workers own their queues)
+//! and the live side on the deterministic virtual clock.
+//!
+//! What must agree, and how tightly:
+//!
+//! - **Conservation, exactly, in both paths**: injected == completed +
+//!   shed once drained (live's shutdown drains to retirement, so
+//!   in-flight is zero by construction).
+//! - **Everything, exactly, when nothing sheds**: with class-blind
+//!   shedding the only live/DES divergences are *where* a full queue
+//!   evicts from (the worker's refill buffer is protected) — so a run
+//!   with no shedding has an identical event history: same batches,
+//!   same completion instants, bit-equal quantiles.
+//! - **Completed counts, per-class p95 and makespan within 5%** under
+//!   overload with class-blind shedding (the mirror-validated margin is
+//!   actually ~0%; 5% is the acceptance band).
+//! - **Shed priority and violation ordering** under class-aware
+//!   overload: the live front door approximates in-queue class eviction
+//!   with a per-class overflow policy (lowest class rejects itself,
+//!   higher classes evict the oldest), so per-class *counts* drift —
+//!   but the orderings the policy exists for (interactive sheds ≤
+//!   batchable sheds; interactive violation rate ≥ batchable's, both
+//!   judged against class-scaled SLOs) must hold in both paths.
+//! - **Quota sheds, exactly**: admission token buckets run *before*
+//!   routing in both drivers and both clocks tick the same arrival
+//!   times, so per-class quota-shed counts are equal, not just close.
+
+use gemmini_edge::baselines::Platform;
+use gemmini_edge::dataset::scenes::SceneConfig;
+use gemmini_edge::report::fleet_table;
+use gemmini_edge::serving::{
+    assign_slo_classes, multi_camera_trace, poisson_trace, serve_live, simulate, AdmissionPolicy,
+    BaselineDevice, BatchPolicy, ClassQuota, FleetReport, LiveConfig, ShardPool, ShedPolicy,
+    SimConfig, SloClass,
+};
+
+/// The invariant-suite synthetic device: `overhead_ms` per invocation +
+/// `frame_ms` per frame at 100 sustained GOP/s and 5 W.
+fn device(overhead_ms: f64, frame_ms: f64, cap: usize) -> BaselineDevice {
+    let p = Platform {
+        name: "diff-dev",
+        overhead_s: overhead_ms * 1e-3,
+        sustained_gops: 100.0,
+        power_w: 5.0,
+    };
+    BaselineDevice::new(p, 0.1 * frame_ms, cap)
+}
+
+/// The two-device pool every differential test serves (a fast 8-cap
+/// device and a slower 4-cap one, so routing has real choices).
+fn pool2() -> ShardPool {
+    let mut pool = ShardPool::new();
+    pool.register(Box::new(device(2.0, 4.0, 8)));
+    pool.register(Box::new(device(1.0, 7.0, 4)));
+    pool
+}
+
+fn cfg(queue_depth: usize, shed: ShedPolicy, wait_s: f64) -> SimConfig {
+    SimConfig {
+        batch: BatchPolicy::new(4, wait_s),
+        queue_depth,
+        shed,
+        slo_s: 0.050,
+        work_stealing: false,
+        ..Default::default()
+    }
+}
+
+fn conserve(r: &FleetReport, offered: u64, path: &str) {
+    assert_eq!(r.offered, offered, "{path}: front door missed arrivals");
+    assert_eq!(r.completed + r.shed, r.offered, "{path}: conservation violated");
+    let per_dev: u64 = r.devices.iter().map(|d| d.completed).sum();
+    assert_eq!(per_dev, r.completed, "{path}: per-device sum diverges");
+    let class_offered: u64 = r.classes.iter().map(|c| c.offered).sum();
+    assert_eq!(class_offered, r.offered, "{path}: class offered split diverges");
+    for c in &r.classes {
+        assert_eq!(c.offered, c.completed + c.shed, "{path}: class {:?} conservation", c.class);
+        assert!(c.quota_shed <= c.shed, "{path}: quota sheds exceed sheds");
+    }
+}
+
+/// With nothing shed, the live virtual-clock event history is the DES
+/// event history: same admissions, same batches, same completion
+/// instants — so the reports agree bit-for-bit on every latency
+/// statistic, across 24 seeds of both arrival models and both
+/// class-blind *and* class-aware shedding (class-aware degenerates to
+/// drop-oldest when queues never fill).
+#[test]
+fn live_matches_des_exactly_when_nothing_sheds() {
+    let scene = SceneConfig::default();
+    for seed in 0..24u64 {
+        let (trace, shed) = if seed % 2 == 0 {
+            (poisson_trace(150.0, 3.0, seed), ShedPolicy::DropOldest)
+        } else {
+            let mut t = multi_camera_trace(&scene, 6, 25.0, 3.0, seed);
+            assign_slo_classes(&mut t);
+            (t, ShedPolicy::ClassAware)
+        };
+        let c = cfg(32, shed, 0.008);
+        let des = simulate(&mut pool2(), &trace, &c);
+        let live = serve_live(pool2(), &trace, &c, &LiveConfig::virtual_clock());
+        conserve(&des, trace.len() as u64, "des");
+        conserve(&live, trace.len() as u64, "live");
+        assert_eq!(des.shed, 0, "seed {seed}: the underloaded DES must not shed");
+        assert_eq!(live.shed, 0, "seed {seed}: the underloaded live path must not shed");
+        assert_eq!(des.completed, live.completed, "seed {seed}");
+        for (d, l) in des.devices.iter().zip(&live.devices) {
+            assert_eq!(d.completed, l.completed, "seed {seed}: per-device split");
+            assert_eq!(d.batches, l.batches, "seed {seed}: batch count");
+        }
+        // Identical event history ⇒ identical histograms, bit for bit.
+        assert_eq!(des.p50_s.to_bits(), live.p50_s.to_bits(), "seed {seed}: p50");
+        assert_eq!(des.p95_s.to_bits(), live.p95_s.to_bits(), "seed {seed}: p95");
+        assert_eq!(des.p99_s.to_bits(), live.p99_s.to_bits(), "seed {seed}: p99");
+        assert_eq!(des.max_s.to_bits(), live.max_s.to_bits(), "seed {seed}: max");
+        assert!(
+            (des.mean_s - live.mean_s).abs() <= 1e-12 * des.mean_s.max(1e-12),
+            "seed {seed}: mean {} vs {}",
+            des.mean_s,
+            live.mean_s
+        );
+        assert!(
+            (des.makespan_s - live.makespan_s).abs() < 1e-9,
+            "seed {seed}: makespan {} vs {}",
+            des.makespan_s,
+            live.makespan_s
+        );
+        for (dc, lc) in des.classes.iter().zip(&live.classes) {
+            assert_eq!(dc.completed, lc.completed, "seed {seed}: class {:?}", dc.class);
+            assert_eq!(dc.violations, lc.violations, "seed {seed}: class {:?}", dc.class);
+        }
+    }
+}
+
+/// The acceptance band: classed traces (so per-class quantiles have
+/// teeth) under both underload and ~2× overload with class-blind
+/// drop-oldest shedding. Live must track the DES within 5% on
+/// completed count, makespan and per-class p95 — the mirror-validated
+/// divergence is ~0 (the only structural difference, eviction reaching
+/// into the worker's refill buffer, cannot trigger while the worker is
+/// busy, which is when overload sheds happen).
+#[test]
+fn live_tracks_des_within_bands_on_classed_traces() {
+    let scene = SceneConfig::default();
+    for seed in 0..24u64 {
+        let rate = if seed % 2 == 0 { 160.0 } else { 600.0 };
+        let mut trace = multi_camera_trace(&scene, 6, rate / 6.0, 3.0, 1000 + seed);
+        assign_slo_classes(&mut trace);
+        let c = cfg(16, ShedPolicy::DropOldest, 0.005);
+        let des = simulate(&mut pool2(), &trace, &c);
+        let live = serve_live(pool2(), &trace, &c, &LiveConfig::virtual_clock());
+        conserve(&des, trace.len() as u64, "des");
+        conserve(&live, trace.len() as u64, "live");
+        let rel = (live.completed as f64 - des.completed as f64).abs()
+            / des.completed.max(1) as f64;
+        assert!(
+            rel <= 0.05,
+            "seed {seed}: completed {} vs {} (rel {rel:.4})",
+            live.completed,
+            des.completed
+        );
+        let mrel = (live.makespan_s - des.makespan_s).abs() / des.makespan_s.max(1e-9);
+        assert!(mrel <= 0.05, "seed {seed}: makespan rel {mrel:.4}");
+        for (dc, lc) in des.classes.iter().zip(&live.classes) {
+            if dc.completed >= 100 && lc.completed >= 100 {
+                let prel = (lc.p95_s - dc.p95_s).abs() / dc.p95_s.max(1e-12);
+                assert!(
+                    prel <= 0.05,
+                    "seed {seed}: class {:?} p95 {} vs {} (rel {prel:.4})",
+                    dc.class,
+                    lc.p95_s,
+                    dc.p95_s
+                );
+            }
+        }
+    }
+}
+
+/// Class-aware shedding under ~2× overload. The live topic cannot evict
+/// by class, so per-class shed *counts* legitimately drift from the
+/// DES — what must survive the approximation is the policy's purpose:
+/// in BOTH paths the top class sheds no more than the bottom class,
+/// the bottom class really sheds, and the per-class violation rates
+/// (against class-scaled SLOs) order the same way. Completed counts
+/// stay capacity-bound and inside the 5% band.
+#[test]
+fn class_aware_live_preserves_shed_priority_and_violation_ordering() {
+    let scene = SceneConfig::default();
+    for seed in 0..24u64 {
+        let mut trace = multi_camera_trace(&scene, 6, 100.0, 3.0, 1000 + seed);
+        assign_slo_classes(&mut trace);
+        let c = cfg(16, ShedPolicy::ClassAware, 0.005);
+        let des = simulate(&mut pool2(), &trace, &c);
+        let live = serve_live(pool2(), &trace, &c, &LiveConfig::virtual_clock());
+        conserve(&des, trace.len() as u64, "des");
+        conserve(&live, trace.len() as u64, "live");
+        let rel = (live.completed as f64 - des.completed as f64).abs()
+            / des.completed.max(1) as f64;
+        assert!(rel <= 0.05, "seed {seed}: completed rel {rel:.4}");
+        for (r, path) in [(&des, "des"), (&live, "live")] {
+            assert!(r.shed > 100, "seed {seed}: {path} must be overloaded (shed {})", r.shed);
+            let shed_of = |cl: SloClass| r.classes[cl.index()].shed;
+            assert!(
+                shed_of(SloClass::Interactive) <= shed_of(SloClass::Batchable),
+                "seed {seed}: {path} sheds interactive {} > batchable {}",
+                shed_of(SloClass::Interactive),
+                shed_of(SloClass::Batchable)
+            );
+            assert!(shed_of(SloClass::Batchable) > 0, "seed {seed}: {path} spared batchable");
+            let rate = |cl: SloClass| {
+                let c = &r.classes[cl.index()];
+                c.violations as f64 / c.completed.max(1) as f64
+            };
+            let enough = r.classes.iter().all(|c| c.completed >= 100);
+            if enough {
+                assert!(
+                    rate(SloClass::Interactive) + 1e-9 >= rate(SloClass::Batchable),
+                    "seed {seed}: {path} violation ordering broke: interactive {:.3} < \
+                     batchable {:.3}",
+                    rate(SloClass::Interactive),
+                    rate(SloClass::Batchable)
+                );
+            }
+        }
+    }
+}
+
+/// Admission token buckets run before routing in both drivers, and the
+/// virtual clocks tick the same arrival instants — so per-class
+/// quota-shed counts agree *exactly*, not just within a band.
+#[test]
+fn quota_sheds_agree_exactly_between_live_and_des() {
+    let scene = SceneConfig::default();
+    for seed in 0..12u64 {
+        let mut trace = multi_camera_trace(&scene, 6, 60.0, 3.0, 2000 + seed);
+        assign_slo_classes(&mut trace);
+        let quota = || ClassQuota::new([40.0, 40.0, 15.0], [20.0, 20.0, 8.0]);
+        let c = SimConfig {
+            admission: AdmissionPolicy::ClassQuota(quota()),
+            ..cfg(32, ShedPolicy::ClassAware, 0.008)
+        };
+        let des = simulate(&mut pool2(), &trace, &c);
+        let live = serve_live(pool2(), &trace, &c, &LiveConfig::virtual_clock());
+        conserve(&des, trace.len() as u64, "des");
+        conserve(&live, trace.len() as u64, "live");
+        let total: u64 = des.classes.iter().map(|c| c.quota_shed).sum();
+        assert!(total > 0, "seed {seed}: the batchable quota must bite at 6×60 FPS offered");
+        for (dc, lc) in des.classes.iter().zip(&live.classes) {
+            assert_eq!(
+                dc.quota_shed, lc.quota_shed,
+                "seed {seed}: class {:?} quota sheds must agree exactly",
+                dc.class
+            );
+        }
+    }
+}
+
+/// `make livesmoke`: the wall-clock smoke gate. Real threads, real
+/// sleeps at 1/10th time scale (~0.3 s of wall time for a 3 s trace),
+/// drain-to-retire shutdown — and the report flows through the same
+/// `report::fleet_table` renderer the CLI's `repro fleet --live` path
+/// prints. Only counting invariants are asserted: latency numbers carry
+/// genuine scheduling jitter, which is the point of the wall mode.
+#[test]
+fn live_smoke_wall_clock() {
+    let scene = SceneConfig::default();
+    let mut trace = multi_camera_trace(&scene, 8, 30.0, 3.0, 20240710);
+    assign_slo_classes(&mut trace);
+    let c = cfg(32, ShedPolicy::ClassAware, 0.008);
+    let live = serve_live(pool2(), &trace, &c, &LiveConfig::wall(0.1));
+    conserve(&live, trace.len() as u64, "live");
+    assert!(live.completed > 0, "the live fleet must serve");
+    let table = fleet_table(&live);
+    assert!(table.contains("diff-dev"), "device rows must render:\n{table}");
+    assert!(table.contains("| retired"), "drain-to-retire must be visible:\n{table}");
+    assert!(table.contains("fleet:"), "fleet totals must render:\n{table}");
+    assert!(table.contains("| Class"), "per-class section must render:\n{table}");
+    assert!(table.contains("energy:"), "the live ledger must render:\n{table}");
+    assert!(!live.scaling.is_empty(), "retire events must be logged");
+}
+
+/// Thread-count sweep on the wall clock too: whatever the OS scheduler
+/// does, counting invariants hold (the deterministic sweep lives in
+/// `serving_invariants.rs`; this one exercises the real concurrency).
+#[test]
+fn wall_clock_conserves_across_thread_counts() {
+    let trace = poisson_trace(400.0, 1.0, 11);
+    let c = cfg(16, ShedPolicy::DropOldest, 0.005);
+    for threads in [1, 2, 4] {
+        let live = serve_live(
+            pool2(),
+            &trace,
+            &c,
+            &LiveConfig { threads, ..LiveConfig::wall(0.05) },
+        );
+        conserve(&live, trace.len() as u64, "live");
+        assert!(live.completed > 0, "threads {threads}: nothing served");
+    }
+}

@@ -19,15 +19,22 @@
 //!   batchable).
 //! - **Quantile accuracy**: the streaming histogram stays within bounded
 //!   relative error of exact sorted quantiles on adversarial samples.
+//! - **Quota starvation freedom**: per-class admission token buckets
+//!   are independent — a class whose bucket has tokens is never
+//!   quota-shed, however hard another class floods.
+//! - **Live determinism**: the threaded runtime's virtual-clock mode is
+//!   byte-identical across reruns and across 1/2/4 worker threads (the
+//!   property that makes `tests/live_vs_des.rs`'s differential oracle
+//!   sound).
 
 use gemmini_edge::baselines::Platform;
 use gemmini_edge::dataset::scenes::SceneConfig;
 use gemmini_edge::serving::{
-    assign_slo_classes, multi_camera_trace, poisson_trace, simulate, simulate_autoscaled,
-    simulate_autoscaled_hetero, simulate_closed_loop, AutoscaleConfig, Autoscaler, Backend,
-    BaselineDevice, BatchPolicy, ClosedLoopConfig, DeviceCatalog, DrainOrder, FleetReport,
-    LatencyHistogram, Request, ShardPool, ShedPolicy, SimConfig, SloClass, SloTracking,
-    TargetUtilization,
+    assign_slo_classes, multi_camera_trace, poisson_trace, serve_live, simulate,
+    simulate_autoscaled, simulate_autoscaled_hetero, simulate_closed_loop, AdmissionPolicy,
+    AutoscaleConfig, Autoscaler, Backend, BaselineDevice, BatchPolicy, ClassQuota,
+    ClosedLoopConfig, DeviceCatalog, DrainOrder, FleetReport, LatencyHistogram, LiveConfig,
+    Request, ShardPool, ShedPolicy, SimConfig, SloClass, SloTracking, TargetUtilization,
 };
 use gemmini_edge::util::{prop, Rng};
 
@@ -148,6 +155,12 @@ fn check_report(r: &FleetReport, offered: u64) -> Result<(), String> {
             return Err(format!(
                 "class {:?}: offered {} != {} completed + {} shed",
                 c.class, c.offered, c.completed, c.shed
+            ));
+        }
+        if c.quota_shed > c.shed {
+            return Err(format!(
+                "class {:?}: quota sheds {} exceed total sheds {}",
+                c.class, c.quota_shed, c.shed
             ));
         }
         class_offered += c.offered;
@@ -471,6 +484,133 @@ fn hetero_autoscaled_reports_are_byte_identical_across_reruns() {
             "hetero autoscaled run diverged at seed {seed}"
         );
         check_report(&a, trace.len() as u64).unwrap();
+    }
+}
+
+/// The admission-quota starvation property: a class whose token bucket
+/// cannot run dry (burst covers its whole offered volume, refill 3× its
+/// rate) is NEVER quota-shed, no matter how hard another class floods —
+/// buckets are independent, so quota pressure cannot cross classes. The
+/// flood itself must be quota-limited, and every request still conserves.
+#[test]
+fn class_quota_prevents_cross_class_starvation() {
+    prop::check(
+        0x5714,
+        24,
+        |r| {
+            let prot_rate = 10.0 + r.f64() * 20.0; // protected offered rate
+            let flood_rate = 200.0 + r.f64() * 200.0; // batchable flood
+            let queue_depth = 4 + r.below(13);
+            let seed = r.next_u64() % (1u64 << 32);
+            (prot_rate, flood_rate, queue_depth, seed)
+        },
+        |&(prot_rate, flood_rate, queue_depth, seed)| {
+            let horizon = 3.0;
+            // Interactive traffic at prot_rate; batchable flood on top.
+            let mut trace: Vec<Request> = poisson_trace(prot_rate, horizon, seed);
+            for req in trace.iter_mut() {
+                req.class = SloClass::Interactive;
+            }
+            for mut req in poisson_trace(flood_rate, horizon, seed + 1) {
+                req.class = SloClass::Batchable;
+                trace.push(req);
+            }
+            trace.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            for (i, req) in trace.iter_mut().enumerate() {
+                req.id = i as u64;
+            }
+            // The protected bucket can never empty: burst exceeds the
+            // class's whole offered volume and refills at 3× its rate.
+            let burst0 = prot_rate * horizon * 1.5 + 10.0;
+            let quota = ClassQuota::new([prot_rate * 3.0, 50.0, 30.0], [burst0, 25.0, 10.0]);
+            let mut pool = ShardPool::new();
+            pool.register(Box::new(device(5.0, 5.0, 8)));
+            let cfg = SimConfig {
+                batch: BatchPolicy::new(4, 0.005),
+                queue_depth,
+                shed: ShedPolicy::ClassAware,
+                admission: AdmissionPolicy::ClassQuota(quota),
+                slo_s: 0.100,
+                work_stealing: false,
+                ..Default::default()
+            };
+            let r = simulate(&mut pool, &trace, &cfg);
+            check_report(&r, trace.len() as u64)?;
+            let q = |c: SloClass| r.classes[c.index()].quota_shed;
+            if q(SloClass::Interactive) != 0 {
+                return Err(format!(
+                    "protected class quota-shed {} times while its bucket had tokens",
+                    q(SloClass::Interactive)
+                ));
+            }
+            if q(SloClass::Batchable) == 0 {
+                return Err(format!(
+                    "a {flood_rate:.0} FPS flood against a 30 FPS bucket must be limited"
+                ));
+            }
+            if r.classes[SloClass::Interactive.index()].completed == 0 {
+                return Err("the protected class starved behind the flood".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Live virtual-clock determinism: the turn-based clock serializes the
+/// worker threads on (event time, participant index), so the report is
+/// a pure function of the trace — byte-identical across reruns AND
+/// across 1/2/4 worker threads, over 20 seeds of classed and unclassed
+/// traffic. (The conservative protocol is what makes the DES a usable
+/// oracle: any live/DES difference is a semantic difference, never
+/// scheduler noise.)
+#[test]
+fn live_virtual_reports_are_thread_invariant_and_reproducible() {
+    let scene = SceneConfig::default();
+    for seed in 0..20u64 {
+        let mut trace = multi_camera_trace(&scene, 6, 40.0, 2.0, seed);
+        let shed = if seed % 2 == 0 { ShedPolicy::DropOldest } else { ShedPolicy::ClassAware };
+        if seed % 2 == 1 {
+            assign_slo_classes(&mut trace);
+        }
+        let cfg = SimConfig {
+            batch: BatchPolicy::new(4, 0.008),
+            queue_depth: 16,
+            shed,
+            slo_s: 0.050,
+            work_stealing: false,
+            ..Default::default()
+        };
+        let mk_pool = || {
+            let mut pool = ShardPool::new();
+            pool.register(Box::new(device(2.0, 4.0, 8)));
+            pool.register(Box::new(device(1.0, 7.0, 4)));
+            pool.register(Box::new(device(3.0, 5.0, 8)));
+            pool.register(Box::new(device(2.0, 6.0, 4)));
+            pool
+        };
+        let run = |threads: usize| {
+            serve_live(
+                mk_pool(),
+                &trace,
+                &cfg,
+                &LiveConfig::virtual_clock().with_threads(threads),
+            )
+        };
+        let a = run(1);
+        let again = run(1);
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{again:?}"),
+            "seed {seed}: live rerun diverged at 1 thread"
+        );
+        for threads in [2, 4] {
+            let b = run(threads);
+            assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "seed {seed}: {threads} worker threads changed the live report"
+            );
+        }
     }
 }
 
