@@ -3,20 +3,24 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy fmt fmt-drift featurecheck perfsmoke energysmoke livesmoke artifacts fleet
+.PHONY: check build test clippy fmt fmt-drift featurecheck perfsmoke energysmoke livesmoke scenariosmoke artifacts fleet
 
 # The perf smoke gate (`perfsmoke`), the energy smoke gate
-# (`energysmoke`) and the live-runtime smoke gate (`livesmoke`) are
-# enforced by `check` through the `test` target: `cargo test -q` runs
-# the gate assertions
+# (`energysmoke`), the live-runtime smoke gate (`livesmoke`) and the
+# scenario-accuracy smoke gate (`scenariosmoke`) are enforced by
+# `check` through the `test` target: `cargo test -q` runs the gate
+# assertions
 # (tests/tuning_cache.rs::perf_smoke_memoized_instruction_budget,
-# tests/energy_ledger.rs::hetero_policy_never_picks_dominated_device and
-# tests/live_vs_des.rs::live_smoke_wall_clock, plus the rest of the
-# differential live-vs-DES harness and the per-class properties in
-# tests/serving_invariants.rs), so a memoization, device-selection or
-# live-runtime regression fails `make check` without re-running the
-# suite's heaviest tests twice. `make perfsmoke` / `make energysmoke` /
-# `make livesmoke` run the gates alone.
+# tests/energy_ledger.rs::hetero_policy_never_picks_dominated_device,
+# tests/live_vs_des.rs::live_smoke_wall_clock and
+# tests/scenario_accuracy.rs::scenario_smoke_both_drivers, plus the rest
+# of the differential live-vs-DES harness, the per-class properties in
+# tests/serving_invariants.rs and the accuracy-in-the-loop properties in
+# tests/scenario_accuracy.rs), so a memoization, device-selection,
+# live-runtime or accuracy regression fails `make check` without
+# re-running the suite's heaviest tests twice. `make perfsmoke` /
+# `make energysmoke` / `make livesmoke` / `make scenariosmoke` run the
+# gates alone.
 check: build test clippy fmt-drift featurecheck
 
 build:
@@ -76,6 +80,15 @@ energysmoke:
 # it. (Also runs as part of `make check` via the `test` target.)
 livesmoke:
 	$(CARGO) test -q --test live_vs_des live_smoke_wall_clock
+
+# Scenario-accuracy smoke gate, standalone: one small traffic scenario
+# through BOTH serving drivers (DES + live virtual clock) with
+# conservation, exact zero-shed DES/live agreement, and a golden mAP
+# band for the canonical seeded workload. Deterministic — virtual
+# clock, every draw through the seeded Rng. (Also runs as part of
+# `make check` via the `test` target.)
+scenariosmoke:
+	$(CARGO) test -q --test scenario_accuracy scenario_smoke_both_drivers
 
 # AOT-compile the JAX/Pallas detector to artifacts/ (PJRT runtime input).
 artifacts:

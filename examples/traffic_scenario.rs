@@ -1,0 +1,86 @@
+//! Traffic scenario end to end: render real frames from a scenario
+//! workload, run the actual seed CNN on one, then serve the whole
+//! scenario through the fleet DES with accuracy in the loop.
+//!
+//! ```sh
+//! cargo run --release --example traffic_scenario
+//! ```
+//!
+//! Two detector paths meet here:
+//! - the *real* path (this example): `ScenarioWorkload::render_frame`
+//!   draws the camera's objects into an image, the seed CNN
+//!   (`dataset::detector::build_detector`) runs on it, and NMS decodes
+//!   head rows into boxes — slow, per-frame, what a deployed board does;
+//! - the *fleet* path (`scenario::pipeline`): the calibrated synthetic
+//!   detector head stands in for the CNN so thousands of frames score in
+//!   milliseconds — what the DES/bench/tests use.
+
+use gemmini_edge::baselines::Platform;
+use gemmini_edge::dataset::detector::{build_detector, default_weights, NUM_CLASSES};
+use gemmini_edge::dataset::scenes::SceneConfig;
+use gemmini_edge::ir::Interpreter;
+use gemmini_edge::postproc::nms::{decode_and_nms, NmsConfig};
+use gemmini_edge::report::fleet_table;
+use gemmini_edge::scenario::{run_scenario_des, ScenarioCatalog, ScenarioWorkload};
+use gemmini_edge::serving::{
+    BaselineDevice, BatchPolicy, ShardPool, ShedPolicy, SimConfig,
+};
+
+fn main() {
+    let cat = ScenarioCatalog::standard();
+    let sc = cat.get("incident").expect("catalog scenario");
+    let w = ScenarioWorkload::generate(sc, 20240710);
+    println!(
+        "scenario '{}': {} cameras, {} frames over {:.0} s",
+        sc.name,
+        sc.cameras,
+        w.trace.len(),
+        sc.horizon_s
+    );
+
+    // --- the real CNN on one rendered frame ---
+    let size = 96;
+    let cfg = SceneConfig { size, ..Default::default() };
+    // Pick a frame from the incident segment (densest traffic).
+    let i = w.frames.iter().position(|f| f.segment == 1).unwrap_or(0);
+    let scene = w.render_frame(i, &cfg);
+    let g = build_detector(size, &default_weights());
+    let out = Interpreter::new(&g).run(&[scene.image.clone()]);
+    let dets = decode_and_nms(&out[0].f, NUM_CLASSES, &NmsConfig::default());
+    println!(
+        "\nframe {i} (camera {}, t={:.2} s, segment '{}'): {} objects in truth, CNN found {} dets",
+        w.frames[i].camera,
+        w.frames[i].t_s,
+        sc.segments[w.frames[i].segment].name,
+        w.frames[i].truths.len(),
+        dets.len()
+    );
+    for d in dets.iter().take(6) {
+        println!(
+            "  class {} score {:.2} at ({:.2},{:.2})",
+            d.class, d.score, d.bbox.cx, d.bbox.cy
+        );
+    }
+
+    // --- the whole scenario through the fleet DES ---
+    let sim = SimConfig {
+        batch: BatchPolicy::new(4, 0.010),
+        queue_depth: 16,
+        shed: ShedPolicy::DropOldest,
+        slo_s: 0.050,
+        work_stealing: false,
+        ..Default::default()
+    };
+    // 1× fits one device; 2.5× overloads it so the accuracy cost of
+    // shedding is visible in the same table.
+    for load in [1.0, 2.5] {
+        let p =
+            Platform { name: "edge-dev", overhead_s: 5e-3, sustained_gops: 100.0, power_w: 10.0 };
+        let mut pool = ShardPool::new();
+        pool.register(Box::new(BaselineDevice::new(p, 0.5, 16)));
+        let wl = ScenarioWorkload::generate(&sc.scaled(load), 20240710);
+        let r = run_scenario_des(&wl, &mut pool, &sim);
+        println!("\n-- load ×{load:.1} --");
+        print!("{}", fleet_table(&r));
+    }
+}

@@ -1,0 +1,161 @@
+//! Scenario-fleet experiment: what does load shedding *cost in
+//! accuracy*? Every catalog scenario runs at 1× and 2× load on (a) a
+//! fixed one-device pool and (b) the same pool behind the
+//! target-utilization autoscaler — and each run's `ScenarioReport` turns
+//! the shed rate into mAP loss, track-continuity loss and fragmentation.
+//!
+//! Emits `BENCH_scenario.json` at the repo root (the committed artifact;
+//! byte-reproducible — every draw goes through the seeded `util::Rng`
+//! and the DES is deterministic).
+//!
+//! Knobs: `SC_SEED` (workload seed, default 20240710).
+
+use gemmini_edge::baselines::Platform;
+use gemmini_edge::scenario::{run_scenario_autoscaled, run_scenario_des, ScenarioCatalog, ScenarioWorkload};
+use gemmini_edge::serving::{
+    AutoscaleConfig, Autoscaler, Backend, BaselineDevice, BatchPolicy, DrainOrder, ShardPool,
+    ShedPolicy, SimConfig, TargetUtilization,
+};
+use gemmini_edge::util::json::Json;
+
+/// The differential-suite test device (~160 FPS at batch 4), so the
+/// numbers here line up with `tests/scenario_accuracy.rs`.
+fn device() -> Box<dyn Backend> {
+    let p = Platform { name: "bench-dev", overhead_s: 5e-3, sustained_gops: 100.0, power_w: 10.0 };
+    Box::new(BaselineDevice::new(p, 0.5, 16))
+}
+
+fn pool(n: usize) -> ShardPool {
+    let mut pool = ShardPool::new();
+    for _ in 0..n {
+        pool.register(device());
+    }
+    pool
+}
+
+fn cfg() -> SimConfig {
+    SimConfig {
+        batch: BatchPolicy::new(4, 0.010),
+        queue_depth: 16,
+        shed: ShedPolicy::DropOldest,
+        slo_s: 0.050,
+        work_stealing: false,
+        ..Default::default()
+    }
+}
+
+fn autoscaler(max: usize) -> Autoscaler {
+    let acfg = AutoscaleConfig {
+        epoch_s: 0.25,
+        provision_delay_s: 0.4,
+        min_devices: 1,
+        max_devices: max,
+        cooldown_epochs: 0,
+        drain_order: DrainOrder::NewestFirst,
+    };
+    Autoscaler::new(acfg, Box::new(TargetUtilization::default()))
+}
+
+fn main() {
+    let seed: u64 = std::env::var("SC_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(20240710);
+    let cat = ScenarioCatalog::standard();
+    println!("== scenario fleet: shed rate -> accuracy loss (seed {seed}) ==\n");
+    println!(
+        "| scenario     | load | pool       | shed%  | mAP    | offline | continuity | frag  | peak |"
+    );
+
+    let mut runs = Vec::new();
+    for sc in cat.all() {
+        for &load in &[1.0, 2.0] {
+            let w = ScenarioWorkload::generate(&sc.scaled(load), seed);
+            for fixed in [true, false] {
+                let r = if fixed {
+                    run_scenario_des(&w, &mut pool(1), &cfg())
+                } else {
+                    let mut auto = autoscaler(4);
+                    let mut factory = |_i: usize| device();
+                    run_scenario_autoscaled(&w, &mut pool(1), &cfg(), &mut auto, &mut factory)
+                };
+                assert_eq!(r.completed + r.shed, r.offered, "{}: conservation", sc.name);
+                let s = r.scenario.as_ref().expect("scenario report");
+                let shed_rate = s.frames_shed as f64 / s.frames_offered.max(1) as f64;
+                let mode = if fixed { "fixed(1)" } else { "auto(1..4)" };
+                println!(
+                    "| {:<12} | {:>3.1}× | {:<10} | {:>5.1}% | {:>6.4} | {:>7.4} | {:>10.3} | {:>5.3} | {:>4} |",
+                    sc.name,
+                    load,
+                    mode,
+                    shed_rate * 100.0,
+                    s.map,
+                    s.offline_map,
+                    s.continuity,
+                    s.fragmentation,
+                    r.devices_peak
+                );
+                runs.push(Json::obj(vec![
+                    ("scenario", Json::Str(sc.name.to_string())),
+                    ("load", Json::Num(load)),
+                    ("mode", Json::Str(mode.to_string())),
+                    ("frames_offered", Json::Num(s.frames_offered as f64)),
+                    ("frames_shed", Json::Num(s.frames_shed as f64)),
+                    ("shed_rate", Json::Num(shed_rate)),
+                    ("requests_per_s", Json::Num(r.throughput_fps())),
+                    ("map", Json::Num(s.map)),
+                    ("offline_map", Json::Num(s.offline_map)),
+                    ("continuity", Json::Num(s.continuity)),
+                    ("fragmentation", Json::Num(s.fragmentation)),
+                    ("cardinality_mae", Json::Num(s.cardinality_mae)),
+                    ("devices_peak", Json::Num(r.devices_peak as f64)),
+                ]));
+            }
+        }
+    }
+
+    // The experiment's claims, asserted over the artifact itself:
+    // at 2× load the autoscaled pool sheds less than the fixed pool and
+    // therefore scores at least as well on every scenario.
+    let get = |j: &Json, k: &str| -> f64 {
+        match j {
+            Json::Obj(m) => m.get(k).and_then(|v| v.as_num()).unwrap(),
+            _ => unreachable!(),
+        }
+    };
+    let find = |name: &str, load: f64, mode: &str| -> Json {
+        runs.iter()
+            .find(|j| match j {
+                Json::Obj(m) => {
+                    m["scenario"].as_str().unwrap() == name
+                        && m["load"].as_num().unwrap() == load
+                        && m["mode"].as_str().unwrap() == mode
+                }
+                _ => false,
+            })
+            .cloned()
+            .expect("run present")
+    };
+    for sc in cat.all() {
+        let fixed = find(sc.name, 2.0, "fixed(1)");
+        let auto = find(sc.name, 2.0, "auto(1..4)");
+        assert!(
+            get(&auto, "shed_rate") <= get(&fixed, "shed_rate") + 1e-12,
+            "{}: autoscaling must not shed more than the fixed pool",
+            sc.name
+        );
+        assert!(
+            get(&auto, "map") + 1e-9 >= get(&fixed, "map"),
+            "{}: autoscaling must not score worse ({} vs {})",
+            sc.name,
+            get(&auto, "map"),
+            get(&fixed, "map")
+        );
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("scenario_fleet".into())),
+        ("seed", Json::Num(seed as f64)),
+        ("device", Json::Str("bench-dev 100 GOP/s, 5 ms overhead, batch<=4".into())),
+        ("runs", Json::Arr(runs)),
+    ]);
+    std::fs::write("BENCH_scenario.json", out.dump() + "\n").expect("write BENCH_scenario.json");
+    println!("\nwrote BENCH_scenario.json");
+}

@@ -12,9 +12,11 @@ use std::collections::HashMap;
 
 use crate::ir::interp::{Interpreter, Value};
 use crate::ir::{ActivationKind, Graph, GraphBuilder, PaddingMode};
-use crate::postproc::map::mean_average_precision;
+use crate::postproc::bbox::Detection;
+use crate::postproc::map::{mean_average_precision, GroundTruth};
 use crate::postproc::nms::{decode_and_nms, NmsConfig};
 use crate::util::json::Json;
+use crate::util::Rng;
 
 use super::scenes::Scene;
 
@@ -318,6 +320,110 @@ pub fn default_weights() -> DetectorWeights {
         .unwrap_or_else(DetectorWeights::analytic)
 }
 
+/// Measurement model of the synthetic detector: miss/jitter/false-positive
+/// rates applied to exact ground truth. The scenario subsystem uses this
+/// in place of the (slow, interpreter-bound) CNN when sweeping thousands
+/// of frames; `examples/traffic_scenario.rs` demonstrates the real CNN on
+/// a rendered frame.
+#[derive(Debug, Clone)]
+pub struct SyntheticDetectorConfig {
+    /// Probability that a ground-truth object produces no detection.
+    pub miss_rate: f64,
+    /// Geometric false-positive rate: each frame draws FPs while a
+    /// `chance(fp_rate)` coin keeps landing (expected fp_rate/(1-fp_rate)).
+    pub fp_rate: f64,
+    /// σ of the Gaussian centre jitter (fraction-of-canvas units).
+    pub center_jitter: f64,
+    /// σ of the multiplicative box-size jitter.
+    pub size_jitter: f64,
+    /// σ of the Gaussian objectness-score noise around 0.85.
+    pub score_sigma: f64,
+    /// Probability a detection reports a wrong class.
+    pub confusion: f64,
+    pub nms: NmsConfig,
+}
+
+impl Default for SyntheticDetectorConfig {
+    fn default() -> Self {
+        Self {
+            miss_rate: 0.08,
+            fp_rate: 0.30,
+            center_jitter: 0.010,
+            size_jitter: 0.08,
+            score_sigma: 0.08,
+            confusion: 0.05,
+            nms: NmsConfig::default(),
+        }
+    }
+}
+
+/// A synthetic detector whose noise is seeded through [`util::Rng`]
+/// (`crate::util::Rng`) per `(seed, camera, frame)`, so every frame's
+/// detections are a pure function of those three values — byte-identical
+/// across reruns, replay order, and thread counts. Raw outputs are emitted
+/// in the CNN head's row format (`[cx, cy, w, h, obj, c0..]`) and pass
+/// through the same [`decode_and_nms`] path as real inference.
+#[derive(Debug, Clone)]
+pub struct SyntheticDetector {
+    pub seed: u64,
+    pub cfg: SyntheticDetectorConfig,
+}
+
+impl SyntheticDetector {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, cfg: SyntheticDetectorConfig::default() }
+    }
+
+    /// The per-frame RNG stream id. Distinct multipliers keep camera and
+    /// frame contributions from aliasing for small indices.
+    fn frame_seed(&self, camera: usize, frame: usize) -> u64 {
+        self.seed
+            ^ (camera as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (frame as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+    }
+
+    /// Detect on a frame given its exact ground truth.
+    pub fn detect(&self, camera: usize, frame: usize, truths: &[GroundTruth]) -> Vec<Detection> {
+        let c = &self.cfg;
+        let mut rng = Rng::new(self.frame_seed(camera, frame));
+        let mut rows: Vec<f32> = Vec::new();
+        for t in truths {
+            if rng.chance(c.miss_rate) {
+                continue; // missed detections draw nothing further
+            }
+            let cx = t.bbox.cx as f64 + rng.normal() * c.center_jitter;
+            let cy = t.bbox.cy as f64 + rng.normal() * c.center_jitter;
+            let w = (t.bbox.w as f64 * (1.0 + rng.normal() * c.size_jitter)).max(0.01);
+            let h = (t.bbox.h as f64 * (1.0 + rng.normal() * c.size_jitter)).max(0.01);
+            let obj = (0.85 + rng.normal() * c.score_sigma).clamp(0.30, 0.999);
+            let class = if rng.chance(c.confusion) {
+                (t.class + 1 + rng.below(NUM_CLASSES - 1)) % NUM_CLASSES
+            } else {
+                t.class
+            };
+            push_row(&mut rows, cx, cy, w, h, obj, class);
+        }
+        while rng.chance(c.fp_rate) {
+            let cx = rng.range_f64(0.05, 0.95);
+            let cy = rng.range_f64(0.05, 0.95);
+            let w = rng.range_f64(0.03, 0.15);
+            let h = rng.range_f64(0.03, 0.15);
+            let obj = rng.range_f64(0.30, 0.60);
+            let class = rng.below(NUM_CLASSES);
+            push_row(&mut rows, cx, cy, w, h, obj, class);
+        }
+        decode_and_nms(&rows, NUM_CLASSES, &c.nms)
+    }
+}
+
+/// Append one head-format row: box, objectness, one-hot-ish class scores.
+fn push_row(rows: &mut Vec<f32>, cx: f64, cy: f64, w: f64, h: f64, obj: f64, class: usize) {
+    rows.extend_from_slice(&[cx as f32, cy as f32, w as f32, h as f32, obj as f32]);
+    for c in 0..NUM_CLASSES {
+        rows.push(if c == class { 0.95 } else { 0.02 });
+    }
+}
+
 #[allow(dead_code)]
 fn _unused(_: &HashMap<(), ()>) {}
 
@@ -378,6 +484,48 @@ mod tests {
         assert_eq!(back.convs.len(), w.convs.len());
         assert_eq!(back.convs[0].w.len(), w.convs[0].w.len());
         assert!((back.convs[0].w[0] - w.convs[0].w[0]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn synthetic_detector_is_a_pure_function_of_seed_camera_frame() {
+        use crate::postproc::bbox::BBox;
+        let gts = vec![
+            GroundTruth { bbox: BBox::new(0.3, 0.3, 0.12, 0.12), class: 0 },
+            GroundTruth { bbox: BBox::new(0.7, 0.6, 0.10, 0.10), class: 2 },
+        ];
+        let det = SyntheticDetector::new(99);
+        let a = det.detect(1, 7, &gts);
+        let b = det.detect(1, 7, &gts);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "same (seed,cam,frame) must be byte-equal");
+        let c = det.detect(2, 7, &gts);
+        let d = det.detect(1, 8, &gts);
+        assert!(
+            format!("{a:?}") != format!("{c:?}") || format!("{a:?}") != format!("{d:?}"),
+            "different streams should differ"
+        );
+    }
+
+    #[test]
+    fn synthetic_detector_recovers_truth_boxes() {
+        use crate::postproc::bbox::BBox;
+        // With noise disabled the detector returns the ground truth exactly.
+        let gts = vec![GroundTruth { bbox: BBox::new(0.4, 0.5, 0.2, 0.2), class: 3 }];
+        let det = SyntheticDetector {
+            seed: 1,
+            cfg: SyntheticDetectorConfig {
+                miss_rate: 0.0,
+                fp_rate: 0.0,
+                center_jitter: 0.0,
+                size_jitter: 0.0,
+                score_sigma: 0.0,
+                confusion: 0.0,
+                ..Default::default()
+            },
+        };
+        let dets = det.detect(0, 0, &gts);
+        assert_eq!(dets.len(), 1);
+        assert_eq!(dets[0].class, 3);
+        assert!(dets[0].bbox.iou(&gts[0].bbox) > 0.99);
     }
 
     #[test]

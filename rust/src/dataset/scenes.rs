@@ -42,11 +42,28 @@ pub struct Scene {
     pub truths: Vec<GroundTruth>,
 }
 
-/// Render one scene at the configured resolution.
-pub fn render_scene(cfg: &SceneConfig, rng: &mut Rng) -> Scene {
+/// One explicitly-placed object (the scenario subsystem's world model
+/// renders frames from these; [`render_scene`] draws its own at random).
+/// Coordinates and radius are in fraction-of-canvas units, like the
+/// ground truth.
+#[derive(Debug, Clone, Copy)]
+pub struct SceneObject {
+    /// Class id (index into [`CLASS_NAMES`]).
+    pub class: usize,
+    pub cx: f64,
+    pub cy: f64,
+    /// Radius as a fraction of the canvas.
+    pub r: f64,
+    pub intensity: f64,
+}
+
+/// The shared background pass: soft gradient + per-pixel noise. The RNG
+/// draw order (gx, gy, base, then one `normal` per pixel) is part of the
+/// dataset's determinism contract — [`render_scene`] golden values
+/// depend on it.
+fn background(cfg: &SceneConfig, rng: &mut Rng) -> Vec<f32> {
     let s = cfg.size;
     let mut lum = vec![0f32; s * s];
-    // Background: soft gradient + noise.
     let gx = rng.range_f64(-0.1, 0.1) as f32;
     let gy = rng.range_f64(-0.1, 0.1) as f32;
     let base = rng.range_f64(0.08, 0.18) as f32;
@@ -57,6 +74,46 @@ pub fn render_scene(cfg: &SceneConfig, rng: &mut Rng) -> Scene {
                 (base + gx * x as f32 / s as f32 + gy * y as f32 / s as f32 + n).clamp(0.0, 1.0);
         }
     }
+    lum
+}
+
+/// Replicate a luminance plane over 3 channels (detector input is
+/// NHWC ×3).
+fn to_image(lum: &[f32], s: usize) -> Value {
+    let mut img = vec![0f32; s * s * 3];
+    for (i, &v) in lum.iter().enumerate() {
+        img[i * 3] = v;
+        img[i * 3 + 1] = v;
+        img[i * 3 + 2] = v;
+    }
+    Value::new(vec![1, s, s, 3], img)
+}
+
+/// Render a frame of *given* objects over a fresh random background —
+/// the camera model of `scenario::` workloads, where object positions
+/// come from a deterministic world simulation rather than the scene
+/// RNG. Ground truth is exact by construction, as in [`render_scene`].
+pub fn render_objects(cfg: &SceneConfig, objects: &[SceneObject], rng: &mut Rng) -> Scene {
+    let s = cfg.size;
+    let mut lum = background(cfg, rng);
+    let mut truths = Vec::new();
+    for o in objects {
+        let r = (o.r * s as f64) as f32;
+        let cx = o.cx as f32 * s as f32;
+        let cy = o.cy as f32 * s as f32;
+        draw(&mut lum, s, o.class, cx, cy, r, o.intensity as f32);
+        truths.push(GroundTruth {
+            bbox: BBox::new(cx / s as f32, cy / s as f32, 2.0 * r / s as f32, 2.0 * r / s as f32),
+            class: o.class,
+        });
+    }
+    Scene { image: to_image(&lum, s), truths }
+}
+
+/// Render one scene at the configured resolution.
+pub fn render_scene(cfg: &SceneConfig, rng: &mut Rng) -> Scene {
+    let s = cfg.size;
+    let mut lum = background(cfg, rng);
 
     let count = rng.range(cfg.min_objects, cfg.max_objects + 1);
     let mut truths = Vec::new();
@@ -74,14 +131,7 @@ pub fn render_scene(cfg: &SceneConfig, rng: &mut Rng) -> Scene {
         });
     }
 
-    // Replicate luminance over 3 channels (detector input is NHWC ×3).
-    let mut img = vec![0f32; s * s * 3];
-    for (i, &v) in lum.iter().enumerate() {
-        img[i * 3] = v;
-        img[i * 3 + 1] = v;
-        img[i * 3 + 2] = v;
-    }
-    Scene { image: Value::new(vec![1, s, s, 3], img), truths }
+    Scene { image: to_image(&lum, s), truths }
 }
 
 fn draw(lum: &mut [f32], s: usize, class: usize, cx: f32, cy: f32, r: f32, v: f32) {
@@ -189,6 +239,26 @@ mod tests {
         assert_eq!(a[2].image.f, b[2].image.f);
         let c = validation_set(&cfg, 3, 8);
         assert_ne!(a[0].image.f, c[0].image.f);
+    }
+
+    #[test]
+    fn render_objects_places_exact_truths() {
+        let cfg = SceneConfig { noise: 0.0, ..Default::default() };
+        let objs = [
+            SceneObject { class: 0, cx: 0.25, cy: 0.25, r: 0.08, intensity: 0.9 },
+            SceneObject { class: 1, cx: 0.7, cy: 0.6, r: 0.06, intensity: 0.8 },
+        ];
+        let mut rng = Rng::new(5);
+        let sc = render_objects(&cfg, &objs, &mut rng);
+        assert_eq!(sc.truths.len(), 2);
+        assert_eq!(sc.truths[0].class, 0);
+        assert!((sc.truths[1].bbox.cx - 0.7).abs() < 0.01);
+        // The disc's center pixel is bright.
+        let probe = ((0.25 * 160.0) as usize * 160 + (0.25 * 160.0) as usize) * 3;
+        assert!(sc.image.f[probe] > 0.4);
+        // Same objects, same seed: byte-identical frame.
+        let sc2 = render_objects(&cfg, &objs, &mut Rng::new(5));
+        assert_eq!(sc.image.f, sc2.image.f);
     }
 
     #[test]

@@ -50,6 +50,15 @@
 //!   oracle (see `rust/src/serving/README.md`; fleet invariants are
 //!   property-tested in `rust/tests/serving_invariants.rs`,
 //!   `rust/tests/energy_ledger.rs` and `rust/tests/live_vs_des.rs`);
+//! - [`scenario`] — traffic-monitoring scenarios closing the loop from
+//!   simulated cameras to fleet-level accuracy: a seedable catalog of
+//!   named regimes (day/night, rush-hour ramps, incident bursts, camera
+//!   dropouts) whose frames carry exact ground truth, driven through
+//!   either serving driver; completions run the detector head + NMS,
+//!   project through per-camera homographies and update GM-PHD trackers,
+//!   shed frames become missed measurements — reported as COCO-style mAP
+//!   vs the offline ceiling plus track continuity/fragmentation
+//!   (`repro scenario`, `rust/tests/scenario_accuracy.rs`);
 //! - [`report`] — renderers that print each paper table/figure, plus the
 //!   fleet-throughput table for [`serving`].
 
@@ -66,6 +75,7 @@ pub mod pipeline;
 pub mod postproc;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
 pub mod serving;
 pub mod tracking;

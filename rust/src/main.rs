@@ -13,6 +13,9 @@
 //!             [--epoch S] [--delay S] [--closed K] [--tuning-cache PATH]
 //!             [--hetero] [--classes] [--quota FPS]
 //!             [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
+//! repro scenario [--list] [--name NAME] [--seed S] [--load F]
+//!                [--autoscale] [--max-devices N] [--tuning-cache PATH]
+//!                [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
 //! ```
 //!
 //! `repro fleet --autoscale` runs the same fleet behind the closed-loop
@@ -46,6 +49,18 @@
 //! use (reports become byte-reproducible). `--quota FPS` puts per-class
 //! admission token buckets (FPS tokens/s per class) in front of the
 //! queues on either path.
+//!
+//! `repro scenario` runs a named traffic regime from the scenario
+//! catalog (`scenario::ScenarioCatalog`, `--list` prints them) through
+//! the fleet with accuracy in the loop: every completed frame runs the
+//! synthetic detector head + NMS, projects into world coordinates and
+//! updates that camera's GM-PHD tracker; every shed frame is a missed
+//! measurement. The fleet table gains a scenario section — COCO-style
+//! mAP vs the zero-shed offline ceiling, track continuity/fragmentation,
+//! cardinality error, and a per-regime breakdown. `--load F` multiplies
+//! every segment's arrival rate (2.0 = double pressure, same world), and
+//! the `--autoscale` / `--live` / `--virtual-clock` switches mean what
+//! they mean on `repro fleet`.
 //!
 //! `repro tune --threads N` pins the engine's worker-thread count (the
 //! tuned result is byte-identical at any N); the JSON report carries the
@@ -438,8 +453,135 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             println!("offered {} frames", r.offered);
             print!("{}", fleet_table(&r));
         }
+        Some("scenario") => {
+            use gemmini_edge::fpga::resources::Board;
+            use gemmini_edge::report::fleet_table;
+            use gemmini_edge::scenario::{
+                run_scenario_autoscaled, run_scenario_des, run_scenario_live, ScenarioCatalog,
+                ScenarioWorkload,
+            };
+            use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
+            use gemmini_edge::serving::{
+                AutoscaleConfig, Autoscaler, Backend, BatchPolicy, ClockMode, DrainOrder,
+                GemminiDevice, LiveConfig, ShardPool, ShedPolicy, SimConfig, TargetUtilization,
+            };
+            let cat = ScenarioCatalog::standard();
+            if args.iter().any(|a| a == "--list") {
+                for s in cat.all() {
+                    println!(
+                        "{:<12} {} cameras × {:.0} FPS × {:.0} s | segments: {}{}",
+                        s.name,
+                        s.cameras,
+                        s.fps,
+                        s.horizon_s,
+                        s.segments
+                            .iter()
+                            .map(|g| format!("{} (d{} ×{:.1})", g.name, g.density, g.arrival_mult))
+                            .collect::<Vec<_>>()
+                            .join(", "),
+                        if s.dropouts.is_empty() {
+                            String::new()
+                        } else {
+                            format!(" | {} dropout window(s)", s.dropouts.len())
+                        }
+                    );
+                }
+                return Ok(());
+            }
+            let name = arg_val(&args, "--name").unwrap_or_else(|| "rush-hour".into());
+            let Some(sc) = cat.get(&name) else {
+                eprintln!("unknown scenario '{name}'; --list shows: {:?}", cat.names());
+                return Ok(());
+            };
+            let seed: u64 =
+                arg_val(&args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(20240710);
+            let load: f64 = arg_val(&args, "--load")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1.0)
+                .max(0.01);
+            let autoscale = args.iter().any(|a| a == "--autoscale");
+            let live = args.iter().any(|a| a == "--live");
+            if live && autoscale {
+                eprintln!("warning: --live serves on a fixed pool; ignoring --autoscale");
+            }
+            let autoscale = autoscale && !live;
+            let max_devices: usize =
+                arg_val(&args, "--max-devices").and_then(|v| v.parse().ok()).unwrap_or(6);
+            let virtual_clock = args.iter().any(|a| a == "--virtual-clock");
+            let live_threads: usize =
+                arg_val(&args, "--live-threads").and_then(|v| v.parse().ok()).unwrap_or(0);
+            let time_scale: f64 = arg_val(&args, "--time-scale")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1.0)
+                .max(1e-3);
+
+            let w = ScenarioWorkload::generate(&sc.scaled(load), seed);
+            println!(
+                "scenario '{}' (load ×{load:.1}, seed {seed}): {} cameras | {} frames over {:.0} s{}",
+                w.scenario.name,
+                w.scenario.cameras,
+                w.trace.len(),
+                w.scenario.horizon_s,
+                if live { " | LIVE threaded runtime" } else { "" }
+            );
+
+            // Same paper boards as `repro fleet`, through the shared
+            // cache-backed tuning engine.
+            let mut g = build_detector(96, &default_weights());
+            gemmini_edge::passes::replace_activations(&mut g);
+            let mut engine = engine_with_cache(
+                GemminiConfig::ours_zcu102(),
+                arg_val(&args, "--tuning-cache").as_ref(),
+            );
+            let tuning = engine.tune_graph(&g, 2);
+            let mut pool = ShardPool::paper_boards(&tuning, DEFAULT_DISPATCH_S);
+
+            let cfg = SimConfig {
+                batch: BatchPolicy::new(4, 0.020),
+                queue_depth: 16,
+                shed: ShedPolicy::DropOldest,
+                slo_s: 0.200,
+                work_stealing: !live,
+                ..Default::default()
+            };
+            let r = if live {
+                let lcfg = LiveConfig {
+                    threads: live_threads,
+                    clock: if virtual_clock { ClockMode::Virtual } else { ClockMode::Wall },
+                    time_scale,
+                };
+                run_scenario_live(&w, pool, &cfg, &lcfg)
+            } else if autoscale {
+                let acfg = AutoscaleConfig {
+                    epoch_s: 0.5,
+                    provision_delay_s: 1.0,
+                    min_devices: pool.len(),
+                    max_devices: max_devices.max(pool.len()),
+                    cooldown_epochs: 1,
+                    drain_order: DrainOrder::NewestFirst,
+                };
+                let mut auto = Autoscaler::new(acfg, Box::new(TargetUtilization::default()));
+                let mut factory = |i: usize| -> Box<dyn Backend> {
+                    let label = format!("ZCU102-Gemmini (replica {i})");
+                    Box::new(GemminiDevice::from_engine(
+                        &label,
+                        Board::Zcu102,
+                        &mut engine,
+                        &g,
+                        2,
+                        4,
+                        DEFAULT_DISPATCH_S,
+                    ))
+                };
+                run_scenario_autoscaled(&w, &mut pool, &cfg, &mut auto, &mut factory)
+            } else {
+                run_scenario_des(&w, &mut pool, &cfg)
+            };
+            finish_engine(&engine);
+            print!("{}", fleet_table(&r));
+        }
         _ => {
-            eprintln!("usage: repro <report|deploy|infer|tune|fleet> [options]");
+            eprintln!("usage: repro <report|deploy|infer|tune|fleet|scenario> [options]");
         }
     }
     Ok(())

@@ -56,8 +56,11 @@ fn average_precision(
         precisions.push(cum_tp / (i + 1) as f64);
         recalls.push(cum_tp / npos as f64);
     }
-    // 101-point interpolation
-    let mut ap = 0f64;
+    // 101-point interpolation. Sum the interpolated precisions first and
+    // divide once: 101 accumulations of `p / 101.0` drift a few ulps, so
+    // all-perfect detections would score 1.0000000000000007 instead of
+    // exactly 1.0.
+    let mut sum = 0f64;
     for r in 0..=100 {
         let r = r as f64 / 100.0;
         let p = precisions
@@ -66,9 +69,9 @@ fn average_precision(
             .filter(|(_, &rec)| rec >= r)
             .map(|(&p, _)| p)
             .fold(0f64, f64::max);
-        ap += p / 101.0;
+        sum += p;
     }
-    Some(ap)
+    Some(sum / 101.0)
 }
 
 /// Dataset-level mAP@`iou_thr` over `num_classes` classes.

@@ -189,6 +189,37 @@ pub fn fleet_table(r: &FleetReport) -> String {
             );
         }
     }
+    // Scenario accuracy: what the shed rate cost in detection/tracking
+    // terms (only scenario-driven runs attach one).
+    if let Some(sc) = &r.scenario {
+        s += &format!(
+            "scenario '{}': {} cameras | {} frames offered | {} shed ({:.1}%) | \
+             mAP {:.4} (offline {:.4}) | continuity {:.3} | fragmentation {:.3} | card. MAE {:.2}\n",
+            sc.name,
+            sc.cameras,
+            sc.frames_offered,
+            sc.frames_shed,
+            if sc.frames_offered == 0 {
+                0.0
+            } else {
+                sc.frames_shed as f64 / sc.frames_offered as f64 * 100.0
+            },
+            sc.map,
+            sc.offline_map,
+            sc.continuity,
+            sc.fragmentation,
+            sc.cardinality_mae
+        );
+        if sc.regimes.len() > 1 {
+            s += "| Regime       | Offered | Served | Shed | mAP    |\n";
+            for g in &sc.regimes {
+                s += &format!(
+                    "| {:<12} | {:>7} | {:>6} | {:>4} | {:>6.4} |\n",
+                    g.name, g.offered, g.completed, g.shed, g.map
+                );
+            }
+        }
+    }
     s
 }
 
@@ -336,6 +367,7 @@ mod tests {
             }],
             classes: Vec::new(),
             energy: EnergyLedger::empty(),
+            scenario: None,
         }
     }
 
@@ -410,6 +442,36 @@ mod tests {
         // Two epoch rows, no elision at this length.
         assert!(s.contains("[   0.00-   5.00 s]"), "{s}");
         assert!(!s.contains("elided"), "{s}");
+    }
+
+    #[test]
+    fn fleet_table_renders_scenario_accuracy() {
+        use crate::serving::metrics::{RegimeReport, ScenarioReport};
+        let mut r = sample_fleet_report();
+        r.scenario = Some(ScenarioReport {
+            name: "rush-hour".into(),
+            cameras: 4,
+            frames_offered: 480,
+            frames_completed: 432,
+            frames_shed: 48,
+            map: 0.5123,
+            offline_map: 0.6011,
+            continuity: 0.87,
+            fragmentation: 0.25,
+            cardinality_mae: 0.8,
+            regimes: vec![
+                RegimeReport { name: "calm".into(), offered: 128, completed: 128, shed: 0, map: 0.60 },
+                RegimeReport { name: "peak".into(), offered: 352, completed: 304, shed: 48, map: 0.48 },
+            ],
+        });
+        let s = fleet_table(&r);
+        assert!(s.contains("scenario 'rush-hour': 4 cameras"), "{s}");
+        assert!(s.contains("48 shed (10.0%)"), "{s}");
+        assert!(s.contains("mAP 0.5123 (offline 0.6011)"), "{s}");
+        assert!(s.contains("| Regime"), "{s}");
+        assert!(s.contains("| peak"), "{s}");
+        // Plain fleet runs stay scenario-free.
+        assert!(!fleet_table(&sample_fleet_report()).contains("scenario"), "{s}");
     }
 
     #[test]

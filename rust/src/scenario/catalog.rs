@@ -1,0 +1,488 @@
+//! The scenario catalog and workload generator: named traffic regimes
+//! over a deterministic world of moving objects.
+//!
+//! Each camera owns a pool of constant-velocity objects bouncing inside
+//! its frame (triangle-wave reflection, so positions are a closed-form
+//! function of time — no per-step integration state). A [`Segment`]
+//! timeline modulates how many pool objects are visible (density) and how
+//! fast the camera emits frames (arrival multiplier); [`Dropout`] windows
+//! silence a camera entirely while the world keeps moving, so rejoin
+//! frames see objects far from where they vanished. Ground truth is exact
+//! by construction, and every draw goes through [`crate::util::Rng`], so
+//! a `(scenario, seed)` pair reproduces byte-identically.
+
+use crate::dataset::scenes::{render_objects, Scene, SceneConfig, SceneObject, CLASS_NAMES};
+use crate::postproc::bbox::BBox;
+use crate::postproc::map::GroundTruth;
+use crate::serving::{Request, SloClass};
+use crate::tracking::Homography;
+use crate::util::Rng;
+
+/// One stretch of a scenario's timeline with fixed traffic character.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub name: &'static str,
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Objects visible per camera during this segment (a prefix of the
+    /// camera's object pool, so identities persist across segments).
+    pub density: usize,
+    /// Frame-rate multiplier on the scenario's nominal fps (rush hours
+    /// re-capture faster; quiet nights throttle down).
+    pub arrival_mult: f64,
+}
+
+/// A camera offline window: no frames are emitted (and no ground truth
+/// scored), but the world keeps moving underneath.
+#[derive(Debug, Clone)]
+pub struct Dropout {
+    pub camera: usize,
+    pub from_s: f64,
+    pub to_s: f64,
+}
+
+/// A named traffic regime: cameras, nominal frame rate, a segment
+/// timeline tiling `[0, horizon_s)`, and optional dropout windows.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub cameras: usize,
+    /// Nominal frames per second per camera (scaled per segment).
+    pub fps: f64,
+    pub horizon_s: f64,
+    pub segments: Vec<Segment>,
+    pub dropouts: Vec<Dropout>,
+}
+
+impl Scenario {
+    /// The segment covering time `t` (the last one covers the tail, so a
+    /// jittered emission landing exactly on the horizon still resolves).
+    pub fn segment_at(&self, t: f64) -> (usize, &Segment) {
+        let i = self
+            .segments
+            .iter()
+            .position(|s| t >= s.start_s && t < s.end_s)
+            .unwrap_or(self.segments.len() - 1);
+        (i, &self.segments[i])
+    }
+
+    /// Is `camera` inside a dropout window at time `t`?
+    pub fn dropped(&self, camera: usize, t: f64) -> bool {
+        self.dropouts.iter().any(|d| d.camera == camera && t >= d.from_s && t < d.to_s)
+    }
+
+    /// The scenario with every segment's arrival rate multiplied by
+    /// `factor` — how the benches induce 2× overload without touching
+    /// the world (ground truth per frame is unchanged; there are just
+    /// more frames).
+    pub fn scaled(&self, factor: f64) -> Scenario {
+        let mut s = self.clone();
+        for seg in &mut s.segments {
+            seg.arrival_mult *= factor;
+        }
+        s
+    }
+
+    /// Peak objects any segment shows — the camera pool size.
+    fn pool_size(&self) -> usize {
+        self.segments.iter().map(|s| s.density).max().unwrap_or(0)
+    }
+
+    fn check(&self) {
+        assert!(self.cameras > 0 && self.fps > 0.0 && self.horizon_s > 0.0);
+        assert!(!self.segments.is_empty(), "scenario needs at least one segment");
+        assert_eq!(self.segments[0].start_s, 0.0, "segments must start at t=0");
+        for w in self.segments.windows(2) {
+            assert_eq!(w[0].end_s, w[1].start_s, "segments must tile the timeline");
+        }
+        assert!(
+            self.segments.last().unwrap().end_s >= self.horizon_s,
+            "segments must cover the horizon"
+        );
+        for s in &self.segments {
+            assert!(s.end_s > s.start_s && s.arrival_mult > 0.0);
+        }
+    }
+}
+
+fn seg(name: &'static str, start_s: f64, end_s: f64, density: usize, arrival_mult: f64) -> Segment {
+    Segment { name, start_s, end_s, density, arrival_mult }
+}
+
+/// The named traffic regimes the CLI, benches and tests draw from.
+#[derive(Debug, Clone)]
+pub struct ScenarioCatalog {
+    scenarios: Vec<Scenario>,
+}
+
+impl ScenarioCatalog {
+    /// The standard five regimes.
+    pub fn standard() -> Self {
+        let scenarios = vec![
+            Scenario {
+                name: "steady-day",
+                cameras: 4,
+                fps: 10.0,
+                horizon_s: 8.0,
+                segments: vec![seg("day", 0.0, 8.0, 3, 1.0)],
+                dropouts: vec![],
+            },
+            Scenario {
+                name: "day-night",
+                cameras: 4,
+                fps: 10.0,
+                horizon_s: 12.0,
+                segments: vec![seg("day", 0.0, 6.0, 4, 1.0), seg("night", 6.0, 12.0, 1, 0.6)],
+                dropouts: vec![],
+            },
+            Scenario {
+                name: "rush-hour",
+                cameras: 4,
+                fps: 10.0,
+                horizon_s: 12.0,
+                segments: vec![
+                    seg("calm", 0.0, 4.0, 2, 0.8),
+                    seg("ramp", 4.0, 8.0, 4, 1.6),
+                    seg("peak", 8.0, 12.0, 5, 2.2),
+                ],
+                dropouts: vec![],
+            },
+            Scenario {
+                name: "incident",
+                cameras: 4,
+                fps: 10.0,
+                horizon_s: 12.0,
+                segments: vec![
+                    seg("normal", 0.0, 5.0, 2, 1.0),
+                    seg("incident", 5.0, 8.0, 6, 2.5),
+                    seg("recovery", 8.0, 12.0, 3, 1.2),
+                ],
+                dropouts: vec![],
+            },
+            Scenario {
+                name: "dropout",
+                cameras: 4,
+                fps: 10.0,
+                horizon_s: 10.0,
+                segments: vec![seg("steady", 0.0, 10.0, 3, 1.0)],
+                dropouts: vec![
+                    Dropout { camera: 1, from_s: 3.0, to_s: 5.0 },
+                    Dropout { camera: 2, from_s: 6.0, to_s: 8.0 },
+                ],
+            },
+        ];
+        Self { scenarios }
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.scenarios.iter().map(|s| s.name).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Scenario> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+
+    pub fn all(&self) -> &[Scenario] {
+        &self.scenarios
+    }
+}
+
+/// The calibrated overhead camera for `cam`: the [0,1]² image maps to a
+/// 16 m × 16 m ground patch, cameras 20 m apart along the road — so
+/// world coordinates are unambiguous per camera and the GM-PHD gate
+/// (meters) is physically meaningful.
+pub fn camera_homography(cam: usize) -> Homography {
+    Homography::scale_offset(16.0, 16.0, cam as f64 * 20.0, 0.0)
+}
+
+/// One object of a camera's pool: constant velocity, bouncing inside
+/// the frame.
+#[derive(Debug, Clone, Copy)]
+struct WorldObject {
+    class: usize,
+    /// Radius, fraction of canvas.
+    r: f64,
+    intensity: f64,
+    x0: f64,
+    y0: f64,
+    /// Canvas fractions per second.
+    vx: f64,
+    vy: f64,
+}
+
+/// Triangle-wave reflection of `p` into `[lo, hi]` — the closed-form
+/// "bounce off the walls" so positions need no per-step state.
+fn reflect(p: f64, lo: f64, hi: f64) -> f64 {
+    let w = hi - lo;
+    if w <= 0.0 {
+        return lo;
+    }
+    let m = (p - lo).rem_euclid(2.0 * w);
+    if m < w {
+        lo + m
+    } else {
+        lo + 2.0 * w - m
+    }
+}
+
+impl WorldObject {
+    fn at(&self, t: f64) -> SceneObject {
+        // Keep whole objects in frame (the margin render_scene uses).
+        let lo = self.r + 0.02;
+        let hi = 1.0 - self.r - 0.02;
+        SceneObject {
+            class: self.class,
+            cx: reflect(self.x0 + self.vx * t, lo, hi),
+            cy: reflect(self.y0 + self.vy * t, lo, hi),
+            r: self.r,
+            intensity: self.intensity,
+        }
+    }
+}
+
+/// Exact ground truth of one emitted frame. `frames[i]` describes
+/// `trace[i]` (request ids are the post-sort positions, so outcome `id`
+/// indexes both).
+#[derive(Debug, Clone)]
+pub struct FrameTruth {
+    pub camera: usize,
+    pub t_s: f64,
+    /// Per-camera frame counter (the synthetic detector's RNG stream id).
+    pub frame_idx: usize,
+    /// Index into the scenario's segment list.
+    pub segment: usize,
+    pub truths: Vec<GroundTruth>,
+}
+
+/// A generated scenario workload: the request trace (sorted by arrival,
+/// ids = positions — the shape every serving driver expects) plus the
+/// parallel per-frame ground truth.
+#[derive(Debug, Clone)]
+pub struct ScenarioWorkload {
+    pub scenario: Scenario,
+    pub seed: u64,
+    pub trace: Vec<Request>,
+    pub frames: Vec<FrameTruth>,
+    /// Per-camera object pools (for on-demand frame rendering).
+    worlds: Vec<Vec<WorldObject>>,
+}
+
+fn cam_seed(seed: u64, cam: usize) -> u64 {
+    seed ^ (cam as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+impl ScenarioWorkload {
+    /// Generate the workload for `(scenario, seed)`. Each camera draws
+    /// its object pool and emission jitter from its own RNG stream, so
+    /// adding a camera never perturbs the others.
+    pub fn generate(scenario: &Scenario, seed: u64) -> ScenarioWorkload {
+        scenario.check();
+        let pool_size = scenario.pool_size();
+        let period = 1.0 / scenario.fps;
+        let mut trace: Vec<Request> = Vec::new();
+        let mut frames: Vec<FrameTruth> = Vec::new();
+        let mut worlds: Vec<Vec<WorldObject>> = Vec::new();
+        for cam in 0..scenario.cameras {
+            let mut rng = Rng::new(cam_seed(seed, cam));
+            let world: Vec<WorldObject> = (0..pool_size)
+                .map(|_| WorldObject {
+                    class: rng.below(CLASS_NAMES.len()),
+                    r: rng.range_f64(0.05, 0.11),
+                    intensity: rng.range_f64(0.6, 0.9),
+                    x0: rng.f64(),
+                    y0: rng.f64(),
+                    vx: rng.range_f64(-0.08, 0.08),
+                    vy: rng.range_f64(-0.08, 0.08),
+                })
+                .collect();
+            let mut t = rng.f64() * period; // phase offset
+            let mut frame_idx = 0usize;
+            while t < scenario.horizon_s {
+                let (seg_i, segment) = scenario.segment_at(t);
+                // The jitter draw happens every step — dropped frames
+                // included — so a dropout changes *which* frames exist,
+                // never the timing of later ones.
+                let jitter = rng.range_f64(0.95, 1.05);
+                if !scenario.dropped(cam, t) {
+                    let truths: Vec<GroundTruth> = world[..segment.density]
+                        .iter()
+                        .map(|o| {
+                            let s = o.at(t);
+                            GroundTruth {
+                                bbox: BBox::new(
+                                    s.cx as f32,
+                                    s.cy as f32,
+                                    (2.0 * s.r) as f32,
+                                    (2.0 * s.r) as f32,
+                                ),
+                                class: s.class,
+                            }
+                        })
+                        .collect();
+                    trace.push(Request {
+                        id: 0,
+                        camera: cam,
+                        arrival_s: t,
+                        objects: truths.len(),
+                        class: SloClass::Standard,
+                    });
+                    frames.push(FrameTruth { camera: cam, t_s: t, frame_idx, segment: seg_i, truths });
+                    frame_idx += 1;
+                }
+                t += period / segment.arrival_mult * jitter;
+            }
+            worlds.push(world);
+        }
+        // Sort trace and frames together by (arrival, camera) and stamp
+        // ids as positions — the multi_camera_trace contract.
+        let mut order: Vec<usize> = (0..trace.len()).collect();
+        order.sort_by(|&a, &b| {
+            trace[a]
+                .arrival_s
+                .partial_cmp(&trace[b].arrival_s)
+                .unwrap()
+                .then(trace[a].camera.cmp(&trace[b].camera))
+        });
+        let mut sorted_trace = Vec::with_capacity(trace.len());
+        let mut sorted_frames = Vec::with_capacity(frames.len());
+        for (id, &i) in order.iter().enumerate() {
+            let mut r = trace[i].clone();
+            r.id = id as u64;
+            sorted_trace.push(r);
+            sorted_frames.push(frames[i].clone());
+        }
+        ScenarioWorkload {
+            scenario: scenario.clone(),
+            seed,
+            trace: sorted_trace,
+            frames: sorted_frames,
+            worlds,
+        }
+    }
+
+    /// The scene objects camera `cam` sees at time `t` (world positions,
+    /// segment-gated density).
+    pub fn objects_at(&self, cam: usize, t: f64) -> Vec<SceneObject> {
+        let (_, segment) = self.scenario.segment_at(t);
+        self.worlds[cam][..segment.density].iter().map(|o| o.at(t)).collect()
+    }
+
+    /// Render frame `i` as an actual image (deterministic per-frame
+    /// background noise) — what `examples/traffic_scenario.rs` feeds the
+    /// real CNN. The fleet drivers never render; they only need the
+    /// ground truth.
+    pub fn render_frame(&self, i: usize, cfg: &SceneConfig) -> Scene {
+        let f = &self.frames[i];
+        let objs = self.objects_at(f.camera, f.t_s);
+        let mut rng = Rng::new(
+            self.seed
+                ^ 0xD1B5_4A32_D192_ED03
+                ^ (f.camera as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (f.frame_idx as u64).wrapping_mul(0x94D0_49BB_1331_11EB),
+        );
+        render_objects(cfg, &objs, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reflect_stays_in_bounds_and_bounces() {
+        for i in 0..200 {
+            let p = -3.0 + i as f64 * 0.05;
+            let r = reflect(p, 0.1, 0.9);
+            assert!((0.1..=0.9).contains(&r), "reflect({p}) = {r}");
+        }
+        // Inside the band it is the identity.
+        assert!((reflect(0.5, 0.1, 0.9) - 0.5).abs() < 1e-12);
+        // Just past the wall it comes back by the overshoot.
+        assert!((reflect(0.95, 0.1, 0.9) - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn catalog_scenarios_are_well_formed() {
+        let cat = ScenarioCatalog::standard();
+        assert_eq!(cat.names().len(), 5);
+        for s in cat.all() {
+            s.check();
+            assert!(cat.get(s.name).is_some());
+        }
+        assert!(cat.get("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_sorted() {
+        let cat = ScenarioCatalog::standard();
+        let s = cat.get("rush-hour").unwrap();
+        let a = ScenarioWorkload::generate(s, 7);
+        let b = ScenarioWorkload::generate(s, 7);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.trace.len(), a.frames.len());
+        assert!(a.trace.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(a.trace.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        // Frames stay parallel to the trace after the sort.
+        for (r, f) in a.trace.iter().zip(&a.frames) {
+            assert_eq!(r.camera, f.camera);
+            assert_eq!(r.arrival_s, f.t_s);
+            assert_eq!(r.objects, f.truths.len());
+        }
+        let c = ScenarioWorkload::generate(s, 8);
+        assert_ne!(a.trace, c.trace, "seed must matter");
+    }
+
+    #[test]
+    fn densities_follow_segments_and_scaling_multiplies_rate() {
+        let cat = ScenarioCatalog::standard();
+        let s = cat.get("day-night").unwrap();
+        let w = ScenarioWorkload::generate(s, 3);
+        for f in &w.frames {
+            let expected = s.segments[f.segment].density;
+            assert_eq!(f.truths.len(), expected, "frame at t={}", f.t_s);
+        }
+        // Night frames exist and are sparser.
+        assert!(w.frames.iter().any(|f| f.segment == 1));
+        let doubled = ScenarioWorkload::generate(&s.scaled(2.0), 3);
+        let ratio = doubled.trace.len() as f64 / w.trace.len() as f64;
+        assert!((1.7..=2.3).contains(&ratio), "2× scaling gave ratio {ratio}");
+    }
+
+    #[test]
+    fn dropout_silences_camera_but_world_keeps_moving() {
+        let cat = ScenarioCatalog::standard();
+        let s = cat.get("dropout").unwrap();
+        let w = ScenarioWorkload::generate(s, 5);
+        assert!(!w
+            .frames
+            .iter()
+            .any(|f| f.camera == 1 && (3.0..5.0).contains(&f.t_s)), "camera 1 must be silent");
+        assert!(w.frames.iter().any(|f| f.camera == 1 && f.t_s >= 5.0), "and must rejoin");
+        // Positions differ across the gap: the world moved while the
+        // camera was dark (objects move up to 0.16 canvas in 2 s).
+        let before = w.frames.iter().filter(|f| f.camera == 1 && f.t_s < 3.0).last().unwrap();
+        let after = w.frames.iter().find(|f| f.camera == 1 && f.t_s >= 5.0).unwrap();
+        let moved = before
+            .truths
+            .iter()
+            .zip(&after.truths)
+            .any(|(a, b)| (a.bbox.cx - b.bbox.cx).abs() + (a.bbox.cy - b.bbox.cy).abs() > 0.02);
+        assert!(moved, "objects should have moved across the dropout");
+    }
+
+    #[test]
+    fn rendered_frame_matches_its_ground_truth() {
+        let cat = ScenarioCatalog::standard();
+        let s = cat.get("steady-day").unwrap();
+        let w = ScenarioWorkload::generate(s, 11);
+        let cfg = SceneConfig { noise: 0.0, ..Default::default() };
+        let scene = w.render_frame(0, &cfg);
+        assert_eq!(scene.truths.len(), w.frames[0].truths.len());
+        for (a, b) in scene.truths.iter().zip(&w.frames[0].truths) {
+            assert_eq!(a.class, b.class);
+            // Rendered truth is quantized through pixel space; stays
+            // within a pixel of the analytic truth.
+            assert!((a.bbox.cx - b.bbox.cx).abs() < 0.01);
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Traffic-monitoring scenarios: scene-driven workloads with exact
+//! ground truth, per-camera GM-PHD tracking on fleet completions, and
+//! accuracy-in-the-loop reporting.
+//!
+//! This subsystem closes the loop the paper's Section VI system sketches:
+//! simulated cameras observe a deterministic world of moving objects
+//! ([`catalog`]), every frame becomes a detection [`Request`] into the
+//! serving fleet (DES or live threads), and what the fleet *served* is
+//! scored against what the world *contained* ([`pipeline`]) — so load
+//! shedding stops being an abstract counter and becomes measurable
+//! tracking-accuracy loss:
+//!
+//! - [`catalog`] — named, seedable traffic regimes ([`ScenarioCatalog`]):
+//!   day/night density shifts, rush-hour arrival ramps, incident bursts,
+//!   camera dropout/rejoin. [`ScenarioWorkload::generate`] turns a
+//!   [`Scenario`] into a sorted request trace plus per-frame exact ground
+//!   truth; frames render on demand through
+//!   [`crate::dataset::scenes::render_objects`].
+//! - [`pipeline`] — replays fleet [`RequestOutcome`]s against the ground
+//!   truth: completed frames run the synthetic detector head +
+//!   [`crate::postproc::nms`], project through
+//!   [`crate::tracking::Homography`] into world coordinates and update a
+//!   per-camera [`crate::tracking::GmPhd`] filter; shed frames are missed
+//!   measurements (the filter steps with no detections). The result is a
+//!   [`ScenarioReport`](crate::serving::metrics::ScenarioReport) —
+//!   COCO-style mAP vs the offline ceiling, track continuity /
+//!   fragmentation, per-regime breakdowns — attached to the run's
+//!   [`FleetReport`](crate::serving::FleetReport).
+//!
+//! Everything is a pure function of `(scenario, seed)` and the fleet's
+//! shed decisions: with zero shedding the served mAP equals the offline
+//! detector baseline *bit-exactly*, and the DES and live drivers produce
+//! identical reports in virtual-clock mode (`tests/scenario_accuracy.rs`).
+//!
+//! [`Request`]: crate::serving::Request
+//! [`RequestOutcome`]: crate::serving::RequestOutcome
+
+pub mod catalog;
+pub mod pipeline;
+
+pub use catalog::{
+    camera_homography, Dropout, FrameTruth, Scenario, ScenarioCatalog, ScenarioWorkload, Segment,
+};
+pub use pipeline::{
+    evaluate_scenario, run_scenario_autoscaled, run_scenario_des, run_scenario_live,
+};

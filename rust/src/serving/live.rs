@@ -55,7 +55,7 @@ use super::device::Backend;
 use super::metrics::{EnergyLedger, FleetMetrics, FleetReport};
 use super::shard::{Lifecycle, ShardPool};
 use super::sim::SimConfig;
-use super::Request;
+use super::{Request, RequestOutcome};
 
 /// Which clock paces the runtime.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -366,6 +366,7 @@ struct ShardRuntime {
     accrued_to: Arc<Mutex<Vec<f64>>>,
     retire_log: Arc<Mutex<Vec<ScalingEvent>>>,
     serving_count: Arc<AtomicUsize>,
+    outcomes: Arc<Mutex<Vec<RequestOutcome>>>,
 }
 
 impl ShardRuntime {
@@ -402,6 +403,17 @@ impl ShardRuntime {
                 let mut m = self.metrics.lock().expect("metrics lock");
                 for r in &batch {
                     m.record_completion(self.idx, done_at - r.arrival_s, r.class);
+                }
+            }
+            {
+                let mut o = self.outcomes.lock().expect("outcomes lock");
+                for r in &batch {
+                    o.push(RequestOutcome {
+                        id: r.id,
+                        camera: r.camera,
+                        t_s: done_at,
+                        shed: false,
+                    });
                 }
             }
             {
@@ -523,6 +535,7 @@ struct FrontDoor<'a> {
     topics: &'a [Arc<SharedTopic<Request>>],
     shared: &'a [Arc<ShardShared>],
     metrics: &'a Mutex<FleetMetrics>,
+    outcomes: &'a Mutex<Vec<RequestOutcome>>,
     offered: u64,
     offered_by_class: [u64; 3],
 }
@@ -538,6 +551,12 @@ impl FrontDoor<'_> {
         if let Some(q) = self.quota.as_mut() {
             if !q.try_take(req.class, now) {
                 self.metrics.lock().expect("metrics lock").record_quota_shed(req.class);
+                self.outcomes.lock().expect("outcomes lock").push(RequestOutcome {
+                    id: req.id,
+                    camera: req.camera,
+                    t_s: now,
+                    shed: true,
+                });
                 return None;
             }
         }
@@ -554,6 +573,7 @@ impl FrontDoor<'_> {
         }
         let policy = self.cfg.shed.overflow_for(req.class);
         let class = req.class;
+        let (id, camera) = (req.id, req.camera);
         match self.topics[best].try_publish(req, policy) {
             PublishOutcome::Delivered => {
                 self.shared[best].queued.fetch_add(1, Ordering::SeqCst);
@@ -564,10 +584,22 @@ impl FrontDoor<'_> {
                 // the eviction report is what keeps live shed
                 // accounting exact per class.
                 self.metrics.lock().expect("metrics lock").record_shed(old.class);
+                self.outcomes.lock().expect("outcomes lock").push(RequestOutcome {
+                    id: old.id,
+                    camera: old.camera,
+                    t_s: now,
+                    shed: true,
+                });
                 Some(best)
             }
             PublishOutcome::Rejected | PublishOutcome::Closed => {
                 self.metrics.lock().expect("metrics lock").record_shed(class);
+                self.outcomes.lock().expect("outcomes lock").push(RequestOutcome {
+                    id,
+                    camera,
+                    t_s: now,
+                    shed: true,
+                });
                 None
             }
         }
@@ -590,6 +622,18 @@ pub fn serve_live(
     cfg: &SimConfig,
     live: &LiveConfig,
 ) -> FleetReport {
+    serve_live_logged(pool, trace, cfg, live).0
+}
+
+/// As [`serve_live`], also returning per-request outcomes sorted by
+/// trace id. Sorting (not thread arrival order) is what keeps the log
+/// identical across worker-thread counts in virtual-clock mode.
+pub fn serve_live_logged(
+    pool: ShardPool,
+    trace: &[Request],
+    cfg: &SimConfig,
+    live: &LiveConfig,
+) -> (FleetReport, Vec<RequestOutcome>) {
     assert!(
         !cfg.work_stealing,
         "the live runtime has no work stealing; run it (and any DES oracle) with \
@@ -619,6 +663,7 @@ pub fn serve_live(
     let accrued_to = Arc::new(Mutex::new(vec![0.0f64; n]));
     let retire_log = Arc::new(Mutex::new(Vec::new()));
     let serving_count = Arc::new(AtomicUsize::new(n));
+    let outcomes = Arc::new(Mutex::new(Vec::new()));
     let topics: Vec<Arc<SharedTopic<Request>>> =
         (0..n).map(|_| Arc::new(SharedTopic::bounded(cfg.queue_depth.max(1)))).collect();
     let shared: Vec<Arc<ShardShared>> = (0..n).map(|_| Arc::new(ShardShared::new())).collect();
@@ -645,6 +690,7 @@ pub fn serve_live(
             accrued_to: accrued_to.clone(),
             retire_log: retire_log.clone(),
             serving_count: serving_count.clone(),
+            outcomes: outcomes.clone(),
         })
         .collect();
     // Deal shards round-robin to worker threads (shard i → thread
@@ -663,6 +709,7 @@ pub fn serve_live(
         topics: &topics,
         shared: &shared,
         metrics: &*metrics,
+        outcomes: &*outcomes,
         offered: 0,
         offered_by_class: [0; 3],
     };
@@ -780,7 +827,10 @@ pub fn serve_live(
         d.state = "retired";
     }
     report.energy = ledger;
-    report
+    let Ok(outcomes) = Arc::try_unwrap(outcomes) else { unreachable!("workers joined") };
+    let mut outcomes = outcomes.into_inner().expect("outcomes lock");
+    outcomes.sort_by_key(|o| o.id);
+    (report, outcomes)
 }
 
 #[cfg(test)]
@@ -849,6 +899,19 @@ mod tests {
         assert_eq!(r.offered, trace.len() as u64);
         assert_eq!(r.completed + r.shed, r.offered);
         assert!(r.completed > 0);
+    }
+
+    #[test]
+    fn logged_outcomes_are_thread_count_invariant() {
+        let trace = poisson_trace(400.0, 1.0, 5);
+        let cfg = SimConfig { queue_depth: 8, ..base_cfg() };
+        let (r, o1) = serve_live_logged(pool(3), &trace, &cfg, &LiveConfig::virtual_clock());
+        let (_, o3) =
+            serve_live_logged(pool(3), &trace, &cfg, &LiveConfig::virtual_clock().with_threads(1));
+        assert_eq!(o1.len(), trace.len(), "every request gets an outcome");
+        assert!(o1.iter().enumerate().all(|(i, o)| o.id == i as u64));
+        assert_eq!(o1, o3, "outcome log must not depend on worker-thread count");
+        assert_eq!(o1.iter().filter(|o| o.shed).count() as u64, r.shed);
     }
 
     #[test]

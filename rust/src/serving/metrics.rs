@@ -302,6 +302,51 @@ pub struct DeviceReport {
     pub stolen: u64,
 }
 
+/// Accuracy over one scenario regime's frames (a segment of the
+/// scenario's timeline: "night", "rush-hour", …).
+#[derive(Debug, Clone)]
+pub struct RegimeReport {
+    pub name: String,
+    /// Frames whose arrival fell inside this regime.
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    /// mAP@0.5 over this regime's frames (shed frames contribute their
+    /// ground truth but no detections).
+    pub map: f64,
+}
+
+/// Fleet-level accuracy of one scenario run: what the shed rate *cost*,
+/// measured against exact synthetic ground truth. Attached to a
+/// [`FleetReport`] by the scenario pipeline
+/// ([`crate::scenario::run_scenario_des`] and friends); plain serving
+/// runs leave it `None`.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub cameras: usize,
+    /// Frames the scenario emitted (== the fleet's offered requests).
+    pub frames_offered: u64,
+    pub frames_completed: u64,
+    pub frames_shed: u64,
+    /// mAP@0.5 of the *served* pipeline: shed frames keep their ground
+    /// truth but produce no detections, so shedding directly costs mAP.
+    pub map: f64,
+    /// mAP@0.5 of the detector run offline on every frame — the accuracy
+    /// ceiling; `map == offline_map` exactly when nothing sheds.
+    pub offline_map: f64,
+    /// Fraction of ground-truth object-frames covered by a track within
+    /// the gate (1.0 = every object tracked through every frame).
+    pub continuity: f64,
+    /// Track-identity switches per ground-truth object (0.0 = every
+    /// object kept one id for its whole life).
+    pub fragmentation: f64,
+    /// Mean |GM-PHD cardinality − true object count| over frames.
+    pub cardinality_mae: f64,
+    /// Per-regime accuracy breakdown, in the scenario's segment order.
+    pub regimes: Vec<RegimeReport>,
+}
+
 /// Fleet-level summary of one simulated run.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
@@ -337,6 +382,9 @@ pub struct FleetReport {
     /// The fleet energy ledger (zero for reports built outside the DES
     /// driver).
     pub energy: EnergyLedger,
+    /// Accuracy-in-the-loop results when the run was driven by the
+    /// scenario pipeline; `None` for plain serving runs.
+    pub scenario: Option<ScenarioReport>,
 }
 
 impl FleetReport {
@@ -570,6 +618,7 @@ impl FleetMetrics {
             devices,
             classes: self.class_reports(),
             energy: EnergyLedger::empty(),
+            scenario: None,
         }
     }
 }

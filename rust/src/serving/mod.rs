@@ -40,7 +40,14 @@
 //!   same interfaces: one worker thread per shard consuming a bounded
 //!   [`crate::pipeline::SharedTopic`] front door, wall- or
 //!   virtual-clocked ([`serve_live`]); the DES above is its
-//!   differential oracle (`tests/live_vs_des.rs`).
+//!   differential oracle (`tests/live_vs_des.rs`);
+//! - [`scenario`] (re-export of [`crate::scenario`]) — traffic-monitoring
+//!   scenarios that close the loop from simulated cameras to fleet-level
+//!   accuracy: both drivers also come in `_logged` variants
+//!   ([`simulate_logged`], [`serve_live_logged`]) that return the
+//!   per-request [`RequestOutcome`] log the scenario pipeline scores
+//!   (mAP, track continuity/fragmentation) into a
+//!   [`ScenarioReport`] on the [`FleetReport`].
 
 pub mod admission;
 pub mod autoscale;
@@ -51,20 +58,24 @@ pub mod metrics;
 pub mod shard;
 pub mod sim;
 
+pub use crate::scenario;
 pub use admission::{AdmissionPolicy, ClassQuota, ShedPolicy};
 pub use autoscale::{
     AutoscaleConfig, Autoscaler, DrainOrder, ScaleAction, ScaleEventKind, ScalePolicy,
     ScalingEvent, SloTracking, TargetUtilization,
 };
 pub use batcher::BatchPolicy;
-pub use live::{serve_live, ClockMode, LiveConfig};
+pub use live::{serve_live, serve_live_logged, ClockMode, LiveConfig};
 pub use device::{capacity_fps, Backend, BaselineDevice, CatalogEntry, DeviceCatalog, GemminiDevice};
-pub use metrics::{ClassReport, EnergyLedger, EpochEnergy, FleetReport, LatencyHistogram};
+pub use metrics::{
+    ClassReport, EnergyLedger, EpochEnergy, FleetReport, LatencyHistogram, RegimeReport,
+    ScenarioReport,
+};
 pub use shard::{Lifecycle, ShardPool};
 pub use sim::{
     multi_camera_trace, poisson_trace, simulate, simulate_autoscaled, simulate_autoscaled_hetero,
-    simulate_closed_loop, simulate_closed_loop_autoscaled, simulate_closed_loop_autoscaled_hetero,
-    ClosedLoopConfig, SimConfig,
+    simulate_autoscaled_logged, simulate_closed_loop, simulate_closed_loop_autoscaled,
+    simulate_closed_loop_autoscaled_hetero, simulate_logged, ClosedLoopConfig, SimConfig,
 };
 
 /// The latency class a camera's frames are served under. The paper's
@@ -152,6 +163,23 @@ pub fn assign_slo_classes(trace: &mut [Request]) {
     for r in trace {
         r.class = SloClass::for_camera(r.camera);
     }
+}
+
+/// What happened to one request: completed (with its completion time) or
+/// shed. The scenario pipeline replays these against the rendered frames
+/// to score fleet-level accuracy — a shed frame is a missed measurement
+/// for that camera's tracker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestOutcome {
+    /// The request's trace id ([`Request::id`]).
+    pub id: u64,
+    pub camera: usize,
+    /// Completion time for served requests; the shed decision time for
+    /// shed ones.
+    pub t_s: f64,
+    /// True if the request was shed (quota, queue overflow, or eviction)
+    /// instead of served.
+    pub shed: bool,
 }
 
 /// One inference request: a camera frame arriving at the fleet front door.

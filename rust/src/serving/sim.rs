@@ -30,7 +30,7 @@ use super::batcher::{BatchPolicy, Decision};
 use super::device::{Backend, DeviceCatalog};
 use super::metrics::{EnergyLedger, EpochStats, FleetMetrics, FleetReport};
 use super::shard::{Lifecycle, ShardPool};
-use super::{Request, SloClass};
+use super::{Request, RequestOutcome, SloClass};
 
 /// Fleet-wide serving configuration for one simulated run.
 #[derive(Debug, Clone)]
@@ -313,7 +313,7 @@ fn settle(
     now: f64,
     cfg: &SimConfig,
     metrics: &mut FleetMetrics,
-    done: &mut Vec<(Request, f64)>,
+    done: &mut Vec<(Request, f64, bool)>,
 ) {
     loop {
         let mut progressed = false;
@@ -324,7 +324,7 @@ fn settle(
                 let batch = std::mem::take(&mut pool.devices[i].in_flight);
                 for r in batch {
                     metrics.record_completion(i, done_at - r.arrival_s, r.class);
-                    done.push((r, done_at));
+                    done.push((r, done_at, false));
                 }
                 pool.devices[i].busy = false;
                 progressed = true;
@@ -432,13 +432,15 @@ fn observe(pool: &ShardPool, stats: EpochStats, now: f64, epoch_s: f64) -> Epoch
     }
 }
 
-/// The unified DES driver behind every `simulate*` entry point.
+/// The unified DES driver behind every `simulate*` entry point. Besides
+/// the report it returns per-request outcomes (completed-at / shed) for
+/// the scenario accuracy pipeline; report-only entry points drop them.
 fn drive(
     pool: &mut ShardPool,
     mut arrivals: Arrivals<'_>,
     cfg: &SimConfig,
     mut scaling: Option<ScalingCtx<'_>>,
-) -> FleetReport {
+) -> (FleetReport, Vec<RequestOutcome>) {
     assert!(!pool.is_empty(), "simulate needs at least one device");
     let mut metrics = FleetMetrics::new(pool.len(), cfg.slo_s);
     let mut quota = cfg.admission.runtime_quota();
@@ -458,7 +460,8 @@ fn drive(
     let mut next_epoch = scaling.as_ref().map(|s| s.auto.cfg.epoch_s);
     let devices_start = pool.serving_count();
     let mut devices_peak = pool.active_count();
-    let mut done: Vec<(Request, f64)> = Vec::new();
+    let mut done: Vec<(Request, f64, bool)> = Vec::new();
+    let mut outcomes: Vec<RequestOutcome> = Vec::new();
     // Energy accounting: per-device idle/busy power and frame GOP are
     // static per backend, cached once per registration.
     let mut ledger = EnergyLedger::new(cfg.energy_epoch_s);
@@ -492,7 +495,7 @@ fn drive(
             if let Some(q) = quota.as_mut() {
                 if !q.try_take(req.class, now) {
                     metrics.record_quota_shed(req.class);
-                    done.push((req, now));
+                    done.push((req, now, true));
                     continue;
                 }
             }
@@ -502,11 +505,11 @@ fn drive(
                 Admission::Admitted => {}
                 Admission::AdmittedEvicted(old) => {
                     metrics.record_shed(old.class);
-                    done.push((old, now));
+                    done.push((old, now, true));
                 }
                 Admission::Rejected => {
                     metrics.record_shed(req.class);
-                    done.push((req, now));
+                    done.push((req, now, true));
                 }
             }
         }
@@ -518,7 +521,8 @@ fn drive(
                 last_completion = last_completion.max(d.free_at);
             }
         }
-        for (r, t) in done.drain(..) {
+        for (r, t, shed) in done.drain(..) {
+            outcomes.push(RequestOutcome { id: r.id, camera: r.camera, t_s: t, shed });
             arrivals.on_done(&r, t);
         }
 
@@ -662,13 +666,26 @@ fn drive(
         c.offered = offered_by_class[i];
     }
     report.energy = ledger;
-    report
+    // Outcomes in trace order, not completion order (batch completions
+    // interleave): the scenario pipeline indexes them by request id.
+    outcomes.sort_by_key(|o| o.id);
+    (report, outcomes)
 }
 
 /// Run an open-loop trace through a fixed pool. The pool's queues may be
 /// pre-loaded (tests use this to create skew); devices are expected idle
 /// at start.
 pub fn simulate(pool: &mut ShardPool, trace: &[Request], cfg: &SimConfig) -> FleetReport {
+    drive(pool, Arrivals::Open { trace, next: 0 }, cfg, None).0
+}
+
+/// As [`simulate`], also returning per-request outcomes (in trace-id
+/// order) — the scenario pipeline replays these for accuracy scoring.
+pub fn simulate_logged(
+    pool: &mut ShardPool,
+    trace: &[Request],
+    cfg: &SimConfig,
+) -> (FleetReport, Vec<RequestOutcome>) {
     drive(pool, Arrivals::Open { trace, next: 0 }, cfg, None)
 }
 
@@ -681,6 +698,17 @@ pub fn simulate_autoscaled(
     auto: &mut Autoscaler,
     factory: &mut dyn FnMut(usize) -> Box<dyn Backend>,
 ) -> FleetReport {
+    simulate_autoscaled_logged(pool, trace, cfg, auto, factory).0
+}
+
+/// As [`simulate_autoscaled`], also returning per-request outcomes.
+pub fn simulate_autoscaled_logged(
+    pool: &mut ShardPool,
+    trace: &[Request],
+    cfg: &SimConfig,
+    auto: &mut Autoscaler,
+    factory: &mut dyn FnMut(usize) -> Box<dyn Backend>,
+) -> (FleetReport, Vec<RequestOutcome>) {
     drive(
         pool,
         Arrivals::Open { trace, next: 0 },
@@ -707,6 +735,7 @@ pub fn simulate_autoscaled_hetero(
         cfg,
         Some(ScalingCtx { auto, provisioner: Provisioner::Catalog(catalog) }),
     )
+    .0
 }
 
 /// The heterogeneous entry points' contract: a non-empty catalog whose
@@ -731,7 +760,7 @@ pub fn simulate_closed_loop(
     clients: &ClosedLoopConfig,
     cfg: &SimConfig,
 ) -> FleetReport {
-    drive(pool, Arrivals::closed(clients.clone()), cfg, None)
+    drive(pool, Arrivals::closed(clients.clone()), cfg, None).0
 }
 
 /// Closed-loop clients plus autoscaling: the full feedback system — load
@@ -749,6 +778,7 @@ pub fn simulate_closed_loop_autoscaled(
         cfg,
         Some(ScalingCtx { auto, provisioner: Provisioner::Factory(factory) }),
     )
+    .0
 }
 
 /// Closed-loop clients plus heterogeneous autoscaling.
@@ -766,6 +796,7 @@ pub fn simulate_closed_loop_autoscaled_hetero(
         cfg,
         Some(ScalingCtx { auto, provisioner: Provisioner::Catalog(catalog) }),
     )
+    .0
 }
 
 #[cfg(test)]
@@ -967,6 +998,28 @@ mod tests {
         assert_eq!(r.offered, trace.len() as u64);
         let per_dev: u64 = r.devices.iter().map(|d| d.completed).sum();
         assert_eq!(per_dev, r.completed);
+    }
+
+    #[test]
+    fn logged_outcomes_cover_every_request_in_id_order() {
+        let trace = poisson_trace(300.0, 2.0, 21);
+        let cfg = SimConfig {
+            queue_depth: 4,
+            shed: ShedPolicy::DropOldest,
+            work_stealing: false,
+            ..Default::default()
+        };
+        let (r, outcomes) = simulate_logged(&mut one_device_pool(), &trace, &cfg);
+        assert_eq!(outcomes.len(), trace.len());
+        assert!(outcomes.iter().enumerate().all(|(i, o)| o.id == i as u64));
+        let shed = outcomes.iter().filter(|o| o.shed).count() as u64;
+        assert_eq!(shed, r.shed, "outcome log agrees with the report");
+        assert_eq!(outcomes.len() as u64 - shed, r.completed);
+        // Completion times are causal: never before the arrival.
+        for (o, req) in outcomes.iter().zip(&trace) {
+            assert!(o.t_s + 1e-12 >= req.arrival_s);
+            assert_eq!(o.camera, req.camera);
+        }
     }
 
     // ---- autoscaling ----

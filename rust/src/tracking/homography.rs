@@ -23,6 +23,46 @@ impl Homography {
         let w = h[6] * x + h[7] * y + h[8];
         ((h[0] * x + h[1] * y + h[2]) / w, (h[3] * x + h[4] * y + h[5]) / w)
     }
+
+    /// The inverse transform (adjugate over determinant), or `None` for
+    /// a degenerate (non-invertible) homography. Projective transforms
+    /// are scale-free, so the adjugate alone would already invert the
+    /// mapping; dividing by the determinant keeps the matrix numerically
+    /// comparable to the forward one.
+    pub fn inverse(&self) -> Option<Homography> {
+        let h = &self.h;
+        let c0 = h[4] * h[8] - h[5] * h[7];
+        let c1 = h[5] * h[6] - h[3] * h[8];
+        let c2 = h[3] * h[7] - h[4] * h[6];
+        let det = h[0] * c0 + h[1] * c1 + h[2] * c2;
+        if det.abs() < 1e-12 || !det.is_finite() {
+            return None;
+        }
+        let adj = [
+            c0,
+            h[2] * h[7] - h[1] * h[8],
+            h[1] * h[5] - h[2] * h[4],
+            c1,
+            h[0] * h[8] - h[2] * h[6],
+            h[2] * h[3] - h[0] * h[5],
+            c2,
+            h[1] * h[6] - h[0] * h[7],
+            h[0] * h[4] - h[1] * h[3],
+        ];
+        let mut out = [0.0; 9];
+        for (o, a) in out.iter_mut().zip(adj) {
+            *o = a / det;
+        }
+        Some(Homography { h: out })
+    }
+
+    /// Project a ground-plane point back into the image (the inverse of
+    /// [`Homography::project`]). Panics on a degenerate homography —
+    /// calibrated cameras are invertible by construction; use
+    /// [`Homography::inverse`] directly to handle the degenerate case.
+    pub fn unproject(&self, x: f64, y: f64) -> (f64, f64) {
+        self.inverse().expect("degenerate homography has no unprojection").project(x, y)
+    }
 }
 
 #[cfg(test)]
@@ -43,5 +83,24 @@ mod tests {
         assert!((y - 0.0).abs() < 1e-9);
         let (x, y) = h.project(1.0, 1.0);
         assert!((x - 10.0).abs() < 1e-9 && (y - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_offset_inverse_is_closed_form() {
+        let h = Homography::scale_offset(16.0, 16.0, 40.0, 0.0);
+        let inv = h.inverse().expect("affine scale+offset is invertible");
+        // Inverse of [s,0,t] is [1/s,0,-t/s] (row-wise).
+        assert!((inv.h[0] - 1.0 / 16.0).abs() < 1e-12);
+        assert!((inv.h[2] + 40.0 / 16.0).abs() < 1e-12);
+        assert!((inv.h[4] - 1.0 / 16.0).abs() < 1e-12);
+        let (x, y) = h.unproject(48.0, 8.0);
+        assert!((x - 0.5).abs() < 1e-12 && (y - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_homography_has_no_inverse() {
+        // Rank-deficient: second row is a multiple of the first.
+        let h = Homography { h: [1.0, 2.0, 3.0, 2.0, 4.0, 6.0, 0.0, 0.0, 1.0] };
+        assert!(h.inverse().is_none());
     }
 }

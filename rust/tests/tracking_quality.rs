@@ -1,0 +1,160 @@
+//! Quality gates for the tracking/metric modules the scenario subsystem
+//! woke up: GM-PHD filter behavior on known scenes, golden mAP values
+//! for `postproc::map`, homography round-trips, and the synthetic
+//! detector's byte-determinism.
+
+use gemmini_edge::dataset::detector::{SyntheticDetector, NUM_CLASSES};
+use gemmini_edge::postproc::bbox::{BBox, Detection};
+use gemmini_edge::postproc::map::{mean_average_precision, GroundTruth};
+use gemmini_edge::tracking::{GmPhd, GmPhdConfig, Homography};
+use gemmini_edge::util::Rng;
+
+/// Two constant-velocity objects, always detected, no clutter: the
+/// filter must converge to cardinality ≈ 2 with tracks near the truth,
+/// and two identical runs must produce bit-identical state.
+#[test]
+fn gmphd_converges_on_a_known_two_object_scene() {
+    let cfg = GmPhdConfig::default(); // dt = 0.1
+    let truth = |t: f64| [(1.0 + 0.5 * t, 2.0), (8.0 - 0.3 * t, 5.0 + 0.2 * t)];
+    let run = || {
+        let mut f = GmPhd::new(cfg.clone());
+        for step in 0..40 {
+            let t = step as f64 * cfg.dt;
+            f.step(&truth(t).to_vec());
+        }
+        f
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(format!("{:?}", a.tracks()), format!("{:?}", b.tracks()), "determinism");
+    assert!(
+        (a.cardinality() - 2.0).abs() < 0.5,
+        "cardinality {:.3} should settle near 2",
+        a.cardinality()
+    );
+    let tracks = a.tracks();
+    assert_eq!(tracks.len(), 2, "two confirmed tracks, got {tracks:?}");
+    let t_final = 39.0 * cfg.dt;
+    for (tx, ty) in truth(t_final) {
+        let nearest = tracks
+            .iter()
+            .map(|tr| ((tr.x - tx).powi(2) + (tr.y - ty).powi(2)).sqrt())
+            .fold(f64::INFINITY, f64::min);
+        assert!(nearest < 1.0, "no track within 1 m of truth ({tx:.1},{ty:.1}): {nearest:.2}");
+    }
+}
+
+/// Missed measurements decay a track instead of killing it: after a
+/// 5-step gap the object is re-acquired without exploding cardinality.
+#[test]
+fn gmphd_survives_a_measurement_gap() {
+    let cfg = GmPhdConfig::default();
+    let mut f = GmPhd::new(cfg.clone());
+    let pos = |step: usize| (2.0 + 0.05 * step as f64, 3.0);
+    for step in 0..20 {
+        f.step(&[pos(step)]);
+    }
+    let before = f.cardinality();
+    assert!((before - 1.0).abs() < 0.3, "settled cardinality {before:.3}");
+    for _ in 20..25 {
+        f.step(&[]); // the camera went dark
+    }
+    assert!(f.cardinality() < before, "missed measurements must decay weight");
+    for step in 25..35 {
+        f.step(&[pos(step)]);
+    }
+    assert!((f.cardinality() - 1.0).abs() < 0.3, "re-acquired cardinality {:.3}", f.cardinality());
+    assert_eq!(f.tracks().len(), 1, "one confirmed track after rejoin");
+}
+
+fn det(cx: f32, score: f32, class: usize) -> Detection {
+    Detection { bbox: BBox::new(cx, 0.5, 0.1, 0.1), score, class }
+}
+fn gt(cx: f32, class: usize) -> GroundTruth {
+    GroundTruth { bbox: BBox::new(cx, 0.5, 0.1, 0.1), class }
+}
+
+/// Golden AP value, hand-derived from the 101-point interpolation: two
+/// ground truths, detections TP(0.9), FP(0.8), TP(0.7) give the PR
+/// points (r=0.5, p=1.0) and (r=1.0, p=2/3), so
+/// AP = (51·1 + 50·(2/3)) / 101 = (51 + 100/3)/101.
+#[test]
+fn map_matches_hand_computed_golden_values() {
+    let dets = vec![vec![det(0.2, 0.9, 0), det(0.8, 0.8, 0), det(0.5, 0.7, 0)]];
+    let gts = vec![vec![gt(0.2, 0), gt(0.5, 0)]];
+    let m = mean_average_precision(&dets, &gts, 1, 0.5);
+    let golden = (51.0 + 100.0 / 3.0) / 101.0;
+    assert!((m - golden).abs() < 1e-12, "AP {m} != golden {golden}");
+
+    // Perfect detections on every class: exactly 1.0.
+    let dets = vec![vec![det(0.2, 0.9, 0), det(0.5, 0.8, 1)]];
+    let gts = vec![vec![gt(0.2, 0), gt(0.5, 1)]];
+    assert_eq!(mean_average_precision(&dets, &gts, 2, 0.5), 1.0);
+
+    // Absent classes are skipped, not zeroed: same value at any
+    // num_classes ≥ the populated ones.
+    let m2 = mean_average_precision(&dets, &gts, NUM_CLASSES, 0.5);
+    assert_eq!(m2, 1.0);
+}
+
+/// Project → unproject is the identity within epsilon for 24 random
+/// calibrations including small perspective terms, across the whole
+/// image square.
+#[test]
+fn homography_round_trips_under_inversion() {
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(0xCA11_B007 + seed);
+        // Ranges shaped like real overhead calibrations: dominant
+        // diagonal scale, mild shear, bounded translation, *small*
+        // perspective terms — keeps the determinant well away from 0 so
+        // the 1e-9 epsilon is meaningful, not luck.
+        let h = Homography {
+            h: [
+                rng.range_f64(8.0, 30.0),  // sx
+                rng.range_f64(-0.5, 0.5),  // shear
+                rng.range_f64(-20.0, 20.0), // tx
+                rng.range_f64(-0.5, 0.5),
+                rng.range_f64(8.0, 30.0),  // sy
+                rng.range_f64(-20.0, 20.0),
+                rng.range_f64(-0.01, 0.01), // perspective
+                rng.range_f64(-0.01, 0.01),
+                1.0,
+            ],
+        };
+        let inv = h.inverse().expect("well-conditioned calibration");
+        for _ in 0..40 {
+            let (x, y) = (rng.f64(), rng.f64());
+            let (wx, wy) = h.project(x, y);
+            let (bx, by) = inv.project(wx, wy);
+            assert!(
+                (bx - x).abs() < 1e-9 && (by - y).abs() < 1e-9,
+                "seed {seed}: round trip ({x},{y}) -> ({bx},{by})"
+            );
+            let (ux, uy) = h.unproject(wx, wy);
+            assert!((ux - x).abs() < 1e-9 && (uy - y).abs() < 1e-9, "unproject path");
+        }
+    }
+    // Rank-deficient calibrations refuse to invert instead of emitting
+    // garbage meters.
+    let degenerate = Homography { h: [1.0, 2.0, 0.0, 2.0, 4.0, 0.0, 0.0, 0.0, 1.0] };
+    assert!(degenerate.inverse().is_none());
+}
+
+/// The synthetic detector is byte-deterministic per
+/// `(seed, camera, frame)` and independent across frames — the property
+/// that makes zero-shed scenario runs bit-equal to the offline baseline.
+#[test]
+fn synthetic_detector_streams_are_independent_and_deterministic() {
+    let truths = vec![gt(0.3, 0), gt(0.6, 2)];
+    let d = SyntheticDetector::new(77);
+    let a = d.detect(1, 5, &truths);
+    let b = d.detect(1, 5, &truths);
+    assert_eq!(format!("{a:?}"), format!("{b:?}"), "same stream, same bytes");
+    // Different camera or frame index: a different draw sequence.
+    let c = d.detect(2, 5, &truths);
+    let e = d.detect(1, 6, &truths);
+    assert_ne!(format!("{a:?}"), format!("{c:?}"), "camera must shift the stream");
+    assert_ne!(format!("{a:?}"), format!("{e:?}"), "frame must shift the stream");
+    // And a fresh detector with the same seed reproduces everything.
+    let f = SyntheticDetector::new(77).detect(1, 5, &truths);
+    assert_eq!(format!("{a:?}"), format!("{f:?}"));
+}
