@@ -3,7 +3,7 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy fmt fmt-drift featurecheck perfsmoke energysmoke livesmoke scenariosmoke artifacts fleet
+.PHONY: check build test clippy fmt fmt-drift featurecheck targetscheck perfsmoke energysmoke livesmoke scenariosmoke artifacts fleet
 
 # The perf smoke gate (`perfsmoke`), the energy smoke gate
 # (`energysmoke`), the live-runtime smoke gate (`livesmoke`) and the
@@ -21,7 +21,7 @@ CARGO ?= cargo
 # re-running the suite's heaviest tests twice. `make perfsmoke` /
 # `make energysmoke` / `make livesmoke` / `make scenariosmoke` run the
 # gates alone.
-check: build test clippy fmt-drift featurecheck
+check: build test clippy fmt-drift featurecheck targetscheck
 
 build:
 	$(CARGO) build --release
@@ -42,6 +42,26 @@ fmt:
 # the tree has been `cargo fmt`ed wholesale, point `check` at `fmt`.
 fmt-drift:
 	-$(CARGO) fmt --check
+
+# Because the crate root is rust/src (not src/), Cargo does NOT
+# auto-discover rust/tests/ or rust/benches/: a file without an explicit
+# [[test]]/[[bench]] entry in Cargo.toml silently never builds or runs.
+# Fail `check` when any such file is unregistered.
+# (rust/benches/bench_util.rs is shared scaffolding pulled in via
+# `#[path] mod bench_util;`, not a bench target — allowlisted.)
+targetscheck:
+	@missing=0; \
+	for f in rust/tests/*.rs rust/benches/*.rs; do \
+		case $$f in rust/benches/bench_util.rs) continue;; esac; \
+		if ! grep -q "path = \"$$f\"" Cargo.toml; then \
+			echo "targetscheck: $$f has no [[test]]/[[bench]] entry in Cargo.toml"; \
+			missing=1; \
+		fi; \
+	done; \
+	if [ $$missing -eq 0 ]; then \
+		echo "targetscheck: every rust/tests and rust/benches file is registered"; \
+	fi; \
+	exit $$missing
 
 # Build/test with the `pjrt` feature too — but only when the vendored
 # `xla` crate has been wired into the manifest (see Cargo.toml: on a

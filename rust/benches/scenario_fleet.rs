@@ -4,17 +4,27 @@
 //! target-utilization autoscaler — and each run's `ScenarioReport` turns
 //! the shed rate into mAP loss, track-continuity loss and fragmentation.
 //!
-//! Emits `BENCH_scenario.json` at the repo root (the committed artifact;
-//! byte-reproducible — every draw goes through the seeded `util::Rng`
-//! and the DES is deterministic).
+//! Experiment 2 (degrade vs shed): the same scenarios at 2× and 3× load
+//! on the one-device pool, shed-only (`AdmissionPolicy::Open` +
+//! DropOldest) against the graceful-degradation ladder
+//! (`AdmissionPolicy::Degrade(VariantLadder::standard())`). Wherever the
+//! shed-only pool actually sheds, the ladder must *strictly* dominate on
+//! measured scenario mAP, shed strictly less, and hold the standard-class
+//! p99 SLO (100 ms) that shedding breaks; where nothing sheds, both
+//! policies must be bit-identical (the ladder never engages below its
+//! pressure thresholds). Emitted as `BENCH_ladder.json`.
+//!
+//! Emits `BENCH_scenario.json` + `BENCH_ladder.json` at the repo root
+//! (committed artifacts; byte-reproducible — every draw goes through the
+//! seeded `util::Rng` and the DES is deterministic).
 //!
 //! Knobs: `SC_SEED` (workload seed, default 20240710).
 
 use gemmini_edge::baselines::Platform;
 use gemmini_edge::scenario::{run_scenario_autoscaled, run_scenario_des, ScenarioCatalog, ScenarioWorkload};
 use gemmini_edge::serving::{
-    AutoscaleConfig, Autoscaler, Backend, BaselineDevice, BatchPolicy, DrainOrder, ShardPool,
-    ShedPolicy, SimConfig, TargetUtilization,
+    AdmissionPolicy, AutoscaleConfig, Autoscaler, Backend, BaselineDevice, BatchPolicy,
+    DrainOrder, ShardPool, ShedPolicy, SimConfig, TargetUtilization, VariantLadder,
 };
 use gemmini_edge::util::json::Json;
 
@@ -158,4 +168,150 @@ fn main() {
     ]);
     std::fs::write("BENCH_scenario.json", out.dump() + "\n").expect("write BENCH_scenario.json");
     println!("\nwrote BENCH_scenario.json");
+
+    // ---------------- experiment 2: degrade vs shed under overload ----
+    // Same one-device pool, 100 ms standard-class p99 SLO. The ladder
+    // steps requests down to pruned variants as queues fill, so overload
+    // turns into slightly-less-accurate serves instead of evictions.
+    const LADDER_SLO_S: f64 = 0.100;
+    println!("\n== degradation ladder vs shed-only (fixed pool, SLO p99 <= 100 ms) ==\n");
+    println!(
+        "| scenario     | load | policy  | shed%  | mAP    | p99 ms  | full/p40/p88      | eff    |"
+    );
+    let mut lruns = Vec::new();
+    for sc in cat.all() {
+        for &load in &[2.0, 3.0] {
+            let w = ScenarioWorkload::generate(&sc.scaled(load), seed);
+            for degrade in [false, true] {
+                let mut c = cfg();
+                c.slo_s = LADDER_SLO_S;
+                if degrade {
+                    c.admission = AdmissionPolicy::Degrade(VariantLadder::standard());
+                }
+                let r = run_scenario_des(&w, &mut pool(1), &c);
+                assert_eq!(r.completed + r.shed, r.offered, "{}: conservation", sc.name);
+                let s = r.scenario.as_ref().expect("scenario report");
+                let shed_rate = s.frames_shed as f64 / s.frames_offered.max(1) as f64;
+                let policy = if degrade { "degrade" } else { "shed" };
+                let served = |i: usize| r.variants.get(i).map_or(0, |v| v.served);
+                println!(
+                    "| {:<12} | {:>3.1}× | {:<7} | {:>5.1}% | {:>6.4} | {:>7.2} | {:>5}/{:>5}/{:>5} | {:>6.4} |",
+                    sc.name,
+                    load,
+                    policy,
+                    shed_rate * 100.0,
+                    s.map,
+                    r.p99_s * 1e3,
+                    served(0),
+                    served(1),
+                    served(2),
+                    r.effective_accuracy.unwrap_or(0.0),
+                );
+                let mut row = vec![
+                    ("scenario", Json::Str(sc.name.to_string())),
+                    ("load", Json::Num(load)),
+                    ("policy", Json::Str(policy.to_string())),
+                    ("frames_offered", Json::Num(s.frames_offered as f64)),
+                    ("frames_shed", Json::Num(s.frames_shed as f64)),
+                    ("shed_rate", Json::Num(shed_rate)),
+                    ("map", Json::Num(s.map)),
+                    ("offline_map", Json::Num(s.offline_map)),
+                    ("continuity", Json::Num(s.continuity)),
+                    ("fragmentation", Json::Num(s.fragmentation)),
+                    ("p99_s", Json::Num(r.p99_s)),
+                    ("slo_s", Json::Num(LADDER_SLO_S)),
+                ];
+                if degrade {
+                    row.push(("served_full", Json::Num(served(0) as f64)));
+                    row.push(("served_p40", Json::Num(served(1) as f64)));
+                    row.push(("served_p88", Json::Num(served(2) as f64)));
+                    row.push((
+                        "effective_accuracy",
+                        Json::Num(r.effective_accuracy.expect("ladder run carries one")),
+                    ));
+                }
+                lruns.push(Json::obj(row));
+            }
+        }
+    }
+
+    // The experiment's claims, asserted over the artifact itself.
+    let lfind = |name: &str, load: f64, policy: &str| -> Json {
+        lruns
+            .iter()
+            .find(|j| match j {
+                Json::Obj(m) => {
+                    m["scenario"].as_str().unwrap() == name
+                        && m["load"].as_num().unwrap() == load
+                        && m["policy"].as_str().unwrap() == policy
+                }
+                _ => false,
+            })
+            .cloned()
+            .expect("ladder run present")
+    };
+    for sc in cat.all() {
+        for &load in &[2.0, 3.0] {
+            let shed = lfind(sc.name, load, "shed");
+            let deg = lfind(sc.name, load, "degrade");
+            if get(&shed, "shed_rate") > 0.0 {
+                // Overloaded: the ladder strictly dominates on measured
+                // accuracy, sheds strictly less, and holds the p99 SLO
+                // shedding breaks.
+                assert!(
+                    get(&deg, "map") > get(&shed, "map"),
+                    "{} x{load}: ladder mAP {} must strictly beat shed-only {}",
+                    sc.name,
+                    get(&deg, "map"),
+                    get(&shed, "map")
+                );
+                assert!(
+                    get(&deg, "shed_rate") < get(&shed, "shed_rate"),
+                    "{} x{load}: ladder must shed strictly less",
+                    sc.name
+                );
+                assert!(
+                    get(&deg, "p99_s") <= LADDER_SLO_S,
+                    "{} x{load}: ladder p99 {} blew the class-scaled SLO",
+                    sc.name,
+                    get(&deg, "p99_s")
+                );
+                assert!(
+                    get(&shed, "p99_s") > LADDER_SLO_S,
+                    "{} x{load}: shed-only was expected over the SLO here",
+                    sc.name
+                );
+                assert!(
+                    get(&deg, "served_p40") + get(&deg, "served_p88") > 0.0,
+                    "{} x{load}: the ladder must actually degrade under overload",
+                    sc.name
+                );
+            } else {
+                // No pressure past the thresholds: the ladder must be a
+                // no-op, bit for bit.
+                assert_eq!(
+                    get(&deg, "map").to_bits(),
+                    get(&shed, "map").to_bits(),
+                    "{} x{load}: idle ladder must not change accuracy",
+                    sc.name
+                );
+                assert_eq!(
+                    get(&deg, "p99_s").to_bits(),
+                    get(&shed, "p99_s").to_bits(),
+                    "{} x{load}: idle ladder must not change latency",
+                    sc.name
+                );
+            }
+        }
+    }
+
+    let lout = Json::obj(vec![
+        ("bench", Json::Str("scenario_ladder".into())),
+        ("seed", Json::Num(seed as f64)),
+        ("device", Json::Str("bench-dev 100 GOP/s, 5 ms overhead, batch<=4".into())),
+        ("slo_s", Json::Num(LADDER_SLO_S)),
+        ("runs", Json::Arr(lruns)),
+    ]);
+    std::fs::write("BENCH_ladder.json", lout.dump() + "\n").expect("write BENCH_ladder.json");
+    println!("\nwrote BENCH_ladder.json");
 }

@@ -11,10 +11,10 @@
 //! repro fleet [--cameras N] [--fps F] [--batch B] [--wait MS] [--seconds S]
 //!             [--autoscale] [--policy util|slo] [--max-devices N]
 //!             [--epoch S] [--delay S] [--closed K] [--tuning-cache PATH]
-//!             [--hetero] [--classes] [--quota FPS]
+//!             [--hetero] [--classes] [--quota FPS] [--ladder]
 //!             [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
 //! repro scenario [--list] [--name NAME] [--seed S] [--load F]
-//!                [--autoscale] [--max-devices N] [--tuning-cache PATH]
+//!                [--autoscale] [--max-devices N] [--tuning-cache PATH] [--ladder]
 //!                [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
 //! ```
 //!
@@ -49,6 +49,17 @@
 //! use (reports become byte-reproducible). `--quota FPS` puts per-class
 //! admission token buckets (FPS tokens/s per class) in front of the
 //! queues on either path.
+//!
+//! `--ladder` (on `fleet` and `scenario`) arms the graceful-degradation
+//! ladder (`serving::ladder`): each device carries full / pruned-40 /
+//! pruned-88-reduced-input variants of the detector, each tuned through
+//! the shared cache-backed engine, and admission steps new requests
+//! down the ladder as queue pressure rises *before* any shed decision.
+//! The fleet table gains per-variant serve counts and a fleet-level
+//! effective accuracy (sheds score zero); on `repro scenario` each
+//! degraded frame is scored by that rung's own calibrated detector
+//! head, so the scenario mAP reflects what was actually served.
+//! `--ladder` and `--quota` are mutually exclusive (the ladder wins).
 //!
 //! `repro scenario` runs a named traffic regime from the scenario
 //! catalog (`scenario::ScenarioCatalog`, `--list` prints them) through
@@ -221,7 +232,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 simulate_closed_loop_autoscaled_hetero, AdmissionPolicy, AutoscaleConfig,
                 Autoscaler, Backend, BaselineDevice, BatchPolicy, ClassQuota, ClockMode,
                 ClosedLoopConfig, DeviceCatalog, DrainOrder, GemminiDevice, LiveConfig, ShardPool,
-                ShedPolicy, SimConfig, SloTracking, TargetUtilization,
+                ShedPolicy, SimConfig, SloTracking, TargetUtilization, VariantLadder,
             };
             let cameras: usize =
                 arg_val(&args, "--cameras").and_then(|v| v.parse().ok()).unwrap_or(24);
@@ -275,6 +286,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 }
             }
             let quota = quota.filter(|r| r.is_finite() && *r > 0.0);
+            let ladder = args.iter().any(|a| a == "--ladder");
+            if ladder && quota.is_some() {
+                eprintln!("warning: --ladder and --quota are mutually exclusive (using the ladder)");
+            }
+            let quota = if ladder { None } else { quota };
 
             // Tune the detector through the shared engine: repeated
             // geometries, autoscaled replicas and (with --tuning-cache)
@@ -302,6 +318,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 arg_val(&args, "--tuning-cache").as_ref(),
             );
             let tuning = engine.tune_graph(&g, 2);
+            // The degradation ladder tunes the pruned variants through
+            // the same engine, so replicas (and repeated runs with
+            // `--tuning-cache`) are warm hits.
+            let rungs = ladder.then(|| VariantLadder::paper_ladder(&mut engine, 96, 2));
 
             let mut pool = ShardPool::paper_boards(&tuning, DEFAULT_DISPATCH_S);
             pool.register(Box::new(BaselineDevice::new(xavier(), g.gops(), 8)));
@@ -313,11 +333,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 // The live runtime's workers own their queues (no
                 // cross-shard stealing); the DES keeps its default.
                 work_stealing: !live,
-                admission: match quota {
-                    Some(r) => {
+                admission: match (rungs, quota) {
+                    (Some(l), _) => AdmissionPolicy::Degrade(l),
+                    (None, Some(r)) => {
                         AdmissionPolicy::ClassQuota(ClassQuota::uniform(r, (r * 0.5).max(8.0)))
                     }
-                    None => AdmissionPolicy::Open,
+                    (None, None) => AdmissionPolicy::Open,
                 },
                 ..Default::default()
             };
@@ -334,6 +355,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 if classes { " | SLO classes on" } else { "" },
                 if live { " | LIVE threaded runtime" } else { "" }
             );
+            if ladder {
+                println!("degradation ladder armed: full / pruned-40 / pruned-88-small");
+            }
 
             // The open-loop trace is only needed when not closed-loop.
             let trace = if closed.is_none() {
@@ -462,8 +486,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             };
             use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
             use gemmini_edge::serving::{
-                AutoscaleConfig, Autoscaler, Backend, BatchPolicy, ClockMode, DrainOrder,
-                GemminiDevice, LiveConfig, ShardPool, ShedPolicy, SimConfig, TargetUtilization,
+                AdmissionPolicy, AutoscaleConfig, Autoscaler, Backend, BatchPolicy, ClockMode,
+                DrainOrder, GemminiDevice, LiveConfig, ShardPool, ShedPolicy, SimConfig,
+                TargetUtilization, VariantLadder,
             };
             let cat = ScenarioCatalog::standard();
             if args.iter().any(|a| a == "--list") {
@@ -514,14 +539,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(1.0)
                 .max(1e-3);
+            let ladder = args.iter().any(|a| a == "--ladder");
 
             let w = ScenarioWorkload::generate(&sc.scaled(load), seed);
             println!(
-                "scenario '{}' (load ×{load:.1}, seed {seed}): {} cameras | {} frames over {:.0} s{}",
+                "scenario '{}' (load ×{load:.1}, seed {seed}): {} cameras | {} frames over {:.0} s{}{}",
                 w.scenario.name,
                 w.scenario.cameras,
                 w.trace.len(),
                 w.scenario.horizon_s,
+                if ladder { " | degradation ladder armed" } else { "" },
                 if live { " | LIVE threaded runtime" } else { "" }
             );
 
@@ -534,6 +561,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 arg_val(&args, "--tuning-cache").as_ref(),
             );
             let tuning = engine.tune_graph(&g, 2);
+            let rungs = ladder.then(|| VariantLadder::paper_ladder(&mut engine, 96, 2));
             let mut pool = ShardPool::paper_boards(&tuning, DEFAULT_DISPATCH_S);
 
             let cfg = SimConfig {
@@ -542,6 +570,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 shed: ShedPolicy::DropOldest,
                 slo_s: 0.200,
                 work_stealing: !live,
+                admission: match rungs {
+                    Some(l) => AdmissionPolicy::Degrade(l),
+                    None => AdmissionPolicy::Open,
+                },
                 ..Default::default()
             };
             let r = if live {

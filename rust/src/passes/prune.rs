@@ -41,11 +41,38 @@ type Mask = Vec<bool>;
 pub fn prune_step(g: &Graph, fraction: f64, baseline_params: usize) -> (Graph, PruneReport) {
     assert!((0.0..1.0).contains(&fraction));
     // ---- protected convs: those feeding BoxDecode (detection heads). ----
-    let consumers = g.consumers();
+    // A head's channel count is load-bearing (anchors × (5 + classes)),
+    // and a BoxDecode input is not always a conv directly: YOLO-style
+    // graphs route branches through Concat, where pruning any feeding
+    // conv silently shifts the decode's channel slices. Walk the full
+    // upstream slice — through concats (all inputs) and shape-preserving
+    // ops — and protect every conv whose output channels reach a head.
     let mut protected = vec![false; g.nodes.len()];
-    for n in &g.nodes {
-        if matches!(n.op, Op::BoxDecode { .. }) {
-            protected[n.inputs[0]] = true;
+    let mut stack: Vec<NodeId> = g
+        .nodes
+        .iter()
+        .filter(|n| matches!(n.op, Op::BoxDecode { .. }))
+        .map(|n| n.inputs[0])
+        .collect();
+    while let Some(id) = stack.pop() {
+        if protected[id] {
+            continue;
+        }
+        protected[id] = true;
+        let n = g.node(id);
+        match n.op {
+            // A conv re-establishes its own channel count: the walk stops.
+            Op::Conv2d { .. } => {}
+            // Every concat input contributes a channel slice to the head.
+            Op::Concat => stack.extend(n.inputs.iter().copied()),
+            // Channel-preserving ops forward their producer's channels.
+            Op::MaxPool2d { .. }
+            | Op::Upsample { .. }
+            | Op::Activation { .. }
+            | Op::Quantize
+            | Op::Dequantize
+            | Op::Reshape => stack.push(n.inputs[0]),
+            _ => {}
         }
     }
 
@@ -58,15 +85,13 @@ pub fn prune_step(g: &Graph, fraction: f64, baseline_params: usize) -> (Graph, P
     let mut filters: Vec<Filter> = Vec::new();
     let mut conv_oc: HashMap<NodeId, usize> = HashMap::new();
     for n in &g.nodes {
-        let Op::Conv2d { out_channels, kernel, .. } = n.op else { continue };
+        let Op::Conv2d { out_channels, .. } = n.op else { continue };
         conv_oc.insert(n.id, out_channels);
         if protected[n.id] || out_channels <= 8 {
             continue;
         }
         let w = g.weights[&n.inputs[1]].as_f32().expect("float weights for pruning");
-        let per = kernel * kernel * w.len() / (out_channels * kernel * kernel);
         let fsz = w.len() / out_channels;
-        let _ = per;
         // L1 per filter, normalized by the layer mean so layers compete
         // fairly (the per-iteration layer/rate selection of [21]).
         let l1: Vec<f64> = (0..out_channels)
@@ -121,7 +146,6 @@ pub fn prune_step(g: &Graph, fraction: f64, baseline_params: usize) -> (Graph, P
             _ => vec![true; *n.output.shape.last().unwrap_or(&1)],
         };
     }
-    let _ = consumers;
 
     // ---- rebuild with filtered weights. ----
     let mut out = Graph::new(g.name.clone());
@@ -306,6 +330,60 @@ mod tests {
         let decode = p.nodes.iter().find(|n| matches!(n.op, Op::BoxDecode { .. })).unwrap();
         let head = p.node(decode.inputs[0]);
         assert_eq!(*head.output.shape.last().unwrap(), 27);
+    }
+
+    #[test]
+    fn concat_fed_detection_head_is_protected_end_to_end() {
+        // A BoxDecode fed *through a Concat* (no detect conv in between):
+        // both feeding convs carry head channel slices, so neither may be
+        // pruned — while an off-head side branch must still shrink (the
+        // protection is a slice walk, not a blanket freeze).
+        let mut rng = Rng::new(6);
+        let mut b = GraphBuilder::new("concat-head");
+        let x = b.input("x", vec![1, 8, 8, 3]);
+        let mut w = |n: usize| -> Option<Vec<f32>> {
+            Some((0..n).map(|_| rng.normal() as f32 * 0.3).collect())
+        };
+        let c1 = b.conv2d(x, 16, 1, 1, PaddingMode::Valid, ActivationKind::Relu6, w(16 * 3), None);
+        let c2 = b.conv2d(x, 16, 1, 1, PaddingMode::Valid, ActivationKind::Relu6, w(16 * 3), None);
+        let cat = b.concat(&[c1, c2]);
+        // 32 channels = 4 anchors × (5 + 3 classes).
+        let d = b.box_decode(cat, 4, 3);
+        // Prunable side branch off one of the head's feeders.
+        let side =
+            b.conv2d(c2, 32, 1, 1, PaddingMode::Valid, ActivationKind::Relu6, w(32 * 16), None);
+        let g = b.finish(&[d, side]);
+
+        let (p, r) = prune_step(&g, 0.4, g.param_count());
+        assert!(p.validate().is_ok());
+        // The head's channel count survives intact through the concat.
+        let decode = p.nodes.iter().find(|n| matches!(n.op, Op::BoxDecode { .. })).unwrap();
+        let cat_node = p.node(decode.inputs[0]);
+        assert!(matches!(cat_node.op, Op::Concat), "decode still fed by the concat");
+        assert_eq!(*cat_node.output.shape.last().unwrap(), 32, "head channels corrupted");
+        for &i in &cat_node.inputs {
+            assert_eq!(
+                *p.node(i).output.shape.last().unwrap(),
+                16,
+                "a concat-fed head conv was pruned"
+            );
+        }
+        // Teeth: the off-head branch really was pruned.
+        assert!(r.removed_filters > 0, "nothing pruned — the test lost its teeth");
+        let side_conv = p
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Conv2d { .. }) && !cat_node.inputs.contains(&n.id))
+            .expect("side branch survives");
+        assert!(
+            *side_conv.output.shape.last().unwrap() < 32,
+            "the prunable side branch must shrink"
+        );
+        // The pruned graph still executes and decodes.
+        let mut rng = Rng::new(7);
+        let input = Value::new(vec![1, 8, 8, 3], (0..192).map(|_| rng.f64() as f32).collect());
+        let out = Interpreter::new(&p).run(&[input]);
+        assert!(!out[0].f.is_empty());
     }
 
     #[test]

@@ -189,6 +189,21 @@ pub fn fleet_table(r: &FleetReport) -> String {
             );
         }
     }
+    // The degradation ladder: per-variant serve counts and the
+    // fleet-level effective accuracy (only `AdmissionPolicy::Degrade`
+    // runs carry them).
+    if !r.variants.is_empty() {
+        s += "| Variant            | Served | Nominal mAP |\n";
+        for v in &r.variants {
+            s += &format!("| {:<18} | {:>6} | {:>11.4} |\n", v.name, v.served, v.map);
+        }
+        if let Some(eff) = r.effective_accuracy {
+            s += &format!(
+                "ladder: effective accuracy {:.4} over {} offered (sheds score 0)\n",
+                eff, r.offered
+            );
+        }
+    }
     // Scenario accuracy: what the shed rate cost in detection/tracking
     // terms (only scenario-driven runs attach one).
     if let Some(sc) = &r.scenario {
@@ -368,6 +383,8 @@ mod tests {
             classes: Vec::new(),
             energy: EnergyLedger::empty(),
             scenario: None,
+            variants: Vec::new(),
+            effective_accuracy: None,
         }
     }
 
@@ -472,6 +489,26 @@ mod tests {
         assert!(s.contains("| peak"), "{s}");
         // Plain fleet runs stay scenario-free.
         assert!(!fleet_table(&sample_fleet_report()).contains("scenario"), "{s}");
+    }
+
+    #[test]
+    fn fleet_table_renders_ladder_variants() {
+        use crate::serving::metrics::VariantServe;
+        let mut r = sample_fleet_report();
+        r.variants = vec![
+            VariantServe { name: "yolov7-tiny-full".into(), served: 700, map: 0.86 },
+            VariantServe { name: "pruned-40".into(), served: 150, map: 0.79 },
+            VariantServe { name: "pruned-88-small".into(), served: 50, map: 0.68 },
+        ];
+        // 700*0.86 + 150*0.79 + 50*0.68 over 1000 offered (100 sheds score 0).
+        r.effective_accuracy = Some(0.7545);
+        let s = fleet_table(&r);
+        assert!(s.contains("| Variant"), "{s}");
+        assert!(s.contains("pruned-88-small"), "{s}");
+        assert!(s.contains("0.6800"), "{s}");
+        assert!(s.contains("effective accuracy 0.7545 over 1000 offered"), "{s}");
+        // Ladder-less runs render no variant section.
+        assert!(!fleet_table(&sample_fleet_report()).contains("Variant"), "{s}");
     }
 
     #[test]

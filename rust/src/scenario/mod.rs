@@ -42,5 +42,6 @@ pub use catalog::{
     camera_homography, Dropout, FrameTruth, Scenario, ScenarioCatalog, ScenarioWorkload, Segment,
 };
 pub use pipeline::{
-    evaluate_scenario, run_scenario_autoscaled, run_scenario_des, run_scenario_live,
+    evaluate_scenario, evaluate_scenario_with, run_scenario_autoscaled, run_scenario_des,
+    run_scenario_live,
 };

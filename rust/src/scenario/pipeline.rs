@@ -22,6 +22,7 @@ use crate::postproc::bbox::Detection;
 use crate::postproc::map::{mean_average_precision, GroundTruth};
 use crate::serving::autoscale::Autoscaler;
 use crate::serving::device::Backend;
+use crate::serving::ladder::VariantLadder;
 use crate::serving::live::{serve_live_logged, LiveConfig};
 use crate::serving::metrics::{FleetReport, RegimeReport, ScenarioReport};
 use crate::serving::shard::ShardPool;
@@ -38,8 +39,26 @@ const GATE_M: f64 = 2.0;
 
 /// Score one run's outcomes against the workload's ground truth.
 /// `outcomes` must cover the whole trace in id order — what the logged
-/// drivers return.
+/// drivers return. Every served frame is scored with the full model's
+/// detector head; runs under
+/// [`AdmissionPolicy::Degrade`](crate::serving::AdmissionPolicy::Degrade)
+/// should use [`evaluate_scenario_with`] so degraded frames are scored
+/// with their rung's own head.
 pub fn evaluate_scenario(w: &ScenarioWorkload, outcomes: &[RequestOutcome]) -> ScenarioReport {
+    evaluate_scenario_with(w, outcomes, None)
+}
+
+/// As [`evaluate_scenario`], scoring each served frame with the detector
+/// head of the [`VariantLadder`] rung it was served at — the measured
+/// mAP reflects what was *actually served*, not the full model's
+/// ceiling. Rung 0 is the default head, so with `None` (or a log where
+/// every rung is 0) this is bit-identical to [`evaluate_scenario`]; the
+/// offline ceiling always uses the full model's head.
+pub fn evaluate_scenario_with(
+    w: &ScenarioWorkload,
+    outcomes: &[RequestOutcome],
+    ladder: Option<&VariantLadder>,
+) -> ScenarioReport {
     assert_eq!(
         outcomes.len(),
         w.trace.len(),
@@ -48,13 +67,30 @@ pub fn evaluate_scenario(w: &ScenarioWorkload, outcomes: &[RequestOutcome]) -> S
     assert!(outcomes.iter().enumerate().all(|(i, o)| o.id == i as u64), "outcomes in id order");
 
     let detector = SyntheticDetector::new(w.seed);
+    // One calibrated head per rung (rung 0 shares the offline head's
+    // default config; deeper rungs miss more and localize worse).
+    let rung_detectors: Vec<SyntheticDetector> = ladder
+        .map(|l| {
+            l.rungs
+                .iter()
+                .map(|r| SyntheticDetector { seed: w.seed, cfg: r.detector.clone() })
+                .collect()
+        })
+        .unwrap_or_default();
     let n = w.frames.len();
     let mut gts: Vec<Vec<GroundTruth>> = Vec::with_capacity(n);
     let mut offline: Vec<Vec<Detection>> = Vec::with_capacity(n);
     let mut served: Vec<Vec<Detection>> = Vec::with_capacity(n);
     for (f, o) in w.frames.iter().zip(outcomes) {
         let dets = detector.detect(f.camera, f.frame_idx, &f.truths);
-        served.push(if o.shed { Vec::new() } else { dets.clone() });
+        served.push(if o.shed {
+            Vec::new()
+        } else if o.rung > 0 && !rung_detectors.is_empty() {
+            let k = (o.rung as usize).min(rung_detectors.len() - 1);
+            rung_detectors[k].detect(f.camera, f.frame_idx, &f.truths)
+        } else {
+            dets.clone()
+        });
         offline.push(dets);
         gts.push(f.truths.clone());
     }
@@ -160,7 +196,7 @@ pub fn run_scenario_des(
     cfg: &SimConfig,
 ) -> FleetReport {
     let (mut report, outcomes) = simulate_logged(pool, &w.trace, cfg);
-    report.scenario = Some(evaluate_scenario(w, &outcomes));
+    report.scenario = Some(evaluate_scenario_with(w, &outcomes, cfg.admission.ladder()));
     report
 }
 
@@ -173,7 +209,7 @@ pub fn run_scenario_autoscaled(
     factory: &mut dyn FnMut(usize) -> Box<dyn Backend>,
 ) -> FleetReport {
     let (mut report, outcomes) = simulate_autoscaled_logged(pool, &w.trace, cfg, auto, factory);
-    report.scenario = Some(evaluate_scenario(w, &outcomes));
+    report.scenario = Some(evaluate_scenario_with(w, &outcomes, cfg.admission.ladder()));
     report
 }
 
@@ -186,7 +222,7 @@ pub fn run_scenario_live(
     live: &LiveConfig,
 ) -> FleetReport {
     let (mut report, outcomes) = serve_live_logged(pool, &w.trace, cfg, live);
-    report.scenario = Some(evaluate_scenario(w, &outcomes));
+    report.scenario = Some(evaluate_scenario_with(w, &outcomes, cfg.admission.ladder()));
     report
 }
 
@@ -254,6 +290,7 @@ mod tests {
                     camera: r.camera,
                     t_s: r.arrival_s + dt,
                     shed: r.id % 7 == 0,
+                    rung: 0,
                 })
                 .collect()
         };
@@ -262,5 +299,36 @@ mod tests {
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
         assert!(a.frames_shed > 0);
         assert!(a.map < a.offline_map, "shedding must cost mAP");
+    }
+
+    #[test]
+    fn degraded_rungs_score_between_full_and_shed() {
+        let cat = ScenarioCatalog::standard();
+        let w = ScenarioWorkload::generate(cat.get("day-night").unwrap(), 9);
+        let ladder = VariantLadder::standard();
+        let mk = |rung: u8, shed: bool| -> Vec<RequestOutcome> {
+            w.trace
+                .iter()
+                .map(|r| RequestOutcome {
+                    id: r.id,
+                    camera: r.camera,
+                    t_s: r.arrival_s + 0.01,
+                    shed,
+                    rung,
+                })
+                .collect()
+        };
+        // All-rung-0 with a ladder is bit-identical to the plain path.
+        let full = evaluate_scenario_with(&w, &mk(0, false), Some(&ladder));
+        let base = evaluate_scenario(&w, &mk(0, false));
+        assert_eq!(format!("{full:?}"), format!("{base:?}"));
+        // A fully degraded run loses accuracy — but far less than
+        // losing the frames outright.
+        let deep = evaluate_scenario_with(&w, &mk(2, false), Some(&ladder));
+        let all_shed = evaluate_scenario_with(&w, &mk(2, true), Some(&ladder));
+        assert!(deep.map < full.map, "deep rung {} !< full {}", deep.map, full.map);
+        assert!(deep.map > all_shed.map, "served-degraded {} !> shed {}", deep.map, all_shed.map);
+        // The offline ceiling is always the full model's head.
+        assert_eq!(deep.offline_map.to_bits(), full.offline_map.to_bits());
     }
 }

@@ -12,6 +12,7 @@ use std::collections::VecDeque;
 
 use crate::pipeline::{OverflowPolicy, Topic};
 
+use super::ladder::VariantLadder;
 use super::{Request, SloClass};
 
 /// What to do when a bounded queue is full.
@@ -134,6 +135,12 @@ pub enum AdmissionPolicy {
     /// [`super::metrics::ClassReport::quota_shed`]) before it can
     /// displace queued work of any class.
     ClassQuota(ClassQuota),
+    /// Graceful degradation: every arrival is admitted at the rung of
+    /// the carried [`VariantLadder`] selected by the routed queue's fill
+    /// fraction — a loaded fleet serves a cheaper, slightly less
+    /// accurate variant *before* the shed policy ever has to evict.
+    /// Sheds still happen when even the deepest rung cannot keep up.
+    Degrade(VariantLadder),
 }
 
 impl AdmissionPolicy {
@@ -141,8 +148,19 @@ impl AdmissionPolicy {
     /// immutable — both drivers clone the buckets at start of run).
     pub(super) fn runtime_quota(&self) -> Option<ClassQuota> {
         match self {
-            AdmissionPolicy::Open => None,
+            AdmissionPolicy::Open | AdmissionPolicy::Degrade(_) => None,
             AdmissionPolicy::ClassQuota(q) => Some(q.clone()),
+        }
+    }
+
+    /// The degradation ladder, when this policy carries one. Both
+    /// drivers consult it at admission (rung stamping) and dispatch
+    /// (mixed-batch service time); `None` means every request is served
+    /// at rung 0, bit-identical to the pre-ladder behavior.
+    pub fn ladder(&self) -> Option<&VariantLadder> {
+        match self {
+            AdmissionPolicy::Degrade(l) => Some(l),
+            _ => None,
         }
     }
 }
@@ -212,11 +230,11 @@ mod tests {
     use crate::serving::SloClass;
 
     fn req(id: u64, t: f64) -> Request {
-        Request { id, camera: 0, arrival_s: t, objects: 1, class: SloClass::Standard }
+        Request { id, camera: 0, arrival_s: t, objects: 1, class: SloClass::Standard, rung: 0 }
     }
 
     fn classed(id: u64, class: SloClass) -> Request {
-        Request { id, camera: 0, arrival_s: id as f64, objects: 1, class }
+        Request { id, camera: 0, arrival_s: id as f64, objects: 1, class, rung: 0 }
     }
 
     #[test]

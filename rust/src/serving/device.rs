@@ -75,6 +75,17 @@ pub struct GemminiDevice {
     batch_cap: usize,
 }
 
+/// Split a tuned single-frame latency into the per-batch weight pass and
+/// the per-frame remainder, flooring compute at 5% of the frame —
+/// DDR-dominated schedules are legal, a *negative* remainder is not.
+/// Returns the floored per-frame time and whether `weights_s` was
+/// inconsistent with the frame latency (`weights_s >= frame_s`, i.e. the
+/// clamp is masking a modeling bug rather than absorbing a DDR-heavy but
+/// self-consistent split).
+pub(crate) fn split_frame_s(frame_s: f64, weights_s: f64) -> (f64, bool) {
+    ((frame_s - weights_s).max(frame_s * 0.05), weights_s >= frame_s)
+}
+
 impl GemminiDevice {
     /// Build a device from a tuned model on a config. The weight volume
     /// comes from the tuned layers' GEMM shapes (`k×n` int8 weights per
@@ -93,7 +104,23 @@ impl GemminiDevice {
         let frame_s = tuning.latency_s(&config, true);
         // The single-frame latency includes one weight pass; everything
         // else (compute, activation movement) repeats per frame.
-        let per_frame_s = (frame_s - weights_s).max(frame_s * 0.05);
+        let (per_frame_s, inconsistent) = split_frame_s(frame_s, weights_s);
+        if inconsistent {
+            // `weights_s >= frame_s` means the DDR model claims the
+            // weight stream alone outlasts the whole tuned inference —
+            // the two models disagree. The floor keeps the device usable,
+            // but quietly clamping would hide the modeling bug.
+            debug_assert!(
+                weights_s < frame_s,
+                "{label}: weight-stream time {weights_s:.6} s >= tuned frame latency \
+                 {frame_s:.6} s — the DDR model and the tuned latency are inconsistent"
+            );
+            eprintln!(
+                "warning: {label}: weight-stream time {weights_s:.6} s exceeds the tuned \
+                 frame latency {frame_s:.6} s; flooring per-frame compute at 5% — check \
+                 ddr_gbs against the tuning's DMA model"
+            );
+        }
         let compute_util = tuning.utilization(&config, true);
         let gop = frame_gop(tuning);
         // Batch activations must fit the accumulator working set; a
@@ -542,6 +569,30 @@ mod tests {
         let t = tune_graph(&cfg, &g, 1);
         let frame_s = t.latency_s(&cfg, true);
         (GemminiDevice::from_tuning("zcu102", Board::Zcu102, cfg, &t, DEFAULT_DISPATCH_S), frame_s)
+    }
+
+    #[test]
+    fn split_frame_flags_weight_stream_exceeding_frame_latency() {
+        // Consistent split: remainder survives untouched, no flag.
+        let (p, bad) = split_frame_s(0.010, 0.002);
+        assert!((p - 0.008).abs() < 1e-15);
+        assert!(!bad);
+        // DDR-dominated but self-consistent: the 5% floor engages
+        // (remainder 2% < floor) without flagging an inconsistency.
+        let (p, bad) = split_frame_s(0.010, 0.0098);
+        assert_eq!(p, 0.010 * 0.05);
+        assert!(!bad);
+        // Boundary: weights_s == frame_s leaves zero compute — already
+        // an inconsistency, not a legal DDR-bound schedule.
+        let (p, bad) = split_frame_s(0.010, 0.010);
+        assert_eq!(p, 0.010 * 0.05);
+        assert!(bad);
+        // Past the boundary the floor masks a *negative* remainder —
+        // exactly the case `from_tuning` must surface instead of
+        // clamping quietly.
+        let (p, bad) = split_frame_s(0.010, 0.012);
+        assert_eq!(p, 0.010 * 0.05);
+        assert!(bad);
     }
 
     #[test]

@@ -1,0 +1,349 @@
+//! Graceful-degradation ladder: accuracy-aware multi-variant serving.
+//!
+//! The paper maps an accuracy/latency trade twice — input-size sweep
+//! (Fig. 3) and iterative pruning (Fig. 4) — but a classic serving fleet
+//! only ever trades latency for *dropped frames*. A [`VariantLadder`]
+//! gives every backend a ladder of model variants (full / pruned /
+//! reduced-input-resolution), each with its own per-frame speedup and its
+//! own calibrated synthetic-detector head, and
+//! [`AdmissionPolicy::Degrade`](super::AdmissionPolicy::Degrade) steps a
+//! request down the ladder as queue pressure grows — *before* any shed
+//! decision. A degraded frame is served (cheaper, slightly less accurate)
+//! instead of evicted (worth nothing), so under overload the fleet's
+//! effective accuracy falls gently along the Pareto frontier instead of
+//! cliff-dropping with the shed rate.
+//!
+//! Determinism contract (what makes the live-vs-DES differential harness
+//! apply unchanged): rung selection is a pure function of the routed
+//! queue's depth at admission — the DES reads `queue.len()`, the live
+//! front door reads the same shard's depth counter, and in the zero-shed
+//! regime both observe identical values at identical virtual instants.
+//! Rung 0 *is* the base variant: speedup 1, the default detector config —
+//! so a `Degrade` run that never crosses a threshold is bit-identical to
+//! `AdmissionPolicy::Open`, and `scenario::evaluate_scenario`'s offline
+//! ceiling stays the rung-0 detector regardless of what was served.
+//!
+//! Mixed-batch service time: batching devices are affine in batch size
+//! (`batch_latency_s(n) = intercept + n × marginal` for both
+//! [`GemminiDevice`](super::GemminiDevice) and
+//! [`BaselineDevice`](super::BaselineDevice)), so a degraded frame can
+//! only shrink the *marginal* term — the dispatch/weight-stream intercept
+//! is paid by the invocation, not the frame. [`batch_service_s`]
+//! subtracts `marginal × (1 − 1/speedup)` per degraded frame, which keeps
+//! service time ≥ the intercept, monotone in batch composition, and
+//! exactly `batch_latency_s(n)` when every frame is rung 0.
+//!
+//! [`batch_service_s`]: VariantLadder::batch_service_s
+
+use crate::dataset::detector::SyntheticDetectorConfig;
+use crate::scheduler::TuningEngine;
+
+use super::device::Backend;
+use super::metrics::VariantServe;
+use super::Request;
+
+/// One rung of the ladder: a servable model variant.
+#[derive(Debug, Clone)]
+pub struct LadderRung {
+    /// Display name (`full`, `pruned-40`, …).
+    pub name: String,
+    /// Per-frame speedup over the base variant (≥ 1; rung 0 is exactly 1).
+    pub speedup: f64,
+    /// Calibrated synthetic-detector head for this variant — what
+    /// `scenario::evaluate_scenario` scores when a frame was served at
+    /// this rung. Rung 0 must be the default config (the offline ceiling).
+    pub detector: SyntheticDetectorConfig,
+    /// Nominal standalone mAP of the variant (Fig. 3/4 operating point).
+    /// Reporting only: scenario runs measure the served accuracy for
+    /// real; this feeds the fleet-level figure when no scenario ran.
+    pub nominal_map: f64,
+}
+
+/// A ladder of model variants plus the queue-pressure thresholds that
+/// step requests down it. Carried by
+/// [`AdmissionPolicy::Degrade`](super::AdmissionPolicy::Degrade).
+#[derive(Debug, Clone)]
+pub struct VariantLadder {
+    /// Rung 0 = the full model; higher rungs are progressively cheaper
+    /// and less accurate.
+    pub rungs: Vec<LadderRung>,
+    /// Pressure thresholds, ascending, one per step down:
+    /// `queued / queue_depth >= thresholds[k]` serves rung ≥ `k + 1`.
+    pub thresholds: Vec<f64>,
+}
+
+impl VariantLadder {
+    /// Validate the ladder's invariants (called by every constructor;
+    /// public so hand-built ladders can self-check).
+    pub fn validate(&self) {
+        assert!(!self.rungs.is_empty(), "a ladder needs at least the base rung");
+        assert_eq!(
+            self.thresholds.len(),
+            self.rungs.len() - 1,
+            "one threshold per step down the ladder"
+        );
+        assert_eq!(self.rungs[0].speedup, 1.0, "rung 0 must be the base variant");
+        for w in self.thresholds.windows(2) {
+            assert!(w[0] < w[1], "thresholds must ascend: {:?}", self.thresholds);
+        }
+        for (i, r) in self.rungs.iter().enumerate() {
+            assert!(r.speedup >= 1.0, "rung {i} ({}) slower than base", r.name);
+            assert!((0.0..=1.0).contains(&r.nominal_map), "rung {i} nominal mAP");
+        }
+    }
+
+    /// The standard three-rung ladder at the paper's Fig. 4 operating
+    /// points, with analytic speedups — no tuning required, so tests and
+    /// benches construct it cheaply. [`paper_ladder`](Self::paper_ladder)
+    /// replaces the speedups with tuned measurements.
+    pub fn standard() -> Self {
+        let l = Self {
+            rungs: vec![
+                LadderRung {
+                    name: "full".into(),
+                    speedup: 1.0,
+                    detector: SyntheticDetectorConfig::default(),
+                    nominal_map: 0.86,
+                },
+                LadderRung {
+                    name: "pruned-40".into(),
+                    speedup: 1.5,
+                    detector: SyntheticDetectorConfig {
+                        miss_rate: 0.12,
+                        fp_rate: 0.33,
+                        center_jitter: 0.013,
+                        size_jitter: 0.10,
+                        score_sigma: 0.10,
+                        confusion: 0.07,
+                        ..Default::default()
+                    },
+                    nominal_map: 0.79,
+                },
+                LadderRung {
+                    name: "pruned-88-small".into(),
+                    speedup: 2.25,
+                    detector: SyntheticDetectorConfig {
+                        miss_rate: 0.20,
+                        fp_rate: 0.38,
+                        center_jitter: 0.018,
+                        size_jitter: 0.14,
+                        score_sigma: 0.13,
+                        confusion: 0.10,
+                        ..Default::default()
+                    },
+                    nominal_map: 0.68,
+                },
+            ],
+            thresholds: vec![0.5, 0.8],
+        };
+        l.validate();
+        l
+    }
+
+    /// The tuned ladder: the standard rungs with speedups *measured* by
+    /// the cycle model through a shared cache-backed [`TuningEngine`] —
+    /// the base model at `size`, `Pruned40` at `size` (Fig. 4 first
+    /// operating point), and `Pruned88` at a 2/3-resolution input
+    /// snapped to a multiple of 32 (Fig. 3 machinery). Replicas tuning
+    /// through the same engine (or the same `--tuning-cache` file) are
+    /// warm hits, so a fleet of N ladders costs one search.
+    pub fn paper_ladder(engine: &mut TuningEngine, size: usize, measure_k: usize) -> Self {
+        use crate::workload::{yolov7_tiny, ModelVariant};
+        let cfg = engine.config().clone();
+        let mut latency = |size: usize, v: ModelVariant| -> f64 {
+            let mut g = yolov7_tiny(size, v, 80);
+            crate::passes::replace_activations(&mut g);
+            engine.tune_graph(&g, measure_k).latency_s(&cfg, true)
+        };
+        let base = latency(size, ModelVariant::Base);
+        let p40 = latency(size, ModelVariant::Pruned40);
+        let small = (size * 2 / 3 / 32 * 32).max(32);
+        let p88 = latency(small, ModelVariant::Pruned88);
+        let mut l = Self::standard();
+        l.rungs[1].speedup = (base / p40).max(1.0);
+        l.rungs[2].name = format!("pruned-88@{small}");
+        l.rungs[2].speedup = (base / p88).max(1.0);
+        l.validate();
+        l
+    }
+
+    /// Number of rungs.
+    pub fn len(&self) -> usize {
+        self.rungs.len()
+    }
+
+    /// `true` when only the base rung exists (degradation disabled).
+    pub fn is_empty(&self) -> bool {
+        self.rungs.len() <= 1
+    }
+
+    /// Per-frame speedup of a rung (out-of-range clamps to the deepest).
+    pub fn speedup(&self, rung: u8) -> f64 {
+        let i = (rung as usize).min(self.rungs.len() - 1);
+        self.rungs[i].speedup
+    }
+
+    /// The rung a request admitted against a queue holding `queued` of
+    /// `queue_depth` slots is served at: the number of thresholds at or
+    /// below the queue's fill fraction. Pure function of the observed
+    /// depth — the DES and the live front door compute it identically.
+    pub fn rung_for(&self, queued: usize, queue_depth: usize) -> u8 {
+        let pressure = queued as f64 / queue_depth.max(1) as f64;
+        self.thresholds.iter().filter(|&&t| pressure >= t).count() as u8
+    }
+
+    /// Service time of a mixed-variant batch on `backend`: the full-model
+    /// batch latency minus `marginal × (1 − 1/speedup)` per degraded
+    /// frame, where `marginal = batch_latency_s(2) − batch_latency_s(1)`
+    /// is the device's exact per-frame slope (both device models are
+    /// affine in batch size). All-rung-0 batches cost exactly
+    /// `batch_latency_s(n)`, bit for bit.
+    pub fn batch_service_s(&self, backend: &dyn Backend, batch: &[Request]) -> f64 {
+        let full = backend.batch_latency_s(batch.len());
+        if self.is_empty() {
+            return full;
+        }
+        let marginal = backend.batch_latency_s(2) - backend.batch_latency_s(1);
+        let saved: f64 =
+            batch.iter().map(|r| marginal * (1.0 - 1.0 / self.speedup(r.rung))).sum();
+        full - saved
+    }
+
+    /// Per-variant serve rows for the fleet report: rung names zipped
+    /// with the metrics' per-rung completion counters (missing counters
+    /// read 0; overflow counts — rungs beyond the ladder — fold into the
+    /// deepest rung, matching [`speedup`](Self::speedup)'s clamp).
+    pub fn variant_serves(&self, served: &[u64]) -> Vec<VariantServe> {
+        let mut rows: Vec<VariantServe> = self
+            .rungs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| VariantServe {
+                name: r.name.clone(),
+                served: served.get(i).copied().unwrap_or(0),
+                map: r.nominal_map,
+            })
+            .collect();
+        if served.len() > self.rungs.len() {
+            let overflow: u64 = served[self.rungs.len()..].iter().sum();
+            rows.last_mut().expect("validated non-empty").served += overflow;
+        }
+        rows
+    }
+
+    /// Fleet-level effective accuracy from nominal operating points:
+    /// `Σ served_k × nominal_map_k / offered` — a shed frame contributes
+    /// zero. Scenario runs report the *measured* analogue
+    /// (`ScenarioReport::map`); this figure makes plain fleet runs
+    /// comparable without ground truth.
+    pub fn effective_accuracy(&self, served: &[u64], offered: u64) -> f64 {
+        if offered == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .variant_serves(served)
+            .iter()
+            .map(|v| v.served as f64 * v.map)
+            .sum();
+        sum / offered as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{BaselineDevice, SloClass};
+    use super::*;
+    use crate::baselines::Platform;
+
+    fn req(rung: u8) -> Request {
+        Request {
+            id: 0,
+            camera: 0,
+            arrival_s: 0.0,
+            objects: 1,
+            class: SloClass::Standard,
+            rung,
+        }
+    }
+
+    fn dev() -> BaselineDevice {
+        let p =
+            Platform { name: "lad-dev", overhead_s: 5e-3, sustained_gops: 100.0, power_w: 10.0 };
+        BaselineDevice::new(p, 0.5, 16)
+    }
+
+    #[test]
+    fn standard_ladder_validates_and_rungs_monotone() {
+        let l = VariantLadder::standard();
+        assert_eq!(l.len(), 3);
+        for w in l.rungs.windows(2) {
+            assert!(w[1].speedup > w[0].speedup, "speedup must grow down the ladder");
+            assert!(w[1].nominal_map < w[0].nominal_map, "accuracy must fall down the ladder");
+        }
+    }
+
+    #[test]
+    fn rung_selection_follows_queue_pressure() {
+        let l = VariantLadder::standard();
+        assert_eq!(l.rung_for(0, 16), 0);
+        assert_eq!(l.rung_for(7, 16), 0); // 43.75% < 50%
+        assert_eq!(l.rung_for(8, 16), 1); // exactly 50%
+        assert_eq!(l.rung_for(12, 16), 1); // 75% < 80%
+        assert_eq!(l.rung_for(13, 16), 2); // 81.25%
+        assert_eq!(l.rung_for(16, 16), 2);
+        // Degenerate depth never divides by zero.
+        assert_eq!(l.rung_for(5, 0), 2);
+    }
+
+    #[test]
+    fn base_batches_cost_exactly_the_backend_latency() {
+        let l = VariantLadder::standard();
+        let d = dev();
+        for n in [1usize, 3, 8] {
+            let batch: Vec<Request> = (0..n).map(|_| req(0)).collect();
+            assert_eq!(
+                l.batch_service_s(&d, &batch).to_bits(),
+                d.batch_latency_s(n).to_bits(),
+                "all-base batch of {n} must be bit-identical to the plain latency"
+            );
+        }
+    }
+
+    #[test]
+    fn degraded_batches_save_marginal_time_and_keep_the_intercept() {
+        let l = VariantLadder::standard();
+        let d = dev();
+        let full = l.batch_service_s(&d, &[req(0), req(0), req(0), req(0)]);
+        let mixed = l.batch_service_s(&d, &[req(0), req(1), req(2), req(0)]);
+        let deep = l.batch_service_s(&d, &[req(2), req(2), req(2), req(2)]);
+        assert!(mixed < full, "degrading frames must shorten the batch");
+        assert!(deep < mixed, "deeper rungs must save more");
+        // The intercept (dispatch overhead) is per-invocation: even a
+        // fully degraded batch costs more than the overhead alone.
+        let marginal = d.batch_latency_s(2) - d.batch_latency_s(1);
+        let intercept = d.batch_latency_s(1) - marginal;
+        assert!(deep > intercept, "service {deep} fell below the intercept {intercept}");
+        // Out-of-range rungs clamp to the deepest.
+        assert_eq!(
+            l.batch_service_s(&d, &[req(9)]).to_bits(),
+            l.batch_service_s(&d, &[req(2)]).to_bits()
+        );
+    }
+
+    #[test]
+    fn effective_accuracy_weighs_serves_and_charges_sheds() {
+        let l = VariantLadder::standard();
+        // 60 full + 30 pruned-40 + 10 deep served of 120 offered
+        // (20 shed): sheds score zero.
+        let eff = l.effective_accuracy(&[60, 30, 10], 120);
+        let expect = (60.0 * 0.86 + 30.0 * 0.79 + 10.0 * 0.68) / 120.0;
+        assert!((eff - expect).abs() < 1e-12);
+        // All served at rung 0 ⇒ the nominal base accuracy.
+        assert!((l.effective_accuracy(&[100, 0, 0], 100) - 0.86).abs() < 1e-12);
+        assert_eq!(l.effective_accuracy(&[0, 0, 0], 0), 0.0);
+        // Overflow counters fold into the deepest rung.
+        let rows = l.variant_serves(&[1, 2, 3, 4]);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[2].served, 7);
+    }
+}

@@ -52,6 +52,7 @@ use super::admission::ClassQuota;
 use super::autoscale::{ScaleEventKind, ScalingEvent};
 use super::batcher::{BatchPolicy, Decision};
 use super::device::Backend;
+use super::ladder::VariantLadder;
 use super::metrics::{EnergyLedger, FleetMetrics, FleetReport};
 use super::shard::{Lifecycle, ShardPool};
 use super::sim::SimConfig;
@@ -347,6 +348,11 @@ struct ShardRuntime {
     topic: Arc<SharedTopic<Request>>,
     shared: Arc<ShardShared>,
     policy: BatchPolicy,
+    /// The run's degradation ladder, when
+    /// [`AdmissionPolicy::Degrade`](super::AdmissionPolicy::Degrade) is
+    /// in force — mixed-batch service times use it exactly as the DES
+    /// does.
+    ladder: Option<VariantLadder>,
     /// [`BatchPolicy::effective_cap`] for this backend: the refill
     /// headroom, so the worker never buffers more than one closable
     /// batch and the topic keeps playing the DES's bounded queue.
@@ -403,6 +409,7 @@ impl ShardRuntime {
                 let mut m = self.metrics.lock().expect("metrics lock");
                 for r in &batch {
                     m.record_completion(self.idx, done_at - r.arrival_s, r.class);
+                    m.record_variant(r.rung);
                 }
             }
             {
@@ -413,6 +420,7 @@ impl ShardRuntime {
                         camera: r.camera,
                         t_s: done_at,
                         shed: false,
+                        rung: r.rung,
                     });
                 }
             }
@@ -440,7 +448,11 @@ impl ShardRuntime {
         match self.policy.decide(&self.local, now, self.backend.max_batch()) {
             Decision::Dispatch(n) => {
                 let batch: Vec<Request> = self.local.drain(..n).collect();
-                let service = self.backend.batch_latency_s(batch.len());
+                // Same mixed-batch service model as the DES dispatch.
+                let service = match &self.ladder {
+                    Some(l) => l.batch_service_s(self.backend.as_ref(), &batch),
+                    None => self.backend.batch_latency_s(batch.len()),
+                };
                 self.accrue(now, false);
                 self.busy = true;
                 self.busy_until = now + service;
@@ -545,7 +557,7 @@ impl FrontDoor<'_> {
     /// least-outstanding-work routing, then the per-class overflow
     /// policy through the topic. Returns the shard to nudge when the
     /// message was delivered.
-    fn admit(&mut self, req: Request, now: f64) -> Option<usize> {
+    fn admit(&mut self, mut req: Request, now: f64) -> Option<usize> {
         self.offered += 1;
         self.offered_by_class[req.class.index()] += 1;
         if let Some(q) = self.quota.as_mut() {
@@ -556,6 +568,7 @@ impl FrontDoor<'_> {
                     camera: req.camera,
                     t_s: now,
                     shed: true,
+                    rung: req.rung,
                 });
                 return None;
             }
@@ -571,9 +584,18 @@ impl FrontDoor<'_> {
                 best = i;
             }
         }
+        // Degradation rung from the routed shard's undispatched depth —
+        // the same observable the DES reads from its routed queue at
+        // the same point in the admission sequence.
+        if let Some(l) = self.cfg.admission.ladder() {
+            req.rung = l.rung_for(
+                self.shared[best].queued.load(Ordering::SeqCst),
+                self.cfg.queue_depth,
+            );
+        }
         let policy = self.cfg.shed.overflow_for(req.class);
         let class = req.class;
-        let (id, camera) = (req.id, req.camera);
+        let (id, camera, rung) = (req.id, req.camera, req.rung);
         match self.topics[best].try_publish(req, policy) {
             PublishOutcome::Delivered => {
                 self.shared[best].queued.fetch_add(1, Ordering::SeqCst);
@@ -589,6 +611,7 @@ impl FrontDoor<'_> {
                     camera: old.camera,
                     t_s: now,
                     shed: true,
+                    rung: old.rung,
                 });
                 Some(best)
             }
@@ -599,6 +622,7 @@ impl FrontDoor<'_> {
                     camera,
                     t_s: now,
                     shed: true,
+                    rung,
                 });
                 None
             }
@@ -675,6 +699,7 @@ pub fn serve_live_logged(
             topic: topics[i].clone(),
             shared: shared[i].clone(),
             policy: cfg.batch,
+            ladder: cfg.admission.ladder().cloned(),
             cap: cfg.batch.effective_cap(backends[i].max_batch()),
             local: VecDeque::new(),
             in_flight: Vec::new(),
@@ -827,6 +852,10 @@ pub fn serve_live_logged(
         d.state = "retired";
     }
     report.energy = ledger;
+    if let Some(l) = cfg.admission.ladder() {
+        report.variants = l.variant_serves(&metrics.variant_served);
+        report.effective_accuracy = Some(l.effective_accuracy(&metrics.variant_served, offered));
+    }
     let Ok(outcomes) = Arc::try_unwrap(outcomes) else { unreachable!("workers joined") };
     let mut outcomes = outcomes.into_inner().expect("outcomes lock");
     outcomes.sort_by_key(|o| o.id);

@@ -347,6 +347,19 @@ pub struct ScenarioReport {
     pub regimes: Vec<RegimeReport>,
 }
 
+/// Completions served at one rung of a
+/// [`VariantLadder`](super::ladder::VariantLadder) (fleet-wide).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantServe {
+    /// The rung's display name (`full`, `pruned-40`, …).
+    pub name: String,
+    /// Requests completed at this rung.
+    pub served: u64,
+    /// The rung's nominal standalone mAP (reporting context; scenario
+    /// runs carry the *measured* figure in [`ScenarioReport::map`]).
+    pub map: f64,
+}
+
 /// Fleet-level summary of one simulated run.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
@@ -385,6 +398,14 @@ pub struct FleetReport {
     /// Accuracy-in-the-loop results when the run was driven by the
     /// scenario pipeline; `None` for plain serving runs.
     pub scenario: Option<ScenarioReport>,
+    /// Per-variant serve counts when the run used
+    /// [`AdmissionPolicy::Degrade`](super::AdmissionPolicy::Degrade);
+    /// empty otherwise.
+    pub variants: Vec<VariantServe>,
+    /// Fleet-level effective accuracy under the ladder's nominal
+    /// operating points: `Σ served_k × map_k / offered` (a shed frame
+    /// scores zero). `None` without a ladder.
+    pub effective_accuracy: Option<f64>,
 }
 
 impl FleetReport {
@@ -445,6 +466,9 @@ pub struct FleetMetrics {
     pub(super) slo_s: f64,
     pub(super) slo_violations: u64,
     pub(super) per_device: Vec<DeviceStats>,
+    /// Completions per ladder rung (index = rung; grows on demand, so a
+    /// ladder-less run never allocates past rung 0).
+    pub(super) variant_served: Vec<u64>,
     /// Per-class streams, indexed like [`SloClass::ALL`].
     per_class: Vec<ClassStats>,
     /// Rolling per-epoch window the autoscaler observes.
@@ -463,6 +487,7 @@ impl FleetMetrics {
             per_device: (0..n_devices)
                 .map(|_| DeviceStats { busy_s: 0.0, completed: 0, batches: 0, stolen: 0 })
                 .collect(),
+            variant_served: Vec::new(),
             per_class: SloClass::ALL
                 .iter()
                 .map(|_| ClassStats {
@@ -506,6 +531,16 @@ impl FleetMetrics {
         self.per_device[device].batches += 1;
         self.per_device[device].busy_s += service_s;
         self.epoch_busy_s += service_s;
+    }
+
+    /// Record the ladder rung a completion was served at (rung 0 = the
+    /// full model — also what every request reads without a ladder).
+    pub fn record_variant(&mut self, rung: u8) {
+        let i = rung as usize;
+        if self.variant_served.len() <= i {
+            self.variant_served.resize(i + 1, 0);
+        }
+        self.variant_served[i] += 1;
     }
 
     pub fn record_shed(&mut self, class: SloClass) {
@@ -619,6 +654,8 @@ impl FleetMetrics {
             classes: self.class_reports(),
             energy: EnergyLedger::empty(),
             scenario: None,
+            variants: Vec::new(),
+            effective_accuracy: None,
         }
     }
 }
@@ -752,6 +789,81 @@ mod tests {
         l.served_gop = 28.0;
         assert!((l.fleet_gops_per_w() - 28.0 / total).abs() < 1e-12);
         assert_eq!(EnergyLedger::empty().fleet_gops_per_w(), 0.0);
+    }
+
+    /// The quantile's bin midpoint is a *closed form* of the bin index
+    /// (`lo · ratio^i · √ratio`), not a running product accumulated bin
+    /// by bin — so it carries no per-step multiplication drift (the
+    /// PR 6 `postproc::map` bug class). Pin it bit-for-bit.
+    #[test]
+    fn quantile_midpoint_is_the_closed_form_of_the_bin_index() {
+        let mut h = LatencyHistogram::new();
+        // Two samples around 10 ms that straddle their bin's geometric
+        // midpoint, so the min/max clamp leaves the midpoint untouched.
+        let i = h.index(0.010);
+        let mid = h.lo * h.ratio.powi(i as i32) * h.ratio.sqrt();
+        let (lo_edge, hi_edge) = (h.lo * h.ratio.powi(i as i32), h.lo * h.ratio.powi(i as i32 + 1));
+        let (a, b) = (lo_edge * 1.001, hi_edge * 0.999);
+        assert!(a < mid && mid < b, "samples must straddle the midpoint");
+        assert_eq!(h.index(a), i);
+        assert_eq!(h.index(b), i);
+        h.record(a);
+        h.record(b);
+        for q in [0.01, 0.50, 0.99] {
+            assert_eq!(
+                h.quantile(q).to_bits(),
+                mid.to_bits(),
+                "q{q} must be the exact closed-form midpoint"
+            );
+        }
+        // Same closed form deep into the histogram (bin 400 ≈ 66 s):
+        // powi(400), not 400 chained multiplies.
+        let mut h2 = LatencyHistogram::new();
+        let edge400 = h2.lo * h2.ratio.powi(400);
+        h2.record(edge400 * 1.001);
+        h2.record(edge400 * 1.039);
+        assert_eq!(h2.index(edge400 * 1.001), 400);
+        assert_eq!(h2.index(edge400 * 1.039), 400);
+        let mid2 = edge400 * h2.ratio.sqrt();
+        assert_eq!(h2.quantile(0.5).to_bits(), mid2.to_bits());
+    }
+
+    /// Ledger bin edges are the *closed form* `(bin+1) · epoch_s`
+    /// recomputed per bin from the integer index — not a running
+    /// `t += epoch_s` — so long accruals stay exact. With a power-of-two
+    /// epoch every full bin's energy is exactly representable: assert
+    /// bitwise, no tolerance.
+    #[test]
+    fn ledger_accrual_is_exact_over_thousands_of_bins() {
+        let mut l = EnergyLedger::new(0.5);
+        // 8 W from 0 to 2048.25 s: 4096 full bins of exactly 4 J plus a
+        // final half-filled bin of exactly 2 J.
+        l.accrue(0, Lifecycle::Active, 0.0, 2048.25, 8.0);
+        assert_eq!(l.epochs.len(), 4097);
+        for (i, b) in l.epochs.iter().take(4096).enumerate() {
+            assert_eq!(b.active_j.to_bits(), 4.0f64.to_bits(), "bin {i} drifted");
+        }
+        assert_eq!(l.epochs[4096].active_j.to_bits(), 2.0f64.to_bits());
+        // Per-device and per-epoch views agree exactly: every addend is
+        // an exactly-representable small value.
+        assert_eq!(l.per_device_j[0], 8.0 * 2048.25);
+        // A second accrual landing deep in the run splits on the same
+        // exact edges: [4000.25, 4000.5) and [4000.5, 4001.0) at 2 W.
+        let mut l2 = EnergyLedger::new(0.5);
+        l2.accrue(0, Lifecycle::Draining, 4000.25, 4001.0, 2.0);
+        assert_eq!(l2.epochs[8000].draining_j.to_bits(), 0.5f64.to_bits());
+        assert_eq!(l2.epochs[8001].draining_j.to_bits(), 1.0f64.to_bits());
+        assert_eq!(l2.epochs[..8000].iter().map(EpochEnergy::total_j).sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn variant_counters_grow_on_demand() {
+        let mut m = FleetMetrics::new(1, 0.1);
+        assert!(m.variant_served.is_empty(), "no allocation before the first completion");
+        m.record_variant(0);
+        m.record_variant(2);
+        m.record_variant(2);
+        assert_eq!(m.variant_served, vec![1, 0, 2]);
     }
 
     #[test]

@@ -26,6 +26,10 @@
 //! - [`admission`] — bounded per-device queues with shed policies
 //!   (generalizing [`crate::pipeline::Topic`]'s overflow handling;
 //!   [`ShedPolicy::ClassAware`] sheds the lowest [`SloClass`] first);
+//! - [`ladder`] — the graceful-degradation [`VariantLadder`]: full /
+//!   pruned / reduced-resolution model variants served by queue
+//!   pressure under [`AdmissionPolicy::Degrade`], so overload costs
+//!   accuracy gradually instead of shedding frames outright;
 //! - [`autoscale`] — closed-loop pool sizing between DES epochs
 //!   (target-utilization and p99-SLO-tracking policies, modeled
 //!   provisioning delay, energy-aware drain ordering);
@@ -53,6 +57,7 @@ pub mod admission;
 pub mod autoscale;
 pub mod batcher;
 pub mod device;
+pub mod ladder;
 pub mod live;
 pub mod metrics;
 pub mod shard;
@@ -60,6 +65,7 @@ pub mod sim;
 
 pub use crate::scenario;
 pub use admission::{AdmissionPolicy, ClassQuota, ShedPolicy};
+pub use ladder::{LadderRung, VariantLadder};
 pub use autoscale::{
     AutoscaleConfig, Autoscaler, DrainOrder, ScaleAction, ScaleEventKind, ScalePolicy,
     ScalingEvent, SloTracking, TargetUtilization,
@@ -69,7 +75,7 @@ pub use live::{serve_live, serve_live_logged, ClockMode, LiveConfig};
 pub use device::{capacity_fps, Backend, BaselineDevice, CatalogEntry, DeviceCatalog, GemminiDevice};
 pub use metrics::{
     ClassReport, EnergyLedger, EpochEnergy, FleetReport, LatencyHistogram, RegimeReport,
-    ScenarioReport,
+    ScenarioReport, VariantServe,
 };
 pub use shard::{Lifecycle, ShardPool};
 pub use sim::{
@@ -180,6 +186,11 @@ pub struct RequestOutcome {
     /// True if the request was shed (quota, queue overflow, or eviction)
     /// instead of served.
     pub shed: bool,
+    /// The [`VariantLadder`] rung the request was served at (0 = the
+    /// full model; always 0 without [`AdmissionPolicy::Degrade`]). The
+    /// scenario pipeline scores the rung's own detector head, so the
+    /// measured accuracy reflects what was actually served.
+    pub rung: u8,
 }
 
 /// One inference request: a camera frame arriving at the fleet front door.
@@ -197,6 +208,10 @@ pub struct Request {
     /// The latency class the frame is admitted, batched, shed and judged
     /// under.
     pub class: SloClass,
+    /// The degradation rung stamped at admission (0 = full model).
+    /// [`AdmissionPolicy::Degrade`] raises it with queue pressure; every
+    /// other policy leaves it 0.
+    pub rung: u8,
 }
 
 #[cfg(test)]
@@ -228,6 +243,7 @@ mod tests {
                 arrival_s: i as f64,
                 objects: 1,
                 class: SloClass::Standard,
+                rung: 0,
             })
             .collect();
         assign_slo_classes(&mut trace);

@@ -123,6 +123,7 @@ pub fn poisson_trace(rate_hz: f64, horizon_s: f64, seed: u64) -> Vec<Request> {
             arrival_s: t,
             objects: 1,
             class: SloClass::Standard,
+            rung: 0,
         });
     }
     out
@@ -158,6 +159,7 @@ pub fn multi_camera_trace(
                 arrival_s: t,
                 objects,
                 class: SloClass::Standard,
+                rung: 0,
             });
             if objects as f64 > midpoint {
                 let t2 = t + 0.1 * period;
@@ -168,6 +170,7 @@ pub fn multi_camera_trace(
                         arrival_s: t2,
                         objects,
                         class: SloClass::Standard,
+                        rung: 0,
                     });
                 }
             }
@@ -267,7 +270,7 @@ impl Arrivals<'_> {
                 *next_id += 1;
                 let class =
                     if cl.classed { SloClass::for_camera(i) } else { SloClass::Standard };
-                Some(Request { id, camera: i, arrival_s: t, objects: 1, class })
+                Some(Request { id, camera: i, arrival_s: t, objects: 1, class, rung: 0 })
             }
         }
     }
@@ -324,6 +327,7 @@ fn settle(
                 let batch = std::mem::take(&mut pool.devices[i].in_flight);
                 for r in batch {
                     metrics.record_completion(i, done_at - r.arrival_s, r.class);
+                    metrics.record_variant(r.rung);
                     done.push((r, done_at, false));
                 }
                 pool.devices[i].busy = false;
@@ -348,7 +352,13 @@ fn settle(
             let cap = d.backend.max_batch();
             if let Decision::Dispatch(n) = cfg.batch.decide(&d.queue, now, cap) {
                 let batch: Vec<Request> = d.queue.drain(..n).collect();
-                let service = d.backend.batch_latency_s(batch.len());
+                // Degraded frames shrink the batch's marginal cost; with
+                // no ladder (or an all-rung-0 batch) this is bit-exactly
+                // the backend's plain batch latency.
+                let service = match cfg.admission.ladder() {
+                    Some(l) => l.batch_service_s(d.backend.as_ref(), &batch),
+                    None => d.backend.batch_latency_s(batch.len()),
+                };
                 d.busy = true;
                 d.free_at = now + service;
                 d.in_flight = batch;
@@ -489,7 +499,7 @@ fn drive(
 
         // 1. Admit every arrival due by `now`: token buckets first, then
         // routing + the bounded queue's shed policy.
-        while let Some(req) = arrivals.pop_due(now) {
+        while let Some(mut req) = arrivals.pop_due(now) {
             offered += 1;
             offered_by_class[req.class.index()] += 1;
             if let Some(q) = quota.as_mut() {
@@ -501,6 +511,12 @@ fn drive(
             }
             let idx = pool.route(now);
             let d = &mut pool.devices[idx];
+            // Degradation rung from the routed queue's fill fraction,
+            // stamped before the shed policy runs — the live front door
+            // reads the same shard's depth counter at the same point.
+            if let Some(l) = cfg.admission.ladder() {
+                req.rung = l.rung_for(d.queue.len(), cfg.queue_depth);
+            }
             match admit(&mut d.queue, cfg.queue_depth, cfg.shed, req.clone()) {
                 Admission::Admitted => {}
                 Admission::AdmittedEvicted(old) => {
@@ -522,7 +538,7 @@ fn drive(
             }
         }
         for (r, t, shed) in done.drain(..) {
-            outcomes.push(RequestOutcome { id: r.id, camera: r.camera, t_s: t, shed });
+            outcomes.push(RequestOutcome { id: r.id, camera: r.camera, t_s: t, shed, rung: r.rung });
             arrivals.on_done(&r, t);
         }
 
@@ -666,6 +682,10 @@ fn drive(
         c.offered = offered_by_class[i];
     }
     report.energy = ledger;
+    if let Some(l) = cfg.admission.ladder() {
+        report.variants = l.variant_serves(&metrics.variant_served);
+        report.effective_accuracy = Some(l.effective_accuracy(&metrics.variant_served, offered));
+    }
     // Outcomes in trace order, not completion order (batch completions
     // interleave): the scenario pipeline indexes them by request id.
     outcomes.sort_by_key(|o| o.id);
@@ -918,6 +938,7 @@ mod tests {
                         arrival_s: 0.0,
                         objects: 1,
                         class: SloClass::Standard,
+                        rung: 0,
                     });
             }
             pool

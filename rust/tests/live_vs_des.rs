@@ -29,6 +29,13 @@
 //! - **Quota sheds, exactly**: admission token buckets run *before*
 //!   routing in both drivers and both clocks tick the same arrival
 //!   times, so per-class quota-shed counts are equal, not just close.
+//! - **The degradation ladder, exactly, when nothing sheds**: rungs are
+//!   stamped from queue depth at admission, and in the zero-shed regime
+//!   both paths admit and dispatch in the same (time, participant)
+//!   order — so rung stamps, mixed-batch service times, per-variant
+//!   serve counts and effective accuracy are all bit-equal. Under
+//!   overload the ladder's counting statistics stay within the same 5%
+//!   band as everything else.
 
 use gemmini_edge::baselines::Platform;
 use gemmini_edge::dataset::scenes::SceneConfig;
@@ -36,7 +43,7 @@ use gemmini_edge::report::fleet_table;
 use gemmini_edge::serving::{
     assign_slo_classes, multi_camera_trace, poisson_trace, serve_live, simulate, AdmissionPolicy,
     BaselineDevice, BatchPolicy, ClassQuota, FleetReport, LiveConfig, ShardPool, ShedPolicy,
-    SimConfig, SloClass,
+    SimConfig, SloClass, VariantLadder,
 };
 
 /// The invariant-suite synthetic device: `overhead_ms` per invocation +
@@ -257,6 +264,104 @@ fn quota_sheds_agree_exactly_between_live_and_des() {
                 dc.class
             );
         }
+    }
+}
+
+/// The ladder under *pressure without sheds*: a 900 FPS burst against a
+/// queue deep enough (388) that nothing is ever evicted, but shallow
+/// enough that pressure crosses both rung thresholds. Rung stamps are a
+/// pure function of queue depth at admission, and with zero sheds both
+/// paths replay the identical admission/dispatch history — so the two
+/// reports agree bit-for-bit: per-variant serve counts, effective
+/// accuracy, and every latency quantile. The deepest rung must actually
+/// engage (mirror-validated: ≥7 pruned-88 serves on every seed), or the
+/// test would pass vacuously with an idle ladder.
+#[test]
+fn ladder_matches_des_exactly_when_nothing_sheds() {
+    for seed in 0..20u64 {
+        let trace = poisson_trace(900.0, 1.0, 3000 + seed);
+        let c = SimConfig {
+            admission: AdmissionPolicy::Degrade(VariantLadder::standard()),
+            ..cfg(388, ShedPolicy::DropOldest, 0.008)
+        };
+        let des = simulate(&mut pool2(), &trace, &c);
+        let live = serve_live(pool2(), &trace, &c, &LiveConfig::virtual_clock());
+        conserve(&des, trace.len() as u64, "des");
+        conserve(&live, trace.len() as u64, "live");
+        assert_eq!(des.shed, 0, "seed {seed}: the 388-deep DES queue must not shed");
+        assert_eq!(live.shed, 0, "seed {seed}: the 388-deep live queue must not shed");
+        assert_eq!(des.completed, live.completed, "seed {seed}");
+        for (d, l) in des.devices.iter().zip(&live.devices) {
+            assert_eq!(d.completed, l.completed, "seed {seed}: per-device split");
+            assert_eq!(d.batches, l.batches, "seed {seed}: batch count");
+        }
+        assert_eq!(des.p50_s.to_bits(), live.p50_s.to_bits(), "seed {seed}: p50");
+        assert_eq!(des.p95_s.to_bits(), live.p95_s.to_bits(), "seed {seed}: p95");
+        assert_eq!(des.p99_s.to_bits(), live.p99_s.to_bits(), "seed {seed}: p99");
+        assert_eq!(des.max_s.to_bits(), live.max_s.to_bits(), "seed {seed}: max");
+        assert!(
+            (des.makespan_s - live.makespan_s).abs() < 1e-9,
+            "seed {seed}: makespan {} vs {}",
+            des.makespan_s,
+            live.makespan_s
+        );
+        assert_eq!(des.variants.len(), 3, "seed {seed}: three rungs must report");
+        for (dv, lv) in des.variants.iter().zip(&live.variants) {
+            assert_eq!(dv.name, lv.name, "seed {seed}: rung names");
+            assert_eq!(dv.served, lv.served, "seed {seed}: rung {} serve count", dv.name);
+        }
+        assert!(
+            des.variants[1].served > 0 && des.variants[2].served > 0,
+            "seed {seed}: both degraded rungs must engage (served {:?})",
+            des.variants.iter().map(|v| v.served).collect::<Vec<_>>()
+        );
+        let (de, le) = (
+            des.effective_accuracy.expect("des ladder reports effective accuracy"),
+            live.effective_accuracy.expect("live ladder reports effective accuracy"),
+        );
+        assert_eq!(de.to_bits(), le.to_bits(), "seed {seed}: effective accuracy {de} vs {le}");
+    }
+}
+
+/// The ladder under genuine overload (1000 FPS into a 16-deep queue):
+/// sheds and eviction timing may drift between the paths, so this is a
+/// band test — completed, makespan and effective accuracy within 5%,
+/// both paths heavily shedding AND serving mostly from the deepest
+/// rung, and each path's per-variant serves re-summing to its own
+/// completed count.
+#[test]
+fn ladder_tracks_des_within_bands_under_overload() {
+    for seed in 0..8u64 {
+        let trace = poisson_trace(1000.0, 1.0, 5000 + seed);
+        let c = SimConfig {
+            admission: AdmissionPolicy::Degrade(VariantLadder::standard()),
+            ..cfg(16, ShedPolicy::DropOldest, 0.008)
+        };
+        let des = simulate(&mut pool2(), &trace, &c);
+        let live = serve_live(pool2(), &trace, &c, &LiveConfig::virtual_clock());
+        conserve(&des, trace.len() as u64, "des");
+        conserve(&live, trace.len() as u64, "live");
+        let rel = (live.completed as f64 - des.completed as f64).abs()
+            / des.completed.max(1) as f64;
+        assert!(rel <= 0.05, "seed {seed}: completed rel {rel:.4}");
+        let mrel = (live.makespan_s - des.makespan_s).abs() / des.makespan_s.max(1e-9);
+        assert!(mrel <= 0.05, "seed {seed}: makespan rel {mrel:.4}");
+        for (r, path) in [(&des, "des"), (&live, "live")] {
+            assert!(r.shed > 100, "seed {seed}: {path} must be overloaded (shed {})", r.shed);
+            let served: u64 = r.variants.iter().map(|v| v.served).sum();
+            assert_eq!(served, r.completed, "seed {seed}: {path} variant serves");
+            assert!(
+                r.variants[2].served > 100,
+                "seed {seed}: {path} must serve mostly from the deep rung ({:?})",
+                r.variants.iter().map(|v| v.served).collect::<Vec<_>>()
+            );
+        }
+        let (de, le) = (
+            des.effective_accuracy.expect("des effective accuracy"),
+            live.effective_accuracy.expect("live effective accuracy"),
+        );
+        let erel = (le - de).abs() / de.max(1e-12);
+        assert!(erel <= 0.05, "seed {seed}: effective accuracy {le} vs {de} (rel {erel:.4})");
     }
 }
 

@@ -26,6 +26,10 @@
 //!   byte-identical across reruns and across 1/2/4 worker threads (the
 //!   property that makes `tests/live_vs_des.rs`'s differential oracle
 //!   sound).
+//! - **Degradation-ladder ordering**: stepping requests down the
+//!   variant ladder never sheds more than open admission on the same
+//!   trace, fleet effective accuracy is monotone non-increasing in
+//!   offered load, and ladder runs are byte-deterministic.
 
 use gemmini_edge::baselines::Platform;
 use gemmini_edge::dataset::scenes::SceneConfig;
@@ -35,6 +39,7 @@ use gemmini_edge::serving::{
     AutoscaleConfig, Autoscaler, Backend, BaselineDevice, BatchPolicy, ClassQuota,
     ClosedLoopConfig, DeviceCatalog, DrainOrder, FleetReport, LatencyHistogram, LiveConfig,
     Request, ShardPool, ShedPolicy, SimConfig, SloClass, SloTracking, TargetUtilization,
+    VariantLadder,
 };
 use gemmini_edge::util::{prop, Rng};
 
@@ -611,6 +616,129 @@ fn live_virtual_reports_are_thread_invariant_and_reproducible() {
                 "seed {seed}: {threads} worker threads changed the live report"
             );
         }
+    }
+}
+
+/// The degradation ladder can only *replace* sheds with cheaper serves:
+/// stepping a request down a rung shrinks its batch's service time, so
+/// queues drain at least as fast as under open admission and the ladder
+/// never sheds more than `AdmissionPolicy::Open` does on the same trace
+/// — from genuine underload (where neither sheds) through 4.5× overload.
+/// The ladder is also internally consistent: exactly three rungs, the
+/// per-variant serve counts re-sum to the fleet's completed count, and
+/// effective accuracy is a proper fraction — while the open run reports
+/// no variants at all.
+#[test]
+fn degrade_ladder_sheds_no_more_than_open_admission() {
+    for seed in 0..20u64 {
+        let rate = [150.0, 250.0, 350.0, 450.0][seed as usize % 4];
+        let trace = poisson_trace(rate, 2.0, seed);
+        let mk_pool = || {
+            let mut pool = ShardPool::new();
+            pool.register(Box::new(device(5.0, 5.0, 16)));
+            pool
+        };
+        let base = SimConfig {
+            batch: BatchPolicy::new(4, 0.010),
+            queue_depth: 16,
+            shed: ShedPolicy::DropOldest,
+            slo_s: 0.100,
+            work_stealing: false,
+            ..Default::default()
+        };
+        let open = simulate(&mut mk_pool(), &trace, &base);
+        let deg_cfg = SimConfig {
+            admission: AdmissionPolicy::Degrade(VariantLadder::standard()),
+            ..base.clone()
+        };
+        let deg = simulate(&mut mk_pool(), &trace, &deg_cfg);
+        check_report(&open, trace.len() as u64).unwrap();
+        check_report(&deg, trace.len() as u64).unwrap();
+        assert!(
+            deg.shed <= open.shed,
+            "seed {seed} rate {rate}: ladder shed {} > open shed {}",
+            deg.shed,
+            open.shed
+        );
+        assert!(open.variants.is_empty(), "seed {seed}: open run must report no variants");
+        assert_eq!(open.effective_accuracy, None, "seed {seed}");
+        assert_eq!(deg.variants.len(), 3, "seed {seed}: standard ladder has 3 rungs");
+        let served: u64 = deg.variants.iter().map(|v| v.served).sum();
+        assert_eq!(
+            served, deg.completed,
+            "seed {seed}: per-variant serves must re-sum to completed"
+        );
+        let eff = deg.effective_accuracy.expect("ladder runs report effective accuracy");
+        assert!((0.0..=1.0).contains(&eff), "seed {seed}: effective accuracy {eff} out of range");
+    }
+}
+
+/// Fleet effective accuracy is monotone non-increasing in offered load:
+/// compressing the same Poisson trace by 1×, 1.5×, 2.25× and 3.375×
+/// (dividing arrival times, so the request *mix* is held fixed) pushes
+/// more requests down the ladder and eventually into sheds, and the
+/// per-run effective-accuracy figure must never rise along the sweep.
+#[test]
+fn effective_accuracy_degrades_monotonically_with_load() {
+    for seed in 0..12u64 {
+        let base_trace = poisson_trace(160.0, 2.0, 4000 + seed);
+        let mut prev: Option<f64> = None;
+        for m in [1.0, 1.5, 2.25, 3.375] {
+            let mut trace = base_trace.clone();
+            for req in trace.iter_mut() {
+                req.arrival_s /= m;
+            }
+            let mut pool = ShardPool::new();
+            pool.register(Box::new(device(5.0, 5.0, 16)));
+            let cfg = SimConfig {
+                batch: BatchPolicy::new(4, 0.010),
+                queue_depth: 16,
+                shed: ShedPolicy::DropOldest,
+                admission: AdmissionPolicy::Degrade(VariantLadder::standard()),
+                slo_s: 0.100,
+                work_stealing: false,
+                ..Default::default()
+            };
+            let r = simulate(&mut pool, &trace, &cfg);
+            check_report(&r, trace.len() as u64).unwrap();
+            let eff = r.effective_accuracy.expect("ladder runs report effective accuracy");
+            if let Some(p) = prev {
+                assert!(
+                    eff <= p + 1e-12,
+                    "seed {seed}: effective accuracy rose from {p} to {eff} at {m}x load"
+                );
+            }
+            prev = Some(eff);
+        }
+    }
+}
+
+/// Ladder runs are byte-deterministic like every other policy: same
+/// trace + same `Degrade` config ⇒ byte-identical reports (variant
+/// counts and effective accuracy included), across 20 seeds spanning
+/// underload to heavy overload.
+#[test]
+fn ladder_reports_are_byte_identical_across_reruns() {
+    for seed in 0..20u64 {
+        let rate = [150.0, 250.0, 350.0, 450.0][seed as usize % 4];
+        let trace = poisson_trace(rate, 2.0, seed);
+        let run = || {
+            let mut pool = ShardPool::new();
+            pool.register(Box::new(device(5.0, 5.0, 16)));
+            let cfg = SimConfig {
+                batch: BatchPolicy::new(4, 0.010),
+                queue_depth: 16,
+                shed: ShedPolicy::DropOldest,
+                admission: AdmissionPolicy::Degrade(VariantLadder::standard()),
+                slo_s: 0.100,
+                work_stealing: false,
+                ..Default::default()
+            };
+            simulate(&mut pool, &trace, &cfg)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "ladder run diverged at seed {seed}");
     }
 }
 
