@@ -3,24 +3,26 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy fmt fmt-drift featurecheck targetscheck perfsmoke energysmoke livesmoke scenariosmoke artifacts fleet
+.PHONY: check build test clippy fmt fmt-drift featurecheck targetscheck perfsmoke energysmoke livesmoke scenariosmoke chaossmoke artifacts fleet
 
 # The perf smoke gate (`perfsmoke`), the energy smoke gate
-# (`energysmoke`), the live-runtime smoke gate (`livesmoke`) and the
-# scenario-accuracy smoke gate (`scenariosmoke`) are enforced by
-# `check` through the `test` target: `cargo test -q` runs the gate
-# assertions
+# (`energysmoke`), the live-runtime smoke gate (`livesmoke`), the
+# scenario-accuracy smoke gate (`scenariosmoke`) and the fault-recovery
+# chaos gate (`chaossmoke`) are enforced by `check` through the `test`
+# target: `cargo test -q` runs the gate assertions
 # (tests/tuning_cache.rs::perf_smoke_memoized_instruction_budget,
 # tests/energy_ledger.rs::hetero_policy_never_picks_dominated_device,
-# tests/live_vs_des.rs::live_smoke_wall_clock and
-# tests/scenario_accuracy.rs::scenario_smoke_both_drivers, plus the rest
+# tests/live_vs_des.rs::live_smoke_wall_clock,
+# tests/scenario_accuracy.rs::scenario_smoke_both_drivers and
+# tests/fault_recovery.rs::chaos_smoke_wall_clock, plus the rest
 # of the differential live-vs-DES harness, the per-class properties in
-# tests/serving_invariants.rs and the accuracy-in-the-loop properties in
-# tests/scenario_accuracy.rs), so a memoization, device-selection,
-# live-runtime or accuracy regression fails `make check` without
-# re-running the suite's heaviest tests twice. `make perfsmoke` /
-# `make energysmoke` / `make livesmoke` / `make scenariosmoke` run the
-# gates alone.
+# tests/serving_invariants.rs, the accuracy-in-the-loop properties in
+# tests/scenario_accuracy.rs and the exactly-once fault accounting in
+# tests/fault_recovery.rs), so a memoization, device-selection,
+# live-runtime, accuracy or recovery regression fails `make check`
+# without re-running the suite's heaviest tests twice. `make perfsmoke`
+# / `make energysmoke` / `make livesmoke` / `make scenariosmoke` /
+# `make chaossmoke` run the gates alone.
 check: build test clippy fmt-drift featurecheck targetscheck
 
 build:
@@ -109,6 +111,16 @@ livesmoke:
 # `make check` via the `test` target.)
 scenariosmoke:
 	$(CARGO) test -q --test scenario_accuracy scenario_smoke_both_drivers
+
+# Fault-recovery chaos gate, standalone: the live runtime under real
+# threads + wall clock with crashes, a slowdown window, spikes and link
+# drops all armed, recovery on, a finite shutdown-drain watchdog — and
+# the exactly-once audit at the end (offered == completed + shed +
+# expired, one outcome per request, both crashes detected). Timing
+# jitters under load; the ledger assertions cannot. (Also runs as part
+# of `make check` via the `test` target.)
+chaossmoke:
+	$(CARGO) test -q --test fault_recovery chaos_smoke_wall_clock
 
 # AOT-compile the JAX/Pallas detector to artifacts/ (PJRT runtime input).
 artifacts:

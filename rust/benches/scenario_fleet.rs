@@ -14,9 +14,19 @@
 //! policies must be bit-identical (the ladder never engages below its
 //! pressure thresholds). Emitted as `BENCH_ladder.json`.
 //!
-//! Emits `BENCH_scenario.json` + `BENCH_ladder.json` at the repo root
-//! (committed artifacts; byte-reproducible — every draw goes through the
-//! seeded `util::Rng` and the DES is deterministic).
+//! Experiment 3 (crash rate × recovery): steady-day and rush-hour on a
+//! fixed three-device pool with k ∈ {0, 1, 2} scheduled board crashes
+//! (device i dies at 3 + 2i s), recovery off (crashed boards keep
+//! getting routed work until the stranded frames expire at end of run)
+//! against the full recovery ladder (heartbeat detection, failover
+//! re-dispatch, reboot). At every nonzero crash count recovery must
+//! *strictly* dominate on availability (completed/offered) and measured
+//! scenario mAP; at k = 0 the two are bit-identical. Emitted as
+//! `BENCH_faults.json`.
+//!
+//! Emits `BENCH_scenario.json` + `BENCH_ladder.json` + `BENCH_faults.json`
+//! at the repo root (committed artifacts; byte-reproducible — every draw
+//! goes through the seeded `util::Rng` and the DES is deterministic).
 //!
 //! Knobs: `SC_SEED` (workload seed, default 20240710).
 
@@ -24,7 +34,8 @@ use gemmini_edge::baselines::Platform;
 use gemmini_edge::scenario::{run_scenario_autoscaled, run_scenario_des, ScenarioCatalog, ScenarioWorkload};
 use gemmini_edge::serving::{
     AdmissionPolicy, AutoscaleConfig, Autoscaler, Backend, BaselineDevice, BatchPolicy,
-    DrainOrder, ShardPool, ShedPolicy, SimConfig, TargetUtilization, VariantLadder,
+    CrashFault, DrainOrder, FaultPlan, RecoveryPolicy, ShardPool, ShedPolicy, SimConfig,
+    TargetUtilization, VariantLadder,
 };
 use gemmini_edge::util::json::Json;
 
@@ -314,4 +325,142 @@ fn main() {
     ]);
     std::fs::write("BENCH_ladder.json", lout.dump() + "\n").expect("write BENCH_ladder.json");
     println!("\nwrote BENCH_ladder.json");
+
+    // ---------------- experiment 3: crash rate × recovery -------------
+    // A fixed three-device pool loses k boards mid-run (device i crashes
+    // at 3 + 2i s). Recovery off is the honest baseline: nothing detects
+    // the crash, the router keeps feeding the dead shard, and every
+    // stranded frame expires at end of run. Recovery on arms the full
+    // ladder: heartbeat-timeout detection, failover re-dispatch with
+    // bounded backoff, reboot after `reboot_delay_s`.
+    println!("\n== fault injection: crash rate × recovery (fixed pool of 3) ==\n");
+    println!(
+        "| scenario     | crashes | recovery | avail  | shed%  | expired | mAP    | redisp | MTTR  |"
+    );
+    let mut fruns = Vec::new();
+    for name in ["steady-day", "rush-hour"] {
+        let sc = cat.get(name).expect("catalog scenario");
+        let w = ScenarioWorkload::generate(sc, seed);
+        for k in 0..=2usize {
+            for recover in [false, true] {
+                let mut plan = FaultPlan::none(seed);
+                plan.crashes = (0..k)
+                    .map(|i| CrashFault { device: i, at_s: 3.0 + 2.0 * i as f64 })
+                    .collect();
+                plan.recovery = recover.then(RecoveryPolicy::default);
+                let mut c = cfg();
+                c.faults = Some(plan);
+                let r = run_scenario_des(&w, &mut pool(3), &c);
+                let f = r.faults.as_ref().expect("fault report");
+                assert_eq!(
+                    r.offered,
+                    r.completed + r.shed + f.expired,
+                    "{name} k={k} recover={recover}: exactly-once conservation"
+                );
+                let s = r.scenario.as_ref().expect("scenario report");
+                let availability = f.availability;
+                let shed_rate = r.shed as f64 / r.offered.max(1) as f64;
+                let mode = if recover { "on" } else { "off" };
+                println!(
+                    "| {:<12} | {:>7} | {:<8} | {:>5.3} | {:>5.1}% | {:>7} | {:>6.4} | {:>6} | {:>5.3} |",
+                    name,
+                    k,
+                    mode,
+                    availability,
+                    shed_rate * 100.0,
+                    f.expired,
+                    s.map,
+                    f.redispatched,
+                    f.mttr_s
+                );
+                fruns.push(Json::obj(vec![
+                    ("scenario", Json::Str(name.to_string())),
+                    ("crashes", Json::Num(k as f64)),
+                    ("recovery", Json::Str(mode.to_string())),
+                    ("offered", Json::Num(r.offered as f64)),
+                    ("completed", Json::Num(r.completed as f64)),
+                    ("shed", Json::Num(r.shed as f64)),
+                    ("expired", Json::Num(f.expired as f64)),
+                    ("availability", Json::Num(availability)),
+                    ("shed_rate", Json::Num(shed_rate)),
+                    ("map", Json::Num(s.map)),
+                    ("offline_map", Json::Num(s.offline_map)),
+                    ("continuity", Json::Num(s.continuity)),
+                    ("detected", Json::Num(f.detected as f64)),
+                    ("retries", Json::Num(f.retries as f64)),
+                    ("redispatched", Json::Num(f.redispatched as f64)),
+                    ("duplicates_suppressed", Json::Num(f.duplicates_suppressed as f64)),
+                    ("recovered_devices", Json::Num(f.recovered_devices as f64)),
+                    ("mttr_s", Json::Num(f.mttr_s)),
+                ]));
+            }
+        }
+    }
+
+    // The experiment's claims, asserted over the artifact itself.
+    let ffind = |name: &str, k: f64, mode: &str| -> Json {
+        fruns
+            .iter()
+            .find(|j| match j {
+                Json::Obj(m) => {
+                    m["scenario"].as_str().unwrap() == name
+                        && m["crashes"].as_num().unwrap() == k
+                        && m["recovery"].as_str().unwrap() == mode
+                }
+                _ => false,
+            })
+            .cloned()
+            .expect("fault run present")
+    };
+    for name in ["steady-day", "rush-hour"] {
+        // k = 0: a crash-free plan must serve identically whether or not
+        // the recovery machinery is armed — bit for bit.
+        let off0 = ffind(name, 0.0, "off");
+        let on0 = ffind(name, 0.0, "on");
+        for key in ["availability", "map", "shed_rate", "expired"] {
+            assert_eq!(
+                get(&off0, key).to_bits(),
+                get(&on0, key).to_bits(),
+                "{name} k=0: idle recovery machinery must not change {key}"
+            );
+        }
+        // k > 0: recovery strictly dominates on availability and on
+        // measured scenario accuracy, at every crash count.
+        for k in [1.0, 2.0] {
+            let off = ffind(name, k, "off");
+            let on = ffind(name, k, "on");
+            assert!(
+                get(&on, "availability") > get(&off, "availability"),
+                "{name} k={k}: recovery-on availability {} must strictly beat {}",
+                get(&on, "availability"),
+                get(&off, "availability")
+            );
+            assert!(
+                get(&on, "map") > get(&off, "map"),
+                "{name} k={k}: recovery-on mAP {} must strictly beat {}",
+                get(&on, "map"),
+                get(&off, "map")
+            );
+            assert!(
+                get(&on, "detected") >= k && get(&on, "recovered_devices") >= k,
+                "{name} k={k}: every crash must be detected and the board rebooted"
+            );
+            assert_eq!(
+                get(&off, "detected"),
+                0.0,
+                "{name} k={k}: recovery-off must never detect anything"
+            );
+        }
+    }
+
+    let fout = Json::obj(vec![
+        ("bench", Json::Str("scenario_faults".into())),
+        ("seed", Json::Num(seed as f64)),
+        ("device", Json::Str("bench-dev 100 GOP/s, 5 ms overhead, batch<=4".into())),
+        ("pool", Json::Num(3.0)),
+        ("crash_schedule", Json::Str("device i dies at 3 + 2i s".into())),
+        ("runs", Json::Arr(fruns)),
+    ]);
+    std::fs::write("BENCH_faults.json", fout.dump() + "\n").expect("write BENCH_faults.json");
+    println!("\nwrote BENCH_faults.json");
 }

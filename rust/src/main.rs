@@ -13,9 +13,11 @@
 //!             [--epoch S] [--delay S] [--closed K] [--tuning-cache PATH]
 //!             [--hetero] [--classes] [--quota FPS] [--ladder]
 //!             [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
+//!             [--faults demo|SPEC]
 //! repro scenario [--list] [--name NAME] [--seed S] [--load F]
 //!                [--autoscale] [--max-devices N] [--tuning-cache PATH] [--ladder]
 //!                [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
+//!                [--faults demo|SPEC]
 //! ```
 //!
 //! `repro fleet --autoscale` runs the same fleet behind the closed-loop
@@ -72,6 +74,17 @@
 //! every segment's arrival rate (2.0 = double pressure, same world), and
 //! the `--autoscale` / `--live` / `--virtual-clock` switches mean what
 //! they mean on `repro fleet`.
+//!
+//! `--faults` (on `fleet` and `scenario`) arms the chaos plan
+//! (`serving::faults`): `--faults demo` injects the canned demo schedule
+//! (one crash, one slowdown window, mild spikes and link drops, recovery
+//! on); `--faults SPEC` builds a custom [`FaultPlan`] from comma-separated
+//! tokens — `crash=DEV@T`, `slow=DEV@FROM..TO*F`, `spikes=P*F`,
+//! `drops=P`, `seed=N`, `recover=on|off`, `timeout=S`, `budget=N`,
+//! `backoff=S`, `deadline=S`, `reboot=S|off`. The DES and the live
+//! runtime inject the same plan identically; the fleet table gains the
+//! fault/recovery accounting rows (crashes, detections, re-dispatches,
+//! suppressed duplicates, expirations, MTTR, availability).
 //!
 //! `repro tune --threads N` pins the engine's worker-thread count (the
 //! tuned result is byte-identical at any N); the JSON report carries the
@@ -231,8 +244,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 simulate_autoscaled_hetero, simulate_closed_loop, simulate_closed_loop_autoscaled,
                 simulate_closed_loop_autoscaled_hetero, AdmissionPolicy, AutoscaleConfig,
                 Autoscaler, Backend, BaselineDevice, BatchPolicy, ClassQuota, ClockMode,
-                ClosedLoopConfig, DeviceCatalog, DrainOrder, GemminiDevice, LiveConfig, ShardPool,
-                ShedPolicy, SimConfig, SloTracking, TargetUtilization, VariantLadder,
+                ClosedLoopConfig, DeviceCatalog, DrainOrder, FaultPlan, GemminiDevice, LiveConfig,
+                ShardPool, ShedPolicy, SimConfig, SloTracking, TargetUtilization, VariantLadder,
             };
             let cameras: usize =
                 arg_val(&args, "--cameras").and_then(|v| v.parse().ok()).unwrap_or(24);
@@ -279,6 +292,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .unwrap_or(1.0)
                 .max(1e-3);
             let virtual_clock = args.iter().any(|a| a == "--virtual-clock");
+            let faults = arg_val(&args, "--faults").and_then(|spec| {
+                let plan = if spec == "demo" {
+                    Ok(FaultPlan::demo(20240710, seconds))
+                } else {
+                    FaultPlan::parse(&spec, 20240710)
+                };
+                match plan {
+                    Ok(p) => Some(p),
+                    Err(err) => {
+                        eprintln!("warning: bad --faults spec ({err}); running fault-free");
+                        None
+                    }
+                }
+            });
             let quota: Option<f64> = arg_val(&args, "--quota").and_then(|v| v.parse().ok());
             if let Some(r) = quota {
                 if !r.is_finite() || r <= 0.0 {
@@ -340,8 +367,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     }
                     (None, None) => AdmissionPolicy::Open,
                 },
+                faults,
                 ..Default::default()
             };
+            if let Some(p) = &cfg.faults {
+                println!(
+                    "fault plan armed: {} crash(es) | {} slowdown window(s) | spikes p={:.2} | link drops p={:.2} | recovery {}",
+                    p.crashes.len(),
+                    p.slowdowns.len(),
+                    p.spike_prob,
+                    p.link_drop_prob,
+                    if p.recovery.is_some() { "on" } else { "off" }
+                );
+            }
             let mode = if let Some(k) = closed {
                 format!("closed-loop (window {k})")
             } else {
@@ -385,6 +423,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     threads: live_threads,
                     clock: if virtual_clock { ClockMode::Virtual } else { ClockMode::Wall },
                     time_scale,
+                    ..LiveConfig::default()
                 };
                 println!(
                     "live runtime: {} worker thread(s) | {} clock{}",
@@ -487,8 +526,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             use gemmini_edge::serving::device::DEFAULT_DISPATCH_S;
             use gemmini_edge::serving::{
                 AdmissionPolicy, AutoscaleConfig, Autoscaler, Backend, BatchPolicy, ClockMode,
-                DrainOrder, GemminiDevice, LiveConfig, ShardPool, ShedPolicy, SimConfig,
-                TargetUtilization, VariantLadder,
+                DrainOrder, FaultPlan, GemminiDevice, LiveConfig, ShardPool, ShedPolicy,
+                SimConfig, TargetUtilization, VariantLadder,
             };
             let cat = ScenarioCatalog::standard();
             if args.iter().any(|a| a == "--list") {
@@ -540,6 +579,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .unwrap_or(1.0)
                 .max(1e-3);
             let ladder = args.iter().any(|a| a == "--ladder");
+            let faults = arg_val(&args, "--faults").and_then(|spec| {
+                let plan = if spec == "demo" {
+                    Ok(FaultPlan::demo(seed, sc.horizon_s))
+                } else {
+                    FaultPlan::parse(&spec, seed)
+                };
+                match plan {
+                    Ok(p) => Some(p),
+                    Err(err) => {
+                        eprintln!("warning: bad --faults spec ({err}); running fault-free");
+                        None
+                    }
+                }
+            });
 
             let w = ScenarioWorkload::generate(&sc.scaled(load), seed);
             println!(
@@ -574,13 +627,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     Some(l) => AdmissionPolicy::Degrade(l),
                     None => AdmissionPolicy::Open,
                 },
+                faults,
                 ..Default::default()
             };
+            if let Some(p) = &cfg.faults {
+                println!(
+                    "fault plan armed: {} crash(es) | {} slowdown window(s) | spikes p={:.2} | link drops p={:.2} | recovery {}",
+                    p.crashes.len(),
+                    p.slowdowns.len(),
+                    p.spike_prob,
+                    p.link_drop_prob,
+                    if p.recovery.is_some() { "on" } else { "off" }
+                );
+            }
             let r = if live {
                 let lcfg = LiveConfig {
                     threads: live_threads,
                     clock: if virtual_clock { ClockMode::Virtual } else { ClockMode::Wall },
                     time_scale,
+                    ..LiveConfig::default()
                 };
                 run_scenario_live(&w, pool, &cfg, &lcfg)
             } else if autoscale {

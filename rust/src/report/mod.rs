@@ -204,6 +204,30 @@ pub fn fleet_table(r: &FleetReport) -> String {
             );
         }
     }
+    // Fault accounting: what the chaos plan injected and what the
+    // recovery machinery did about it (only `--faults` runs attach one).
+    if let Some(f) = &r.faults {
+        s += &format!(
+            "faults: {} crashes | {} slowdown windows | {} spikes | {} link drops | \
+             {} detected | availability {:.1}%\n",
+            f.injected_crashes,
+            f.slowdown_windows,
+            f.spikes,
+            f.link_drops,
+            f.detected,
+            f.availability * 100.0
+        );
+        s += &format!(
+            "recovery: {} retries | {} redispatched | {} duplicates suppressed | \
+             {} expired | {} devices recovered | MTTR {:.3} s\n",
+            f.retries,
+            f.redispatched,
+            f.duplicates_suppressed,
+            f.expired,
+            f.recovered_devices,
+            f.mttr_s
+        );
+    }
     // Scenario accuracy: what the shed rate cost in detection/tracking
     // terms (only scenario-driven runs attach one).
     if let Some(sc) = &r.scenario {
@@ -385,6 +409,7 @@ mod tests {
             scenario: None,
             variants: Vec::new(),
             effective_accuracy: None,
+            faults: None,
         }
     }
 
@@ -509,6 +534,35 @@ mod tests {
         assert!(s.contains("effective accuracy 0.7545 over 1000 offered"), "{s}");
         // Ladder-less runs render no variant section.
         assert!(!fleet_table(&sample_fleet_report()).contains("Variant"), "{s}");
+    }
+
+    #[test]
+    fn fleet_table_renders_fault_accounting() {
+        use crate::serving::faults::FaultReport;
+        let mut r = sample_fleet_report();
+        r.faults = Some(FaultReport {
+            injected_crashes: 2,
+            slowdown_windows: 1,
+            spikes: 7,
+            link_drops: 11,
+            detected: 3,
+            retries: 9,
+            redispatched: 8,
+            duplicates_suppressed: 1,
+            expired: 4,
+            recovered_devices: 2,
+            mttr_s: 1.25,
+            availability: 0.9,
+        });
+        let s = fleet_table(&r);
+        assert!(s.contains("faults: 2 crashes | 1 slowdown windows"), "{s}");
+        assert!(s.contains("11 link drops"), "{s}");
+        assert!(s.contains("availability 90.0%"), "{s}");
+        assert!(s.contains("recovery: 9 retries | 8 redispatched"), "{s}");
+        assert!(s.contains("1 duplicates suppressed"), "{s}");
+        assert!(s.contains("2 devices recovered | MTTR 1.250 s"), "{s}");
+        // Fault-free runs render no fault section.
+        assert!(!fleet_table(&sample_fleet_report()).contains("faults:"), "{s}");
     }
 
     #[test]

@@ -325,6 +325,8 @@ impl ScenarioWorkload {
                         arrival_s: t,
                         objects: truths.len(),
                         class: SloClass::Standard,
+                        rung: 0,
+                        retries: 0,
                     });
                     frames.push(FrameTruth { camera: cam, t_s: t, frame_idx, segment: seg_i, truths });
                     frame_idx += 1;

@@ -432,6 +432,37 @@ mod tests {
     }
 
     #[test]
+    fn save_is_atomic_tempfile_plus_rename() {
+        let path = std::env::temp_dir()
+            .join(format!("gemmini_edge_cache_atomic_{}.json", std::process::id()));
+        let tmp = {
+            let mut s = path.as_os_str().to_owned();
+            s.push(format!(".{}.tmp", std::process::id()));
+            PathBuf::from(s)
+        };
+        let fp = GemminiConfig::ours_zcu102().fingerprint();
+        // A crashed writer left garbage at the temp path: the next save
+        // must clobber it wholesale, not merge with it.
+        std::fs::write(&tmp, "torn half-write {{{").unwrap();
+        let mut c = TuningCache::load(&path);
+        c.insert_layer(sample_key(fp), sample_result(None));
+        c.save().unwrap();
+        assert!(!tmp.exists(), "save must consume its temp file via rename");
+        let back = TuningCache::load(&path);
+        assert_eq!(back.layer_entries(), 1);
+        // Re-save over an existing destination: the file is replaced
+        // whole (rename), never appended to or left torn.
+        let mut c2 = TuningCache::load(&path);
+        c2.insert_move(fp, 4096, 1024, 42);
+        c2.save().unwrap();
+        assert!(!tmp.exists(), "re-save must also consume its temp file");
+        let again = TuningCache::load(&path);
+        assert_eq!(again.layer_entries(), 1);
+        assert_eq!(again.move_entries(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn corrupt_and_wrong_version_files_yield_empty_cache() {
         let dir = std::env::temp_dir();
         let pid = std::process::id();

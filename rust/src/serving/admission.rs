@@ -230,11 +230,11 @@ mod tests {
     use crate::serving::SloClass;
 
     fn req(id: u64, t: f64) -> Request {
-        Request { id, camera: 0, arrival_s: t, objects: 1, class: SloClass::Standard, rung: 0 }
+        Request { id, camera: 0, arrival_s: t, objects: 1, class: SloClass::Standard, rung: 0, retries: 0 }
     }
 
     fn classed(id: u64, class: SloClass) -> Request {
-        Request { id, camera: 0, arrival_s: id as f64, objects: 1, class, rung: 0 }
+        Request { id, camera: 0, arrival_s: id as f64, objects: 1, class, rung: 0, retries: 0 }
     }
 
     #[test]

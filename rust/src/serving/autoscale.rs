@@ -283,6 +283,8 @@ pub enum ScaleEventKind {
     DrainStarted { device: usize },
     /// A draining device went idle and left service.
     Retired { device: usize },
+    /// The watchdog declared a crashed device dead (fault recovery).
+    Failed { device: usize },
 }
 
 impl fmt::Display for ScaleEventKind {
@@ -292,6 +294,7 @@ impl fmt::Display for ScaleEventKind {
             ScaleEventKind::Activated { device } => write!(f, "activate device {device}"),
             ScaleEventKind::DrainStarted { device } => write!(f, "drain device {device}"),
             ScaleEventKind::Retired { device } => write!(f, "retire device {device}"),
+            ScaleEventKind::Failed { device } => write!(f, "fail device {device}"),
         }
     }
 }

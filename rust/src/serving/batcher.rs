@@ -112,6 +112,8 @@ mod tests {
                 arrival_s: t,
                 objects: 1,
                 class: SloClass::Standard,
+                rung: 0,
+                retries: 0,
             })
             .collect()
     }

@@ -1,0 +1,501 @@
+//! Fault injection & failure recovery: crash/straggler-tolerant serving.
+//!
+//! A deployed fleet of FPGA boards fails in ways PRs 1–7 never modeled:
+//! a board crashes mid-batch (power, bitstream corruption), a board
+//! straggles (thermal throttling, DDR contention), a batch takes a
+//! one-off latency spike, a camera's uplink drops frames before the
+//! front door ever sees them. [`FaultPlan`] describes all four as a
+//! *seedable, data-independent schedule* that the DES driver
+//! ([`super::sim`]) and the live threaded runtime ([`super::live`])
+//! inject **identically**, plus the [`RecoveryPolicy`] machinery that
+//! survives it: heartbeat-timeout detection, bounded-budget
+//! deadline-aware re-dispatch with exponential backoff, failover
+//! routing that excludes unhealthy shards, and reboot-style replacement
+//! through the existing [`Lifecycle`](super::shard::Lifecycle).
+//!
+//! Determinism contract: every fault draw is a **pure function** of
+//! `(plan seed, identity)` — link drops hash the request id, latency
+//! spikes hash `(device, per-device batch ordinal)`, crash and slowdown
+//! windows are explicit `(device, time)` entries. No shared RNG stream
+//! exists whose draw *order* could differ between the event-driven DES
+//! and the turn-based live runtime; wherever the two drivers dispatch
+//! the same batches at the same virtual instants (the zero-shed regime
+//! the differential harness pins down), they inject byte-identical
+//! faults. `SimConfig::faults = None` compiles every fault branch away
+//! at runtime: the no-plan paths are bit-identical to the pre-fault
+//! code, which `tests/fault_recovery.rs` asserts.
+//!
+//! Exactly-once accounting: a request id resolves to **exactly one** of
+//! completed / shed / expired, no matter how many copies recovery puts
+//! in flight. A straggler's original batch may finish *after* its
+//! re-dispatched copy (or vice versa) — the first resolution wins and
+//! later completions are suppressed (counted in
+//! [`FaultReport::duplicates_suppressed`]), so
+//! `offered == completed + shed + expired` holds under any injected
+//! schedule in both drivers.
+
+use crate::util::rng::Rng;
+
+/// One device crash: at `at_s` the device stops completing, dispatching
+/// and heartbeating. Its in-flight batch and queue are stranded until
+/// the watchdog notices (or forever, without a [`RecoveryPolicy`]).
+/// A crash aimed at a device that is already down or rebooting is
+/// skipped (a board cannot crash while it is off).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashFault {
+    /// Device index in registration order.
+    pub device: usize,
+    /// Absolute crash time, seconds.
+    pub at_s: f64,
+}
+
+/// A hang/straggler window: batches *dispatched* by `device` with
+/// `from_s <= t < to_s` take `factor`× their modeled service time.
+/// Factors large enough to cross the heartbeat timeout turn into
+/// detected hangs (the straggler watchdog re-dispatches copies of the
+/// in-flight batch, and the eventual double completion is suppressed).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlowdownFault {
+    pub device: usize,
+    pub from_s: f64,
+    pub to_s: f64,
+    /// Service-time multiplier, ≥ 1.
+    pub factor: f64,
+}
+
+/// Detection + recovery knobs. `None` on the plan means faults are
+/// injected but *nothing* recovers: the router keeps feeding dead
+/// shards, stranded work expires at end of run — the baseline the
+/// `BENCH_faults.json` sweep compares against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Heartbeat timeout: a crash is detected this long after it
+    /// happens, and a dispatched batch whose service time exceeds this
+    /// is treated as a hung straggler (its in-flight requests get
+    /// re-dispatched copies).
+    pub heartbeat_timeout_s: f64,
+    /// Maximum dispatch attempts per request (the original counts as
+    /// attempt 0); a request past the budget expires instead of
+    /// retrying.
+    pub retry_budget: u8,
+    /// Exponential backoff base: attempt `k` (1-based) re-dispatches
+    /// `backoff_base_s × 2^(k−1)` after the failure was detected.
+    pub backoff_base_s: f64,
+    /// Deadline-aware retry: a re-dispatch that would land more than
+    /// this long after the request's arrival expires instead (stale
+    /// frames are worthless to a perception pipeline).
+    pub retry_deadline_s: f64,
+    /// Reboot the crashed board: after detection the device re-enters
+    /// the pool through `Lifecycle::Provisioning` (power-cycle +
+    /// bitstream re-program) and comes back clean `reboot_delay_s`
+    /// later. `false` leaves it failed for good.
+    pub reboot: bool,
+    pub reboot_delay_s: f64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        Self {
+            heartbeat_timeout_s: 0.25,
+            retry_budget: 3,
+            backoff_base_s: 0.010,
+            retry_deadline_s: 2.0,
+            reboot: true,
+            reboot_delay_s: 1.0,
+        }
+    }
+}
+
+/// The seedable fault schedule both drivers inject.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the per-identity hash draws (spikes, link drops).
+    pub seed: u64,
+    pub crashes: Vec<CrashFault>,
+    pub slowdowns: Vec<SlowdownFault>,
+    /// Per-batch probability of a transient latency spike.
+    pub spike_prob: f64,
+    /// Service-time multiplier of a spiked batch, ≥ 1.
+    pub spike_factor: f64,
+    /// Per-request probability the front-door link drops the frame
+    /// before admission (counted as a shed, and separately in
+    /// [`FaultReport::link_drops`]).
+    pub link_drop_prob: f64,
+    /// Detection/recovery machinery; `None` injects without recovering.
+    pub recovery: Option<RecoveryPolicy>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (useful as a parse/merge base; runs
+    /// carrying it must be bit-identical to `faults: None`, which
+    /// `tests/fault_recovery.rs` asserts).
+    pub fn none(seed: u64) -> Self {
+        Self {
+            seed,
+            crashes: Vec::new(),
+            slowdowns: Vec::new(),
+            spike_prob: 0.0,
+            spike_factor: 1.0,
+            link_drop_prob: 0.0,
+            recovery: None,
+        }
+    }
+
+    /// The CLI's demo plan: crash device 1 a third of the way into
+    /// `horizon_s`, a 4× slowdown window on device 0 in the second
+    /// half, mild spikes and link drops, recovery on.
+    pub fn demo(seed: u64, horizon_s: f64) -> Self {
+        Self {
+            seed,
+            crashes: vec![CrashFault { device: 1, at_s: horizon_s / 3.0 }],
+            slowdowns: vec![SlowdownFault {
+                device: 0,
+                from_s: horizon_s * 0.5,
+                to_s: horizon_s * 0.6,
+                factor: 4.0,
+            }],
+            spike_prob: 0.02,
+            spike_factor: 3.0,
+            link_drop_prob: 0.01,
+            recovery: Some(RecoveryPolicy::default()),
+        }
+    }
+
+    /// Validate the plan's invariants (all entry points call this).
+    pub fn validate(&self) {
+        assert!(
+            (0.0..=1.0).contains(&self.spike_prob),
+            "spike_prob must be a probability"
+        );
+        assert!(
+            (0.0..=1.0).contains(&self.link_drop_prob),
+            "link_drop_prob must be a probability"
+        );
+        assert!(self.spike_factor >= 1.0, "a spike cannot speed a batch up");
+        for c in &self.crashes {
+            assert!(c.at_s >= 0.0, "crash times must be non-negative");
+        }
+        for s in &self.slowdowns {
+            assert!(s.factor >= 1.0, "a slowdown cannot speed a batch up");
+            assert!(s.from_s < s.to_s, "empty slowdown window");
+        }
+        if let Some(r) = &self.recovery {
+            assert!(r.heartbeat_timeout_s > 0.0, "heartbeat timeout must be positive");
+            assert!(r.backoff_base_s > 0.0, "backoff base must be positive");
+            assert!(r.retry_deadline_s > 0.0, "retry deadline must be positive");
+            assert!(r.reboot_delay_s >= 0.0, "reboot delay must be non-negative");
+        }
+    }
+
+    /// `true` when the plan can never perturb a run (lets both drivers
+    /// keep the fault machinery armed but provably inert).
+    pub fn is_noop(&self) -> bool {
+        self.crashes.is_empty()
+            && self.slowdowns.is_empty()
+            && self.spike_prob == 0.0
+            && self.link_drop_prob == 0.0
+    }
+
+    /// Pure-function unit draw in `[0, 1)` for `(salt, a, b)` under the
+    /// plan seed. A fresh seeded [`Rng`] per identity — no stream whose
+    /// draw order could differ between drivers.
+    fn unit(&self, salt: u64, a: u64, b: u64) -> f64 {
+        let k = self
+            .seed
+            .wrapping_add(salt.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(a.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add(b.wrapping_mul(0x94D0_49BB_1331_11EB));
+        Rng::new(k).f64()
+    }
+
+    /// Does the front-door link drop request `id`? Pure in `(seed, id)`.
+    pub fn drops_link(&self, id: u64) -> bool {
+        self.link_drop_prob > 0.0 && self.unit(1, id, 0) < self.link_drop_prob
+    }
+
+    /// Latency-spike factor for `device`'s `ordinal`-th dispatched
+    /// batch (1.0 = no spike). Pure in `(seed, device, ordinal)`.
+    pub fn spike(&self, device: usize, ordinal: u64) -> f64 {
+        if self.spike_prob > 0.0 && self.unit(2, device as u64, ordinal) < self.spike_prob {
+            self.spike_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// Product of the slowdown factors covering `(device, t)`.
+    pub fn slowdown(&self, device: usize, t: f64) -> f64 {
+        self.slowdowns
+            .iter()
+            .filter(|s| s.device == device && s.from_s <= t && t < s.to_s)
+            .map(|s| s.factor)
+            .product()
+    }
+
+    /// Combined service-time multiplier for `device`'s `ordinal`-th
+    /// batch dispatched at `t`. Both drivers scale the modeled batch
+    /// service time by exactly this.
+    pub fn service_factor(&self, device: usize, t: f64, ordinal: u64) -> f64 {
+        self.slowdown(device, t) * self.spike(device, ordinal)
+    }
+
+    /// The crash scheduled for `device`, if any (first in time order).
+    pub fn crash_for(&self, device: usize) -> Option<f64> {
+        self.crashes
+            .iter()
+            .filter(|c| c.device == device)
+            .map(|c| c.at_s)
+            .fold(None, |acc: Option<f64>, t| Some(acc.map_or(t, |a| a.min(t))))
+    }
+
+    /// Parse the CLI `--faults` spec: comma-separated tokens
+    /// `crash=DEV@T` (repeatable), `slow=DEV@FROM..TO*F`,
+    /// `spikes=P*F`, `drops=P`, `seed=N`, `recover=on|off`,
+    /// `timeout=S`, `budget=N`, `backoff=S`, `deadline=S`,
+    /// `reboot=S|off`. Unknown or malformed tokens are an `Err` so the
+    /// CLI can warn and fall back. Recovery defaults to on.
+    pub fn parse(spec: &str, default_seed: u64) -> Result<Self, String> {
+        let mut plan = FaultPlan::none(default_seed);
+        let mut rec = RecoveryPolicy::default();
+        let mut recover = true;
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (key, val) = tok.split_once('=').ok_or_else(|| format!("token '{tok}' wants key=value"))?;
+            let bad = |what: &str| format!("token '{tok}': bad {what}");
+            match key {
+                "crash" => {
+                    let (d, t) = val.split_once('@').ok_or_else(|| bad("DEV@T"))?;
+                    plan.crashes.push(CrashFault {
+                        device: d.parse().map_err(|_| bad("device"))?,
+                        at_s: t.parse().map_err(|_| bad("time"))?,
+                    });
+                }
+                "slow" => {
+                    let (d, rest) = val.split_once('@').ok_or_else(|| bad("DEV@FROM..TO*F"))?;
+                    let (range, f) = rest.split_once('*').ok_or_else(|| bad("FROM..TO*F"))?;
+                    let (from, to) = range.split_once("..").ok_or_else(|| bad("FROM..TO"))?;
+                    plan.slowdowns.push(SlowdownFault {
+                        device: d.parse().map_err(|_| bad("device"))?,
+                        from_s: from.parse().map_err(|_| bad("from"))?,
+                        to_s: to.parse().map_err(|_| bad("to"))?,
+                        factor: f.parse().map_err(|_| bad("factor"))?,
+                    });
+                }
+                "spikes" => {
+                    let (p, f) = val.split_once('*').ok_or_else(|| bad("P*F"))?;
+                    plan.spike_prob = p.parse().map_err(|_| bad("probability"))?;
+                    plan.spike_factor = f.parse().map_err(|_| bad("factor"))?;
+                }
+                "drops" => plan.link_drop_prob = val.parse().map_err(|_| bad("probability"))?,
+                "seed" => plan.seed = val.parse().map_err(|_| bad("seed"))?,
+                "recover" => {
+                    recover = match val {
+                        "on" => true,
+                        "off" => false,
+                        _ => return Err(bad("on|off")),
+                    }
+                }
+                "timeout" => rec.heartbeat_timeout_s = val.parse().map_err(|_| bad("seconds"))?,
+                "budget" => rec.retry_budget = val.parse().map_err(|_| bad("count"))?,
+                "backoff" => rec.backoff_base_s = val.parse().map_err(|_| bad("seconds"))?,
+                "deadline" => rec.retry_deadline_s = val.parse().map_err(|_| bad("seconds"))?,
+                "reboot" => {
+                    if val == "off" {
+                        rec.reboot = false;
+                    } else {
+                        rec.reboot = true;
+                        rec.reboot_delay_s = val.parse().map_err(|_| bad("seconds|off"))?;
+                    }
+                }
+                _ => return Err(format!("unknown fault token '{key}'")),
+            }
+        }
+        plan.recovery = recover.then_some(rec);
+        plan.validate();
+        Ok(plan)
+    }
+}
+
+/// Running fault/recovery counters, accumulated by whichever driver is
+/// serving (lives on [`FleetMetrics`](super::metrics::FleetMetrics) so
+/// the live workers share one set behind the metrics lock).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultStats {
+    pub injected_crashes: u64,
+    pub spikes: u64,
+    pub link_drops: u64,
+    /// Watchdog detections (crashes noticed + stragglers declared).
+    pub detected: u64,
+    /// Re-dispatch attempts scheduled.
+    pub retries: u64,
+    /// Re-dispatched copies actually admitted somewhere.
+    pub redispatched: u64,
+    /// Completions of an id that had already resolved (straggler
+    /// originals racing their recovered copies) — suppressed, never
+    /// double-counted.
+    pub duplicates_suppressed: u64,
+    /// Requests that ran out of retry budget / deadline, or were
+    /// stranded on a dead shard with no recovery armed.
+    pub expired: u64,
+    /// Boards recovered through the reboot path.
+    pub recovered_devices: u64,
+    /// Summed crash→active repair time of recovered boards.
+    pub mttr_total_s: f64,
+}
+
+impl FaultStats {
+    /// Freeze into the report row. `availability` is supplied by the
+    /// driver (completed / offered after the final overwrite).
+    pub fn to_report(&self, plan: &FaultPlan, availability: f64) -> FaultReport {
+        FaultReport {
+            injected_crashes: self.injected_crashes,
+            slowdown_windows: plan.slowdowns.len() as u64,
+            spikes: self.spikes,
+            link_drops: self.link_drops,
+            detected: self.detected,
+            retries: self.retries,
+            redispatched: self.redispatched,
+            duplicates_suppressed: self.duplicates_suppressed,
+            expired: self.expired,
+            recovered_devices: self.recovered_devices,
+            mttr_s: if self.recovered_devices == 0 {
+                0.0
+            } else {
+                self.mttr_total_s / self.recovered_devices as f64
+            },
+            availability,
+        }
+    }
+}
+
+/// Fault/recovery accounting on [`FleetReport`](super::metrics::FleetReport),
+/// rendered by [`fleet_table`](crate::report::fleet_table). Present iff
+/// the run carried a [`FaultPlan`]; the exactly-once invariant is
+/// `offered == completed + shed + expired`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultReport {
+    pub injected_crashes: u64,
+    pub slowdown_windows: u64,
+    pub spikes: u64,
+    pub link_drops: u64,
+    pub detected: u64,
+    pub retries: u64,
+    pub redispatched: u64,
+    pub duplicates_suppressed: u64,
+    pub expired: u64,
+    pub recovered_devices: u64,
+    /// Mean crash→active repair time over recovered boards (0 when
+    /// none recovered).
+    pub mttr_s: f64,
+    /// `completed / offered` — the headline the `BENCH_faults.json`
+    /// sweep compares recovery-on vs recovery-off at each crash rate.
+    pub availability: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_are_pure_functions_of_identity() {
+        let p = FaultPlan { link_drop_prob: 0.3, spike_prob: 0.2, ..FaultPlan::none(7) };
+        for id in 0..200u64 {
+            assert_eq!(p.drops_link(id), p.drops_link(id));
+            assert_eq!(p.spike(1, id).to_bits(), p.spike(1, id).to_bits());
+        }
+        // Different identities draw independently; the empirical rate
+        // lands near the probability.
+        let drops = (0..10_000).filter(|&i| p.drops_link(i)).count();
+        assert!((drops as f64 / 10_000.0 - 0.3).abs() < 0.03, "drop rate {drops}");
+        let spikes = (0..10_000).filter(|&i| p.spike(0, i) > 1.0).count();
+        assert!((spikes as f64 / 10_000.0 - 0.2).abs() < 0.03, "spike rate {spikes}");
+        // Seeds decorrelate the draws.
+        let q = FaultPlan { seed: 8, ..p.clone() };
+        assert!((0..1000u64).any(|i| p.drops_link(i) != q.drops_link(i)));
+    }
+
+    #[test]
+    fn slowdown_windows_cover_half_open_ranges() {
+        let p = FaultPlan {
+            slowdowns: vec![
+                SlowdownFault { device: 0, from_s: 1.0, to_s: 2.0, factor: 3.0 },
+                SlowdownFault { device: 0, from_s: 1.5, to_s: 2.5, factor: 2.0 },
+                SlowdownFault { device: 1, from_s: 0.0, to_s: 9.0, factor: 5.0 },
+            ],
+            ..FaultPlan::none(0)
+        };
+        assert_eq!(p.slowdown(0, 0.5), 1.0);
+        assert_eq!(p.slowdown(0, 1.0), 3.0);
+        assert_eq!(p.slowdown(0, 1.7), 6.0, "overlapping windows multiply");
+        assert_eq!(p.slowdown(0, 2.0), 2.0, "to_s is exclusive");
+        assert_eq!(p.slowdown(2, 1.0), 1.0, "other devices untouched");
+    }
+
+    #[test]
+    fn noop_plan_never_perturbs() {
+        let p = FaultPlan::none(123);
+        assert!(p.is_noop());
+        for id in 0..100u64 {
+            assert!(!p.drops_link(id));
+            assert_eq!(p.service_factor(0, id as f64, id), 1.0);
+        }
+        assert_eq!(p.crash_for(0), None);
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_spec() {
+        let p = FaultPlan::parse(
+            "crash=1@3.5, crash=0@5, slow=2@1..4*3, spikes=0.05*4, drops=0.02, \
+             seed=99, timeout=0.5, budget=2, backoff=0.02, deadline=1.5, reboot=0.8",
+            7,
+        )
+        .unwrap();
+        assert_eq!(p.seed, 99);
+        assert_eq!(p.crashes, vec![
+            CrashFault { device: 1, at_s: 3.5 },
+            CrashFault { device: 0, at_s: 5.0 },
+        ]);
+        assert_eq!(p.slowdowns.len(), 1);
+        assert_eq!(p.spike_prob, 0.05);
+        assert_eq!(p.link_drop_prob, 0.02);
+        let r = p.recovery.unwrap();
+        assert_eq!(r.heartbeat_timeout_s, 0.5);
+        assert_eq!(r.retry_budget, 2);
+        assert_eq!(r.backoff_base_s, 0.02);
+        assert_eq!(r.retry_deadline_s, 1.5);
+        assert!(r.reboot);
+        assert_eq!(r.reboot_delay_s, 0.8);
+        // recover=off strips the policy; junk is an Err, not a panic.
+        assert!(FaultPlan::parse("crash=0@1,recover=off", 7).unwrap().recovery.is_none());
+        assert!(FaultPlan::parse("crash=0", 7).is_err());
+        assert!(FaultPlan::parse("warp=9", 7).is_err());
+        // The default seed flows through when the spec names none.
+        assert_eq!(FaultPlan::parse("drops=0.1", 7).unwrap().seed, 7);
+    }
+
+    #[test]
+    fn crash_for_picks_the_earliest() {
+        let p = FaultPlan {
+            crashes: vec![
+                CrashFault { device: 3, at_s: 9.0 },
+                CrashFault { device: 3, at_s: 4.0 },
+            ],
+            ..FaultPlan::none(0)
+        };
+        assert_eq!(p.crash_for(3), Some(4.0));
+    }
+
+    #[test]
+    fn stats_freeze_into_the_report() {
+        let mut s = FaultStats::default();
+        s.injected_crashes = 2;
+        s.recovered_devices = 2;
+        s.mttr_total_s = 3.0;
+        s.expired = 4;
+        let p = FaultPlan::demo(1, 10.0);
+        let r = s.to_report(&p, 0.95);
+        assert_eq!(r.mttr_s, 1.5);
+        assert_eq!(r.slowdown_windows, 1);
+        assert_eq!(r.availability, 0.95);
+        assert_eq!(FaultStats::default().to_report(&p, 1.0).mttr_s, 0.0);
+    }
+}

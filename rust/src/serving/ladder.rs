@@ -263,6 +263,7 @@ mod tests {
             objects: 1,
             class: SloClass::Standard,
             rung,
+            retries: 0,
         }
     }
 

@@ -38,8 +38,20 @@
 //! their queues; cross-thread queue surgery is exactly the shared
 //! mutable state this design avoids), so differential comparisons run
 //! the DES with `work_stealing: false` — [`serve_live`] asserts it.
+//!
+//! When [`SimConfig::faults`] carries a [`FaultPlan`], the same crash /
+//! straggler / spike / link-drop schedule the DES injects plays out on
+//! the real threads: each worker owns its shard's crashes (truth), the
+//! router only learns at watchdog detection (knowledge), stranded and
+//! queued work re-enters service through backoff-staged re-dispatch to
+//! healthy shards, and a shared resolved-id set enforces the
+//! exactly-once outcome invariant across racing copies. The
+//! [`LiveConfig::drain_timeout_s`] watchdog bounds shutdown: a worker
+//! whose in-flight batch outlives the drain deadline abandons it (the
+//! batch expires, accounted exactly once) instead of deadlocking the
+//! close-then-drain-then-join contract.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::TryRecvError;
 use std::sync::{Arc, Condvar, Mutex};
@@ -52,11 +64,12 @@ use super::admission::ClassQuota;
 use super::autoscale::{ScaleEventKind, ScalingEvent};
 use super::batcher::{BatchPolicy, Decision};
 use super::device::Backend;
+use super::faults::FaultPlan;
 use super::ladder::VariantLadder;
 use super::metrics::{EnergyLedger, FleetMetrics, FleetReport};
 use super::shard::{Lifecycle, ShardPool};
 use super::sim::SimConfig;
-use super::{Request, RequestOutcome};
+use super::{Request, RequestOutcome, ShedPolicy};
 
 /// Which clock paces the runtime.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,11 +92,19 @@ pub struct LiveConfig {
     /// Wall seconds per modeled second (wall mode only): `0.25` runs a
     /// 10 s trace in ~2.5 s of wall time.
     pub time_scale: f64,
+    /// Shutdown watchdog: once the topics close, a worker whose
+    /// in-flight batch is still unfinished this many modeled seconds
+    /// later abandons it — the batch's requests expire (exactly-once
+    /// accounted, shed-flagged outcomes) and the worker leaves as
+    /// failed, so one hung shard can never deadlock `shutdown_drain`.
+    /// `f64::INFINITY` (the default) waits forever, the historical
+    /// behavior.
+    pub drain_timeout_s: f64,
 }
 
 impl Default for LiveConfig {
     fn default() -> Self {
-        Self { threads: 0, clock: ClockMode::Wall, time_scale: 1.0 }
+        Self { threads: 0, clock: ClockMode::Wall, time_scale: 1.0, drain_timeout_s: f64::INFINITY }
     }
 }
 
@@ -100,6 +121,12 @@ impl LiveConfig {
 
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Arm the shutdown-drain watchdog (modeled seconds).
+    pub fn with_drain_timeout(mut self, timeout_s: f64) -> Self {
+        self.drain_timeout_s = timeout_s;
         self
     }
 }
@@ -210,6 +237,20 @@ impl VirtualClock {
         }
     }
 
+    /// Pull *every* parked participant forward to the current instant —
+    /// the fault-mode shutdown broadcast. Busy workers re-check the
+    /// drain deadline, dead workers flush; `step` is idempotent for a
+    /// shard with nothing due, so early wakes never change a decision.
+    fn wake_all(&self) {
+        let mut s = self.state.lock().expect("clock lock");
+        let now = s.now;
+        for x in s.slots.iter_mut() {
+            if matches!(x, Slot::Until(t) if *t > now) {
+                *x = Slot::Until(now);
+            }
+        }
+    }
+
     /// Block until one of `ids` holds the turn; `None` once all of them
     /// are done.
     fn wait_any(&self, ids: &[usize]) -> Option<(usize, f64)> {
@@ -309,11 +350,20 @@ struct ShardShared {
     busy: AtomicBool,
     /// `f64::to_bits` of the in-flight batch's completion time.
     free_at_bits: AtomicU64,
+    /// Known-failed (watchdog-detected): the router stops routing here.
+    /// Truth lags knowledge — a crashed-but-undetected shard keeps this
+    /// `false` and keeps receiving work, exactly like the DES.
+    down: AtomicBool,
 }
 
 impl ShardShared {
     fn new() -> Self {
-        Self { queued: AtomicUsize::new(0), busy: AtomicBool::new(false), free_at_bits: AtomicU64::new(0) }
+        Self {
+            queued: AtomicUsize::new(0),
+            busy: AtomicBool::new(false),
+            free_at_bits: AtomicU64::new(0),
+            down: AtomicBool::new(false),
+        }
     }
 
     /// The DES [`outstanding_s`](crate::serving::shard::DeviceState::outstanding_s)
@@ -327,6 +377,178 @@ impl ShardShared {
             0.0
         };
         busy_rem + backend.batch_latency_s(self.queued.load(Ordering::SeqCst) + 1)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault machinery (the live mirror of the DES `FaultRt`).
+// ---------------------------------------------------------------------
+
+/// Per-shard fault state. The DES keeps one `FaultRt` for the whole
+/// pool; the live runtime splits it per worker because each worker owns
+/// its shard's failures — only the resolved-id set (the exactly-once
+/// gate) is shared, plus read-only handles to every shard's topic and
+/// router face for failover re-dispatch.
+struct LiveFaults {
+    plan: FaultPlan,
+    /// Ids with a terminal outcome (completed / shed / expired), shared
+    /// with the front door and every worker: first resolution wins,
+    /// later completions of stale copies are suppressed.
+    resolved: Arc<Mutex<HashSet<u64>>>,
+    /// Failover targets: every shard's topic, router face, and backend.
+    topics: Vec<Arc<SharedTopic<Request>>>,
+    shared: Vec<Arc<ShardShared>>,
+    backends: Vec<Arc<dyn Backend>>,
+    shed: ShedPolicy,
+    /// This shard's scheduled crash instants, ascending; `next_crash`
+    /// indexes the first not yet injected.
+    crashes: Vec<f64>,
+    next_crash: usize,
+    /// Truth: crashed, watchdog not yet fired.
+    crashed: bool,
+    /// Crash instant (base of the MTTR measurement).
+    crash_t: f64,
+    /// Watchdog fire time for the current crash (recovery only).
+    detect_at: f64,
+    /// Reboot completion time (recovery with reboot only).
+    ready_at: f64,
+    /// Straggler check armed against the in-flight batch.
+    straggler_at: f64,
+    /// Knowledge: detected as failed, excluded from routing.
+    is_down: bool,
+    rebooting: bool,
+    /// The in-flight batch stranded by the current crash, awaiting
+    /// detection (or end-of-run expiry).
+    stranded: Vec<Request>,
+    /// Requests staged for re-dispatch: `(redispatch_at, copy)`.
+    pending: Vec<(f64, Request)>,
+    /// Dispatched-batch ordinal (the spike draw's index).
+    ordinal: u64,
+}
+
+/// Stage `r` for re-dispatch a backoff after `t`, or expire it when the
+/// retry budget / freshness deadline is spent — the live mirror of the
+/// DES `FaultRt::requeue`, shared by the workers and the front door.
+/// Expired requests get a shed-flagged outcome but count in
+/// [`FaultStats::expired`](super::faults::FaultStats), *not* the fleet
+/// shed counter: the conservation law is
+/// `offered == completed + shed + expired`.
+#[allow(clippy::too_many_arguments)]
+fn stage_or_expire(
+    plan: &FaultPlan,
+    r: Request,
+    t: f64,
+    resolved: &Mutex<HashSet<u64>>,
+    metrics: &Mutex<FleetMetrics>,
+    outcomes: &Mutex<Vec<RequestOutcome>>,
+    pending: &mut Vec<(f64, Request)>,
+) {
+    if resolved.lock().expect("resolved lock").contains(&r.id) {
+        return;
+    }
+    let expire = |r: Request| {
+        resolved.lock().expect("resolved lock").insert(r.id);
+        metrics.lock().expect("metrics lock").faults.expired += 1;
+        outcomes.lock().expect("outcomes lock").push(RequestOutcome {
+            id: r.id,
+            camera: r.camera,
+            t_s: t,
+            shed: true,
+            rung: r.rung,
+        });
+    };
+    let Some(rp) = plan.recovery.as_ref() else {
+        // No recovery armed: the request dies with its shard.
+        expire(r);
+        return;
+    };
+    let at = t + rp.backoff_base_s * 2f64.powi(r.retries as i32);
+    if u32::from(r.retries) + 1 > u32::from(rp.retry_budget)
+        || at - r.arrival_s > rp.retry_deadline_s
+    {
+        expire(r);
+        return;
+    }
+    let mut copy = r;
+    copy.retries += 1;
+    metrics.lock().expect("metrics lock").faults.retries += 1;
+    pending.push((at, copy));
+}
+
+/// Re-dispatch every staged copy due by `now` to the least-loaded shard
+/// the router still believes in (deterministic order: fire time, then
+/// id — the DES drain order). Retry copies bypass the front-door quota
+/// and link drops: the request already paid both on arrival. Returns
+/// the shards to wake via `wakes`.
+#[allow(clippy::too_many_arguments)]
+fn redispatch_staged(
+    plan: &FaultPlan,
+    now: f64,
+    pending: &mut Vec<(f64, Request)>,
+    resolved: &Mutex<HashSet<u64>>,
+    metrics: &Mutex<FleetMetrics>,
+    outcomes: &Mutex<Vec<RequestOutcome>>,
+    topics: &[Arc<SharedTopic<Request>>],
+    shared: &[Arc<ShardShared>],
+    backends: &[Arc<dyn Backend>],
+    shed: ShedPolicy,
+    wakes: &mut Vec<usize>,
+) {
+    pending.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).expect("finite redispatch times").then(a.1.id.cmp(&b.1.id))
+    });
+    while let Some(pos) = pending.iter().position(|p| p.0 <= now) {
+        let (_, r) = pending.remove(pos);
+        if resolved.lock().expect("resolved lock").contains(&r.id) {
+            continue;
+        }
+        // Least outstanding work over the shards not known-failed.
+        let mut best: Option<(f64, usize)> = None;
+        for (i, sh) in shared.iter().enumerate() {
+            if sh.down.load(Ordering::SeqCst) {
+                continue;
+            }
+            let est = sh.outstanding_s(backends[i].as_ref(), now);
+            if best.map_or(true, |(b, _)| est < b) {
+                best = Some((est, i));
+            }
+        }
+        let Some((_, best)) = best else {
+            // Nothing routable anywhere right now: back off and try
+            // again (or expire on budget/deadline).
+            stage_or_expire(plan, r, now, resolved, metrics, outcomes, pending);
+            continue;
+        };
+        let policy = shed.overflow_for(r.class);
+        match topics[best].try_publish(r.clone(), policy) {
+            PublishOutcome::Delivered => {
+                metrics.lock().expect("metrics lock").faults.redispatched += 1;
+                shared[best].queued.fetch_add(1, Ordering::SeqCst);
+                wakes.push(best);
+            }
+            PublishOutcome::DeliveredDroppedOldest(old) => {
+                metrics.lock().expect("metrics lock").faults.redispatched += 1;
+                wakes.push(best);
+                // An evicted re-dispatch copy is displaced, not
+                // refused: it goes back through the retry path.
+                if old.retries > 0 {
+                    stage_or_expire(plan, old, now, resolved, metrics, outcomes, pending);
+                } else {
+                    resolved.lock().expect("resolved lock").insert(old.id);
+                    metrics.lock().expect("metrics lock").record_shed(old.class);
+                    outcomes.lock().expect("outcomes lock").push(RequestOutcome {
+                        id: old.id,
+                        camera: old.camera,
+                        t_s: now,
+                        shed: true,
+                        rung: old.rung,
+                    });
+                }
+            }
+            PublishOutcome::Rejected | PublishOutcome::Closed => {
+                stage_or_expire(plan, r, now, resolved, metrics, outcomes, pending);
+            }
+        }
     }
 }
 
@@ -373,6 +595,16 @@ struct ShardRuntime {
     retire_log: Arc<Mutex<Vec<ScalingEvent>>>,
     serving_count: Arc<AtomicUsize>,
     outcomes: Arc<Mutex<Vec<RequestOutcome>>>,
+    /// Fault-injection state when the run carries a [`FaultPlan`].
+    faults: Option<LiveFaults>,
+    /// `f64::to_bits` of the close instant (`INFINITY` until the front
+    /// door closes the topics) — the shutdown watchdog's reference.
+    closed_at: Arc<AtomicU64>,
+    /// [`LiveConfig::drain_timeout_s`].
+    drain_timeout_s: f64,
+    /// Shards that left as failed (watchdog-detected or
+    /// shutdown-abandoned) — the report marks their device state.
+    final_failed: Arc<Mutex<Vec<usize>>>,
 }
 
 impl ShardRuntime {
@@ -393,28 +625,377 @@ impl ShardRuntime {
         }
     }
 
-    fn step(&mut self, now: f64) -> Step {
-        // 1. Finish the in-flight batch. Completions are stamped at the
-        // modeled service end (`busy_until`), not the thread's wake
-        // time, so wall-mode scheduling jitter paces execution without
-        // polluting the latency model.
-        if self.busy {
-            if self.busy_until > now {
-                // Woken mid-service (a nudge): arrivals just queue.
-                return Step::Park(self.busy_until);
-            }
-            let done_at = self.busy_until;
-            let batch = std::mem::take(&mut self.in_flight);
+    /// Has the front door closed the topics yet (modeled time)?
+    fn closed_now(&self) -> bool {
+        f64::from_bits(self.closed_at.load(Ordering::SeqCst)).is_finite() || self.closed
+    }
+
+    /// The shutdown watchdog's deadline: close instant plus the drain
+    /// timeout (`INFINITY` while the run is open or the watchdog is
+    /// unarmed).
+    fn drain_deadline(&self) -> f64 {
+        f64::from_bits(self.closed_at.load(Ordering::SeqCst)) + self.drain_timeout_s
+    }
+
+    /// Earliest future fault wake: next crash, watchdog fire, reboot
+    /// completion, straggler check, or staged re-dispatch.
+    fn fault_horizon(&self) -> f64 {
+        let Some(f) = &self.faults else { return f64::INFINITY };
+        let mut t = f.detect_at.min(f.ready_at).min(f.straggler_at);
+        if let Some(&c) = f.crashes.get(f.next_crash) {
+            t = t.min(c);
+        }
+        t.min(f.pending.iter().map(|p| p.0).fold(f64::INFINITY, f64::min))
+    }
+
+    /// Earliest fault transition due at or before `now` (`INFINITY` if
+    /// none) — reboot completions, crashes, detections, stragglers.
+    fn next_fault_due(&self, now: f64) -> f64 {
+        let Some(f) = &self.faults else { return f64::INFINITY };
+        let mut t = f.ready_at.min(f.detect_at).min(f.straggler_at);
+        if let Some(&c) = f.crashes.get(f.next_crash) {
+            t = t.min(c);
+        }
+        if t <= now {
+            t
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// No fault work left for this shard: every scheduled crash
+    /// consumed, nothing crashed or down, nothing staged.
+    fn fault_quiescent(&self) -> bool {
+        self.faults.as_ref().map_or(true, |f| {
+            f.next_crash >= f.crashes.len() && !f.crashed && !f.is_down && f.pending.is_empty()
+        })
+    }
+
+    /// Execute the one fault transition due at `t` (ties in the DES
+    /// order: reboot activation, then crash, detection, straggler).
+    fn fault_transition(&mut self, t: f64) {
+        let Some(f) = self.faults.as_mut() else { return };
+        if f.ready_at == t {
+            // Reboot landed: the repair clock closes (MTTR is crash →
+            // serving again) and the router believes in us again.
+            f.ready_at = f64::INFINITY;
+            f.rebooting = false;
+            f.is_down = false;
+            self.shared.down.store(false, Ordering::SeqCst);
             {
                 let mut m = self.metrics.lock().expect("metrics lock");
-                for r in &batch {
+                m.faults.recovered_devices += 1;
+                m.faults.mttr_total_s += t - f.crash_t;
+            }
+            // The dead window drew no power (the DES bills a crashed
+            // board nothing): skip the ledger forward without accruing.
+            if t > self.last_accrued {
+                self.last_accrued = t;
+                self.accrued_to.lock().expect("accrued lock")[self.idx] = t;
+            }
+            let after = self.serving_count.fetch_add(1, Ordering::SeqCst) + 1;
+            self.retire_log.lock().expect("retire lock").push(ScalingEvent {
+                t_s: t,
+                kind: ScaleEventKind::Activated { device: self.idx },
+                serving_after: after,
+            });
+            return;
+        }
+        if f.crashes.get(f.next_crash) == Some(&t) {
+            f.next_crash += 1;
+            // A board that is already off cannot crash again.
+            if f.crashed || f.is_down {
+                return;
+            }
+            f.crashed = true;
+            f.crash_t = t;
+            f.straggler_at = f64::INFINITY;
+            // The in-flight batch is stranded, not lost: detection
+            // re-dispatches it (or end-of-run expiry accounts for it).
+            f.stranded = std::mem::take(&mut self.in_flight);
+            self.busy = false;
+            self.shared.busy.store(false, Ordering::SeqCst);
+            self.metrics.lock().expect("metrics lock").faults.injected_crashes += 1;
+            if let Some(rp) = f.plan.recovery.as_ref() {
+                f.detect_at = t + rp.heartbeat_timeout_s;
+            }
+            return;
+        }
+        if f.detect_at == t {
+            f.detect_at = f64::INFINITY;
+            if !f.crashed {
+                return;
+            }
+            // The watchdog rules: truth becomes knowledge. Everything
+            // the dead shard held — the stranded in-flight batch first
+            // (oldest work), then its buffered and queued frames — goes
+            // back through re-dispatch.
+            f.crashed = false;
+            f.is_down = true;
+            self.shared.down.store(true, Ordering::SeqCst);
+            self.metrics.lock().expect("metrics lock").faults.detected += 1;
+            let after = self.serving_count.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
+            self.retire_log.lock().expect("retire lock").push(ScalingEvent {
+                t_s: t,
+                kind: ScaleEventKind::Failed { device: self.idx },
+                serving_after: after,
+            });
+            let mut work: Vec<Request> = std::mem::take(&mut f.stranded);
+            let mut undispatched = self.local.len();
+            work.extend(self.local.drain(..));
+            loop {
+                match self.topic.try_recv() {
+                    Ok(r) => {
+                        work.push(r);
+                        undispatched += 1;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        self.closed = true;
+                        break;
+                    }
+                }
+            }
+            if undispatched > 0 {
+                self.shared.queued.fetch_sub(undispatched, Ordering::SeqCst);
+            }
+            for r in work {
+                stage_or_expire(
+                    &f.plan,
+                    r,
+                    t,
+                    &f.resolved,
+                    &self.metrics,
+                    &self.outcomes,
+                    &mut f.pending,
+                );
+            }
+            if let Some(rp) = f.plan.recovery.as_ref() {
+                if rp.reboot {
+                    f.ready_at = t + rp.reboot_delay_s;
+                    f.rebooting = true;
+                    let serving = self.serving_count.load(Ordering::SeqCst);
+                    self.retire_log.lock().expect("retire lock").push(ScalingEvent {
+                        t_s: t,
+                        kind: ScaleEventKind::Provisioning { device: self.idx },
+                        serving_after: serving,
+                    });
+                } else {
+                    self.final_failed.lock().expect("failed lock").push(self.idx);
+                    self.accrued_to.lock().expect("accrued lock")[self.idx] = f64::INFINITY;
+                }
+            }
+            return;
+        }
+        if f.straggler_at == t {
+            f.straggler_at = f64::INFINITY;
+            // Fires only while the guarded batch is still running (a
+            // crash cleared `busy`; a finished batch needs no rescue).
+            if f.crashed || !self.busy || self.busy_until <= t {
+                return;
+            }
+            self.metrics.lock().expect("metrics lock").faults.detected += 1;
+            // Copies of the hung batch go back through re-dispatch; the
+            // original stays in flight and whichever finishes second is
+            // suppressed.
+            let copies: Vec<Request> = {
+                let res = f.resolved.lock().expect("resolved lock");
+                self.in_flight.iter().filter(|r| !res.contains(&r.id)).cloned().collect()
+            };
+            for r in copies {
+                stage_or_expire(
+                    &f.plan,
+                    r,
+                    t,
+                    &f.resolved,
+                    &self.metrics,
+                    &self.outcomes,
+                    &mut f.pending,
+                );
+            }
+        }
+    }
+
+    /// Send every staged copy due by `now` back out through failover
+    /// routing.
+    fn fault_redispatch(&mut self, now: f64, wakes: &mut Vec<usize>) {
+        let Some(f) = self.faults.as_mut() else { return };
+        if f.pending.is_empty() {
+            return;
+        }
+        redispatch_staged(
+            &f.plan,
+            now,
+            &mut f.pending,
+            &f.resolved,
+            &self.metrics,
+            &self.outcomes,
+            &f.topics,
+            &f.shared,
+            &f.backends,
+            f.shed,
+            wakes,
+        );
+    }
+
+    /// While known-failed: requeue anything that raced into our topic
+    /// before the router saw `down` (wall-mode only; a no-op under the
+    /// virtual clock).
+    fn drain_down_topic(&mut self, now: f64) {
+        let mut work = Vec::new();
+        loop {
+            match self.topic.try_recv() {
+                Ok(r) => work.push(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        if work.is_empty() {
+            return;
+        }
+        self.shared.queued.fetch_sub(work.len(), Ordering::SeqCst);
+        let Some(f) = self.faults.as_mut() else { return };
+        for r in work {
+            stage_or_expire(
+                &f.plan,
+                r,
+                now,
+                &f.resolved,
+                &self.metrics,
+                &self.outcomes,
+                &mut f.pending,
+            );
+        }
+    }
+
+    /// End-of-run flush for a crashed shard nothing ever recovered
+    /// (recovery off — the watchdog never ruled): stranded, buffered,
+    /// and queued work expires, so every id still reaches the outcome
+    /// log exactly once. The DES post-loop flush, worker-side.
+    fn flush_dead(&mut self, now: f64) {
+        let Some(f) = self.faults.as_mut() else { return };
+        let mut work: Vec<Request> = std::mem::take(&mut f.stranded);
+        let mut undispatched = self.local.len();
+        work.extend(self.local.drain(..));
+        loop {
+            match self.topic.try_recv() {
+                Ok(r) => {
+                    work.push(r);
+                    undispatched += 1;
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        if undispatched > 0 {
+            self.shared.queued.fetch_sub(undispatched, Ordering::SeqCst);
+        }
+        let mut res = f.resolved.lock().expect("resolved lock");
+        let mut m = self.metrics.lock().expect("metrics lock");
+        let mut o = self.outcomes.lock().expect("outcomes lock");
+        for r in work {
+            if res.insert(r.id) {
+                m.faults.expired += 1;
+                o.push(RequestOutcome {
+                    id: r.id,
+                    camera: r.camera,
+                    t_s: now,
+                    shed: true,
+                    rung: r.rung,
+                });
+            }
+        }
+        self.accrued_to.lock().expect("accrued lock")[self.idx] = f64::INFINITY;
+    }
+
+    /// The shutdown watchdog fired: abandon the hung in-flight batch
+    /// and everything behind it (all expired, exactly-once accounted)
+    /// and leave as failed so the join completes.
+    fn abandon_at_shutdown(&mut self, now: f64) {
+        let batch = std::mem::take(&mut self.in_flight);
+        self.busy = false;
+        self.shared.busy.store(false, Ordering::SeqCst);
+        self.shared.down.store(true, Ordering::SeqCst);
+        let mut work = batch;
+        let mut undispatched = self.local.len();
+        work.extend(self.local.drain(..));
+        loop {
+            match self.topic.try_recv() {
+                Ok(r) => {
+                    work.push(r);
+                    undispatched += 1;
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        if undispatched > 0 {
+            self.shared.queued.fetch_sub(undispatched, Ordering::SeqCst);
+        }
+        // Lock order everywhere is resolved → metrics → outcomes.
+        let keep: Vec<Request> = match self.faults.as_ref() {
+            Some(f) => {
+                let mut res = f.resolved.lock().expect("resolved lock");
+                work.into_iter().filter(|r| res.insert(r.id)).collect()
+            }
+            None => work,
+        };
+        {
+            let mut m = self.metrics.lock().expect("metrics lock");
+            let mut o = self.outcomes.lock().expect("outcomes lock");
+            for r in keep {
+                m.faults.expired += 1;
+                o.push(RequestOutcome {
+                    id: r.id,
+                    camera: r.camera,
+                    t_s: now,
+                    shed: true,
+                    rung: r.rung,
+                });
+            }
+        }
+        self.final_failed.lock().expect("failed lock").push(self.idx);
+        self.accrued_to.lock().expect("accrued lock")[self.idx] = f64::INFINITY;
+        let after = self.serving_count.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
+        self.retire_log.lock().expect("retire lock").push(ScalingEvent {
+            t_s: now,
+            kind: ScaleEventKind::Failed { device: self.idx },
+            serving_after: after,
+        });
+    }
+
+    /// Finish the in-flight batch. Completions are stamped at the
+    /// modeled service end (`busy_until`), not the thread's wake time,
+    /// so wall-mode scheduling jitter paces execution without polluting
+    /// the latency model. Under a fault plan, completions whose id
+    /// already resolved (a re-dispatched copy finished first) are
+    /// suppressed — counted, never double-reported.
+    fn finish_batch(&mut self) {
+        let done_at = self.busy_until;
+        let batch = std::mem::take(&mut self.in_flight);
+        let keep: Vec<bool> = match &self.faults {
+            Some(f) => {
+                let mut res = f.resolved.lock().expect("resolved lock");
+                batch.iter().map(|r| res.insert(r.id)).collect()
+            }
+            None => vec![true; batch.len()],
+        };
+        let dupes = keep.iter().filter(|&&k| !k).count() as u64;
+        {
+            let mut m = self.metrics.lock().expect("metrics lock");
+            m.faults.duplicates_suppressed += dupes;
+            for (r, &k) in batch.iter().zip(&keep) {
+                if k {
                     m.record_completion(self.idx, done_at - r.arrival_s, r.class);
                     m.record_variant(r.rung);
                 }
             }
-            {
-                let mut o = self.outcomes.lock().expect("outcomes lock");
-                for r in &batch {
+        }
+        {
+            let mut o = self.outcomes.lock().expect("outcomes lock");
+            for (r, &k) in batch.iter().zip(&keep) {
+                if k {
                     o.push(RequestOutcome {
                         id: r.id,
                         camera: r.camera,
@@ -424,12 +1005,102 @@ impl ShardRuntime {
                     });
                 }
             }
-            {
-                let mut mc = self.max_completion.lock().expect("completion lock");
-                *mc = mc.max(done_at);
+        }
+        {
+            let mut mc = self.max_completion.lock().expect("completion lock");
+            *mc = mc.max(done_at);
+        }
+        if let Some(f) = self.faults.as_mut() {
+            f.straggler_at = f64::INFINITY;
+        }
+        self.busy = false;
+        self.shared.busy.store(false, Ordering::SeqCst);
+    }
+
+    fn step(&mut self, now: f64) -> (Step, Vec<usize>) {
+        let mut wakes = Vec::new();
+        let step = self.step_inner(now, &mut wakes);
+        // Every park also honors the fault schedule and (while busy)
+        // the shutdown watchdog deadline.
+        let step = match step {
+            Step::Park(t) => {
+                let mut t = t.min(self.fault_horizon());
+                if self.busy {
+                    t = t.min(self.drain_deadline());
+                }
+                Step::Park(t)
             }
-            self.busy = false;
-            self.shared.busy.store(false, Ordering::SeqCst);
+            Step::Done => Step::Done,
+        };
+        (step, wakes)
+    }
+
+    fn step_inner(&mut self, now: f64, wakes: &mut Vec<usize>) -> Step {
+        if self.faults.is_some() {
+            // 0. Fault transitions and due batch completions interleave
+            // in event-time order, fault-first on ties — the DES
+            // processes its fault events before settling the same
+            // instant's completions.
+            loop {
+                let comp_t = if self.busy && self.busy_until <= now {
+                    self.busy_until
+                } else {
+                    f64::INFINITY
+                };
+                let fault_t = self.next_fault_due(now);
+                if !comp_t.is_finite() && !fault_t.is_finite() {
+                    break;
+                }
+                if fault_t <= comp_t {
+                    self.fault_transition(fault_t);
+                } else {
+                    self.finish_batch();
+                }
+            }
+            // Staged copies due now go back out through failover
+            // routing (a crashed owner still re-dispatches its staged
+            // work — the schedule belongs to the fleet, not the board).
+            self.fault_redispatch(now, wakes);
+            if self.faults.as_ref().map_or(false, |f| f.crashed) {
+                // Crashed, watchdog hasn't ruled: execute nothing. The
+                // topic keeps filling — the router doesn't know yet.
+                if self.closed_now()
+                    && self.faults.as_ref().map_or(false, |f| f.plan.recovery.is_none())
+                {
+                    self.flush_dead(now);
+                    return Step::Done;
+                }
+                return Step::Park(f64::INFINITY);
+            }
+            if self.faults.as_ref().map_or(false, |f| f.is_down) {
+                self.drain_down_topic(now);
+                let f = self.faults.as_ref().expect("fault state");
+                if self.closed_now()
+                    && !f.rebooting
+                    && f.pending.is_empty()
+                    && f.next_crash >= f.crashes.len()
+                {
+                    // Detected-failed for good and the run is over:
+                    // nothing left to re-dispatch, leave the protocol.
+                    return Step::Done;
+                }
+                return Step::Park(f64::INFINITY);
+            }
+        }
+        // 1. Finish the in-flight batch (no-fault path; under faults
+        // the interleave loop above already settled due completions).
+        if self.busy {
+            if self.busy_until > now {
+                if self.drain_deadline() <= now {
+                    // Shutdown watchdog: the batch outlived the drain
+                    // deadline — abandon it rather than hold the join.
+                    self.abandon_at_shutdown(now);
+                    return Step::Done;
+                }
+                // Woken mid-service (a nudge): arrivals just queue.
+                return Step::Park(self.busy_until);
+            }
+            self.finish_batch();
         }
         // 2. Refill the batching buffer up to one closable batch. When
         // the buffer stays short the topic is empty, so the batcher's
@@ -449,10 +1120,27 @@ impl ShardRuntime {
             Decision::Dispatch(n) => {
                 let batch: Vec<Request> = self.local.drain(..n).collect();
                 // Same mixed-batch service model as the DES dispatch.
-                let service = match &self.ladder {
+                let mut service = match &self.ladder {
                     Some(l) => l.batch_service_s(self.backend.as_ref(), &batch),
                     None => self.backend.batch_latency_s(batch.len()),
                 };
+                // Fault injection at dispatch: slowdown windows and
+                // per-batch spikes inflate the modeled service time; a
+                // batch slow enough to cross the heartbeat timeout gets
+                // a straggler check armed against it.
+                let mut spiked = false;
+                if let Some(f) = self.faults.as_mut() {
+                    let ord = f.ordinal;
+                    f.ordinal += 1;
+                    let spike = f.plan.spike(self.idx, ord);
+                    spiked = spike > 1.0;
+                    service *= f.plan.slowdown(self.idx, now) * spike;
+                    if let Some(rp) = f.plan.recovery.as_ref() {
+                        if service > rp.heartbeat_timeout_s {
+                            f.straggler_at = now + rp.heartbeat_timeout_s;
+                        }
+                    }
+                }
                 self.accrue(now, false);
                 self.busy = true;
                 self.busy_until = now + service;
@@ -460,13 +1148,25 @@ impl ShardRuntime {
                 self.shared.free_at_bits.store(self.busy_until.to_bits(), Ordering::SeqCst);
                 self.shared.busy.store(true, Ordering::SeqCst);
                 self.shared.queued.fetch_sub(n, Ordering::SeqCst);
-                self.metrics.lock().expect("metrics lock").record_batch(self.idx, service);
+                {
+                    let mut m = self.metrics.lock().expect("metrics lock");
+                    if spiked {
+                        m.faults.spikes += 1;
+                    }
+                    m.record_batch(self.idx, service);
+                }
                 self.in_flight = batch;
                 Step::Park(self.busy_until)
             }
             Decision::WaitUntil(t) => Step::Park(t),
             Decision::Idle => {
                 if self.closed {
+                    if !self.fault_quiescent() {
+                        // Future crashes, staged copies, or an open
+                        // fault window keep the shard in the protocol
+                        // (the DES runs until its fault work drains).
+                        return Step::Park(f64::INFINITY);
+                    }
                     // Drain-to-retire: the topic closed and everything
                     // admitted has been served.
                     self.accrue(now, false);
@@ -491,7 +1191,14 @@ fn run_virtual(clock: &VirtualClock, mut shards: Vec<ShardRuntime>) {
     let ids: Vec<usize> = shards.iter().map(|s| s.idx + 1).collect();
     while let Some((pid, now)) = clock.wait_any(&ids) {
         let s = shards.iter_mut().find(|s| s.idx + 1 == pid).expect("owned shard");
-        match s.step(now) {
+        let (step, wakes) = s.step(now);
+        // Failover re-dispatches published into other shards' topics:
+        // pull those consumers forward so they observe the message in
+        // event order, exactly like the front door's nudge.
+        for w in wakes {
+            clock.nudge(w + 1);
+        }
+        match step {
             Step::Park(t) => clock.park(pid, t),
             Step::Done => clock.done(pid),
         }
@@ -506,14 +1213,22 @@ fn run_virtual(clock: &VirtualClock, mut shards: Vec<ShardRuntime>) {
 /// could dispatch early once the kick fills its batch). `step` is
 /// idempotent for a shard with nothing to do, so the extra calls are
 /// free.
-fn run_wall(wall: &WallClock, kick: &Kick, mut shards: Vec<ShardRuntime>) {
+fn run_wall(wall: &WallClock, kicks: &[Arc<Kick>], me: usize, mut shards: Vec<ShardRuntime>) {
+    let kick = &kicks[me];
     let mut parks: Vec<Option<f64>> = vec![Some(0.0); shards.len()];
     loop {
         let seen = kick.seen();
         let now = wall.now();
         for (k, s) in shards.iter_mut().enumerate() {
             if parks[k].is_some() {
-                match s.step(now) {
+                let (step, wakes) = s.step(now);
+                // Failover re-dispatch landed on another thread's
+                // shard: kick its owner awake (self-kicks just cost
+                // one extra scan).
+                for w in wakes {
+                    kicks[w % kicks.len()].kick();
+                }
+                match step {
                     Step::Park(t) => parks[k] = Some(t),
                     Step::Done => parks[k] = None,
                 }
@@ -550,19 +1265,83 @@ struct FrontDoor<'a> {
     outcomes: &'a Mutex<Vec<RequestOutcome>>,
     offered: u64,
     offered_by_class: [u64; 3],
+    faults: Option<&'a FaultPlan>,
+    resolved: Option<&'a Mutex<HashSet<u64>>>,
+    /// Retry copies the front door itself displaced (an admission
+    /// eviction hit a re-dispatched copy): staged here and re-sent at
+    /// their backoff times between arrivals.
+    pending: Vec<(f64, Request)>,
 }
 
 impl FrontDoor<'_> {
-    /// Admit one arrival at modeled time `now`: token buckets, then
-    /// least-outstanding-work routing, then the per-class overflow
-    /// policy through the topic. Returns the shard to nudge when the
-    /// message was delivered.
+    /// Mark `id` terminally resolved (no-op without a fault plan).
+    fn resolve(&self, id: u64) {
+        if let Some(res) = self.resolved {
+            res.lock().expect("resolved lock").insert(id);
+        }
+    }
+
+    /// Earliest staged re-dispatch owned by the front door.
+    fn pending_next(&self) -> f64 {
+        self.pending.iter().map(|p| p.0).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Send the front door's staged copies due by `now` back out;
+    /// returns the shards to wake.
+    fn redispatch_due(&mut self, now: f64) -> Vec<usize> {
+        let mut wakes = Vec::new();
+        if let (Some(plan), Some(res)) = (self.faults, self.resolved) {
+            if !self.pending.is_empty() {
+                redispatch_staged(
+                    plan,
+                    now,
+                    &mut self.pending,
+                    res,
+                    self.metrics,
+                    self.outcomes,
+                    self.topics,
+                    self.shared,
+                    self.backends,
+                    self.cfg.shed,
+                    &mut wakes,
+                );
+            }
+        }
+        wakes
+    }
+
+    /// Admit one arrival at modeled time `now`: link drops, then token
+    /// buckets, then least-outstanding-work routing, then the per-class
+    /// overflow policy through the topic. Returns the shard to nudge
+    /// when the message was delivered.
     fn admit(&mut self, mut req: Request, now: f64) -> Option<usize> {
         self.offered += 1;
         self.offered_by_class[req.class.index()] += 1;
+        // Front-door link drop: the frame is lost before admission (a
+        // shed for every conservation law, counted separately in the
+        // fault report).
+        if let Some(p) = self.faults {
+            if p.drops_link(req.id) {
+                {
+                    let mut m = self.metrics.lock().expect("metrics lock");
+                    m.faults.link_drops += 1;
+                    m.record_shed(req.class);
+                }
+                self.resolve(req.id);
+                self.outcomes.lock().expect("outcomes lock").push(RequestOutcome {
+                    id: req.id,
+                    camera: req.camera,
+                    t_s: now,
+                    shed: true,
+                    rung: req.rung,
+                });
+                return None;
+            }
+        }
         if let Some(q) = self.quota.as_mut() {
             if !q.try_take(req.class, now) {
                 self.metrics.lock().expect("metrics lock").record_quota_shed(req.class);
+                self.resolve(req.id);
                 self.outcomes.lock().expect("outcomes lock").push(RequestOutcome {
                     id: req.id,
                     camera: req.camera,
@@ -574,16 +1353,32 @@ impl FrontDoor<'_> {
             }
         }
         // Least outstanding work over live queue depths, ties to the
-        // lowest index (the DES `ShardPool::route`).
-        let mut best = 0usize;
-        let mut best_s = f64::INFINITY;
+        // lowest index (the DES `ShardPool::route`), skipping shards
+        // the watchdog declared dead.
+        let mut routed: Option<(f64, usize)> = None;
         for (i, sh) in self.shared.iter().enumerate() {
+            if self.faults.is_some() && sh.down.load(Ordering::SeqCst) {
+                continue;
+            }
             let est = sh.outstanding_s(self.backends[i].as_ref(), now);
-            if est < best_s {
-                best_s = est;
-                best = i;
+            if routed.map_or(true, |(b, _)| est < b) {
+                routed = Some((est, i));
             }
         }
+        let Some((_, best)) = routed else {
+            // Total blackout: every shard known-failed — the front door
+            // sheds (only reachable under a fault plan).
+            self.resolve(req.id);
+            self.metrics.lock().expect("metrics lock").record_shed(req.class);
+            self.outcomes.lock().expect("outcomes lock").push(RequestOutcome {
+                id: req.id,
+                camera: req.camera,
+                t_s: now,
+                shed: true,
+                rung: req.rung,
+            });
+            return None;
+        };
         // Degradation rung from the routed shard's undispatched depth —
         // the same observable the DES reads from its routed queue at
         // the same point in the admission sequence.
@@ -604,18 +1399,36 @@ impl FrontDoor<'_> {
             PublishOutcome::DeliveredDroppedOldest(old) => {
                 // Net queue depth is unchanged: one in, one out — and
                 // the eviction report is what keeps live shed
-                // accounting exact per class.
-                self.metrics.lock().expect("metrics lock").record_shed(old.class);
-                self.outcomes.lock().expect("outcomes lock").push(RequestOutcome {
-                    id: old.id,
-                    camera: old.camera,
-                    t_s: now,
-                    shed: true,
-                    rung: old.rung,
-                });
+                // accounting exact per class. An evicted re-dispatch
+                // copy is displaced, not refused: it goes back through
+                // the retry path.
+                if old.retries > 0 {
+                    let plan = self.faults.expect("retry copies only exist under a fault plan");
+                    let res = self.resolved.expect("retry copies only exist under a fault plan");
+                    stage_or_expire(
+                        plan,
+                        old,
+                        now,
+                        res,
+                        self.metrics,
+                        self.outcomes,
+                        &mut self.pending,
+                    );
+                } else {
+                    self.resolve(old.id);
+                    self.metrics.lock().expect("metrics lock").record_shed(old.class);
+                    self.outcomes.lock().expect("outcomes lock").push(RequestOutcome {
+                        id: old.id,
+                        camera: old.camera,
+                        t_s: now,
+                        shed: true,
+                        rung: old.rung,
+                    });
+                }
                 Some(best)
             }
             PublishOutcome::Rejected | PublishOutcome::Closed => {
+                self.resolve(id);
                 self.metrics.lock().expect("metrics lock").record_shed(class);
                 self.outcomes.lock().expect("outcomes lock").push(RequestOutcome {
                     id,
@@ -692,6 +1505,43 @@ pub fn serve_live_logged(
         (0..n).map(|_| Arc::new(SharedTopic::bounded(cfg.queue_depth.max(1)))).collect();
     let shared: Vec<Arc<ShardShared>> = (0..n).map(|_| Arc::new(ShardShared::new())).collect();
 
+    // Fault plumbing: one shared resolved-id set (the exactly-once
+    // gate), one close signal, per-worker crash schedules.
+    let resolved: Option<Arc<Mutex<HashSet<u64>>>> =
+        cfg.faults.as_ref().map(|p| {
+            p.validate();
+            Arc::new(Mutex::new(HashSet::new()))
+        });
+    let closed_at = Arc::new(AtomicU64::new(f64::INFINITY.to_bits()));
+    let final_failed: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let mk_faults = |i: usize| {
+        cfg.faults.as_ref().map(|p| {
+            let mut crashes: Vec<f64> =
+                p.crashes.iter().filter(|c| c.device == i).map(|c| c.at_s).collect();
+            crashes.sort_by(|a, b| a.partial_cmp(b).expect("finite crash times"));
+            LiveFaults {
+                plan: p.clone(),
+                resolved: resolved.clone().expect("resolved set exists under a plan"),
+                topics: topics.clone(),
+                shared: shared.clone(),
+                backends: backends.clone(),
+                shed: cfg.shed,
+                crashes,
+                next_crash: 0,
+                crashed: false,
+                crash_t: 0.0,
+                detect_at: f64::INFINITY,
+                ready_at: f64::INFINITY,
+                straggler_at: f64::INFINITY,
+                is_down: false,
+                rebooting: false,
+                stranded: Vec::new(),
+                pending: Vec::new(),
+                ordinal: 0,
+            }
+        })
+    };
+
     let mut runtimes: Vec<ShardRuntime> = (0..n)
         .map(|i| ShardRuntime {
             idx: i,
@@ -716,6 +1566,10 @@ pub fn serve_live_logged(
             retire_log: retire_log.clone(),
             serving_count: serving_count.clone(),
             outcomes: outcomes.clone(),
+            faults: mk_faults(i),
+            closed_at: closed_at.clone(),
+            drain_timeout_s: live.drain_timeout_s,
+            final_failed: final_failed.clone(),
         })
         .collect();
     // Deal shards round-robin to worker threads (shard i → thread
@@ -737,6 +1591,9 @@ pub fn serve_live_logged(
         outcomes: &*outcomes,
         offered: 0,
         offered_by_class: [0; 3],
+        faults: cfg.faults.as_ref(),
+        resolved: resolved.as_deref(),
+        pending: Vec::new(),
     };
 
     let final_now = match live.clock {
@@ -747,11 +1604,19 @@ pub fn serve_live_logged(
                     let clock = clock.clone();
                     scope.spawn(move || run_virtual(&clock, group));
                 }
-                // The front door runs on this thread as participant 0.
+                // The front door runs on this thread as participant 0,
+                // pacing arrivals and its own staged re-dispatches.
                 let mut next = 0;
-                while next < trace.len() {
-                    clock.park(0, trace[next].arrival_s);
+                let mut vnow = 0.0;
+                loop {
+                    let arrival = trace.get(next).map_or(f64::INFINITY, |r| r.arrival_s);
+                    let due = arrival.min(front.pending_next());
+                    if !due.is_finite() {
+                        break;
+                    }
+                    clock.park(0, due);
                     let (_, now) = clock.wait_any(&[0]).expect("front door active");
+                    vnow = now;
                     while next < trace.len() && trace[next].arrival_s <= now {
                         let req = trace[next].clone();
                         next += 1;
@@ -759,25 +1624,36 @@ pub fn serve_live_logged(
                             clock.nudge(shard + 1);
                         }
                     }
+                    for w in front.redispatch_due(now) {
+                        clock.nudge(w + 1);
+                    }
                 }
-                // Drain-to-retire: close every topic, wake idle shards
-                // so they observe the hang-up, and leave the protocol.
+                // Drain-to-retire: stamp the close instant (the drain
+                // watchdog's reference), close every topic, wake the
+                // shards so they observe the hang-up, and leave the
+                // protocol.
+                closed_at.store(vnow.to_bits(), Ordering::SeqCst);
                 for t in &topics {
                     t.close();
                 }
-                clock.wake_idle();
+                if cfg.faults.is_some() || live.drain_timeout_s.is_finite() {
+                    clock.wake_all();
+                } else {
+                    clock.wake_idle();
+                }
                 clock.done(0);
             });
             clock.final_now()
         }
         ClockMode::Wall => {
             let wall = Arc::new(WallClock { start: Instant::now(), scale: live.time_scale.max(1e-3) });
-            let kicks: Vec<Arc<Kick>> = (0..threads).map(|_| Arc::new(Kick::new())).collect();
+            let kicks: Arc<Vec<Arc<Kick>>> =
+                Arc::new((0..threads).map(|_| Arc::new(Kick::new())).collect());
             thread::scope(|scope| {
                 for (t, group) in per_thread.drain(..).enumerate() {
                     let wall = wall.clone();
-                    let kick = kicks[t].clone();
-                    scope.spawn(move || run_wall(&wall, &kick, group));
+                    let kicks = kicks.clone();
+                    scope.spawn(move || run_wall(&wall, &kicks, t, group));
                 }
                 for req in trace {
                     wall.sleep_until(req.arrival_s);
@@ -785,11 +1661,28 @@ pub fn serve_live_logged(
                     if let Some(shard) = front.admit(req.clone(), now) {
                         kicks[shard % threads].kick();
                     }
+                    for w in front.redispatch_due(now) {
+                        kicks[w % threads].kick();
+                    }
                 }
+                // Drain the front door's own staged copies before the
+                // hang-up (their backoffs are short by construction).
+                loop {
+                    let due = front.pending_next();
+                    if !due.is_finite() {
+                        break;
+                    }
+                    wall.sleep_until(due);
+                    let now = wall.now();
+                    for w in front.redispatch_due(now) {
+                        kicks[w % threads].kick();
+                    }
+                }
+                closed_at.store(wall.now().to_bits(), Ordering::SeqCst);
                 for t in &topics {
                     t.close();
                 }
-                for k in &kicks {
+                for k in kicks.iter() {
                     k.kick();
                 }
             });
@@ -851,7 +1744,19 @@ pub fn serve_live_logged(
     for d in report.devices.iter_mut() {
         d.state = "retired";
     }
+    // Shards that left as failed (watchdog-detected without reboot, or
+    // shutdown-abandoned) never drained: mark them.
+    for &i in final_failed.lock().expect("failed lock").iter() {
+        if let Some(d) = report.devices.get_mut(i) {
+            d.state = "failed";
+        }
+    }
     report.energy = ledger;
+    if let Some(plan) = cfg.faults.as_ref() {
+        let availability =
+            if offered == 0 { 1.0 } else { report.completed as f64 / offered as f64 };
+        report.faults = Some(metrics.faults.to_report(plan, availability));
+    }
     if let Some(l) = cfg.admission.ladder() {
         report.variants = l.variant_serves(&metrics.variant_served);
         report.effective_accuracy = Some(l.effective_accuracy(&metrics.variant_served, offered));

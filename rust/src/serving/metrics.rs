@@ -22,6 +22,7 @@
 
 use super::autoscale::ScalingEvent;
 use super::device::Backend;
+use super::faults::{FaultReport, FaultStats};
 use super::shard::Lifecycle;
 use super::SloClass;
 
@@ -171,7 +172,9 @@ impl EnergyLedger {
     }
 
     /// Accrue `power_w` over `[from_s, to_s)` for `device` in lifecycle
-    /// `state`, split across epoch bins. Retired devices draw nothing.
+    /// `state`, split across epoch bins. Retired and failed devices draw
+    /// nothing (a crashed board is powered off until its reboot
+    /// re-provisions it).
     pub(super) fn accrue(
         &mut self,
         device: usize,
@@ -180,7 +183,7 @@ impl EnergyLedger {
         to_s: f64,
         power_w: f64,
     ) {
-        if matches!(state, Lifecycle::Retired) || to_s <= from_s {
+        if matches!(state, Lifecycle::Retired | Lifecycle::Failed) || to_s <= from_s {
             return;
         }
         while self.per_device_j.len() <= device {
@@ -206,7 +209,7 @@ impl EnergyLedger {
                 Lifecycle::Provisioning { .. } => self.epochs[bin].provisioning_j += j,
                 Lifecycle::Active => self.epochs[bin].active_j += j,
                 Lifecycle::Draining => self.epochs[bin].draining_j += j,
-                Lifecycle::Retired => unreachable!("filtered above"),
+                Lifecycle::Retired | Lifecycle::Failed => unreachable!("filtered above"),
             }
             self.per_device_j[device] += j;
             if seg_end >= to_s {
@@ -363,8 +366,10 @@ pub struct VariantServe {
 /// Fleet-level summary of one simulated run.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
-    /// Requests offered to the front door (every one either completes or
-    /// is shed — the conservation law the property tests pin down).
+    /// Requests offered to the front door (every one either completes,
+    /// is shed, or — under an active fault plan — expires its retry
+    /// budget: `offered == completed + shed + faults.expired`, the
+    /// conservation law the property tests pin down).
     pub offered: u64,
     pub completed: u64,
     pub shed: u64,
@@ -406,6 +411,9 @@ pub struct FleetReport {
     /// operating points: `Σ served_k × map_k / offered` (a shed frame
     /// scores zero). `None` without a ladder.
     pub effective_accuracy: Option<f64>,
+    /// Fault-injection and recovery accounting when the run carried a
+    /// [`FaultPlan`](super::FaultPlan); `None` for fault-free runs.
+    pub faults: Option<FaultReport>,
 }
 
 impl FleetReport {
@@ -475,6 +483,9 @@ pub struct FleetMetrics {
     epoch_hist: LatencyHistogram,
     epoch_shed: u64,
     epoch_busy_s: f64,
+    /// Fault/recovery counters the drivers feed when a
+    /// [`FaultPlan`](super::FaultPlan) is active (zero otherwise).
+    pub faults: FaultStats,
 }
 
 impl FleetMetrics {
@@ -500,6 +511,7 @@ impl FleetMetrics {
             epoch_hist: LatencyHistogram::new(),
             epoch_shed: 0,
             epoch_busy_s: 0.0,
+            faults: FaultStats::default(),
         }
     }
 
@@ -656,6 +668,7 @@ impl FleetMetrics {
             scenario: None,
             variants: Vec::new(),
             effective_accuracy: None,
+            faults: None,
         }
     }
 }

@@ -30,6 +30,11 @@
 //!   pruned / reduced-resolution model variants served by queue
 //!   pressure under [`AdmissionPolicy::Degrade`], so overload costs
 //!   accuracy gradually instead of shedding frames outright;
+//! - [`faults`] — seedable fault injection ([`FaultPlan`]: crashes,
+//!   hang/straggler slowdowns, per-batch latency spikes, front-door
+//!   link drops) plus the [`RecoveryPolicy`] machinery (heartbeat
+//!   watchdog, bounded-budget deadline-aware re-dispatch, failover
+//!   routing, reboot replacement) both drivers inject identically;
 //! - [`autoscale`] — closed-loop pool sizing between DES epochs
 //!   (target-utilization and p99-SLO-tracking policies, modeled
 //!   provisioning delay, energy-aware drain ordering);
@@ -57,6 +62,7 @@ pub mod admission;
 pub mod autoscale;
 pub mod batcher;
 pub mod device;
+pub mod faults;
 pub mod ladder;
 pub mod live;
 pub mod metrics;
@@ -65,6 +71,7 @@ pub mod sim;
 
 pub use crate::scenario;
 pub use admission::{AdmissionPolicy, ClassQuota, ShedPolicy};
+pub use faults::{CrashFault, FaultPlan, FaultReport, RecoveryPolicy, SlowdownFault};
 pub use ladder::{LadderRung, VariantLadder};
 pub use autoscale::{
     AutoscaleConfig, Autoscaler, DrainOrder, ScaleAction, ScaleEventKind, ScalePolicy,
@@ -212,6 +219,12 @@ pub struct Request {
     /// [`AdmissionPolicy::Degrade`] raises it with queue pressure; every
     /// other policy leaves it 0.
     pub rung: u8,
+    /// Dispatch attempts already spent on this request *instance*
+    /// (0 = the original admission). Fault recovery re-dispatches
+    /// copies with the counter bumped, bounding the retry storm by
+    /// [`RecoveryPolicy::retry_budget`]; without a [`FaultPlan`] it
+    /// stays 0 everywhere.
+    pub retries: u8,
 }
 
 #[cfg(test)]
@@ -244,6 +257,7 @@ mod tests {
                 objects: 1,
                 class: SloClass::Standard,
                 rung: 0,
+                retries: 0,
             })
             .collect();
         assign_slo_classes(&mut trace);

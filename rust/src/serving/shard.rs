@@ -36,6 +36,10 @@ pub enum Lifecycle {
     Draining,
     /// Drained and out of service (kept for stable indices/reports).
     Retired,
+    /// Crashed and detected as such by the watchdog: executes nothing,
+    /// accepts nothing. A rebooting device transitions back through
+    /// `Provisioning` once fault recovery re-provisions it.
+    Failed,
 }
 
 impl Lifecycle {
@@ -56,6 +60,7 @@ impl Lifecycle {
             Lifecycle::Provisioning { .. } => "warming",
             Lifecycle::Draining => "draining",
             Lifecycle::Retired => "retired",
+            Lifecycle::Failed => "failed",
         }
     }
 }
@@ -287,7 +292,15 @@ mod tests {
     use crate::serving::device::BaselineDevice;
 
     fn req(id: u64, t: f64) -> Request {
-        Request { id, camera: 0, arrival_s: t, objects: 1, class: crate::serving::SloClass::Standard }
+        Request {
+            id,
+            camera: 0,
+            arrival_s: t,
+            objects: 1,
+            class: crate::serving::SloClass::Standard,
+            rung: 0,
+            retries: 0,
+        }
     }
 
     fn pool2() -> ShardPool {

@@ -19,10 +19,13 @@
 //! the pool grows and shrinks between epochs through the device
 //! [`Lifecycle`](super::shard::Lifecycle).
 
+use std::collections::HashSet;
+
 use crate::dataset::scenes::SceneConfig;
 use crate::util::Rng;
 
 use super::admission::{admit, Admission, AdmissionPolicy, ShedPolicy};
+use super::faults::FaultPlan;
 use super::autoscale::{
     Autoscaler, DrainOrder, EpochObservation, ScaleAction, ScaleEventKind, ScalingEvent,
 };
@@ -51,6 +54,10 @@ pub struct SimConfig {
     /// Bin width of the fleet [`EnergyLedger`], virtual s (at least
     /// [`EnergyLedger::MIN_EPOCH_S`] — bins are dense over the run).
     pub energy_epoch_s: f64,
+    /// Seeded fault schedule + recovery machinery ([`super::faults`]).
+    /// `None` (the default) leaves every fault branch inert — runs are
+    /// bit-identical to the pre-fault driver.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for SimConfig {
@@ -63,6 +70,7 @@ impl Default for SimConfig {
             slo_s: 0.100,
             work_stealing: true,
             energy_epoch_s: 0.5,
+            faults: None,
         }
     }
 }
@@ -124,6 +132,7 @@ pub fn poisson_trace(rate_hz: f64, horizon_s: f64, seed: u64) -> Vec<Request> {
             objects: 1,
             class: SloClass::Standard,
             rung: 0,
+            retries: 0,
         });
     }
     out
@@ -160,6 +169,7 @@ pub fn multi_camera_trace(
                 objects,
                 class: SloClass::Standard,
                 rung: 0,
+                retries: 0,
             });
             if objects as f64 > midpoint {
                 let t2 = t + 0.1 * period;
@@ -171,6 +181,7 @@ pub fn multi_camera_trace(
                         objects,
                         class: SloClass::Standard,
                         rung: 0,
+                        retries: 0,
                     });
                 }
             }
@@ -270,7 +281,7 @@ impl Arrivals<'_> {
                 *next_id += 1;
                 let class =
                     if cl.classed { SloClass::for_camera(i) } else { SloClass::Standard };
-                Some(Request { id, camera: i, arrival_s: t, objects: 1, class, rung: 0 })
+                Some(Request { id, camera: i, arrival_s: t, objects: 1, class, rung: 0, retries: 0 })
             }
         }
     }
@@ -317,6 +328,7 @@ fn settle(
     cfg: &SimConfig,
     metrics: &mut FleetMetrics,
     done: &mut Vec<(Request, f64, bool)>,
+    frt: &mut Option<FaultRt>,
 ) {
     loop {
         let mut progressed = false;
@@ -326,6 +338,15 @@ fn settle(
                 let done_at = pool.devices[i].free_at;
                 let batch = std::mem::take(&mut pool.devices[i].in_flight);
                 for r in batch {
+                    // Exactly-once: a completion whose id already
+                    // resolved (its re-dispatched copy finished first)
+                    // is suppressed — counted, never double-reported.
+                    if let Some(f) = frt.as_mut() {
+                        if !f.resolved.insert(r.id) {
+                            metrics.faults.duplicates_suppressed += 1;
+                            continue;
+                        }
+                    }
                     metrics.record_completion(i, done_at - r.arrival_s, r.class);
                     metrics.record_variant(r.rung);
                     done.push((r, done_at, false));
@@ -334,6 +355,11 @@ fn settle(
                 progressed = true;
             }
             if pool.devices[i].busy || !pool.devices[i].lifecycle.serves() {
+                continue;
+            }
+            // A crashed-but-undetected device executes nothing; its
+            // queue keeps receiving work until the watchdog notices.
+            if frt.as_ref().map_or(false, |f| f.failed(i)) {
                 continue;
             }
             // 2. Work stealing into an idle, empty, *accepting* device.
@@ -355,10 +381,31 @@ fn settle(
                 // Degraded frames shrink the batch's marginal cost; with
                 // no ladder (or an all-rung-0 batch) this is bit-exactly
                 // the backend's plain batch latency.
-                let service = match cfg.admission.ladder() {
+                let mut service = match cfg.admission.ladder() {
                     Some(l) => l.batch_service_s(d.backend.as_ref(), &batch),
                     None => d.backend.batch_latency_s(batch.len()),
                 };
+                // Fault injection at dispatch: slowdown windows and
+                // per-batch spikes inflate the modeled service time; a
+                // batch slow enough to cross the heartbeat timeout gets
+                // a straggler check scheduled against it.
+                if let Some(f) = frt.as_mut() {
+                    let ord = f.ordinal[i];
+                    f.ordinal[i] += 1;
+                    let spike = f.plan.spike(i, ord);
+                    if spike > 1.0 {
+                        metrics.faults.spikes += 1;
+                    }
+                    service *= f.plan.slowdown(i, now) * spike;
+                    if let Some(rp) = f.plan.recovery.as_ref() {
+                        if service > rp.heartbeat_timeout_s {
+                            f.events.push(FaultEvent::Straggler {
+                                device: i,
+                                t: now + rp.heartbeat_timeout_s,
+                            });
+                        }
+                    }
+                }
                 d.busy = true;
                 d.free_at = now + service;
                 d.in_flight = batch;
@@ -373,13 +420,28 @@ fn settle(
 }
 
 /// The next event after `now`: the earliest of the next arrival, any
-/// in-flight completion, any serving device's batch-wait deadline, or any
-/// provisioning device's warm-up end.
-fn next_event(pool: &ShardPool, next_arrival: Option<f64>, batch: &BatchPolicy, now: f64) -> f64 {
+/// in-flight completion, any serving device's batch-wait deadline, any
+/// provisioning device's warm-up end, or (under a fault plan) any
+/// crash/detect/straggler event or staged re-dispatch.
+fn next_event(
+    pool: &ShardPool,
+    next_arrival: Option<f64>,
+    batch: &BatchPolicy,
+    now: f64,
+    frt: Option<&FaultRt>,
+) -> f64 {
     let mut t = next_arrival.unwrap_or(f64::INFINITY);
-    for d in &pool.devices {
+    if let Some(f) = frt {
+        t = t.min(f.next_t());
+    }
+    for (i, d) in pool.devices.iter().enumerate() {
         if let Lifecycle::Provisioning { ready_at } = d.lifecycle {
             t = t.min(ready_at);
+            continue;
+        }
+        // A crashed shard produces no events of its own until its
+        // watchdog fires (that event lives in the fault schedule).
+        if frt.map_or(false, |f| f.failed(i)) {
             continue;
         }
         if d.busy {
@@ -391,6 +453,171 @@ fn next_event(pool: &ShardPool, next_arrival: Option<f64>, batch: &BatchPolicy, 
         }
     }
     t
+}
+
+/// One scheduled event of the DES fault machinery.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FaultEvent {
+    /// The injected crash instant: the device silently stops executing.
+    Crash { device: usize, t: f64 },
+    /// The watchdog's heartbeat timeout expires: the crash becomes known.
+    Detect { device: usize, t: f64 },
+    /// Heartbeat check on a dispatched batch whose (fault-inflated)
+    /// service time crossed the timeout.
+    Straggler { device: usize, t: f64 },
+}
+
+impl FaultEvent {
+    fn t(&self) -> f64 {
+        match *self {
+            FaultEvent::Crash { t, .. }
+            | FaultEvent::Detect { t, .. }
+            | FaultEvent::Straggler { t, .. } => t,
+        }
+    }
+
+    /// Tie order within one instant: crashes land before detections
+    /// before straggler checks, then device index.
+    fn order(&self) -> (u8, usize) {
+        match *self {
+            FaultEvent::Crash { device, .. } => (0, device),
+            FaultEvent::Detect { device, .. } => (1, device),
+            FaultEvent::Straggler { device, .. } => (2, device),
+        }
+    }
+}
+
+/// Runtime state of one [`FaultPlan`] inside a DES run.
+struct FaultRt {
+    plan: FaultPlan,
+    /// Scheduled crash/detect/straggler events not yet processed.
+    events: Vec<FaultEvent>,
+    /// Requests staged for re-dispatch: `(redispatch_at, copy)`.
+    pending: Vec<(f64, Request)>,
+    /// Ids with a terminal outcome (completed / shed / expired) — the
+    /// exactly-once gate: later completions of stale copies are
+    /// suppressed, later sheds dropped.
+    resolved: HashSet<u64>,
+    /// Simulator ground truth: the device crashed. *Knowledge* (the
+    /// lifecycle the router consults) lags until the watchdog detects
+    /// it — without recovery, forever.
+    truth_failed: Vec<bool>,
+    /// Crash instant per device (base of the MTTR measurement).
+    crash_t: Vec<f64>,
+    /// In-flight batches stranded by a crash, awaiting detection (or
+    /// end-of-run expiry).
+    stranded: Vec<Vec<Request>>,
+    /// Per-device dispatched-batch ordinal (the spike draw's index).
+    ordinal: Vec<u64>,
+    /// Devices whose reboot re-provisioning is in flight (MTTR closes
+    /// at activation).
+    rebooting: Vec<bool>,
+}
+
+impl FaultRt {
+    fn new(plan: &FaultPlan, n_devices: usize) -> Self {
+        plan.validate();
+        let mut events: Vec<FaultEvent> = plan
+            .crashes
+            .iter()
+            .map(|c| FaultEvent::Crash { device: c.device, t: c.at_s })
+            .collect();
+        events.sort_by(|a, b| {
+            a.t().partial_cmp(&b.t()).unwrap().then(a.order().cmp(&b.order()))
+        });
+        Self {
+            plan: plan.clone(),
+            events,
+            pending: Vec::new(),
+            resolved: HashSet::new(),
+            truth_failed: vec![false; n_devices],
+            crash_t: vec![0.0; n_devices],
+            stranded: vec![Vec::new(); n_devices],
+            ordinal: vec![0; n_devices],
+            rebooting: vec![false; n_devices],
+        }
+    }
+
+    /// Track one more device (autoscaler grow).
+    fn add_device(&mut self) {
+        self.truth_failed.push(false);
+        self.crash_t.push(0.0);
+        self.stranded.push(Vec::new());
+        self.ordinal.push(0);
+        self.rebooting.push(false);
+    }
+
+    fn failed(&self, device: usize) -> bool {
+        self.truth_failed.get(device).copied().unwrap_or(false)
+    }
+
+    /// Earliest scheduled event or staged re-dispatch.
+    fn next_t(&self) -> f64 {
+        let ev = self.events.iter().map(FaultEvent::t).fold(f64::INFINITY, f64::min);
+        let rd = self.pending.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+        ev.min(rd)
+    }
+
+    /// Pop the earliest event due at or before `now` (tie order:
+    /// [`FaultEvent::order`]).
+    fn pop_due(&mut self, now: f64) -> Option<FaultEvent> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.events.iter().enumerate() {
+            if e.t() > now {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let (bt, bo) = (self.events[b].t(), self.events[b].order());
+                    e.t() < bt || (e.t() == bt && e.order() < bo)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best.map(|i| self.events.remove(i))
+    }
+
+    /// Stage `r` for re-dispatch a backoff after `t`, or expire it when
+    /// the retry budget / freshness deadline is spent. Already-resolved
+    /// ids are dropped silently (the id completed or shed elsewhere).
+    /// Expired requests get a shed-flagged outcome via `done` but are
+    /// counted in [`FaultStats::expired`](super::faults::FaultStats),
+    /// *not* the fleet shed counter — the conservation law is
+    /// `offered == completed + shed + expired`.
+    fn requeue(
+        &mut self,
+        r: Request,
+        t: f64,
+        metrics: &mut FleetMetrics,
+        done: &mut Vec<(Request, f64, bool)>,
+    ) {
+        if self.resolved.contains(&r.id) {
+            return;
+        }
+        let Some(rp) = self.plan.recovery.as_ref() else {
+            // No recovery armed: the request dies with its shard.
+            self.resolved.insert(r.id);
+            metrics.faults.expired += 1;
+            done.push((r, t, true));
+            return;
+        };
+        let at = t + rp.backoff_base_s * 2f64.powi(r.retries as i32);
+        if u32::from(r.retries) + 1 > u32::from(rp.retry_budget)
+            || at - r.arrival_s > rp.retry_deadline_s
+        {
+            self.resolved.insert(r.id);
+            metrics.faults.expired += 1;
+            done.push((r, t, true));
+            return;
+        }
+        let mut copy = r;
+        copy.retries += 1;
+        metrics.faults.retries += 1;
+        self.pending.push((at, copy));
+    }
 }
 
 /// Where grown devices come from.
@@ -454,6 +681,7 @@ fn drive(
     assert!(!pool.is_empty(), "simulate needs at least one device");
     let mut metrics = FleetMetrics::new(pool.len(), cfg.slo_s);
     let mut quota = cfg.admission.runtime_quota();
+    let mut frt = cfg.faults.as_ref().map(|p| FaultRt::new(p, pool.len()));
     let mut events: Vec<ScalingEvent> = Vec::new();
     let mut now = 0.0f64;
     let mut last_completion = 0.0f64;
@@ -487,6 +715,15 @@ fn drive(
             if let Lifecycle::Provisioning { ready_at } = pool.devices[i].lifecycle {
                 if ready_at <= now {
                     pool.devices[i].lifecycle = Lifecycle::Active;
+                    // A reboot landing closes the repair clock: MTTR is
+                    // crash → serving again.
+                    if let Some(f) = frt.as_mut() {
+                        if f.rebooting[i] {
+                            f.rebooting[i] = false;
+                            metrics.faults.recovered_devices += 1;
+                            metrics.faults.mttr_total_s += ready_at - f.crash_t[i];
+                        }
+                    }
                     devices_peak = devices_peak.max(pool.active_count());
                     events.push(ScalingEvent {
                         t_s: ready_at,
@@ -502,14 +739,46 @@ fn drive(
         while let Some(mut req) = arrivals.pop_due(now) {
             offered += 1;
             offered_by_class[req.class.index()] += 1;
+            // Front-door link drop: the frame is lost before admission
+            // (a shed for every conservation law, counted separately in
+            // the fault report; the camera still gets its token back).
+            if let Some(f) = frt.as_mut() {
+                if f.plan.drops_link(req.id) {
+                    metrics.faults.link_drops += 1;
+                    f.resolved.insert(req.id);
+                    metrics.record_shed(req.class);
+                    done.push((req, now, true));
+                    continue;
+                }
+            }
             if let Some(q) = quota.as_mut() {
                 if !q.try_take(req.class, now) {
                     metrics.record_quota_shed(req.class);
+                    if let Some(f) = frt.as_mut() {
+                        f.resolved.insert(req.id);
+                    }
                     done.push((req, now, true));
                     continue;
                 }
             }
             let idx = pool.route(now);
+            // Total blackout: route's last-resort fallback found no
+            // live shard (every device failed for good) — the front
+            // door sheds. Unreachable without a fault plan (the
+            // autoscaler's min-devices clamp keeps one device alive).
+            if frt.is_some()
+                && matches!(
+                    pool.devices[idx].lifecycle,
+                    Lifecycle::Retired | Lifecycle::Failed
+                )
+            {
+                if let Some(f) = frt.as_mut() {
+                    f.resolved.insert(req.id);
+                }
+                metrics.record_shed(req.class);
+                done.push((req, now, true));
+                continue;
+            }
             let d = &mut pool.devices[idx];
             // Degradation rung from the routed queue's fill fraction,
             // stamped before the shed policy runs — the live front door
@@ -520,18 +789,167 @@ fn drive(
             match admit(&mut d.queue, cfg.queue_depth, cfg.shed, req.clone()) {
                 Admission::Admitted => {}
                 Admission::AdmittedEvicted(old) => {
-                    metrics.record_shed(old.class);
-                    done.push((old, now, true));
+                    // An evicted re-dispatch copy is displaced, not
+                    // refused: it goes back through the retry path.
+                    if old.retries > 0 {
+                        frt.as_mut()
+                            .expect("retry copies only exist under a fault plan")
+                            .requeue(old, now, &mut metrics, &mut done);
+                    } else {
+                        if let Some(f) = frt.as_mut() {
+                            f.resolved.insert(old.id);
+                        }
+                        metrics.record_shed(old.class);
+                        done.push((old, now, true));
+                    }
                 }
                 Admission::Rejected => {
+                    if let Some(f) = frt.as_mut() {
+                        f.resolved.insert(req.id);
+                    }
                     metrics.record_shed(req.class);
                     done.push((req, now, true));
                 }
             }
         }
 
+        // 1b. Fault machinery. Crashes land *after* the same instant's
+        // arrivals (the front door hears about traffic before the
+        // watchdog hears about failures — the live runtime's turn order),
+        // then detections and straggler checks, then staged re-dispatches
+        // re-enter routing + admission.
+        if let Some(f) = frt.as_mut() {
+            while let Some(ev) = f.pop_due(now) {
+                match ev {
+                    FaultEvent::Crash { device, t } => {
+                        // A board that is off (failed, rebooting,
+                        // retired) cannot crash again.
+                        if device >= pool.devices.len()
+                            || f.truth_failed[device]
+                            || !pool.devices[device].lifecycle.serves()
+                        {
+                            continue;
+                        }
+                        metrics.faults.injected_crashes += 1;
+                        f.truth_failed[device] = true;
+                        f.crash_t[device] = t;
+                        // The in-flight batch is stranded, not lost:
+                        // detection re-dispatches it (or end-of-run
+                        // expiry accounts for it).
+                        let d = &mut pool.devices[device];
+                        f.stranded[device] = std::mem::take(&mut d.in_flight);
+                        d.busy = false;
+                        if let Some(rp) = f.plan.recovery.as_ref() {
+                            f.events.push(FaultEvent::Detect {
+                                device,
+                                t: t + rp.heartbeat_timeout_s,
+                            });
+                        }
+                    }
+                    FaultEvent::Detect { device, t } => {
+                        if !f.truth_failed[device] {
+                            continue;
+                        }
+                        metrics.faults.detected += 1;
+                        f.truth_failed[device] = false;
+                        pool.devices[device].lifecycle = Lifecycle::Failed;
+                        events.push(ScalingEvent {
+                            t_s: t,
+                            kind: ScaleEventKind::Failed { device },
+                            serving_after: pool.serving_count(),
+                        });
+                        // Everything the dead shard held — the stranded
+                        // in-flight batch first (oldest work), then its
+                        // queue — goes back through re-dispatch.
+                        let stranded = std::mem::take(&mut f.stranded[device]);
+                        let queued: Vec<Request> =
+                            pool.devices[device].queue.drain(..).collect();
+                        for r in stranded.into_iter().chain(queued) {
+                            f.requeue(r, t, &mut metrics, &mut done);
+                        }
+                        let reboot = f.plan.recovery.as_ref().map_or(false, |rp| rp.reboot);
+                        if reboot {
+                            let delay = f.plan.recovery.as_ref().unwrap().reboot_delay_s;
+                            pool.devices[device].lifecycle =
+                                Lifecycle::Provisioning { ready_at: t + delay };
+                            f.rebooting[device] = true;
+                            events.push(ScalingEvent {
+                                t_s: t,
+                                kind: ScaleEventKind::Provisioning { device },
+                                serving_after: pool.serving_count(),
+                            });
+                        }
+                    }
+                    FaultEvent::Straggler { device, t } => {
+                        // Fires only while the guarded batch is still
+                        // running (a crash cleared `busy` and is handled
+                        // by its own detection; a finished batch needs
+                        // no rescue).
+                        if f.truth_failed[device]
+                            || !pool.devices[device].busy
+                            || pool.devices[device].free_at <= t
+                        {
+                            continue;
+                        }
+                        metrics.faults.detected += 1;
+                        // Copies of the hung batch go back through
+                        // re-dispatch; the original stays in flight and
+                        // whichever finishes second is suppressed.
+                        let copies: Vec<Request> = pool.devices[device]
+                            .in_flight
+                            .iter()
+                            .filter(|r| !f.resolved.contains(&r.id))
+                            .cloned()
+                            .collect();
+                        for r in copies {
+                            f.requeue(r, t, &mut metrics, &mut done);
+                        }
+                    }
+                }
+            }
+
+            // Staged re-dispatches due now re-enter routing + admission
+            // (deterministic order: fire time, then id). Retry copies
+            // bypass the front-door quota and link drops — the request
+            // already paid both on arrival.
+            f.pending.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap().then(a.1.id.cmp(&b.1.id))
+            });
+            while let Some(pos) = f.pending.iter().position(|p| p.0 <= now) {
+                let (_, r) = f.pending.remove(pos);
+                if f.resolved.contains(&r.id) {
+                    continue;
+                }
+                let idx = pool.route(now);
+                if matches!(
+                    pool.devices[idx].lifecycle,
+                    Lifecycle::Retired | Lifecycle::Failed
+                ) {
+                    // Nothing routable anywhere right now: back off and
+                    // try again (or expire on budget/deadline).
+                    f.requeue(r, now, &mut metrics, &mut done);
+                    continue;
+                }
+                let d = &mut pool.devices[idx];
+                match admit(&mut d.queue, cfg.queue_depth, cfg.shed, r.clone()) {
+                    Admission::Admitted => metrics.faults.redispatched += 1,
+                    Admission::AdmittedEvicted(old) => {
+                        metrics.faults.redispatched += 1;
+                        if old.retries > 0 {
+                            f.requeue(old, now, &mut metrics, &mut done);
+                        } else {
+                            f.resolved.insert(old.id);
+                            metrics.record_shed(old.class);
+                            done.push((old, now, true));
+                        }
+                    }
+                    Admission::Rejected => f.requeue(r, now, &mut metrics, &mut done),
+                }
+            }
+        }
+
         // 2. Complete / steal / dispatch until quiescent.
-        settle(pool, now, cfg, &mut metrics, &mut done);
+        settle(pool, now, cfg, &mut metrics, &mut done, &mut frt);
         for d in &pool.devices {
             if d.busy {
                 last_completion = last_completion.max(d.free_at);
@@ -547,6 +965,9 @@ fn drive(
             if matches!(pool.devices[i].lifecycle, Lifecycle::Draining)
                 && !pool.devices[i].busy
                 && pool.devices[i].queue.is_empty()
+                // A crashed drainer is not "drained": its stranded work
+                // is still unaccounted until the watchdog rules on it.
+                && !frt.as_ref().map_or(false, |f| f.failed(i))
             {
                 pool.devices[i].lifecycle = Lifecycle::Retired;
                 let serving_after = pool.serving_count();
@@ -590,6 +1011,9 @@ fn drive(
                             let ready_at = now + ctx.auto.cfg.provision_delay_s;
                             let idx = pool.register_provisioning(backend, ready_at);
                             metrics.add_device();
+                            if let Some(f) = frt.as_mut() {
+                                f.add_device();
+                            }
                             let serving_after = pool.serving_count();
                             events.push(ScalingEvent {
                                 t_s: now,
@@ -630,13 +1054,27 @@ fn drive(
         }
 
         let arrivals_left = arrivals.pending();
-        let work_left = pool.devices.iter().any(|d| d.busy || !d.queue.is_empty());
-        if !arrivals_left && !work_left {
+        let recovery_on = frt.as_ref().map_or(false, |f| f.plan.recovery.is_some());
+        let work_left = pool.devices.iter().enumerate().any(|(i, d)| {
+            // A dead shard's backlog cannot drain without recovery; it
+            // is flushed to expired outcomes after the loop.
+            if !recovery_on && frt.as_ref().map_or(false, |f| f.failed(i)) {
+                return false;
+            }
+            d.busy || !d.queue.is_empty()
+        });
+        // The fault machinery keeps the run alive until every scheduled
+        // event fires, every staged re-dispatch lands, and every reboot
+        // completes — MTTR and recovery accounting stay exact.
+        let fault_work = frt.as_ref().map_or(false, |f| {
+            !f.pending.is_empty() || !f.events.is_empty() || f.rebooting.iter().any(|&b| b)
+        });
+        if !arrivals_left && !work_left && !fault_work {
             break;
         }
 
         // 5. Advance virtual time to the next event.
-        let mut t = next_event(pool, arrivals.peek(), &cfg.batch, now);
+        let mut t = next_event(pool, arrivals.peek(), &cfg.batch, now, frt.as_ref());
         if let Some(epoch_end) = next_epoch {
             t = t.min(epoch_end);
         }
@@ -655,9 +1093,42 @@ fn drive(
         // constant and the ledger is exact.
         for (i, d) in pool.devices.iter().enumerate() {
             let (idle_w, busy_w, _) = powers[i];
-            ledger.accrue(i, d.lifecycle, now, t, if d.busy { busy_w } else { idle_w });
+            // A crashed board draws nothing (it is down, whatever the
+            // router still believes).
+            let state = if frt.as_ref().map_or(false, |f| f.failed(i)) {
+                Lifecycle::Failed
+            } else {
+                d.lifecycle
+            };
+            ledger.accrue(i, state, now, t, if d.busy { busy_w } else { idle_w });
         }
         now = t;
+    }
+
+    // End-of-run flush: work stranded on crashed shards nothing ever
+    // recovered (recovery off — the watchdog never ruled) expires, so
+    // every id still reaches the outcome log exactly once.
+    if let Some(f) = frt.as_mut() {
+        debug_assert!(f.pending.is_empty(), "staged re-dispatches must drain before exit");
+        for i in 0..pool.devices.len() {
+            if !f.truth_failed[i] {
+                continue;
+            }
+            let stranded = std::mem::take(&mut f.stranded[i]);
+            let queued: Vec<Request> = pool.devices[i].queue.drain(..).collect();
+            for r in stranded.into_iter().chain(queued) {
+                if f.resolved.insert(r.id) {
+                    metrics.faults.expired += 1;
+                    outcomes.push(RequestOutcome {
+                        id: r.id,
+                        camera: r.camera,
+                        t_s: now,
+                        shed: true,
+                        rung: r.rung,
+                    });
+                }
+            }
+        }
     }
 
     for (stats, &(_, _, gop)) in metrics.per_device.iter().zip(&powers) {
@@ -682,6 +1153,11 @@ fn drive(
         c.offered = offered_by_class[i];
     }
     report.energy = ledger;
+    if let Some(plan) = cfg.faults.as_ref() {
+        let availability =
+            if offered == 0 { 1.0 } else { report.completed as f64 / offered as f64 };
+        report.faults = Some(metrics.faults.to_report(plan, availability));
+    }
     if let Some(l) = cfg.admission.ladder() {
         report.variants = l.variant_serves(&metrics.variant_served);
         report.effective_accuracy = Some(l.effective_accuracy(&metrics.variant_served, offered));
@@ -939,6 +1415,7 @@ mod tests {
                         objects: 1,
                         class: SloClass::Standard,
                         rung: 0,
+                        retries: 0,
                     });
             }
             pool

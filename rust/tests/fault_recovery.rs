@@ -1,0 +1,321 @@
+//! Fault injection & failure recovery: the exactly-once accounting
+//! suite. Every test drives a seeded [`FaultPlan`] through the DES
+//! (`serving::sim`) and/or the live threaded runtime (`serving::live`,
+//! virtual clock) and audits the completion ledger:
+//!
+//! - **Exactly-once, in both drivers, across ≥20 seeds**: every offered
+//!   request resolves to exactly one of completed / shed / expired —
+//!   `offered == completed + shed + faults.expired`, one outcome row per
+//!   trace id, no id resolved twice (straggler re-dispatch makes double
+//!   completion *attempts* routine; the resolved-set must suppress them).
+//! - **An empty plan is bit-identical to no plan**: carrying
+//!   `FaultPlan::none` through either driver must not perturb a single
+//!   bit of the report — the injection hooks are pure pass-throughs when
+//!   nothing is scheduled.
+//! - **Live tracks the DES within 5%** on completed count and makespan
+//!   under an active crash-and-recovery plan (energy is excluded: the
+//!   live runtime bills a dispatched batch's busy window up front, so an
+//!   abandoned batch over-accrues by design).
+//! - **Recovery pays**: with boards crashing, the recovery ladder must
+//!   strictly beat recovery-off on availability, reboot every crashed
+//!   board, and report a positive MTTR.
+//! - **The shutdown watchdog** (`LiveConfig::with_drain_timeout`): a
+//!   worker hung past the drain deadline is abandoned — the join returns,
+//!   the stranded frames expire, the board lands in the report as
+//!   `failed` — instead of deadlocking shutdown forever.
+//!
+//! `chaos_smoke_wall_clock` is the `make chaossmoke` gate: real threads,
+//! real sleeps, crashes and reboots mid-run, and the same conservation
+//! audit at the end.
+
+use gemmini_edge::baselines::Platform;
+use gemmini_edge::report::fleet_table;
+use gemmini_edge::serving::{
+    poisson_trace, serve_live_logged, simulate_logged, BaselineDevice, BatchPolicy, CrashFault,
+    FaultPlan, FleetReport, LiveConfig, RecoveryPolicy, RequestOutcome, ShardPool, ShedPolicy,
+    SimConfig, SlowdownFault,
+};
+
+fn device(overhead_ms: f64, frame_ms: f64, cap: usize) -> BaselineDevice {
+    let p = Platform {
+        name: "chaos-dev",
+        overhead_s: overhead_ms * 1e-3,
+        sustained_gops: 100.0,
+        power_w: 5.0,
+    };
+    BaselineDevice::new(p, 0.1 * frame_ms, cap)
+}
+
+/// Three boards so failover routing has somewhere to go when one dies.
+fn pool3() -> ShardPool {
+    let mut pool = ShardPool::new();
+    pool.register(Box::new(device(2.0, 4.0, 8)));
+    pool.register(Box::new(device(1.0, 7.0, 4)));
+    pool.register(Box::new(device(2.0, 5.0, 8)));
+    pool
+}
+
+fn cfg(faults: Option<FaultPlan>) -> SimConfig {
+    SimConfig {
+        batch: BatchPolicy::new(4, 0.005),
+        queue_depth: 16,
+        shed: ShedPolicy::DropOldest,
+        slo_s: 0.050,
+        work_stealing: false,
+        faults,
+        ..Default::default()
+    }
+}
+
+/// The test plan: two crashes, a slowdown window, spikes and link drops
+/// all armed at once, recovery switchable.
+fn plan(seed: u64, recover: bool) -> FaultPlan {
+    let mut p = FaultPlan::none(seed);
+    p.crashes = vec![
+        CrashFault { device: 0, at_s: 0.5 },
+        CrashFault { device: 1, at_s: 1.1 },
+    ];
+    p.slowdowns = vec![SlowdownFault { device: 2, from_s: 0.3, to_s: 0.6, factor: 3.0 }];
+    p.spike_prob = 0.05;
+    p.spike_factor = 3.0;
+    p.link_drop_prob = 0.02;
+    p.recovery = recover.then(RecoveryPolicy::default);
+    p
+}
+
+/// The exactly-once audit: conservation over the report *and* over the
+/// outcome log (one row per offered id, ids unique, the completed/shed
+/// split re-summing to the report's counters).
+fn audit(r: &FleetReport, outcomes: &[RequestOutcome], offered: u64, path: &str) {
+    assert_eq!(r.offered, offered, "{path}: front door missed arrivals");
+    let f = r.faults.as_ref().unwrap_or_else(|| panic!("{path}: fault report missing"));
+    assert_eq!(
+        r.offered,
+        r.completed + r.shed + f.expired,
+        "{path}: exactly-once conservation violated \
+         (completed {} + shed {} + expired {})",
+        r.completed,
+        r.shed,
+        f.expired
+    );
+    assert_eq!(outcomes.len() as u64, offered, "{path}: one outcome per offered request");
+    let mut seen = std::collections::HashSet::new();
+    for o in outcomes {
+        assert!(seen.insert(o.id), "{path}: id {} resolved twice", o.id);
+    }
+    let served = outcomes.iter().filter(|o| !o.shed).count() as u64;
+    assert_eq!(served, r.completed, "{path}: served outcomes vs completed counter");
+    assert_eq!(
+        offered - served,
+        r.shed + f.expired,
+        "{path}: shed outcomes vs shed+expired counters"
+    );
+    let per_dev: u64 = r.devices.iter().map(|d| d.completed).sum();
+    assert_eq!(per_dev, r.completed, "{path}: per-device sum diverges");
+}
+
+/// ≥20 seeds through the DES, recovery alternating on/off, the full
+/// chaos plan armed. Every seed must balance the ledger exactly.
+#[test]
+fn exactly_once_holds_in_des_across_seeds() {
+    for seed in 0..24u64 {
+        let trace = poisson_trace(300.0, 2.0, seed);
+        let c = cfg(Some(plan(seed, seed % 2 == 0)));
+        let (r, outcomes) = simulate_logged(&mut pool3(), &trace, &c);
+        audit(&r, &outcomes, trace.len() as u64, &format!("des seed {seed}"));
+        let f = r.faults.as_ref().expect("fault report");
+        assert_eq!(f.injected_crashes, 2, "seed {seed}: both crashes must fire");
+        if seed % 2 == 0 {
+            assert!(f.detected >= 2, "seed {seed}: crashes must be detected");
+        } else {
+            assert_eq!(f.detected, 0, "seed {seed}: recovery-off never detects");
+            assert!(f.expired > 0, "seed {seed}: recovery-off strands work");
+        }
+    }
+}
+
+/// The same ≥20-seed sweep through the live runtime on the virtual
+/// clock: threads, topics and the failover front door — same ledger.
+#[test]
+fn exactly_once_holds_in_live_across_seeds() {
+    for seed in 0..24u64 {
+        let trace = poisson_trace(300.0, 2.0, seed);
+        let c = cfg(Some(plan(seed, seed % 2 == 0)));
+        let (r, outcomes) =
+            serve_live_logged(pool3(), &trace, &c, &LiveConfig::virtual_clock());
+        audit(&r, &outcomes, trace.len() as u64, &format!("live seed {seed}"));
+        assert_eq!(
+            r.faults.as_ref().expect("fault report").injected_crashes,
+            2,
+            "seed {seed}: both crashes must fire"
+        );
+    }
+}
+
+/// Virtual-clock fault runs are deterministic: same plan, same trace,
+/// same bits — reports and outcome logs both.
+#[test]
+fn live_faulted_runs_are_deterministic() {
+    for seed in [3u64, 7, 11] {
+        let trace = poisson_trace(250.0, 2.0, seed);
+        let c = cfg(Some(plan(seed, true)));
+        let (ra, oa) = serve_live_logged(pool3(), &trace, &c, &LiveConfig::virtual_clock());
+        let (rb, ob) = serve_live_logged(pool3(), &trace, &c, &LiveConfig::virtual_clock());
+        assert_eq!(format!("{ra:?}"), format!("{rb:?}"), "seed {seed}: report must be bit-stable");
+        assert_eq!(oa, ob, "seed {seed}: outcome log must be bit-stable");
+    }
+}
+
+/// Carrying `FaultPlan::none` must be invisible: both drivers produce
+/// byte-identical reports and outcome logs with and without it (the
+/// injected-noop fault report is stripped before the comparison — it is
+/// all zeros by construction).
+#[test]
+fn empty_plan_is_bit_identical_in_both_drivers() {
+    for seed in 0..6u64 {
+        let trace = poisson_trace(400.0, 1.5, 900 + seed);
+        let bare = cfg(None);
+        let noop = cfg(Some(FaultPlan::none(seed)));
+
+        let (des_bare, des_bare_o) = simulate_logged(&mut pool3(), &trace, &bare);
+        let (mut des_noop, des_noop_o) = simulate_logged(&mut pool3(), &trace, &noop);
+        let f = des_noop.faults.take().expect("noop plan still reports");
+        assert_eq!(
+            (f.injected_crashes, f.spikes, f.link_drops, f.expired, f.redispatched),
+            (0, 0, 0, 0, 0),
+            "seed {seed}: noop plan must inject nothing"
+        );
+        assert_eq!(
+            format!("{des_bare:?}"),
+            format!("{des_noop:?}"),
+            "seed {seed}: DES report perturbed by a noop plan"
+        );
+        assert_eq!(des_bare_o, des_noop_o, "seed {seed}: DES outcomes perturbed");
+
+        let lcfg = LiveConfig::virtual_clock();
+        let (live_bare, live_bare_o) = serve_live_logged(pool3(), &trace, &bare, &lcfg);
+        let (mut live_noop, live_noop_o) = serve_live_logged(pool3(), &trace, &noop, &lcfg);
+        live_noop.faults.take().expect("noop plan still reports");
+        assert_eq!(
+            format!("{live_bare:?}"),
+            format!("{live_noop:?}"),
+            "seed {seed}: live report perturbed by a noop plan"
+        );
+        assert_eq!(live_bare_o, live_noop_o, "seed {seed}: live outcomes perturbed");
+    }
+}
+
+/// The differential band under faults: with crashes, detection, failover
+/// and reboots all active, live completed/makespan/availability stay
+/// within 5% of the DES and the expired counts within 5% of offered.
+/// (Energy is excluded by design — see the module doc.)
+#[test]
+fn live_tracks_des_within_bands_under_faults() {
+    for seed in 0..8u64 {
+        let trace = poisson_trace(300.0, 2.0, 100 + seed);
+        let c = cfg(Some(plan(seed, true)));
+        let (des, des_o) = simulate_logged(&mut pool3(), &trace, &c);
+        let (live, live_o) =
+            serve_live_logged(pool3(), &trace, &c, &LiveConfig::virtual_clock());
+        audit(&des, &des_o, trace.len() as u64, &format!("des seed {seed}"));
+        audit(&live, &live_o, trace.len() as u64, &format!("live seed {seed}"));
+        let rel = (live.completed as f64 - des.completed as f64).abs()
+            / des.completed.max(1) as f64;
+        assert!(
+            rel <= 0.05,
+            "seed {seed}: completed {} vs {} (rel {rel:.4})",
+            live.completed,
+            des.completed
+        );
+        let mrel = (live.makespan_s - des.makespan_s).abs() / des.makespan_s.max(1e-9);
+        assert!(mrel <= 0.05, "seed {seed}: makespan rel {mrel:.4}");
+        let (df, lf) = (des.faults.as_ref().unwrap(), live.faults.as_ref().unwrap());
+        assert!(
+            (lf.availability - df.availability).abs() <= 0.05,
+            "seed {seed}: availability {} vs {}",
+            lf.availability,
+            df.availability
+        );
+        let erel = (lf.expired as f64 - df.expired as f64).abs() / des.offered.max(1) as f64;
+        assert!(
+            erel <= 0.05,
+            "seed {seed}: expired {} vs {} over {} offered",
+            lf.expired,
+            df.expired,
+            des.offered
+        );
+    }
+}
+
+/// Recovery must pay for itself: same crashes, recovery on vs off, the
+/// DES as referee. On-availability strictly dominates, every crashed
+/// board reboots, and MTTR is positive and sane.
+#[test]
+fn recovery_strictly_beats_no_recovery_under_crashes() {
+    for seed in 0..6u64 {
+        let trace = poisson_trace(300.0, 2.0, 500 + seed);
+        let (off, _) = simulate_logged(&mut pool3(), &trace, &cfg(Some(plan(seed, false))));
+        let (on, _) = simulate_logged(&mut pool3(), &trace, &cfg(Some(plan(seed, true))));
+        let (fo, fn_) = (off.faults.as_ref().unwrap(), on.faults.as_ref().unwrap());
+        assert!(
+            fn_.availability > fo.availability,
+            "seed {seed}: recovery-on availability {} must strictly beat {}",
+            fn_.availability,
+            fo.availability
+        );
+        assert_eq!(fn_.recovered_devices, 2, "seed {seed}: both boards must reboot");
+        assert!(
+            fn_.mttr_s > 0.0 && fn_.mttr_s < 5.0,
+            "seed {seed}: MTTR {} out of range",
+            fn_.mttr_s
+        );
+        assert_eq!(fo.recovered_devices, 0, "seed {seed}: recovery-off reboots nothing");
+    }
+}
+
+/// The shutdown-drain watchdog (satellite of the fault tentpole): a
+/// slowdown window inflates the tail batch's service time ~5000× so the
+/// worker is still "executing" long after the topic closes. Without a
+/// watchdog the virtual-clock join would wait out the whole modeled
+/// service; with `with_drain_timeout` the worker is abandoned at the
+/// deadline, its stranded frames expire, and the board reports `failed`.
+#[test]
+fn shutdown_watchdog_abandons_hung_worker() {
+    let trace = poisson_trace(100.0, 1.0, 4);
+    let mut p = FaultPlan::none(1);
+    p.slowdowns.push(SlowdownFault { device: 0, from_s: 0.9, to_s: 1.0, factor: 5000.0 });
+    let mut pool = ShardPool::new();
+    pool.register(Box::new(device(2.0, 4.0, 8)));
+    let c = cfg(Some(p));
+    let lcfg = LiveConfig::virtual_clock().with_drain_timeout(0.05);
+    let (r, outcomes) = serve_live_logged(pool, &trace, &c, &lcfg);
+    audit(&r, &outcomes, trace.len() as u64, "watchdog");
+    let f = r.faults.as_ref().expect("fault report");
+    assert!(f.expired > 0, "the hung batch's frames must expire, not hang the join");
+    assert!(
+        r.devices.iter().any(|d| d.state == "failed"),
+        "the abandoned board must report failed: {:?}",
+        r.devices.iter().map(|d| d.state).collect::<Vec<_>>()
+    );
+    assert!(r.completed > 0, "the pre-hang prefix must still have served");
+}
+
+/// `make chaossmoke`: real threads and real sleeps at 1/20th time scale,
+/// the full chaos plan with recovery on, a finite drain watchdog — and
+/// the same exactly-once audit plus the rendered fault section at the
+/// end. Wall-clock timing jitters; the ledger must not.
+#[test]
+fn chaos_smoke_wall_clock() {
+    let trace = poisson_trace(300.0, 2.0, 20240710);
+    let c = cfg(Some(plan(20240710, true)));
+    let lcfg = LiveConfig::wall(0.05).with_drain_timeout(5.0);
+    let (r, outcomes) = serve_live_logged(pool3(), &trace, &c, &lcfg);
+    audit(&r, &outcomes, trace.len() as u64, "chaos smoke");
+    let f = r.faults.as_ref().expect("fault report");
+    assert_eq!(f.injected_crashes, 2, "both crashes must fire under wall clock");
+    assert!(f.detected >= 2, "the watchdog must detect the crashes");
+    assert!(r.completed > 0, "the fleet must keep serving through the chaos");
+    let table = fleet_table(&r);
+    assert!(table.contains("faults:"), "fault accounting must render:\n{table}");
+    assert!(table.contains("recovery:"), "recovery accounting must render:\n{table}");
+}
