@@ -3,7 +3,7 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy fmt fmt-drift featurecheck targetscheck perfsmoke energysmoke livesmoke scenariosmoke chaossmoke artifacts fleet
+.PHONY: check build test clippy fmt fmt-drift featurecheck targetscheck scalesmoke perfsmoke energysmoke livesmoke scenariosmoke chaossmoke artifacts fleet
 
 # The perf smoke gate (`perfsmoke`), the energy smoke gate
 # (`energysmoke`), the live-runtime smoke gate (`livesmoke`), the
@@ -23,7 +23,7 @@ CARGO ?= cargo
 # without re-running the suite's heaviest tests twice. `make perfsmoke`
 # / `make energysmoke` / `make livesmoke` / `make scenariosmoke` /
 # `make chaossmoke` run the gates alone.
-check: build test clippy fmt-drift featurecheck targetscheck
+check: build test clippy fmt-drift featurecheck targetscheck scalesmoke
 
 build:
 	$(CARGO) build --release
@@ -76,6 +76,21 @@ featurecheck:
 	else \
 		echo "featurecheck: skipping --features pjrt (vendored xla not configured; stub Executor covered by the default build/test)"; \
 	fi
+
+# Simulator-scale smoke gate: the fleet_scale sweep truncated to its
+# smallest cell (4 devices x 10^4 requests) plus a 4-shard parallel
+# identity check. Asserts optimized == frozen-reference report bytes
+# (the differential golden), conservation, the flat-hot-path allocation
+# budget (offered/8 + 32768 via a counting global allocator), and a
+# deliberately loose 2e4 req/s throughput floor that only a broken
+# (debug-profile or accidentally quadratic) dispatcher could miss —
+# loose enough that a loaded CI box cannot flake it. The full sweep
+# (10^6-request cells, the >=5x speedup assertion, parallel timings,
+# BENCH_fleet_scale.json) is `cargo bench --bench fleet_scale`; the
+# byte-identity properties also run 24-seed-deep in `cargo test` via
+# tests/fleet_scale.rs.
+scalesmoke:
+	FS_SMOKE=1 $(CARGO) bench --bench fleet_scale
 
 # Perf smoke gate, standalone: memoized + cache-warm whole-graph tuning
 # must simulate ≤ 40 % of the cold path's instructions on YOLOv7-tiny.

@@ -1,0 +1,273 @@
+//! Fleet-scale sweep: wall-clock + allocation gate for the flattened
+//! DES hot path at 10^6-request traces.
+//!
+//! Grid: devices {4, 16, 64} × trace length {10^4, 10^5, 10^6}
+//! open-loop Poisson requests at ~0.62 per-device utilization. Every
+//! cell runs twice — once through the optimized dispatcher
+//! (`simulate`) and once through its frozen pre-optimization twin
+//! (`simulate_reference`) — and the two reports must be byte-identical
+//! (`format!("{r:?}")`); the reference twin *is* the golden, so the
+//! check survives workload retuning while still pinning the optimized
+//! path byte for byte. Per cell we record both wall times, optimized
+//! requests/sec, the speedup, and the allocation count of the
+//! optimized run (a counting `#[global_allocator]`), asserting the
+//! flat hot path stays within `offered/8 + 32768` allocations — i.e.
+//! amortized container growth plus fixed report assembly, never
+//! per-request.
+//!
+//! The largest cell (64 devices × 10^6 requests) additionally asserts
+//! the headline claim: optimized requests/sec ≥ 5× the reference
+//! dispatcher. The epoch-sharded parallel driver then replays the
+//! 16-device × 10^6 workload (cameras striped over 32 ids, 4 shards)
+//! at 1, 2 and 4 worker threads, asserting all three reports are
+//! byte-identical before recording the per-thread-count wall times.
+//!
+//! Emits `BENCH_fleet_scale.json` at the repo root (committed
+//! artifact; counts and identity bits are byte-reproducible, wall
+//! seconds are host-dependent — regenerate with
+//! `cargo bench --bench fleet_scale`).
+//!
+//! `FS_SMOKE=1` (the `make scalesmoke` gate) truncates the grid to the
+//! 4-device × 10^4 cell plus a small 4-shard parallel identity check,
+//! skips the host-dependent 5× assertion, keeps the byte-identity and
+//! allocation gates, and enforces a very conservative throughput floor
+//! (2·10^4 requests/sec) that only a broken (debug-profile or
+//! accidentally quadratic) hot path could miss.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use gemmini_edge::baselines::Platform;
+use gemmini_edge::serving::{
+    poisson_trace, simulate, simulate_parallel, simulate_reference, BaselineDevice, BatchPolicy,
+    FleetReport, Request, ShardPool, ShedPolicy, SimConfig,
+};
+use gemmini_edge::util::json::Json;
+
+/// Counts every heap allocation (alloc + realloc) so the sweep can
+/// assert the hot path allocates O(log n) container growth, not O(n)
+/// per-request garbage. Deallocation is uncounted — frees are cheap
+/// and the budget is about churn created, not retired.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// ~1 ms/frame device (100 GOP/s, 0.1 GOP/frame) with 1 ms dispatch
+/// overhead and batch cap 32: a full batch completes in 33 ms, ~970
+/// frames/s per device.
+fn device() -> BaselineDevice {
+    let p = Platform { name: "scale-dev", overhead_s: 1e-3, sustained_gops: 100.0, power_w: 8.0 };
+    BaselineDevice::new(p, 0.1, 32)
+}
+
+fn pool_of(n: usize) -> ShardPool {
+    let mut pool = ShardPool::new();
+    for _ in 0..n {
+        pool.register(Box::new(device()));
+    }
+    pool
+}
+
+fn cfg() -> SimConfig {
+    SimConfig {
+        batch: BatchPolicy::new(32, 0.002),
+        queue_depth: 256,
+        shed: ShedPolicy::DropOldest,
+        slo_s: 0.100,
+        ..SimConfig::default()
+    }
+}
+
+/// Per-device offered rate, Hz: 600 of ~970 capacity ⇒ ~0.62 util,
+/// busy enough that batching/stealing/shedding all engage, stable
+/// enough that the queue never saturates into a shed-everything run.
+const RATE_PER_DEVICE_HZ: f64 = 600.0;
+
+fn trace_for(devices: usize, requests: usize, seed: u64) -> Vec<Request> {
+    let rate = RATE_PER_DEVICE_HZ * devices as f64;
+    let horizon = requests as f64 / rate;
+    let mut trace = poisson_trace(rate, horizon, seed);
+    // Open-loop Poisson stamps camera 0 everywhere; stripe cameras so
+    // the parallel driver has something to shard on.
+    for r in trace.iter_mut() {
+        r.camera = (r.id % 32) as usize;
+    }
+    trace
+}
+
+fn bytes(r: &FleetReport) -> String {
+    format!("{r:?}")
+}
+
+fn conservation(r: &FleetReport) {
+    let expired = r.faults.as_ref().map_or(0, |f| f.expired);
+    assert_eq!(r.offered, r.completed + r.shed + expired, "conservation broke");
+}
+
+fn main() {
+    let smoke = std::env::var("FS_SMOKE").ok().as_deref() == Some("1");
+    let seed: u64 = std::env::var("FS_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(20250808);
+
+    let (device_counts, trace_lens): (&[usize], &[usize]) = if smoke {
+        (&[4], &[10_000])
+    } else {
+        (&[4, 16, 64], &[10_000, 100_000, 1_000_000])
+    };
+
+    println!(
+        "fleet_scale: {} cell(s), optimized vs frozen reference dispatcher{}",
+        device_counts.len() * trace_lens.len(),
+        if smoke { " [FS_SMOKE]" } else { "" }
+    );
+
+    let mut cells = Vec::new();
+    let mut speedup_at_top = 0.0_f64;
+    for &devs in device_counts {
+        for &n in trace_lens {
+            let trace = trace_for(devs, n, seed);
+            let offered = trace.len() as u64;
+            assert!(
+                offered as f64 > 0.9 * n as f64,
+                "Poisson draw fell short: {offered} of {n}"
+            );
+            let c = cfg();
+
+            let mut pool = pool_of(devs);
+            let a0 = ALLOCS.load(Ordering::Relaxed);
+            let t0 = Instant::now();
+            let opt = simulate(&mut pool, &trace, &c);
+            let opt_wall = t0.elapsed().as_secs_f64();
+            let allocs = ALLOCS.load(Ordering::Relaxed) - a0;
+
+            let mut pool = pool_of(devs);
+            let t0 = Instant::now();
+            let reference = simulate_reference(&mut pool, &trace, &c);
+            let ref_wall = t0.elapsed().as_secs_f64();
+
+            // The frozen twin is the golden: every cell, byte for byte.
+            assert_eq!(bytes(&opt), bytes(&reference), "optimized report drifted from reference");
+            conservation(&opt);
+            assert!(opt.completed > offered / 2, "workload degenerated into shedding");
+
+            // Flat hot path: amortized container growth + fixed report
+            // assembly, never per-request churn.
+            let budget = offered / 8 + 32_768;
+            assert!(
+                allocs <= budget,
+                "optimized DES allocated {allocs} times for {offered} requests (budget {budget})"
+            );
+
+            let req_per_s = offered as f64 / opt_wall;
+            let speedup = ref_wall / opt_wall;
+            if devs == 64 && n == 1_000_000 {
+                speedup_at_top = speedup;
+            }
+            println!(
+                "  {devs:>2} dev x {n:>7} req: opt {opt_wall:>8.3}s ({req_per_s:>10.0} req/s)  \
+                 ref {ref_wall:>8.3}s  speedup {speedup:>5.2}x  allocs {allocs}"
+            );
+            if smoke {
+                assert!(
+                    req_per_s >= 2e4,
+                    "smoke throughput floor: {req_per_s:.0} req/s < 2e4"
+                );
+            }
+            cells.push(Json::obj(vec![
+                ("devices", Json::Num(devs as f64)),
+                ("requests", Json::Num(offered as f64)),
+                ("opt_wall_s", Json::Num(opt_wall)),
+                ("ref_wall_s", Json::Num(ref_wall)),
+                ("opt_req_per_s", Json::Num(req_per_s)),
+                ("speedup", Json::Num(speedup)),
+                ("completed", Json::Num(opt.completed as f64)),
+                ("shed", Json::Num(opt.shed as f64)),
+                ("allocs", Json::Num(allocs as f64)),
+            ]));
+        }
+    }
+
+    if !smoke {
+        assert!(
+            speedup_at_top >= 5.0,
+            "headline claim broke: 64 dev x 1e6 req speedup {speedup_at_top:.2}x < 5x"
+        );
+    }
+
+    // Epoch-sharded parallel driver: byte-identical at every thread
+    // count, timed per thread count.
+    let (par_devs, par_n) = if smoke { (4, 10_000) } else { (16, 1_000_000) };
+    let trace = trace_for(par_devs, par_n, seed ^ 0x9e37);
+    let c = cfg();
+    let shards = 4;
+    let mut parallel = Vec::new();
+    let mut golden: Option<String> = None;
+    for threads in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let report = simulate_parallel(pool_of(par_devs), &trace, &c, shards, threads);
+        let wall = t0.elapsed().as_secs_f64();
+        conservation(&report);
+        assert_eq!(report.offered, trace.len() as u64, "parallel driver lost requests");
+        let b = bytes(&report);
+        match &golden {
+            None => golden = Some(b),
+            Some(g) => assert_eq!(g, &b, "parallel report varies with thread count {threads}"),
+        }
+        let req_per_s = trace.len() as f64 / wall;
+        println!(
+            "  parallel {par_devs} dev x {par_n} req, {shards} shards, {threads} thread(s): \
+             {wall:.3}s ({req_per_s:.0} req/s)"
+        );
+        parallel.push(Json::obj(vec![
+            ("shards", Json::Num(shards as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("req_per_s", Json::Num(req_per_s)),
+        ]));
+    }
+
+    if smoke {
+        println!("fleet_scale smoke: identity, conservation, allocation and floor gates held");
+        return;
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("fleet_scale".into())),
+        (
+            "note",
+            Json::Str(
+                "counts and identity gates are byte-reproducible; wall seconds are \
+                 host-dependent — regenerate with `cargo bench --bench fleet_scale`"
+                    .into(),
+            ),
+        ),
+        (
+            "device",
+            Json::Str("scale-dev 100 GOP/s, 1 ms overhead, 0.1 GOP/frame, batch<=32".into()),
+        ),
+        ("per_device_rate_hz", Json::Num(RATE_PER_DEVICE_HZ)),
+        ("seed", Json::Num(seed as f64)),
+        ("cells", Json::Arr(cells)),
+        ("parallel_16dev_1e6", Json::Arr(parallel)),
+        ("speedup_64dev_1e6", Json::Num(speedup_at_top)),
+    ]);
+    std::fs::write("BENCH_fleet_scale.json", out.dump() + "\n").expect("write BENCH_fleet_scale.json");
+    println!("\nwrote BENCH_fleet_scale.json");
+}

@@ -13,7 +13,7 @@
 //!             [--epoch S] [--delay S] [--closed K] [--tuning-cache PATH]
 //!             [--hetero] [--classes] [--quota FPS] [--ladder]
 //!             [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
-//!             [--faults demo|SPEC]
+//!             [--faults demo|SPEC] [--parallel N] [--threads N]
 //! repro scenario [--list] [--name NAME] [--seed S] [--load F]
 //!                [--autoscale] [--max-devices N] [--tuning-cache PATH] [--ladder]
 //!                [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
@@ -85,6 +85,13 @@
 //! runtime inject the same plan identically; the fleet table gains the
 //! fault/recovery accounting rows (crashes, detections, re-dispatches,
 //! suppressed duplicates, expirations, MTTR, availability).
+//!
+//! `repro fleet --parallel N` runs the open-loop DES epoch-sharded
+//! across N independent sub-fleets (`serving::sim::simulate_parallel`):
+//! cameras and devices are dealt round-robin, each shard runs on its own
+//! worker (`--threads` caps the OS threads), and the merged report is
+//! byte-deterministic — independent of the thread count. Incompatible
+//! with `--faults`/`--quota` (global front-door state couples shards).
 //!
 //! `repro tune --threads N` pins the engine's worker-thread count (the
 //! tuned result is byte-identical at any N); the JSON report carries the
@@ -242,7 +249,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             use gemmini_edge::serving::{
                 assign_slo_classes, multi_camera_trace, serve_live, simulate, simulate_autoscaled,
                 simulate_autoscaled_hetero, simulate_closed_loop, simulate_closed_loop_autoscaled,
-                simulate_closed_loop_autoscaled_hetero, AdmissionPolicy, AutoscaleConfig,
+                simulate_closed_loop_autoscaled_hetero, simulate_parallel, AdmissionPolicy,
+                AutoscaleConfig,
                 Autoscaler, Backend, BaselineDevice, BatchPolicy, ClassQuota, ClockMode,
                 ClosedLoopConfig, DeviceCatalog, DrainOrder, FaultPlan, GemminiDevice, LiveConfig,
                 ShardPool, ShedPolicy, SimConfig, SloTracking, TargetUtilization, VariantLadder,
@@ -269,6 +277,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .unwrap_or(1.0)
                 .max(0.0);
             let closed: Option<usize> = arg_val(&args, "--closed").and_then(|v| v.parse().ok());
+            let parallel: usize =
+                arg_val(&args, "--parallel").and_then(|v| v.parse().ok()).unwrap_or(1);
+            let par_threads: usize =
+                arg_val(&args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
             let hetero = args.iter().any(|a| a == "--hetero");
             if hetero && !autoscale {
                 eprintln!("warning: --hetero only affects scale-out; pass --autoscale too (ignoring --hetero)");
@@ -509,6 +521,30 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 }
             } else if closed.is_some() {
                 simulate_closed_loop(&mut pool, &clients, &cfg)
+            } else if parallel > 1 {
+                // Epoch-sharded parallel DES: cameras and devices are
+                // dealt across independent sub-fleets. Sharding needs a
+                // front door without global state (fault schedules and
+                // class quotas couple shards).
+                let shards = parallel.min(pool.len());
+                if shards < parallel {
+                    eprintln!(
+                        "warning: --parallel {parallel} clamped to {shards} (one device per shard minimum)"
+                    );
+                }
+                if cfg.faults.is_some() || quota.is_some() {
+                    eprintln!(
+                        "warning: --parallel is incompatible with --faults/--quota; running serially"
+                    );
+                    simulate(&mut pool, &trace, &cfg)
+                } else {
+                    let threads = if par_threads == 0 { shards } else { par_threads };
+                    println!(
+                        "parallel DES: {shards} shard(s) on {} worker thread(s)",
+                        threads.clamp(1, shards)
+                    );
+                    simulate_parallel(pool, &trace, &cfg, shards, threads)
+                }
             } else {
                 simulate(&mut pool, &trace, &cfg)
             };

@@ -69,6 +69,19 @@ impl BatchPolicy {
         self.max_batch.min(device_cap.max(1))
     }
 
+    /// Earliest class-scaled wait deadline across the queue (for a
+    /// uniform-class FIFO queue this is the head request's deadline,
+    /// the pre-class behavior). The single source of truth for both
+    /// [`BatchPolicy::decide`] and the DES driver's inlined dispatch
+    /// check — sharing the exact fold is what keeps the optimized hot
+    /// path bit-identical to the reference path.
+    pub fn earliest_deadline_s(&self, queue: &VecDeque<Request>) -> f64 {
+        queue
+            .iter()
+            .map(|r| r.arrival_s + self.max_wait_s * r.class.wait_factor())
+            .fold(f64::INFINITY, f64::min)
+    }
+
     /// Evaluate the policy against a device queue. `device_cap` is the
     /// backend's activation-memory bound on batch size.
     pub fn decide(&self, queue: &VecDeque<Request>, now: f64, device_cap: usize) -> Decision {
@@ -79,15 +92,10 @@ impl BatchPolicy {
         if queue.len() >= cap {
             return Decision::Dispatch(cap);
         }
-        // Earliest class-scaled deadline across the queue (for a
-        // uniform-class FIFO queue this is the head request's deadline,
-        // the pre-class behavior). This scan only runs on queues
-        // shorter than the batch cap — longer ones dispatched above —
-        // so the cost is O(max_batch), not O(queue_depth).
-        let deadline = queue
-            .iter()
-            .map(|r| r.arrival_s + self.max_wait_s * r.class.wait_factor())
-            .fold(f64::INFINITY, f64::min);
+        // This scan only runs on queues shorter than the batch cap —
+        // longer ones dispatched above — so the cost is O(max_batch),
+        // not O(queue_depth).
+        let deadline = self.earliest_deadline_s(queue);
         if now >= deadline {
             Decision::Dispatch(queue.len())
         } else {

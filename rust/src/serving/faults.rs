@@ -343,6 +343,22 @@ pub struct FaultStats {
 }
 
 impl FaultStats {
+    /// Add another driver's counters into this one (the parallel DES
+    /// merges per-shard stats in fixed shard order; u64 counters and
+    /// the MTTR sum both commute, so the merge is exact).
+    pub fn absorb(&mut self, other: &FaultStats) {
+        self.injected_crashes += other.injected_crashes;
+        self.spikes += other.spikes;
+        self.link_drops += other.link_drops;
+        self.detected += other.detected;
+        self.retries += other.retries;
+        self.redispatched += other.redispatched;
+        self.duplicates_suppressed += other.duplicates_suppressed;
+        self.expired += other.expired;
+        self.recovered_devices += other.recovered_devices;
+        self.mttr_total_s += other.mttr_total_s;
+    }
+
     /// Freeze into the report row. `availability` is supplied by the
     /// driver (completed / offered after the final overwrite).
     pub fn to_report(&self, plan: &FaultPlan, availability: f64) -> FaultReport {

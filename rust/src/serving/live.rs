@@ -520,7 +520,7 @@ fn redispatch_staged(
             continue;
         };
         let policy = shed.overflow_for(r.class);
-        match topics[best].try_publish(r.clone(), policy) {
+        match topics[best].try_publish(r, policy) {
             PublishOutcome::Delivered => {
                 metrics.lock().expect("metrics lock").faults.redispatched += 1;
                 shared[best].queued.fetch_add(1, Ordering::SeqCst);
@@ -581,6 +581,10 @@ struct ShardRuntime {
     cap: usize,
     local: VecDeque<Request>,
     in_flight: Vec<Request>,
+    /// Drained batch buffer parked for reuse by the next dispatch, so
+    /// the steady-state worker loop allocates no batch vectors (the DES
+    /// dispatcher recycles the same way).
+    spare: Vec<Request>,
     busy: bool,
     busy_until: f64,
     closed: bool,
@@ -800,7 +804,7 @@ impl ShardRuntime {
             // suppressed.
             let copies: Vec<Request> = {
                 let res = f.resolved.lock().expect("resolved lock");
-                self.in_flight.iter().filter(|r| !res.contains(&r.id)).cloned().collect()
+                self.in_flight.iter().filter(|r| !res.contains(&r.id)).copied().collect()
             };
             for r in copies {
                 stage_or_expire(
@@ -973,39 +977,41 @@ impl ShardRuntime {
     /// suppressed — counted, never double-reported.
     fn finish_batch(&mut self) {
         let done_at = self.busy_until;
-        let batch = std::mem::take(&mut self.in_flight);
-        let keep: Vec<bool> = match &self.faults {
-            Some(f) => {
-                let mut res = f.resolved.lock().expect("resolved lock");
-                batch.iter().map(|r| res.insert(r.id)).collect()
+        let mut batch = std::mem::take(&mut self.in_flight);
+        // Under a fault plan, compact the batch down to first-resolved
+        // completions in place; the no-fault hot path touches neither
+        // the resolved set nor any scratch allocation.
+        if let Some(f) = &self.faults {
+            let mut res = f.resolved.lock().expect("resolved lock");
+            let before = batch.len();
+            batch.retain(|r| res.insert(r.id));
+            let dupes = (before - batch.len()) as u64;
+            drop(res);
+            if dupes > 0 {
+                self.metrics.lock().expect("metrics lock").faults.duplicates_suppressed += dupes;
             }
-            None => vec![true; batch.len()],
-        };
-        let dupes = keep.iter().filter(|&&k| !k).count() as u64;
+        }
         {
             let mut m = self.metrics.lock().expect("metrics lock");
-            m.faults.duplicates_suppressed += dupes;
-            for (r, &k) in batch.iter().zip(&keep) {
-                if k {
-                    m.record_completion(self.idx, done_at - r.arrival_s, r.class);
-                    m.record_variant(r.rung);
-                }
+            for r in &batch {
+                m.record_completion(self.idx, done_at - r.arrival_s, r.class);
+                m.record_variant(r.rung);
             }
         }
         {
             let mut o = self.outcomes.lock().expect("outcomes lock");
-            for (r, &k) in batch.iter().zip(&keep) {
-                if k {
-                    o.push(RequestOutcome {
-                        id: r.id,
-                        camera: r.camera,
-                        t_s: done_at,
-                        shed: false,
-                        rung: r.rung,
-                    });
-                }
+            for r in &batch {
+                o.push(RequestOutcome {
+                    id: r.id,
+                    camera: r.camera,
+                    t_s: done_at,
+                    shed: false,
+                    rung: r.rung,
+                });
             }
         }
+        batch.clear();
+        self.spare = batch;
         {
             let mut mc = self.max_completion.lock().expect("completion lock");
             *mc = mc.max(done_at);
@@ -1118,7 +1124,8 @@ impl ShardRuntime {
         // 3. The same batching decision the DES makes.
         match self.policy.decide(&self.local, now, self.backend.max_batch()) {
             Decision::Dispatch(n) => {
-                let batch: Vec<Request> = self.local.drain(..n).collect();
+                let mut batch = std::mem::take(&mut self.spare);
+                batch.extend(self.local.drain(..n));
                 // Same mixed-batch service model as the DES dispatch.
                 let mut service = match &self.ladder {
                     Some(l) => l.batch_service_s(self.backend.as_ref(), &batch),
@@ -1553,6 +1560,7 @@ pub fn serve_live_logged(
             cap: cfg.batch.effective_cap(backends[i].max_batch()),
             local: VecDeque::new(),
             in_flight: Vec::new(),
+            spare: Vec::new(),
             busy: false,
             busy_until: 0.0,
             closed: false,
@@ -1618,7 +1626,7 @@ pub fn serve_live_logged(
                     let (_, now) = clock.wait_any(&[0]).expect("front door active");
                     vnow = now;
                     while next < trace.len() && trace[next].arrival_s <= now {
-                        let req = trace[next].clone();
+                        let req = trace[next];
                         next += 1;
                         if let Some(shard) = front.admit(req, now) {
                             clock.nudge(shard + 1);
@@ -1658,7 +1666,7 @@ pub fn serve_live_logged(
                 for req in trace {
                     wall.sleep_until(req.arrival_s);
                     let now = wall.now();
-                    if let Some(shard) = front.admit(req.clone(), now) {
+                    if let Some(shard) = front.admit(*req, now) {
                         kicks[shard % threads].kick();
                     }
                     for w in front.redispatch_due(now) {

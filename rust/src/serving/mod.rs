@@ -87,8 +87,10 @@ pub use metrics::{
 pub use shard::{Lifecycle, ShardPool};
 pub use sim::{
     multi_camera_trace, poisson_trace, simulate, simulate_autoscaled, simulate_autoscaled_hetero,
-    simulate_autoscaled_logged, simulate_closed_loop, simulate_closed_loop_autoscaled,
-    simulate_closed_loop_autoscaled_hetero, simulate_logged, ClosedLoopConfig, SimConfig,
+    simulate_autoscaled_hetero_reference, simulate_autoscaled_logged, simulate_autoscaled_reference,
+    simulate_closed_loop, simulate_closed_loop_autoscaled, simulate_closed_loop_autoscaled_hetero,
+    simulate_closed_loop_reference, simulate_logged, simulate_logged_reference, simulate_parallel,
+    simulate_reference, ClosedLoopConfig, SimConfig,
 };
 
 /// The latency class a camera's frames are served under. The paper's
@@ -201,7 +203,10 @@ pub struct RequestOutcome {
 }
 
 /// One inference request: a camera frame arriving at the fleet front door.
-#[derive(Debug, Clone, PartialEq)]
+/// `Copy` (48 bytes of plain data) — the drivers move requests between
+/// queues, batches and recovery staging by value, so the hot paths never
+/// touch the allocator per request.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     /// Monotonically increasing id over the whole trace.
     pub id: u64,

@@ -15,6 +15,7 @@
 //! (serving its backlog, accepting nothing) → `Retired` (kept in the vec
 //! so device indices and per-device metrics stay stable across scaling).
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 
 use crate::fpga::resources::Board;
@@ -78,6 +79,16 @@ pub struct DeviceState {
     pub in_flight: Vec<Request>,
     /// Autoscaling lifecycle state (always `Active` in fixed pools).
     pub lifecycle: Lifecycle,
+    /// Recycled batch buffer: the DES completion loop parks the drained
+    /// in-flight `Vec` here and the next dispatch reuses it, so steady
+    /// state allocates no batch vectors at all.
+    pub spare: Vec<Request>,
+    /// One-entry memo of `backend.batch_latency_s(len)` keyed by `len`
+    /// (`usize::MAX` = empty). The model is a pure function of the
+    /// batch size, so a hit returns the identical f64 the virtual call
+    /// would — routing's hot path skips the vtable + model math while
+    /// the queue length sits still between arrivals.
+    service_memo: Cell<(usize, f64)>,
 }
 
 impl DeviceState {
@@ -89,7 +100,20 @@ impl DeviceState {
             free_at: 0.0,
             in_flight: Vec::new(),
             lifecycle: Lifecycle::Active,
+            spare: Vec::new(),
+            service_memo: Cell::new((usize::MAX, 0.0)),
         }
+    }
+
+    /// `backend.batch_latency_s(n)` through the one-entry memo.
+    pub fn service_for(&self, n: usize) -> f64 {
+        let (k, v) = self.service_memo.get();
+        if k == n {
+            return v;
+        }
+        let s = self.backend.batch_latency_s(n);
+        self.service_memo.set((n, s));
+        s
     }
 
     /// Estimated seconds until this device could finish one more request
@@ -97,6 +121,14 @@ impl DeviceState {
     pub fn outstanding_s(&self, now: f64) -> f64 {
         let busy_rem = if self.busy { (self.free_at - now).max(0.0) } else { 0.0 };
         busy_rem + self.backend.batch_latency_s(self.queue.len() + 1)
+    }
+
+    /// [`DeviceState::outstanding_s`] through the service memo —
+    /// bit-identical (same pure function of the queue length), without
+    /// the virtual call on a memo hit.
+    fn outstanding_fast_s(&self, now: f64) -> f64 {
+        let busy_rem = if self.busy { (self.free_at - now).max(0.0) } else { 0.0 };
+        busy_rem + self.service_for(self.queue.len() + 1)
     }
 }
 
@@ -230,6 +262,60 @@ impl ShardPool {
                 })
                 .unwrap_or(0)
         })
+    }
+
+    /// [`ShardPool::route`] with the per-device service memo: identical
+    /// choice (the memo returns the identical estimate), but the
+    /// per-arrival scan skips the virtual latency-model call for every
+    /// device whose queue length hasn't changed since its last estimate.
+    pub fn route_fast(&self, now: f64) -> usize {
+        let mut best = None;
+        let mut best_s = f64::INFINITY;
+        for (i, d) in self.devices.iter().enumerate() {
+            if !d.lifecycle.accepts_new() {
+                continue;
+            }
+            let est = d.outstanding_fast_s(now);
+            if est < best_s {
+                best_s = est;
+                best = Some(i);
+            }
+        }
+        best.unwrap_or_else(|| {
+            self.devices
+                .iter()
+                .position(|d| d.lifecycle.serves())
+                .or_else(|| {
+                    self.devices
+                        .iter()
+                        .position(|d| matches!(d.lifecycle, Lifecycle::Provisioning { .. }))
+                })
+                .unwrap_or(0)
+        })
+    }
+
+    /// Split the pool into `shards` independent sub-pools, device `i`
+    /// going to pool `i % shards` — the device-side partition of the
+    /// parallel DES ([`crate::serving::sim::simulate_parallel`]), which
+    /// pairs it with the camera-side partition `camera % shards`. Every
+    /// device must be idle and active (sub-simulations start clean).
+    /// Panics if `shards` is 0 or exceeds the device count.
+    pub fn split_round_robin(self, shards: usize) -> Vec<ShardPool> {
+        assert!(shards > 0, "need at least one shard");
+        assert!(
+            shards <= self.devices.len(),
+            "cannot split {} devices into {shards} shards",
+            self.devices.len()
+        );
+        let mut pools: Vec<ShardPool> = (0..shards).map(|_| ShardPool::new()).collect();
+        for (i, d) in self.devices.into_iter().enumerate() {
+            assert!(
+                d.queue.is_empty() && !d.busy && matches!(d.lifecycle, Lifecycle::Active),
+                "parallel simulation starts from an idle, active pool"
+            );
+            pools[i % shards].devices.push(d);
+        }
+        pools
     }
 
     /// The active device the energy-aware autoscaler drains first: the
@@ -403,6 +489,38 @@ mod tests {
         // …and with idleness equal too, the newest index wins.
         q.devices[1].busy = false;
         assert_eq!(q.most_expensive_active(), Some(1));
+    }
+
+    #[test]
+    fn route_fast_matches_route_and_memo_is_exact() {
+        let mut p = pool2();
+        for i in 0..7 {
+            p.devices[0].queue.push_back(req(i, 0.0));
+        }
+        p.devices[1].busy = true;
+        p.devices[1].free_at = 0.3;
+        for now in [0.0, 0.1, 0.25, 0.5] {
+            assert_eq!(p.route(now), p.route_fast(now));
+        }
+        // The memo returns the identical f64 across repeated hits and
+        // after the key changes.
+        let d = &p.devices[0];
+        let direct = d.backend.batch_latency_s(8);
+        assert_eq!(d.service_for(8).to_bits(), direct.to_bits());
+        assert_eq!(d.service_for(8).to_bits(), direct.to_bits(), "memo hit is exact");
+        assert_eq!(d.service_for(3).to_bits(), d.backend.batch_latency_s(3).to_bits());
+    }
+
+    #[test]
+    fn split_round_robin_deals_devices_cyclically() {
+        let mut p = ShardPool::new();
+        for _ in 0..5 {
+            p.register(Box::new(BaselineDevice::new(xavier(), 0.5, 8)));
+        }
+        let pools = p.split_round_robin(2);
+        assert_eq!(pools.len(), 2);
+        assert_eq!(pools[0].len(), 3);
+        assert_eq!(pools[1].len(), 2);
     }
 
     #[test]

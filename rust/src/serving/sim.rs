@@ -244,7 +244,7 @@ impl Arrivals<'_> {
         match self {
             Arrivals::Open { trace, next } => {
                 if *next < trace.len() && trace[*next].arrival_s <= now {
-                    let r = trace[*next].clone();
+                    let r = trace[*next];
                     *next += 1;
                     Some(r)
                 } else {
@@ -318,10 +318,30 @@ impl Arrivals<'_> {
     }
 }
 
+/// Which dispatch loop the DES driver runs. Both produce byte-identical
+/// `FleetReport`s — `tests/fleet_scale.rs` pins that on every config
+/// family — but they pay very different per-event costs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriveMode {
+    /// The flat hot path every `simulate*` entry point uses: memoized
+    /// service estimates in routing, an O(1)-guarded steal scan, the
+    /// batch-wait deadline inlined (no `Decision` round trip), recycled
+    /// batch buffers, and batched metric recording.
+    Optimized,
+    /// The pre-optimization dispatch loop, frozen verbatim as the
+    /// differential oracle for the scale-invariance suite (the
+    /// `simulate*_reference` entry points).
+    Reference,
+}
+
 /// Complete any batch finished by `now`, then let idle active devices
 /// steal and serving devices dispatch until nothing changes. Requests
 /// that completed are appended to `done` (with their completion time) so
-/// closed-loop cameras get their window tokens back.
+/// closed-loop cameras get their window tokens back. `caps` is the
+/// precomputed per-device effective batch cap (optimized mode only; the
+/// reference mode re-derives it through the virtual call every decision,
+/// as the pre-optimization loop did).
+#[allow(clippy::too_many_arguments)]
 fn settle(
     pool: &mut ShardPool,
     now: f64,
@@ -329,15 +349,24 @@ fn settle(
     metrics: &mut FleetMetrics,
     done: &mut Vec<(Request, f64, bool)>,
     frt: &mut Option<FaultRt>,
+    mode: DriveMode,
+    caps: &[usize],
 ) {
     loop {
         let mut progressed = false;
+        // Lazy per-pass steal guard: if no queue holds ≥ 2 requests when
+        // first checked, no steal in this pass can move anything (queues
+        // only shrink inside `settle`, and a steal needs a ≥ 2 victim to
+        // create a new ≥ 2 queue) — so every skipped `steal_into` scan
+        // would have returned 0. Turns the O(devices²) idle-fleet scan
+        // into one O(devices) probe per pass.
+        let mut steal_possible: Option<bool> = None;
         for i in 0..pool.devices.len() {
             // 1. Completion (any lifecycle: draining devices finish too).
             if pool.devices[i].busy && pool.devices[i].free_at <= now {
                 let done_at = pool.devices[i].free_at;
-                let batch = std::mem::take(&mut pool.devices[i].in_flight);
-                for r in batch {
+                let mut batch = std::mem::take(&mut pool.devices[i].in_flight);
+                for r in batch.drain(..) {
                     // Exactly-once: a completion whose id already
                     // resolved (its re-dispatched copy finished first)
                     // is suppressed — counted, never double-reported.
@@ -347,10 +376,20 @@ fn settle(
                             continue;
                         }
                     }
-                    metrics.record_completion(i, done_at - r.arrival_s, r.class);
-                    metrics.record_variant(r.rung);
+                    match mode {
+                        DriveMode::Optimized => {
+                            metrics.pend_completion(i, done_at - r.arrival_s, r.class, r.rung)
+                        }
+                        DriveMode::Reference => {
+                            metrics.record_completion(i, done_at - r.arrival_s, r.class);
+                            metrics.record_variant(r.rung);
+                        }
+                    }
                     done.push((r, done_at, false));
                 }
+                // Park the drained buffer for the next dispatch: steady
+                // state allocates no batch vectors.
+                pool.devices[i].spare = batch;
                 pool.devices[i].busy = false;
                 progressed = true;
             }
@@ -367,23 +406,55 @@ fn settle(
                 && pool.devices[i].lifecycle.accepts_new()
                 && pool.devices[i].queue.is_empty()
             {
-                let n = pool.steal_into(i);
-                if n > 0 {
-                    metrics.record_steal(i, n);
-                    progressed = true;
+                let scan = match mode {
+                    DriveMode::Reference => true,
+                    DriveMode::Optimized => *steal_possible
+                        .get_or_insert_with(|| pool.devices.iter().any(|d| d.queue.len() > 1)),
+                };
+                if scan {
+                    let n = pool.steal_into(i);
+                    if n > 0 {
+                        metrics.record_steal(i, n);
+                        progressed = true;
+                    }
                 }
             }
-            // 3. Dynamic-batching dispatch.
+            // 3. Dynamic-batching dispatch. The optimized arm inlines
+            // `BatchPolicy::decide` against the precomputed cap, sharing
+            // `earliest_deadline_s` so the two arms agree bit-for-bit.
             let d = &mut pool.devices[i];
-            let cap = d.backend.max_batch();
-            if let Decision::Dispatch(n) = cfg.batch.decide(&d.queue, now, cap) {
-                let batch: Vec<Request> = d.queue.drain(..n).collect();
+            let n = match mode {
+                DriveMode::Reference => {
+                    match cfg.batch.decide(&d.queue, now, d.backend.max_batch()) {
+                        Decision::Dispatch(n) => n,
+                        _ => 0,
+                    }
+                }
+                DriveMode::Optimized => {
+                    let qlen = d.queue.len();
+                    if qlen == 0 {
+                        0
+                    } else if qlen >= caps[i] {
+                        caps[i]
+                    } else if now >= cfg.batch.earliest_deadline_s(&d.queue) {
+                        qlen
+                    } else {
+                        0
+                    }
+                }
+            };
+            if n > 0 {
+                let mut batch = std::mem::take(&mut d.spare);
+                batch.extend(d.queue.drain(..n));
                 // Degraded frames shrink the batch's marginal cost; with
                 // no ladder (or an all-rung-0 batch) this is bit-exactly
                 // the backend's plain batch latency.
                 let mut service = match cfg.admission.ladder() {
                     Some(l) => l.batch_service_s(d.backend.as_ref(), &batch),
-                    None => d.backend.batch_latency_s(batch.len()),
+                    None => match mode {
+                        DriveMode::Optimized => d.service_for(batch.len()),
+                        DriveMode::Reference => d.backend.batch_latency_s(batch.len()),
+                    },
                 };
                 // Fault injection at dispatch: slowdown windows and
                 // per-batch spikes inflate the modeled service time; a
@@ -423,12 +494,15 @@ fn settle(
 /// in-flight completion, any serving device's batch-wait deadline, any
 /// provisioning device's warm-up end, or (under a fault plan) any
 /// crash/detect/straggler event or staged re-dispatch.
+#[allow(clippy::too_many_arguments)]
 fn next_event(
     pool: &ShardPool,
     next_arrival: Option<f64>,
     batch: &BatchPolicy,
     now: f64,
     frt: Option<&FaultRt>,
+    mode: DriveMode,
+    caps: &[usize],
 ) -> f64 {
     let mut t = next_arrival.unwrap_or(f64::INFINITY);
     if let Some(f) = frt {
@@ -447,8 +521,27 @@ fn next_event(
         if d.busy {
             t = t.min(d.free_at);
         } else if d.lifecycle.serves() {
-            if let Decision::WaitUntil(w) = batch.decide(&d.queue, now, d.backend.max_batch()) {
-                t = t.min(w);
+            match mode {
+                DriveMode::Reference => {
+                    if let Decision::WaitUntil(w) =
+                        batch.decide(&d.queue, now, d.backend.max_batch())
+                    {
+                        t = t.min(w);
+                    }
+                }
+                // `decide` inlined against the precomputed cap: only a
+                // non-empty under-cap queue whose deadline is still ahead
+                // yields a wait event (the same three-way split `decide`
+                // makes, minus the virtual calls).
+                DriveMode::Optimized => {
+                    let qlen = d.queue.len();
+                    if qlen > 0 && qlen < caps[i] {
+                        let w = batch.earliest_deadline_s(&d.queue);
+                        if now < w {
+                            t = t.min(w);
+                        }
+                    }
+                }
             }
         }
     }
@@ -669,15 +762,49 @@ fn observe(pool: &ShardPool, stats: EpochStats, now: f64, epoch_s: f64) -> Epoch
     }
 }
 
+/// Everything one [`drive_core`] run accumulated, before it is assembled
+/// into a [`FleetReport`]. [`simulate_parallel`] merges one of these per
+/// epoch shard (in fixed shard order) and assembles once; the serial
+/// entry points assemble theirs directly — with a single shard the two
+/// paths are the same bytes.
+struct DriveOut {
+    metrics: FleetMetrics,
+    ledger: EnergyLedger,
+    offered: u64,
+    offered_by_class: [u64; 3],
+    devices_start: usize,
+    devices_peak: usize,
+    events: Vec<ScalingEvent>,
+    /// `last_completion.max(final now)` — the horizon throughput is
+    /// measured against.
+    last_t: f64,
+    outcomes: Vec<RequestOutcome>,
+}
+
 /// The unified DES driver behind every `simulate*` entry point. Besides
 /// the report it returns per-request outcomes (completed-at / shed) for
 /// the scenario accuracy pipeline; report-only entry points drop them.
 fn drive(
     pool: &mut ShardPool,
+    arrivals: Arrivals<'_>,
+    cfg: &SimConfig,
+    scaling: Option<ScalingCtx<'_>>,
+    mode: DriveMode,
+) -> (FleetReport, Vec<RequestOutcome>) {
+    let out = drive_core(pool, arrivals, cfg, scaling, mode);
+    assemble_report(pool, cfg, out)
+}
+
+/// The DES event loop proper: admission, fault machinery, settle,
+/// autoscaling, virtual-time advance. Returns the raw accumulators so
+/// [`simulate_parallel`] can merge shard runs before report assembly.
+fn drive_core(
+    pool: &mut ShardPool,
     mut arrivals: Arrivals<'_>,
     cfg: &SimConfig,
     mut scaling: Option<ScalingCtx<'_>>,
-) -> (FleetReport, Vec<RequestOutcome>) {
+    mode: DriveMode,
+) -> DriveOut {
     assert!(!pool.is_empty(), "simulate needs at least one device");
     let mut metrics = FleetMetrics::new(pool.len(), cfg.slo_s);
     let mut quota = cfg.admission.runtime_quota();
@@ -707,6 +834,14 @@ fn drive(
         .devices
         .iter()
         .map(|d| (d.backend.power_w(0.0), d.backend.power_w(1.0), d.backend.gop_per_frame()))
+        .collect();
+    // Per-device effective batch cap, cached so the optimized hot path
+    // never makes a virtual `max_batch()` call per decision (extended in
+    // lockstep with `powers` when the autoscaler grows the pool).
+    let mut caps: Vec<usize> = pool
+        .devices
+        .iter()
+        .map(|d| cfg.batch.effective_cap(d.backend.max_batch()))
         .collect();
 
     loop {
@@ -761,7 +896,10 @@ fn drive(
                     continue;
                 }
             }
-            let idx = pool.route(now);
+            let idx = match mode {
+                DriveMode::Optimized => pool.route_fast(now),
+                DriveMode::Reference => pool.route(now),
+            };
             // Total blackout: route's last-resort fallback found no
             // live shard (every device failed for good) — the front
             // door sheds. Unreachable without a fault plan (the
@@ -786,7 +924,7 @@ fn drive(
             if let Some(l) = cfg.admission.ladder() {
                 req.rung = l.rung_for(d.queue.len(), cfg.queue_depth);
             }
-            match admit(&mut d.queue, cfg.queue_depth, cfg.shed, req.clone()) {
+            match admit(&mut d.queue, cfg.queue_depth, cfg.shed, req) {
                 Admission::Admitted => {}
                 Admission::AdmittedEvicted(old) => {
                     // An evicted re-dispatch copy is displaced, not
@@ -899,7 +1037,7 @@ fn drive(
                             .in_flight
                             .iter()
                             .filter(|r| !f.resolved.contains(&r.id))
-                            .cloned()
+                            .copied()
                             .collect();
                         for r in copies {
                             f.requeue(r, t, &mut metrics, &mut done);
@@ -920,7 +1058,10 @@ fn drive(
                 if f.resolved.contains(&r.id) {
                     continue;
                 }
-                let idx = pool.route(now);
+                let idx = match mode {
+                    DriveMode::Optimized => pool.route_fast(now),
+                    DriveMode::Reference => pool.route(now),
+                };
                 if matches!(
                     pool.devices[idx].lifecycle,
                     Lifecycle::Retired | Lifecycle::Failed
@@ -931,7 +1072,7 @@ fn drive(
                     continue;
                 }
                 let d = &mut pool.devices[idx];
-                match admit(&mut d.queue, cfg.queue_depth, cfg.shed, r.clone()) {
+                match admit(&mut d.queue, cfg.queue_depth, cfg.shed, r) {
                     Admission::Admitted => metrics.faults.redispatched += 1,
                     Admission::AdmittedEvicted(old) => {
                         metrics.faults.redispatched += 1;
@@ -949,7 +1090,7 @@ fn drive(
         }
 
         // 2. Complete / steal / dispatch until quiescent.
-        settle(pool, now, cfg, &mut metrics, &mut done, &mut frt);
+        settle(pool, now, cfg, &mut metrics, &mut done, &mut frt, mode, &caps);
         for d in &pool.devices {
             if d.busy {
                 last_completion = last_completion.max(d.free_at);
@@ -1007,6 +1148,7 @@ fn drive(
                                 backend.power_w(1.0),
                                 backend.gop_per_frame(),
                             ));
+                            caps.push(cfg.batch.effective_cap(backend.max_batch()));
                             grows += 1;
                             let ready_at = now + ctx.auto.cfg.provision_delay_s;
                             let idx = pool.register_provisioning(backend, ready_at);
@@ -1074,7 +1216,8 @@ fn drive(
         }
 
         // 5. Advance virtual time to the next event.
-        let mut t = next_event(pool, arrivals.peek(), &cfg.batch, now, frt.as_ref());
+        let mut t =
+            next_event(pool, arrivals.peek(), &cfg.batch, now, frt.as_ref(), mode, &caps);
         if let Some(epoch_end) = next_epoch {
             t = t.min(epoch_end);
         }
@@ -1090,20 +1233,28 @@ fn drive(
         // Accrue energy over the step: between events every device's
         // lifecycle and busy state are constant (the next event is
         // clamped to every free_at / ready_at), so power is piecewise
-        // constant and the ledger is exact.
-        for (i, d) in pool.devices.iter().enumerate() {
-            let (idle_w, busy_w, _) = powers[i];
-            // A crashed board draws nothing (it is down, whatever the
-            // router still believes).
-            let state = if frt.as_ref().map_or(false, |f| f.failed(i)) {
-                Lifecycle::Failed
-            } else {
-                d.lifecycle
-            };
-            ledger.accrue(i, state, now, t, if d.busy { busy_w } else { idle_w });
+        // constant and the ledger is exact. A zero-length step accrues
+        // nothing (`accrue` no-ops on it), so it is skipped outright.
+        if t > now {
+            for (i, d) in pool.devices.iter().enumerate() {
+                let (idle_w, busy_w, _) = powers[i];
+                // A crashed board draws nothing (it is down, whatever the
+                // router still believes).
+                let state = if frt.as_ref().map_or(false, |f| f.failed(i)) {
+                    Lifecycle::Failed
+                } else {
+                    d.lifecycle
+                };
+                ledger.accrue(i, state, now, t, if d.busy { busy_w } else { idle_w });
+            }
         }
         now = t;
     }
+
+    // Fold any batched completion records before anything below reads
+    // the per-device counters (served-GOP needs the final completed
+    // counts). A no-op in reference mode.
+    metrics.fold_pending();
 
     // End-of-run flush: work stranded on crashed shards nothing ever
     // recovered (recovery off — the watchdog never ruled) expires, so
@@ -1139,8 +1290,39 @@ fn drive(
     while ledger.per_device_j.len() < pool.devices.len() {
         ledger.per_device_j.push(0.0);
     }
+    DriveOut {
+        metrics,
+        ledger,
+        offered,
+        offered_by_class,
+        devices_start,
+        devices_peak,
+        events,
+        last_t: last_completion.max(now),
+        outcomes,
+    }
+}
+
+/// Turn a (possibly merged) [`DriveOut`] into the final [`FleetReport`]
+/// + outcome log against the pool it ran on.
+fn assemble_report(
+    pool: &ShardPool,
+    cfg: &SimConfig,
+    out: DriveOut,
+) -> (FleetReport, Vec<RequestOutcome>) {
+    let DriveOut {
+        metrics,
+        ledger,
+        offered,
+        offered_by_class,
+        devices_start,
+        devices_peak,
+        events,
+        last_t,
+        mut outcomes,
+    } = out;
     let backends: Vec<&dyn Backend> = pool.devices.iter().map(|d| d.backend.as_ref()).collect();
-    let mut report = metrics.report(&backends, last_completion.max(now));
+    let mut report = metrics.report(&backends, last_t);
     report.offered = offered;
     report.devices_start = devices_start;
     report.devices_peak = devices_peak;
@@ -1172,7 +1354,15 @@ fn drive(
 /// pre-loaded (tests use this to create skew); devices are expected idle
 /// at start.
 pub fn simulate(pool: &mut ShardPool, trace: &[Request], cfg: &SimConfig) -> FleetReport {
-    drive(pool, Arrivals::Open { trace, next: 0 }, cfg, None).0
+    drive(pool, Arrivals::Open { trace, next: 0 }, cfg, None, DriveMode::Optimized).0
+}
+
+/// [`simulate`] on the frozen pre-optimization dispatch loop
+/// ([`DriveMode::Reference`]) — the differential oracle the
+/// scale-invariance suite pins the optimized path against, byte for
+/// byte. Test/bench oracle only: quadratic in fleet size per settle.
+pub fn simulate_reference(pool: &mut ShardPool, trace: &[Request], cfg: &SimConfig) -> FleetReport {
+    drive(pool, Arrivals::Open { trace, next: 0 }, cfg, None, DriveMode::Reference).0
 }
 
 /// As [`simulate`], also returning per-request outcomes (in trace-id
@@ -1182,7 +1372,119 @@ pub fn simulate_logged(
     trace: &[Request],
     cfg: &SimConfig,
 ) -> (FleetReport, Vec<RequestOutcome>) {
-    drive(pool, Arrivals::Open { trace, next: 0 }, cfg, None)
+    drive(pool, Arrivals::Open { trace, next: 0 }, cfg, None, DriveMode::Optimized)
+}
+
+/// [`simulate_logged`] on the reference dispatch loop (test oracle).
+pub fn simulate_logged_reference(
+    pool: &mut ShardPool,
+    trace: &[Request],
+    cfg: &SimConfig,
+) -> (FleetReport, Vec<RequestOutcome>) {
+    drive(pool, Arrivals::Open { trace, next: 0 }, cfg, None, DriveMode::Reference)
+}
+
+/// Epoch-sharded parallel DES over an open-loop trace: camera streams
+/// are dealt across `shards` independent sub-fleets (camera `c` → shard
+/// `c % shards`, devices dealt round-robin by [`ShardPool::
+/// split_round_robin`]), each sub-fleet runs the whole virtual horizon
+/// on its own worker, and the per-shard accumulators merge in fixed
+/// shard order. Conservative in virtual time by construction — no event
+/// ever crosses a shard boundary, so no shard can observe another's
+/// future — and byte-deterministic: the report is a pure function of
+/// `(pool, trace, cfg, shards)`, independent of `threads` and of
+/// scheduling (`tests/fleet_scale.rs` pins 1/2/4-thread runs to
+/// identical bytes). With `shards == 1` nothing is merged and the
+/// result is bit-identical to [`simulate`].
+///
+/// Sharding changes the model, deliberately: routing and stealing stay
+/// inside a shard, so `shards > 1` is *a different (more realistic,
+/// cellular) fleet topology*, not a reordered run of the global one —
+/// which is why the merge can stay exact instead of approximate.
+/// Requires a front door that is per-request stateless across cameras:
+/// no fault plan (global link/crash schedules would couple shards) and
+/// no [`AdmissionPolicy::ClassQuota`] (a global token bucket).
+pub fn simulate_parallel(
+    pool: ShardPool,
+    trace: &[Request],
+    cfg: &SimConfig,
+    shards: usize,
+    threads: usize,
+) -> FleetReport {
+    assert!(
+        cfg.faults.is_none(),
+        "simulate_parallel cannot shard a fault plan (global schedules couple shards)"
+    );
+    assert!(
+        cfg.admission.runtime_quota().is_none(),
+        "simulate_parallel cannot shard a global class quota"
+    );
+    let pools = pool.split_round_robin(shards);
+    // Stable partition: each sub-trace keeps the global arrival order of
+    // its cameras' requests (and their original ids).
+    let mut sub_traces: Vec<Vec<Request>> = (0..shards).map(|_| Vec::new()).collect();
+    for r in trace {
+        sub_traces[r.camera % shards].push(*r);
+    }
+    let threads = threads.clamp(1, shards);
+    // Deterministic static schedule: worker w runs shards w, w+T, w+2T…
+    // sequentially. Results are keyed by shard index, so OS scheduling
+    // cannot reorder the merge.
+    let mut jobs: Vec<Option<(ShardPool, Vec<Request>)>> =
+        pools.into_iter().zip(sub_traces).map(Some).collect();
+    let mut shard_outs: Vec<Option<(ShardPool, DriveOut)>> = (0..shards).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let mine: Vec<(usize, ShardPool, Vec<Request>)> = (w..shards)
+                .step_by(threads)
+                .map(|s| {
+                    let (p, t) = jobs[s].take().expect("each shard is scheduled once");
+                    (s, p, t)
+                })
+                .collect();
+            handles.push(scope.spawn(move || {
+                mine.into_iter()
+                    .map(|(s, mut p, t)| {
+                        let out = drive_core(
+                            &mut p,
+                            Arrivals::Open { trace: &t, next: 0 },
+                            cfg,
+                            None,
+                            DriveMode::Optimized,
+                        );
+                        (s, p, out)
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            for (s, p, out) in h.join().expect("shard worker panicked") {
+                shard_outs[s] = Some((p, out));
+            }
+        }
+    });
+    // Merge in fixed shard order: device-indexed rows concatenate
+    // (shard-major, matching the merged pool below), scalar counters
+    // add, and the f64 accumulators absorb left to right — one fixed
+    // association, whatever the thread count was.
+    let mut it = shard_outs.into_iter().map(|s| s.expect("every shard ran"));
+    let (mut merged_pool, mut acc) = it.next().expect("shards >= 1");
+    for (p, out) in it {
+        acc.metrics.absorb(out.metrics);
+        acc.ledger.absorb(out.ledger);
+        acc.offered += out.offered;
+        for (a, b) in acc.offered_by_class.iter_mut().zip(out.offered_by_class) {
+            *a += b;
+        }
+        acc.devices_start += out.devices_start;
+        acc.devices_peak += out.devices_peak;
+        acc.events.extend(out.events);
+        acc.last_t = acc.last_t.max(out.last_t);
+        acc.outcomes.extend(out.outcomes);
+        merged_pool.devices.extend(p.devices);
+    }
+    assemble_report(&merged_pool, cfg, acc).0
 }
 
 /// Run an open-loop trace with the autoscaler resizing the pool between
@@ -1210,7 +1512,26 @@ pub fn simulate_autoscaled_logged(
         Arrivals::Open { trace, next: 0 },
         cfg,
         Some(ScalingCtx { auto, provisioner: Provisioner::Factory(factory) }),
+        DriveMode::Optimized,
     )
+}
+
+/// [`simulate_autoscaled`] on the reference dispatch loop (test oracle).
+pub fn simulate_autoscaled_reference(
+    pool: &mut ShardPool,
+    trace: &[Request],
+    cfg: &SimConfig,
+    auto: &mut Autoscaler,
+    factory: &mut dyn FnMut(usize) -> Box<dyn Backend>,
+) -> FleetReport {
+    drive(
+        pool,
+        Arrivals::Open { trace, next: 0 },
+        cfg,
+        Some(ScalingCtx { auto, provisioner: Provisioner::Factory(factory) }),
+        DriveMode::Reference,
+    )
+    .0
 }
 
 /// Heterogeneous autoscaling on an open-loop trace: every grow picks the
@@ -1230,6 +1551,27 @@ pub fn simulate_autoscaled_hetero(
         Arrivals::Open { trace, next: 0 },
         cfg,
         Some(ScalingCtx { auto, provisioner: Provisioner::Catalog(catalog) }),
+        DriveMode::Optimized,
+    )
+    .0
+}
+
+/// [`simulate_autoscaled_hetero`] on the reference dispatch loop (test
+/// oracle).
+pub fn simulate_autoscaled_hetero_reference(
+    pool: &mut ShardPool,
+    trace: &[Request],
+    cfg: &SimConfig,
+    auto: &mut Autoscaler,
+    catalog: &DeviceCatalog,
+) -> FleetReport {
+    check_catalog(catalog, cfg);
+    drive(
+        pool,
+        Arrivals::Open { trace, next: 0 },
+        cfg,
+        Some(ScalingCtx { auto, provisioner: Provisioner::Catalog(catalog) }),
+        DriveMode::Reference,
     )
     .0
 }
@@ -1256,7 +1598,16 @@ pub fn simulate_closed_loop(
     clients: &ClosedLoopConfig,
     cfg: &SimConfig,
 ) -> FleetReport {
-    drive(pool, Arrivals::closed(clients.clone()), cfg, None).0
+    drive(pool, Arrivals::closed(clients.clone()), cfg, None, DriveMode::Optimized).0
+}
+
+/// [`simulate_closed_loop`] on the reference dispatch loop (test oracle).
+pub fn simulate_closed_loop_reference(
+    pool: &mut ShardPool,
+    clients: &ClosedLoopConfig,
+    cfg: &SimConfig,
+) -> FleetReport {
+    drive(pool, Arrivals::closed(clients.clone()), cfg, None, DriveMode::Reference).0
 }
 
 /// Closed-loop clients plus autoscaling: the full feedback system — load
@@ -1273,6 +1624,7 @@ pub fn simulate_closed_loop_autoscaled(
         Arrivals::closed(clients.clone()),
         cfg,
         Some(ScalingCtx { auto, provisioner: Provisioner::Factory(factory) }),
+        DriveMode::Optimized,
     )
     .0
 }
@@ -1291,6 +1643,7 @@ pub fn simulate_closed_loop_autoscaled_hetero(
         Arrivals::closed(clients.clone()),
         cfg,
         Some(ScalingCtx { auto, provisioner: Provisioner::Catalog(catalog) }),
+        DriveMode::Optimized,
     )
     .0
 }
@@ -1841,5 +2194,43 @@ mod tests {
         let b = run();
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
         assert!(!a.scaling.is_empty());
+    }
+
+    /// The optimized hot path is the same simulator as the frozen
+    /// reference loop, byte for byte (the full cross-config sweep lives
+    /// in `tests/fleet_scale.rs`; this is the in-crate smoke check).
+    #[test]
+    fn optimized_path_matches_reference_bytes() {
+        let trace = poisson_trace(300.0, 6.0, 23);
+        let cfg = SimConfig { queue_depth: 32, shed: ShedPolicy::DropOldest, ..Default::default() };
+        let mk = || {
+            let mut pool = ShardPool::new();
+            for _ in 0..3 {
+                pool.register(Box::new(test_device()));
+            }
+            pool
+        };
+        let opt = simulate(&mut mk(), &trace, &cfg);
+        let reference = simulate_reference(&mut mk(), &trace, &cfg);
+        assert_eq!(format!("{opt:?}"), format!("{reference:?}"));
+    }
+
+    /// One shard means nothing is split and nothing is merged:
+    /// `simulate_parallel` degenerates to `simulate` exactly.
+    #[test]
+    fn parallel_one_shard_is_bitwise_simulate() {
+        let scene = SceneConfig::default();
+        let trace = multi_camera_trace(&scene, 8, 25.0, 4.0, 31);
+        let cfg = SimConfig { queue_depth: 32, shed: ShedPolicy::DropOldest, ..Default::default() };
+        let mk = || {
+            let mut pool = ShardPool::new();
+            for _ in 0..4 {
+                pool.register(Box::new(test_device()));
+            }
+            pool
+        };
+        let serial = simulate(&mut mk(), &trace, &cfg);
+        let par = simulate_parallel(mk(), &trace, &cfg, 1, 2);
+        assert_eq!(format!("{serial:?}"), format!("{par:?}"));
     }
 }
