@@ -3,7 +3,7 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy fmt fmt-drift featurecheck targetscheck scalesmoke perfsmoke energysmoke livesmoke scenariosmoke chaossmoke artifacts fleet
+.PHONY: check build test clippy fmt fmt-drift featurecheck targetscheck scalesmoke perfsmoke prefiltersmoke energysmoke livesmoke scenariosmoke chaossmoke artifacts fleet
 
 # The perf smoke gate (`perfsmoke`), the energy smoke gate
 # (`energysmoke`), the live-runtime smoke gate (`livesmoke`), the
@@ -11,6 +11,7 @@ CARGO ?= cargo
 # chaos gate (`chaossmoke`) are enforced by `check` through the `test`
 # target: `cargo test -q` runs the gate assertions
 # (tests/tuning_cache.rs::perf_smoke_memoized_instruction_budget,
+# tests/prefilter.rs::prefilter_smoke_instruction_budget,
 # tests/energy_ledger.rs::hetero_policy_never_picks_dominated_device,
 # tests/live_vs_des.rs::live_smoke_wall_clock,
 # tests/scenario_accuracy.rs::scenario_smoke_both_drivers and
@@ -21,8 +22,8 @@ CARGO ?= cargo
 # tests/fault_recovery.rs), so a memoization, device-selection,
 # live-runtime, accuracy or recovery regression fails `make check`
 # without re-running the suite's heaviest tests twice. `make perfsmoke`
-# / `make energysmoke` / `make livesmoke` / `make scenariosmoke` /
-# `make chaossmoke` run the gates alone.
+# / `make prefiltersmoke` / `make energysmoke` / `make livesmoke` /
+# `make scenariosmoke` / `make chaossmoke` run the gates alone.
 check: build test clippy fmt-drift featurecheck targetscheck scalesmoke
 
 build:
@@ -99,6 +100,15 @@ scalesmoke:
 # part of `make check` via the `test` target.)
 perfsmoke:
 	$(CARGO) test -q --test tuning_cache perf_smoke_memoized_instruction_budget
+
+# Pre-filter smoke gate, standalone: transfer-tuning a new
+# `(config, batch)` point from a warmed donor point must simulate ≤ 40 %
+# of the instructions of the cold full search on that point, and ship
+# the identical winning-schedule JSON. Deterministic — counts simulated
+# instructions, never wall clock. (Also runs as part of `make check`
+# via the `test` target.)
+prefiltersmoke:
+	$(CARGO) test -q --test prefilter prefilter_smoke_instruction_budget
 
 # Energy smoke gate, standalone: the heterogeneous cheapest-feasible
 # policy must never provision a strictly dominated device (another

@@ -2,7 +2,10 @@
 //! whole-graph tuning on YOLOv7-tiny, timed in wall clock and — the
 //! deterministic proxy the perf gate uses — simulated instructions.
 //! Emits `BENCH_tuning.json` at the repo root to seed the perf
-//! trajectory.
+//! trajectory, plus `BENCH_prefilter.json` for the transfer-tuning
+//! experiment: cold-with-prefilter (a new batch point seeded from a
+//! warmed donor point) vs the cold full search on that point, with the
+//! audited ranker hit-rate.
 //!
 //! Knobs: `TE_SIZE` (input resolution, default 160), `TE_TRIALS`
 //! (measure_k, default 2), `TE_VARIANT` (`base|p40|p88`, default p88).
@@ -118,4 +121,88 @@ fn main() {
     ]);
     std::fs::write("BENCH_tuning.json", out.dump() + "\n").expect("write BENCH_tuning.json");
     println!("wrote BENCH_tuning.json");
+
+    // --- pre-filter transfer experiment (`make prefiltersmoke`'s claim):
+    // tune a NEW (config, batch) point through transfer-seeded shortlists
+    // vs today's cold full search of that point. measure_k fixed at the
+    // smoke gate's 4 (override: TE_PF_TRIALS); audit mode scores the
+    // ranker hit-rate on separate simulators (audit_instrs), so
+    // sim_instrs stays the honest serving-path cost.
+    let pf_trials = env_usize("TE_PF_TRIALS", 4);
+    let cfg = GemminiConfig::ours_zcu102();
+    let mut seeded_e =
+        TuningEngine::new(cfg.clone()).with_transfer(true).with_transfer_audit(true);
+    seeded_e.tune_graph(&g, pf_trials); // warm the donor point (batch 1)
+    let t0 = Instant::now();
+    let t_seeded = seeded_e.tune_graph_batch(&g, pf_trials, 2);
+    let seeded_s = t0.elapsed().as_secs_f64();
+    let seeded = seeded_e.last_stats();
+    println!("\n[transfer — batch-2 point seeded from batch-1 donors] {seeded_s:.2} s");
+    print!("{}", tuning_engine_table(&seeded));
+
+    let mut full_e = TuningEngine::new(cfg);
+    let t0 = Instant::now();
+    let t_full = full_e.tune_graph_batch(&g, pf_trials, 2);
+    let full_s = t0.elapsed().as_secs_f64();
+    let full = full_e.last_stats();
+    println!("\n[full search — same point, cold] {full_s:.2} s");
+    print!("{}", tuning_engine_table(&full));
+
+    let winners = |t: &TuningResult| -> String {
+        Json::Arr(
+            t.layers
+                .iter()
+                .map(|l| {
+                    Json::obj(vec![
+                        ("layer", Json::Str(l.label.clone())),
+                        ("best_cycles", Json::Num(l.result.best_cycles as f64)),
+                        (
+                            "schedule",
+                            Json::Str(match &l.result.best_schedule {
+                                Some(s) => format!("{s:?}"),
+                                None => "cisc-default".into(),
+                            }),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+        .dump()
+    };
+    let identical_winners = winners(&t_seeded) == winners(&t_full);
+    let pf_ratio = seeded.sim_instrs as f64 / full.sim_instrs as f64;
+    println!(
+        "\nprefilter: transfer {} instrs vs full {} ({:.0}%), hit-rate {}, identical winners: {identical_winners}",
+        seeded.sim_instrs,
+        full.sim_instrs,
+        pf_ratio * 100.0,
+        match seeded.hit_rate() {
+            Some(r) => format!("{:.1}%", r * 100.0),
+            None => "n/a".into(),
+        }
+    );
+    assert!(identical_winners, "transfer-seeded winners diverged from the full search's");
+
+    let pf = Json::obj(vec![
+        ("workload", Json::Str(format!("{}@{size} batch2", variant.label()))),
+        ("measure_k", Json::Num(pf_trials as f64)),
+        ("transfer", phase_json(&seeded, seeded_s, &t_seeded)),
+        ("full", phase_json(&full, full_s, &t_full)),
+        ("transfer_seeded", Json::Num(seeded.transfer_seeded as f64)),
+        ("shortlist_hits", Json::Num(seeded.shortlist_hits as f64)),
+        ("shortlist_misses", Json::Num(seeded.shortlist_misses as f64)),
+        ("audit_instrs", Json::Num(seeded.audit_instrs as f64)),
+        (
+            "hit_rate",
+            match seeded.hit_rate() {
+                Some(r) => Json::Num(r),
+                None => Json::Null,
+            },
+        ),
+        ("transfer_instr_ratio", Json::Num(pf_ratio)),
+        ("identical_winners", Json::Bool(identical_winners)),
+    ]);
+    std::fs::write("BENCH_prefilter.json", pf.dump() + "\n")
+        .expect("write BENCH_prefilter.json");
+    println!("wrote BENCH_prefilter.json");
 }

@@ -21,6 +21,25 @@ pub enum ScaleDtype {
     F16,
 }
 
+/// One level of the Gemmini memory hierarchy as the analytical
+/// pre-filter ([`crate::scheduler::prefilter`]) sees it: a bandwidth
+/// ceiling, a per-access latency, an in-flight window, and (for on-chip
+/// memories) a row capacity the schedule must respect. FactorFlow-style:
+/// the per-level parameters are all derived from the configuration, so a
+/// config edit re-parameterizes the whole cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemLevel {
+    pub name: &'static str,
+    /// Sustained transfer bandwidth across this level, bytes/cycle.
+    pub bytes_per_cycle: f64,
+    /// Latency of one access (DRAM round-trip, read-pipeline depth).
+    pub access_latency: f64,
+    /// Accesses that may overlap (ROB window, port count).
+    pub in_flight: f64,
+    /// Capacity in rows of `dim` elements (`None` = off-chip, unbounded).
+    pub capacity_rows: Option<usize>,
+}
+
 /// Full accelerator configuration. Defaults mirror Gemmini's defaults;
 /// [`GemminiConfig::ours`] mirrors the paper's Table III column "Ours".
 #[derive(Debug, Clone, PartialEq)]
@@ -148,6 +167,53 @@ impl GemminiConfig {
     /// Peak MACs per cycle (the whole PE array active).
     pub fn peak_macs_per_cycle(&self) -> usize {
         self.dim * self.dim
+    }
+
+    /// The DRAM ↔ on-chip level of the memory hierarchy (shared by the
+    /// DRAM→scratchpad and DRAM→accumulator paths — both ride the same
+    /// DMA engine and DDR controller). Capacity is unbounded from the
+    /// accelerator's point of view.
+    pub fn dram_level(&self) -> MemLevel {
+        MemLevel {
+            name: "dram",
+            bytes_per_cycle: self.bus_bytes_per_cycle() as f64,
+            access_latency: self.dram_latency as f64,
+            in_flight: self.max_in_flight as f64,
+            capacity_rows: None,
+        }
+    }
+
+    /// The scratchpad → PE-array level: one `dim`-element int8 row per
+    /// port per cycle, `scratchpad_read_delay` pipeline latency, and the
+    /// capacity the schedule's A/B blocks must fit in.
+    pub fn scratchpad_level(&self) -> MemLevel {
+        MemLevel {
+            name: "scratchpad",
+            bytes_per_cycle: (self.scratchpad_ports * self.dim * self.input_bits / 8) as f64,
+            access_latency: self.scratchpad_read_delay as f64,
+            in_flight: self.scratchpad_ports as f64,
+            capacity_rows: Some(self.scratchpad_rows()),
+        }
+    }
+
+    /// The accumulator level (PE results in, mvout drains out): one
+    /// `dim`-element int32 row per cycle, drained through the same read
+    /// pipeline as the scratchpad, with the capacity live output tiles
+    /// must fit in.
+    pub fn accumulator_level(&self) -> MemLevel {
+        MemLevel {
+            name: "accumulator",
+            bytes_per_cycle: (self.dim * self.acc_bits / 8) as f64,
+            access_latency: self.scratchpad_read_delay as f64,
+            in_flight: 1.0,
+            capacity_rows: Some(self.accumulator_rows()),
+        }
+    }
+
+    /// Spatial fanout of one weight preload: the PE array feeds `dim`
+    /// compute rows per preloaded tile (FactorFlow's fanout level).
+    pub fn pe_fanout(&self) -> usize {
+        self.dim
     }
 
     /// Peak throughput in GOP/s (2 ops per MAC).
@@ -299,6 +365,29 @@ mod tests {
         assert_ne!(a.fingerprint(), clocked.fingerprint());
         let ported = GemminiConfig { scratchpad_ports: 1, ..a.clone() };
         assert_ne!(a.fingerprint(), ported.fingerprint());
+    }
+
+    #[test]
+    fn memory_levels_derive_from_config() {
+        let c = GemminiConfig::original_zcu102();
+        let dram = c.dram_level();
+        assert_eq!(dram.bytes_per_cycle, c.bus_bytes_per_cycle() as f64);
+        assert_eq!(dram.access_latency, c.dram_latency as f64);
+        assert_eq!(dram.in_flight, c.max_in_flight as f64);
+        assert!(dram.capacity_rows.is_none());
+        let sp = c.scratchpad_level();
+        // 1 port × 16 int8 elements per row.
+        assert_eq!(sp.bytes_per_cycle, 16.0);
+        assert_eq!(sp.capacity_rows, Some(c.scratchpad_rows()));
+        let acc = c.accumulator_level();
+        // 16 int32 elements per row.
+        assert_eq!(acc.bytes_per_cycle, 64.0);
+        assert_eq!(acc.capacity_rows, Some(c.accumulator_rows()));
+        assert_eq!(c.pe_fanout(), c.dim);
+        // The wider config widens every level.
+        let ours = GemminiConfig::ours_zcu102();
+        assert!(ours.scratchpad_level().bytes_per_cycle > sp.bytes_per_cycle);
+        assert!(ours.accumulator_level().bytes_per_cycle > acc.bytes_per_cycle);
     }
 
     #[test]

@@ -42,7 +42,13 @@ use crate::ir::tensor::f16_round;
 /// cycles must never outlive the simulator that produced them. Bump on
 /// any change to this file's timing semantics, `pe_array` cycle
 /// formulas, CISC expansion, or `scheduler::space::enumerate`.
-pub const TIMING_MODEL_VERSION: u64 = 1;
+///
+/// v2: `scheduler::space::enumerate` caps `mb` at the layer's m-tile
+/// count (small-M layers gained previously-rejected schedules) and the
+/// ranking stage moved to the hierarchical `scheduler::prefilter` model
+/// with the corrected A-request batching term — measured candidate sets
+/// changed, so v1 cached cycles must not be reused.
+pub const TIMING_MODEL_VERSION: u64 = 2;
 
 const DRAM_BLOCK: usize = 4096;
 const IDX_LOAD: usize = 0;

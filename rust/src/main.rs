@@ -8,16 +8,18 @@
 //! repro infer [--hlo PATH]            run the AOT artifact on a scene (PJRT)
 //! repro tune [--size N] [--variant base|p40|p88] [--trials K]
 //!            [--tuning-cache PATH] [--threads N]
+//!            [--transfer] [--transfer-audit]
 //! repro fleet [--cameras N] [--fps F] [--batch B] [--wait MS] [--seconds S]
 //!             [--autoscale] [--policy util|slo] [--max-devices N]
 //!             [--epoch S] [--delay S] [--closed K] [--tuning-cache PATH]
 //!             [--hetero] [--classes] [--quota FPS] [--ladder]
 //!             [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
 //!             [--faults demo|SPEC] [--parallel N] [--threads N]
+//!             [--transfer] [--transfer-audit]
 //! repro scenario [--list] [--name NAME] [--seed S] [--load F]
 //!                [--autoscale] [--max-devices N] [--tuning-cache PATH] [--ladder]
 //!                [--live] [--live-threads N] [--time-scale F] [--virtual-clock]
-//!                [--faults demo|SPEC]
+//!                [--faults demo|SPEC] [--transfer] [--transfer-audit]
 //! ```
 //!
 //! `repro fleet --autoscale` runs the same fleet behind the closed-loop
@@ -103,6 +105,15 @@
 //! it and skip the cycle-simulator measurements entirely. Entries are
 //! keyed by the accelerator-config fingerprint, so editing the config
 //! invalidates stale entries automatically.
+//!
+//! `--transfer` (on `tune`, `fleet` and `scenario`) arms transfer
+//! tuning (`scheduler::prefilter` + `TuningEngine::with_transfer`):
+//! cold layers whose cache lookup misses but that have a tuned
+//! m-neighbor or sibling-config donor measure a two-candidate
+//! shortlist — the donor's winner plus the analytical pre-filter's top
+//! pick — instead of the full top-k search. `--transfer-audit` (implies
+//! `--transfer`) additionally re-runs the reference full search per
+//! seeded layer to score the ranker hit-rate in the engine table.
 
 use gemmini_edge::coordinator::{deploy, DeployOptions};
 use gemmini_edge::dataset::detector::{build_detector, default_weights};
@@ -119,10 +130,17 @@ fn arg_val(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
 }
 
-/// Build a tuning engine, warm-started from `--tuning-cache` when given.
-fn engine_with_cache(cfg: GemminiConfig, cache_path: Option<&String>) -> TuningEngine {
-    let mut engine = TuningEngine::new(cfg);
-    if let Some(path) = cache_path {
+/// Build a tuning engine, warm-started from `--tuning-cache` when given,
+/// with transfer tuning / auditing armed by `--transfer` /
+/// `--transfer-audit` (see `scheduler::prefilter` and
+/// `TuningEngine::with_transfer`).
+fn engine_with_cache(cfg: GemminiConfig, args: &[String]) -> TuningEngine {
+    let cache_path = arg_val(args, "--tuning-cache");
+    let audit = args.iter().any(|a| a == "--transfer-audit");
+    let transfer = audit || args.iter().any(|a| a == "--transfer");
+    let mut engine =
+        TuningEngine::new(cfg).with_transfer(transfer).with_transfer_audit(audit);
+    if let Some(path) = cache_path.as_ref() {
         let cache = TuningCache::load(path);
         if !cache.is_empty() {
             eprintln!(
@@ -222,7 +240,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let mut g = yolov7_tiny(size, variant, 80);
             gemmini_edge::passes::replace_activations(&mut g);
             let cfg = GemminiConfig::ours_zcu102();
-            let mut engine = engine_with_cache(cfg.clone(), arg_val(&args, "--tuning-cache").as_ref());
+            let mut engine = engine_with_cache(cfg.clone(), &args);
             if let Some(n) = arg_val(&args, "--threads").and_then(|v| v.parse::<usize>().ok()) {
                 engine = engine.with_threads(n);
             }
@@ -342,20 +360,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             // the main engine loads, so `--tuning-cache` warm-starts
             // both configs on the next run.
             let t_orig = hetero.then(|| {
-                let mut e = engine_with_cache(
-                    GemminiConfig::original_zcu102(),
-                    arg_val(&args, "--tuning-cache").as_ref(),
-                );
+                let mut e = engine_with_cache(GemminiConfig::original_zcu102(), &args);
                 let t = e.tune_graph(&g, 2);
                 if let Err(err) = e.save_cache() {
                     eprintln!("warning: could not write tuning cache: {err}");
                 }
                 t
             });
-            let mut engine = engine_with_cache(
-                GemminiConfig::ours_zcu102(),
-                arg_val(&args, "--tuning-cache").as_ref(),
-            );
+            let mut engine = engine_with_cache(GemminiConfig::ours_zcu102(), &args);
             let tuning = engine.tune_graph(&g, 2);
             // The degradation ladder tunes the pruned variants through
             // the same engine, so replicas (and repeated runs with
@@ -645,10 +657,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             // cache-backed tuning engine.
             let mut g = build_detector(96, &default_weights());
             gemmini_edge::passes::replace_activations(&mut g);
-            let mut engine = engine_with_cache(
-                GemminiConfig::ours_zcu102(),
-                arg_val(&args, "--tuning-cache").as_ref(),
-            );
+            let mut engine = engine_with_cache(GemminiConfig::ours_zcu102(), &args);
             let tuning = engine.tune_graph(&g, 2);
             let rungs = ladder.then(|| VariantLadder::paper_ladder(&mut engine, 96, 2));
             let mut pool = ShardPool::paper_boards(&tuning, DEFAULT_DISPATCH_S);

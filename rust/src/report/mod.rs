@@ -287,7 +287,7 @@ pub fn catalog_table(c: &DeviceCatalog) -> String {
 /// how much schedule search the memoization/cache layers actually saved,
 /// with simulated instructions as the deterministic cost proxy.
 pub fn tuning_engine_table(s: &EngineStats) -> String {
-    format!(
+    let mut t = format!(
         "| conv/dense layers        | {:>10} |\n\
          | unique geometries        | {:>10} |\n\
          | searched (cache misses)  | {:>10} |\n\
@@ -305,7 +305,19 @@ pub fn tuning_engine_table(s: &EngineStats) -> String {
         s.move_memo_hits,
         s.sim_instrs,
         s.threads_used
-    )
+    );
+    if s.transfer_seeded > 0 {
+        t += &format!("| transfer-seeded layers   | {:>10} |\n", s.transfer_seeded);
+    }
+    if let Some(rate) = s.hit_rate() {
+        t += &format!(
+            "| ranker hit-rate (audit)  | {:>9.1}% |\n\
+             | audit instructions       | {:>10} |\n",
+            rate * 100.0,
+            s.audit_instrs
+        );
+    }
+    t
 }
 
 /// A generic two-column series (figure data as rows).
@@ -593,12 +605,25 @@ mod tests {
             move_memo_hits: 4,
             sim_instrs: 123_456,
             threads_used: 4,
+            ..EngineStats::default()
         };
         let t = tuning_engine_table(&s);
         assert!(t.contains("unique geometries"), "{t}");
         assert!(t.contains("58"), "{t}");
         assert!(t.contains("123456"), "{t}");
         assert!(t.lines().count() == 8, "{t}");
+        // Transfer runs grow the table with seeding and audit rows.
+        let st = EngineStats {
+            transfer_seeded: 30,
+            shortlist_hits: 27,
+            shortlist_misses: 3,
+            audit_instrs: 99,
+            ..s
+        };
+        let tt = tuning_engine_table(&st);
+        assert!(tt.contains("transfer-seeded layers"), "{tt}");
+        assert!(tt.contains("90.0%"), "{tt}");
+        assert!(tt.lines().count() == 11, "{tt}");
     }
 
     #[test]

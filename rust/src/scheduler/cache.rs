@@ -214,6 +214,54 @@ impl TuningCache {
         self.moves.insert((config_fp, bytes_in, bytes_out), cycles);
     }
 
+    /// The transfer-tuning donor for a key that missed: the nearest
+    /// previously-tuned neighbor whose winner can seed the target's
+    /// shortlist ([`crate::scheduler::search::tune_layer_transfer`]).
+    /// Two phases, both with deterministic total-order tie-breaks (the
+    /// result must not depend on `HashMap` iteration order or thread
+    /// count):
+    ///
+    /// 1. **m-neighbor** — same config fingerprint, same
+    ///    `(n, k, kernel, bias, measure_k)`, different `m`; nearest `m`
+    ///    wins (ties to the smaller `m`). Same `GeomKey` modulo
+    ///    m-scaling: the schedule space and ranking are nearly
+    ///    identical, and cycle counts scale with the m-tile count
+    ///    (`TransferSeed::scalable`).
+    /// 2. **config sibling** — identical geometry and budget on a
+    ///    different config fingerprint; smallest fingerprint wins. The
+    ///    winner still seeds well (good block shapes transfer across
+    ///    sibling configs) but cycles don't scale, so the default is
+    ///    always re-measured.
+    ///
+    /// Callers detect which phase hit by comparing the donor key's
+    /// `config_fp` with the target's.
+    pub fn nearest_donor(&self, key: &CacheKey) -> Option<(CacheKey, SearchResult)> {
+        let g = key.geom;
+        let m_neighbor = self
+            .layers
+            .iter()
+            .filter(|(k, _)| {
+                k.config_fp == key.config_fp
+                    && k.measure_k == key.measure_k
+                    && k.geom.n == g.n
+                    && k.geom.k == g.k
+                    && k.geom.kernel == g.kernel
+                    && k.geom.bias == g.bias
+                    && k.geom.m != g.m
+            })
+            .min_by_key(|(k, _)| (k.geom.m.abs_diff(g.m), k.geom.m));
+        if let Some((k, r)) = m_neighbor {
+            return Some((*k, r.clone()));
+        }
+        self.layers
+            .iter()
+            .filter(|(k, _)| {
+                k.geom == g && k.measure_k == key.measure_k && k.config_fp != key.config_fp
+            })
+            .min_by_key(|(k, _)| k.config_fp)
+            .map(|(k, r)| (*k, r.clone()))
+    }
+
     pub fn layer_entries(&self) -> usize {
         self.layers.len()
     }
@@ -309,6 +357,7 @@ fn layer_entry_json(key: &CacheKey, r: &SearchResult) -> Json {
         ("measured", Json::Num(r.measured as f64)),
         ("space_size", Json::Num(r.space_size as f64)),
         ("schedule", schedule),
+        ("default_est", Json::Bool(r.default_est)),
     ])
 }
 
@@ -361,6 +410,9 @@ fn parse_layer_entry(e: &Json) -> Option<(CacheKey, SearchResult)> {
             best_schedule,
             measured: num("measured")?,
             space_size: num("space_size")?,
+            // Optional for version-1 files written before transfer
+            // tuning existed: a measured default is the safe default.
+            default_est: e.get("default_est").and_then(Json::as_bool).unwrap_or(false),
         },
     ))
 }
@@ -397,6 +449,7 @@ mod tests {
             best_schedule: sched,
             measured: 4,
             space_size: 18,
+            default_est: false,
         }
     }
 
@@ -557,6 +610,72 @@ mod tests {
         assert_eq!(first, std::fs::read_to_string(&path).unwrap());
         assert_eq!(TuningCache::load(&path).layer_entries(), 4);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn default_est_roundtrips_and_defaults_false() {
+        let path = std::env::temp_dir()
+            .join(format!("gemmini_edge_cache_destflag_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut c = TuningCache::load(&path);
+        let est = SearchResult { default_est: true, ..sample_result(None) };
+        c.insert_layer(sample_key(1), est.clone());
+        c.save().unwrap();
+        let back = TuningCache::load(&path);
+        assert_eq!(back.get_layer(&sample_key(1)), Some(&est));
+        // Pre-transfer version-1 files lack the field: parse as measured.
+        let mut entry = layer_entry_json(&sample_key(2), &sample_result(None)).dump();
+        entry = entry.replace(",\"default_est\":false", "");
+        assert!(!entry.contains("default_est"), "{entry}");
+        std::fs::write(&path, format!("{{\"version\":1,\"layers\":[{entry}],\"moves\":[]}}"))
+            .unwrap();
+        let old = TuningCache::load(&path);
+        assert_eq!(old.get_layer(&sample_key(2)), Some(&sample_result(None)));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn nearest_donor_prefers_m_neighbors_deterministically() {
+        let mut c = TuningCache::in_memory();
+        let key_m = |fp: u64, m: usize| CacheKey {
+            geom: GeomKey { m, ..sample_key(fp).geom },
+            ..sample_key(fp)
+        };
+        // No donors at all.
+        assert!(c.nearest_donor(&sample_key(1)).is_none());
+        // A sibling-config donor with the identical geometry…
+        c.insert_layer(sample_key(9), sample_result(None));
+        let (dk, _) = c.nearest_donor(&sample_key(1)).unwrap();
+        assert_eq!(dk.config_fp, 9);
+        // …loses to any same-config m-neighbor.
+        c.insert_layer(key_m(1, 3200), sample_result(None));
+        let (dk, _) = c.nearest_donor(&sample_key(1)).unwrap();
+        assert_eq!((dk.config_fp, dk.geom.m), (1, 3200));
+        // Nearest m wins; equidistant ties go to the smaller m.
+        c.insert_layer(key_m(1, 800), sample_result(None));
+        let (dk, _) = c.nearest_donor(&sample_key(1)).unwrap();
+        assert_eq!(dk.geom.m, 800, "|1600-800| = |1600-3200|·1/2 … nearest");
+        c.insert_layer(key_m(1, 2400), sample_result(None));
+        let (dk, _) = c.nearest_donor(&sample_key(1)).unwrap();
+        assert_eq!(dk.geom.m, 800, "equidistant 800/2400 → smaller m");
+        // The exact key itself is never its own donor.
+        c.insert_layer(sample_key(1), sample_result(None));
+        let (dk, _) = c.nearest_donor(&sample_key(1)).unwrap();
+        assert_ne!(dk, sample_key(1));
+        // A different measure_k never donates.
+        let other_k = CacheKey { measure_k: 9, ..sample_key(2) };
+        c.insert_layer(other_k, sample_result(None));
+        assert!(c.nearest_donor(&CacheKey { measure_k: 5, ..sample_key(2) }).is_none());
+    }
+
+    #[test]
+    fn nearest_donor_config_siblings_tie_break_on_fingerprint() {
+        let mut c = TuningCache::in_memory();
+        for fp in [7u64, 3, 5] {
+            c.insert_layer(sample_key(fp), sample_result(None));
+        }
+        let (dk, _) = c.nearest_donor(&sample_key(1)).unwrap();
+        assert_eq!(dk.config_fp, 3, "smallest sibling fingerprint wins");
     }
 
     #[test]

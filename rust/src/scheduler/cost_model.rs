@@ -1,95 +1,39 @@
-//! Analytic latency estimate for a (layer, schedule) pair.
+//! Legacy entry points of the analytic latency estimate.
 //!
 //! AutoTVM measures every candidate on hardware; measuring every candidate
 //! on the cycle-approximate simulator is affordable but not free, so (like
 //! AutoTVM's learned cost model) we rank candidates analytically and only
-//! *measure* the top few ([`super::search`]).
+//! *measure* the top few ([`super::search`]). The model itself now lives
+//! in [`super::prefilter`] as a per-level memory-hierarchy model; these
+//! functions delegate there so older call sites keep ranking with the one
+//! shared model.
+//!
+//! History note: the original single-formula `estimate_risc` carried a
+//! mis-clamped DMA batching term — `lat_batches(dim / kernel.max(1)
+//! .min(dim))` clamped the *kernel* instead of the quotient, so the
+//! "extra batches when row count exceeds the in-flight window" term was
+//! dead for exactly the 3×3/5×5 conv layers the paper tunes. The
+//! hierarchy model derives the per-request row count from the actual
+//! mvin fragmentation (`codegen::emit_a_mvin`); the regression test
+//! below pins the fix per kernel size.
 
 use crate::gemmini::config::GemminiConfig;
 
 use super::codegen::ConvGeom;
-use super::space::{LoopOrder, RiscSchedule};
+use super::prefilter;
+use super::space::RiscSchedule;
 
-/// Estimated cycles for a RISC schedule.
+/// Estimated cycles for a RISC schedule. Delegates to
+/// [`prefilter::estimate_schedule`].
 pub fn estimate_risc(cfg: &GemminiConfig, g: &ConvGeom, s: &RiscSchedule) -> f64 {
-    let dim = cfg.dim as f64;
-    let (mt, nt, kt) = (g.mt(cfg.dim), g.nt(cfg.dim), g.kt(cfg.dim));
-    let blocks = mt.div_ceil(s.mb) as f64;
-
-    // ---- DMA bytes ----
-    let a_bytes = (g.m * g.k) as f64; // A loaded once (block caching)
-    let b_bytes = blocks * (kt * nt) as f64 * dim * dim; // B reloaded per block
-    let bias_bytes = if g.bias { blocks * (nt * s.mb) as f64 * dim * dim * 4.0 } else { 0.0 };
-    let c_bytes = (g.m * g.n) as f64;
-    let dma_bytes = a_bytes + b_bytes + bias_bytes + c_bytes;
-    // DMA instruction counts: each mvin/mvout pays one DRAM round-trip on
-    // the (serialized) DMA timeline, plus extra batches when its row count
-    // exceeds the in-flight window.
-    let lat_batches = |rows: usize| (rows as f64 / cfg.max_in_flight as f64).ceil();
-    let a_reqs = (mt * kt * g.kernel) as f64 * lat_batches(cfg.dim / g.kernel.max(1).min(cfg.dim));
-    let b_reqs = blocks * (kt * nt) as f64;
-    let bias_reqs = if g.bias { blocks * (nt * s.mb) as f64 } else { 0.0 };
-    let c_reqs = (mt * nt) as f64;
-    let reqs = a_reqs + b_reqs + bias_reqs + c_reqs;
-    // Request latency pipelines (ROB in-flight window); bus occupancy is
-    // transfer + per-row issue beats.
-    let rows_total = (g.m * kt) as f64 + b_reqs * dim + (mt * nt) as f64 * dim;
-    let dma_cycles = dma_bytes / cfg.bus_bytes_per_cycle() as f64
-        + rows_total
-        + reqs / cfg.max_in_flight as f64 * cfg.dram_latency as f64;
-
-    // ---- execute cycles ----
-    let compute_rows = (g.m * kt * nt) as f64;
-    let full_preloads = blocks * (kt * nt) as f64;
-    let reuse_preloads = full_preloads * (s.mb as f64 - 1.0);
-    let exec_cycles = compute_rows
-        + full_preloads * (dim + cfg.scratchpad_read_delay as f64)
-        + reuse_preloads;
-
-    // ---- overlap ----
-    // Fully double-buffered: max of the two engines. Single-buffered: the
-    // block's load and compute phases serialize.
-    let overlap = match (s.double_buffer_a, s.double_buffer_b) {
-        (true, true) => 0.95,
-        (true, false) | (false, true) => 0.6,
-        (false, false) => 0.25,
-    };
-    let serial = dma_cycles + exec_cycles;
-    let ideal = dma_cycles.max(exec_cycles);
-    let mut est = ideal + (serial - ideal) * (1.0 - overlap);
-    // Single scratchpad port: loads and computes contend.
-    if cfg.scratchpad_ports == 1 {
-        est += 0.5 * dma_cycles.min(exec_cycles);
-    }
-    // KOuter keeps more accumulator tiles live; mvouts cluster at block
-    // end and serialize against the last computes.
-    if matches!(s.order, LoopOrder::KOuter) {
-        est += c_reqs / blocks * cfg.dram_latency as f64 * 0.25;
-    }
-    est
+    prefilter::estimate_schedule(cfg, g, s)
 }
 
 /// Estimated cycles for the CISC default schedule (single-buffered,
-/// B reloaded per output tile, one accumulator tile).
+/// B reloaded per output tile, one accumulator tile). Delegates to
+/// [`prefilter::estimate_default`].
 pub fn estimate_cisc(cfg: &GemminiConfig, g: &ConvGeom) -> f64 {
-    let dim = cfg.dim as f64;
-    let (mt, nt, kt) = (g.mt(cfg.dim), g.nt(cfg.dim), g.kt(cfg.dim));
-    // A reloaded per n-tile, B reloaded per (m,n,k) tile.
-    let a_bytes = (g.m * g.k * nt) as f64;
-    let b_bytes = (mt * nt * kt) as f64 * dim * dim;
-    let c_bytes = (g.m * g.n) as f64;
-    let dma_bytes = a_bytes + b_bytes + c_bytes;
-    let bias_reqs = if g.bias { (mt * nt) as f64 } else { 0.0 };
-    let reqs = (mt * kt * g.kernel * nt + mt * nt * kt + mt * nt) as f64 + bias_reqs;
-    let rows_total = (g.m * kt * nt) as f64 + (mt * nt * kt) as f64 * dim + (mt * nt) as f64 * dim;
-    let dma_cycles = dma_bytes / cfg.bus_bytes_per_cycle() as f64
-        + rows_total
-        + reqs / cfg.max_in_flight as f64 * cfg.dram_latency as f64;
-    let compute_rows = (g.m * kt * nt) as f64;
-    let preloads = (mt * nt * kt) as f64;
-    let exec = compute_rows + preloads * (dim + cfg.scratchpad_read_delay as f64);
-    // Single-buffered FSM: very little overlap.
-    dma_cycles + exec * 0.85
+    prefilter::estimate_default(cfg, g)
 }
 
 #[cfg(test)]
@@ -113,23 +57,20 @@ mod tests {
         }
     }
 
-    /// The cost model must *rank* schedules consistently with the
-    /// simulator (Spearman-ish check over the space on a real layer).
-    #[test]
-    fn cost_model_ranks_like_simulator() {
-        let cfg = GemminiConfig { dim: 8, scratchpad_kib: 32, accumulator_kib: 16, ..GemminiConfig::original_zcu102() };
-        let g = geom(128, 16, 32);
-        let space = crate::scheduler::space::enumerate(&cfg, g.kt(8), g.nt(8));
+    /// Spearman rank correlation between estimates and measured cycles
+    /// over a whole schedule space.
+    fn spearman_rho(cfg: &GemminiConfig, g: &ConvGeom) -> f64 {
+        let space =
+            crate::scheduler::space::enumerate(cfg, g.mt(cfg.dim), g.kt(cfg.dim), g.nt(cfg.dim));
         let mut pairs: Vec<(f64, u64)> = Vec::new();
         for s in &space {
-            let est = estimate_risc(&cfg, &g, s);
+            let est = estimate_risc(cfg, g, s);
             let mut alloc = DramAllocator::new(1 << 22);
-            let bufs = alloc_buffers(&g, &mut alloc);
+            let bufs = alloc_buffers(g, &mut alloc);
             let mut sim = Simulator::new(cfg.clone(), 1 << 22);
-            let meas = sim.run(&lower_risc(&cfg, &g, &bufs, s)).cycles;
+            let meas = sim.run(&lower_risc(cfg, g, &bufs, s)).cycles;
             pairs.push((est, meas));
         }
-        // Rank correlation over the space.
         let n = pairs.len() as f64;
         let rank = |v: Vec<f64>| -> Vec<f64> {
             let mut idx: Vec<usize> = (0..v.len()).collect();
@@ -143,8 +84,44 @@ mod tests {
         let re = rank(pairs.iter().map(|p| p.0).collect());
         let rm = rank(pairs.iter().map(|p| p.1 as f64).collect());
         let d2: f64 = re.iter().zip(&rm).map(|(a, b)| (a - b) * (a - b)).sum();
-        let rho = 1.0 - 6.0 * d2 / (n * (n * n - 1.0));
-        assert!(rho > 0.5, "rank correlation {rho} too weak ({pairs:?})");
+        1.0 - 6.0 * d2 / (n * (n * n - 1.0))
+    }
+
+    /// The cost model must *rank* schedules consistently with the
+    /// simulator (Spearman-ish check over the space on a real layer).
+    #[test]
+    fn cost_model_ranks_like_simulator() {
+        let cfg = GemminiConfig { dim: 8, scratchpad_kib: 32, accumulator_kib: 16, ..GemminiConfig::original_zcu102() };
+        let rho = spearman_rho(&cfg, &geom(128, 16, 32));
+        assert!(rho > 0.5, "rank correlation {rho} too weak");
+    }
+
+    /// Regression for the mis-clamped A-request batching term: the
+    /// ranking quality must hold for every conv kernel size the paper
+    /// tunes, not just kernel=1 — and on narrow in-flight windows, where
+    /// the batching term is live (`dim.div_ceil(kernel)` rows per mvin
+    /// request vs a 4-deep window), not only on the shipped configs
+    /// whose window swallows a full `dim`-row mvin.
+    #[test]
+    fn batching_term_ranks_per_kernel() {
+        for dim in [8usize, 16] {
+            let cfg = GemminiConfig {
+                dim,
+                scratchpad_kib: 32,
+                accumulator_kib: 16,
+                max_in_flight: 4,
+                ..GemminiConfig::original_zcu102()
+            };
+            for kernel in [1usize, 3, 5, 7] {
+                let g = ConvGeom {
+                    kernel,
+                    // K = kernel² × 8 input channels, as a real conv has.
+                    ..geom(128, 16, kernel * kernel * 8)
+                };
+                let rho = spearman_rho(&cfg, &g);
+                assert!(rho > 0.5, "dim {dim} kernel {kernel}: rho {rho} too weak");
+            }
+        }
     }
 
     #[test]

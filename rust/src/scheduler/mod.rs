@@ -10,7 +10,11 @@
 //! - [`space`] — the per-layer schedule space (analogue of AutoTVM knobs);
 //! - [`codegen`] — lowering IR layers to RISC streams for a schedule, or
 //!   to the CISC FSM instruction (the "Default" of Figure 5);
-//! - [`cost_model`] — analytic latency estimate used to prune the search;
+//! - [`prefilter`] — the FactorFlow-style analytical ranker: per-level
+//!   traffic against the [`MemLevel`] hierarchy derived from the config,
+//!   producing the measurement shortlist (ROADMAP item 4);
+//! - [`cost_model`] — legacy estimate entry points (delegate to
+//!   [`prefilter`]);
 //! - [`search`] — random + local search, with the top candidates measured
 //!   on the cycle-approximate simulator (AutoTVM's measure step);
 //! - [`cache`] — the persistent tuning cache (AutoTVM-log analogue) and
@@ -43,6 +47,15 @@
 //! - **Simulator reuse.** One timing simulator per worker (and one for
 //!   movement ops) replaces the old fresh-256 MiB-DRAM-per-candidate
 //!   path; reuse is cycle-exact (see [`crate::gemmini::sim`]).
+//! - **Transfer tuning** (opt-in, `TuningEngine::with_transfer`). A cold
+//!   `(config, resolution, batch)` point seeds each layer's shortlist
+//!   from the cached winner of the nearest neighboring geometry (same
+//!   [`GeomKey`] modulo m-scaling, or a sibling config fingerprint) plus
+//!   the pre-filter's top pick, measuring a handful of candidates
+//!   instead of the full top-k. Whenever the shortlist contains the
+//!   full-search winner the result is byte-identical to the full path;
+//!   [`EngineStats`] reports the ranker hit-rate (audited via
+//!   `TuningEngine::with_transfer_audit`).
 //!
 //! The free functions [`tune_graph`] / [`tune_graph_batch`] keep the
 //! original API on a throwaway engine; hold a [`TuningEngine`] across
@@ -50,17 +63,23 @@
 //! batch sizes and fleet replicas.
 //!
 //! [`GemminiConfig::fingerprint`]: crate::gemmini::config::GemminiConfig::fingerprint
+//! [`MemLevel`]: crate::gemmini::config::MemLevel
 
 pub mod cache;
 pub mod codegen;
 pub mod cost_model;
+pub mod prefilter;
 pub mod search;
 pub mod space;
 pub mod tuner;
 
 pub use cache::{CacheKey, GeomKey, TuningCache};
 pub use codegen::{layer_geometry, lower_cisc, lower_risc, ConvGeom};
-pub use search::{tune_layer, MeasureCtx, SearchResult};
+pub use prefilter::{estimate_default, estimate_schedule, rank, shortlist, sort_ranked};
+pub use search::{
+    tune_layer, tune_layer_transfer, tune_layer_with, MeasureCtx, SearchResult, TransferOutcome,
+    TransferSeed,
+};
 pub use space::{LoopOrder, RiscSchedule};
 pub use tuner::{
     tune_graph, tune_graph_batch, EngineStats, LayerTuning, TuningEngine, TuningResult,

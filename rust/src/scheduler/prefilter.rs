@@ -1,0 +1,346 @@
+//! FactorFlow-style analytical pre-filter (ROADMAP item 4).
+//!
+//! AutoTVM measures every candidate on hardware; we rank the whole
+//! schedule space analytically and only *measure* a short top-k list
+//! ([`super::search`]). This module is that ranking stage, modelled the
+//! way FactorFlow models a spatial architecture: each level of the
+//! Gemmini memory hierarchy ([`MemLevel`], derived from
+//! [`GemminiConfig`]) contributes bytes moved against its bandwidth
+//! ceiling, per-access latency amortized over its in-flight window, and
+//! a capacity feasibility constraint, instead of one opaque formula.
+//!
+//! The hierarchy as the pre-filter sees it:
+//!
+//! * **DRAM → scratchpad / accumulator** ([`GemminiConfig::dram_level`])
+//!   — every mvin/mvout occupies the bus for `bytes / bytes_per_cycle`
+//!   plus one issue beat per row, and pays the DRAM round-trip latency
+//!   pipelined over the DMA's in-flight request window.
+//! * **Scratchpad → PE array** ([`GemminiConfig::scratchpad_level`]) —
+//!   each full B-tile preload streams [`GemminiConfig::pe_fanout`] rows
+//!   and pays the scratchpad read latency; `REUSE_WEIGHTS` preloads
+//!   ([`super::codegen`]) collapse to a single issue beat.
+//! * **Accumulator** ([`GemminiConfig::accumulator_level`]) — bounds how
+//!   many output tiles a `KOuter` schedule may keep live (feasibility is
+//!   checked by [`RiscSchedule::fits`]) and drains to DRAM in a burst at
+//!   block end, which the `KOuter` penalty term charges.
+//!
+//! Numerically the combined estimate is calibrated against the
+//! cycle-approximate simulator (see the rank-correlation tests in
+//! [`super::cost_model`]); the legacy `estimate_risc`/`estimate_cisc`
+//! entry points delegate here so every caller ranks with one model.
+
+use crate::gemmini::config::{GemminiConfig, MemLevel};
+
+use super::codegen::ConvGeom;
+use super::space::{LoopOrder, RiscSchedule};
+
+/// Traffic one schedule pushes through one memory level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LevelUse {
+    /// The level the traffic crosses.
+    pub level: MemLevel,
+    /// Payload bytes moved across the level.
+    pub bytes: f64,
+    /// Discrete requests issued (mvin/mvout instructions).
+    pub requests: f64,
+    /// Rows issued (each row costs one issue beat on the link).
+    pub rows: f64,
+}
+
+impl LevelUse {
+    /// Cycles the link itself is busy: transfer time against the
+    /// bandwidth ceiling plus one issue beat per row.
+    pub fn occupancy_cycles(&self) -> f64 {
+        self.bytes / self.level.bytes_per_cycle + self.rows
+    }
+
+    /// Cycles spent waiting on per-access latency, pipelined across the
+    /// level's in-flight window.
+    pub fn latency_cycles(&self) -> f64 {
+        self.requests / self.level.in_flight * self.level.access_latency
+    }
+
+    /// Total estimated cycles this level contributes.
+    pub fn cycles(&self) -> f64 {
+        self.occupancy_cycles() + self.latency_cycles()
+    }
+}
+
+/// Execute-pipe usage: rows streamed through the PE array plus B-tile
+/// preload traffic out of the scratchpad.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecUse {
+    /// Rows issued through the systolic array (one row per cycle).
+    pub compute_rows: f64,
+    /// Full B-tile preloads (stream `pe_fanout` rows + scratchpad read
+    /// latency each).
+    pub full_preloads: f64,
+    /// `REUSE_WEIGHTS` preloads (single issue beat each).
+    pub reuse_preloads: f64,
+    /// Cycles one full preload stalls the pipe: PE fanout rows plus the
+    /// scratchpad level's access latency.
+    pub preload_overhead: f64,
+}
+
+impl ExecUse {
+    /// Total estimated execute-pipe cycles.
+    pub fn cycles(&self) -> f64 {
+        self.compute_rows + self.full_preloads * self.preload_overhead + self.reuse_preloads
+    }
+}
+
+/// DRAM-level traffic of a RISC schedule: A loaded once (block caching),
+/// B reloaded per block, bias and C streamed through the accumulator.
+pub fn dram_use_risc(cfg: &GemminiConfig, g: &ConvGeom, s: &RiscSchedule) -> LevelUse {
+    let dram = cfg.dram_level();
+    let dim = cfg.dim as f64;
+    let (mt, nt, kt) = (g.mt(cfg.dim), g.nt(cfg.dim), g.kt(cfg.dim));
+    let blocks = mt.div_ceil(s.mb) as f64;
+
+    let a_bytes = (g.m * g.k) as f64; // A loaded once (block caching)
+    let b_bytes = blocks * (kt * nt) as f64 * dim * dim; // B reloaded per block
+    let bias_bytes = if g.bias { blocks * (nt * s.mb) as f64 * dim * dim * 4.0 } else { 0.0 };
+    let c_bytes = (g.m * g.n) as f64;
+
+    // Each mvin/mvout pays one DRAM round-trip on the (serialized) DMA
+    // timeline, plus extra batches when its row count exceeds the
+    // in-flight window. A-tile mvins are fragmented by the conv kernel
+    // into `kernel` strided requests of `dim.div_ceil(kernel)` rows each
+    // (`codegen::emit_a_mvin`), so the batching term sees the *per-request
+    // row count*, not the kernel size.
+    let lat_batches = |rows: usize| (rows as f64 / dram.in_flight).ceil();
+    let a_rows_per_req = cfg.dim.div_ceil(g.kernel.clamp(1, cfg.dim));
+    let a_reqs = (mt * kt * g.kernel) as f64 * lat_batches(a_rows_per_req);
+    let b_reqs = blocks * (kt * nt) as f64;
+    let bias_reqs = if g.bias { blocks * (nt * s.mb) as f64 } else { 0.0 };
+    let c_reqs = (mt * nt) as f64;
+
+    LevelUse {
+        level: dram,
+        bytes: a_bytes + b_bytes + bias_bytes + c_bytes,
+        requests: a_reqs + b_reqs + bias_reqs + c_reqs,
+        rows: (g.m * kt) as f64 + b_reqs * dim + (mt * nt) as f64 * dim,
+    }
+}
+
+/// Execute-pipe usage of a RISC schedule.
+pub fn exec_use_risc(cfg: &GemminiConfig, g: &ConvGeom, s: &RiscSchedule) -> ExecUse {
+    let (mt, nt, kt) = (g.mt(cfg.dim), g.nt(cfg.dim), g.kt(cfg.dim));
+    let blocks = mt.div_ceil(s.mb) as f64;
+    let sp = cfg.scratchpad_level();
+    let full_preloads = blocks * (kt * nt) as f64;
+    ExecUse {
+        compute_rows: (g.m * kt * nt) as f64,
+        full_preloads,
+        reuse_preloads: full_preloads * (s.mb as f64 - 1.0),
+        preload_overhead: cfg.pe_fanout() as f64 + sp.access_latency,
+    }
+}
+
+/// Estimated cycles for a RISC schedule: per-level contributions combined
+/// with an overlap model (how much of the DMA timeline hides behind
+/// compute) plus contention penalties the levels expose.
+pub fn estimate_schedule(cfg: &GemminiConfig, g: &ConvGeom, s: &RiscSchedule) -> f64 {
+    let dram = dram_use_risc(cfg, g, s);
+    let exec = exec_use_risc(cfg, g, s);
+    let dma_cycles = dram.cycles();
+    let exec_cycles = exec.cycles();
+
+    // Fully double-buffered: max of the two engines. Single-buffered: the
+    // block's load and compute phases serialize.
+    let overlap = match (s.double_buffer_a, s.double_buffer_b) {
+        (true, true) => 0.95,
+        (true, false) | (false, true) => 0.6,
+        (false, false) => 0.25,
+    };
+    let serial = dma_cycles + exec_cycles;
+    let ideal = dma_cycles.max(exec_cycles);
+    let mut est = ideal + (serial - ideal) * (1.0 - overlap);
+    // Single scratchpad port: loads and computes contend for the level.
+    if cfg.scratchpad_level().in_flight < 2.0 {
+        est += 0.5 * dma_cycles.min(exec_cycles);
+    }
+    // KOuter keeps more accumulator tiles live; the accumulator drains to
+    // DRAM in a burst at block end that serializes against the last
+    // computes.
+    if matches!(s.order, LoopOrder::KOuter) {
+        let (mt, nt) = (g.mt(cfg.dim), g.nt(cfg.dim));
+        let blocks = mt.div_ceil(s.mb) as f64;
+        est += (mt * nt) as f64 / blocks * cfg.dram_level().access_latency * 0.25;
+    }
+    est
+}
+
+/// Estimated cycles for the CISC default schedule (single-buffered FSM,
+/// A reloaded per n-tile, B reloaded per output tile, one accumulator
+/// tile live).
+pub fn estimate_default(cfg: &GemminiConfig, g: &ConvGeom) -> f64 {
+    let dram = cfg.dram_level();
+    let dim = cfg.dim as f64;
+    let (mt, nt, kt) = (g.mt(cfg.dim), g.nt(cfg.dim), g.kt(cfg.dim));
+    let bias_reqs = if g.bias { (mt * nt) as f64 } else { 0.0 };
+    let link = LevelUse {
+        level: dram,
+        bytes: (g.m * g.k * nt) as f64 + (mt * nt * kt) as f64 * dim * dim + (g.m * g.n) as f64,
+        requests: (mt * kt * g.kernel * nt + mt * nt * kt + mt * nt) as f64 + bias_reqs,
+        rows: (g.m * kt * nt) as f64
+            + (mt * nt * kt) as f64 * dim
+            + (mt * nt) as f64 * dim,
+    };
+    let exec = ExecUse {
+        compute_rows: (g.m * kt * nt) as f64,
+        full_preloads: (mt * nt * kt) as f64,
+        reuse_preloads: 0.0,
+        preload_overhead: cfg.pe_fanout() as f64 + cfg.scratchpad_level().access_latency,
+    };
+    // Single-buffered FSM: very little overlap.
+    link.cycles() + exec.cycles() * 0.85
+}
+
+/// Total order over schedules used to break estimate ties: ranking must
+/// be byte-stable regardless of enumeration order or thread count.
+fn sched_key(s: &RiscSchedule) -> (usize, bool, bool, u8) {
+    let order = match s.order {
+        LoopOrder::NOuter => 0u8,
+        LoopOrder::KOuter => 1u8,
+    };
+    (s.mb, s.double_buffer_a, s.double_buffer_b, order)
+}
+
+/// Sort `(estimate, schedule)` pairs by estimate. Uses `f64::total_cmp`
+/// so a NaN estimate from a degenerate config cannot panic the tuning
+/// worker (NaN sorts last), and breaks exact-estimate ties with a
+/// deterministic schedule key.
+pub fn sort_ranked(ranked: &mut [(f64, RiscSchedule)]) {
+    ranked.sort_by(|a, b| {
+        a.0.total_cmp(&b.0).then_with(|| sched_key(&a.1).cmp(&sched_key(&b.1)))
+    });
+}
+
+/// Rank a schedule space for a layer: estimate every candidate through
+/// the hierarchy model and sort best-first (NaN-safe, tie-stable).
+pub fn rank(cfg: &GemminiConfig, g: &ConvGeom, space: &[RiscSchedule]) -> Vec<(f64, RiscSchedule)> {
+    let mut ranked: Vec<(f64, RiscSchedule)> =
+        space.iter().map(|s| (estimate_schedule(cfg, g, s), *s)).collect();
+    sort_ranked(&mut ranked);
+    ranked
+}
+
+/// The measurement shortlist: the top `k` ranked candidates.
+pub fn shortlist(
+    cfg: &GemminiConfig,
+    g: &ConvGeom,
+    space: &[RiscSchedule],
+    k: usize,
+) -> Vec<(f64, RiscSchedule)> {
+    let mut ranked = rank(cfg, g, space);
+    ranked.truncate(k);
+    ranked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemmini::isa::Activation;
+    use crate::scheduler::space::enumerate;
+
+    fn geom(m: usize, n: usize, k: usize, kernel: usize) -> ConvGeom {
+        ConvGeom {
+            m,
+            n,
+            k,
+            kernel,
+            scale: 1.0,
+            activation: Activation::None,
+            bias: false,
+            label: "t".into(),
+        }
+    }
+
+    #[test]
+    fn level_use_accounts_bandwidth_and_latency() {
+        let cfg = GemminiConfig::original_zcu102();
+        let g = geom(128, 32, 64, 1);
+        let s = RiscSchedule {
+            mb: 2,
+            double_buffer_a: false,
+            double_buffer_b: false,
+            order: LoopOrder::NOuter,
+        };
+        let u = dram_use_risc(&cfg, &g, &s);
+        assert_eq!(u.level.name, "dram");
+        assert!(u.bytes > 0.0 && u.requests > 0.0 && u.rows > 0.0);
+        // Halving the bus bandwidth strictly increases occupancy cycles.
+        let slow = GemminiConfig { ddr_gbs: cfg.ddr_gbs / 2.0, ..cfg.clone() };
+        let su = dram_use_risc(&slow, &g, &s);
+        assert!(su.occupancy_cycles() > u.occupancy_cycles());
+        // Halving the in-flight window strictly increases latency cycles.
+        let narrow = GemminiConfig { max_in_flight: cfg.max_in_flight / 2, ..cfg.clone() };
+        let nu = dram_use_risc(&narrow, &g, &s);
+        assert!(nu.latency_cycles() > u.latency_cycles());
+    }
+
+    #[test]
+    fn estimates_match_legacy_entry_points() {
+        // `cost_model::estimate_risc`/`estimate_cisc` delegate here; the
+        // delegation must be exact so every caller ranks identically.
+        let cfg = GemminiConfig::ours_zcu102();
+        let g = geom(256, 64, 144, 3);
+        for s in enumerate(&cfg, g.mt(cfg.dim), g.kt(cfg.dim), g.nt(cfg.dim)) {
+            assert_eq!(
+                estimate_schedule(&cfg, &g, &s),
+                crate::scheduler::cost_model::estimate_risc(&cfg, &g, &s)
+            );
+        }
+        assert_eq!(
+            estimate_default(&cfg, &g),
+            crate::scheduler::cost_model::estimate_cisc(&cfg, &g)
+        );
+    }
+
+    #[test]
+    fn sort_ranked_is_nan_safe_and_tie_stable() {
+        let s = |mb: usize, da: bool, db: bool, order: LoopOrder| RiscSchedule {
+            mb,
+            double_buffer_a: da,
+            double_buffer_b: db,
+            order,
+        };
+        // A NaN estimate (degenerate config: zero bandwidth) must not
+        // panic and must sort last.
+        let mut ranked = vec![
+            (f64::NAN, s(4, false, false, LoopOrder::NOuter)),
+            (100.0, s(2, true, false, LoopOrder::KOuter)),
+            (100.0, s(1, false, false, LoopOrder::NOuter)),
+            (50.0, s(8, true, true, LoopOrder::NOuter)),
+        ];
+        sort_ranked(&mut ranked);
+        assert_eq!(ranked[0].1.mb, 8);
+        // Exact tie broken by schedule key: mb=1 before mb=2.
+        assert_eq!(ranked[1].1.mb, 1);
+        assert_eq!(ranked[2].1.mb, 2);
+        assert!(ranked[3].0.is_nan());
+        // Reversed input order produces the identical ranking.
+        let mut rev: Vec<_> = ranked.clone();
+        rev.reverse();
+        sort_ranked(&mut rev);
+        let keys: Vec<_> = ranked.iter().map(|(_, s)| *s).collect();
+        let rkeys: Vec<_> = rev.iter().map(|(_, s)| *s).collect();
+        assert_eq!(keys, rkeys);
+    }
+
+    #[test]
+    fn shortlist_truncates_rank_order() {
+        let cfg = GemminiConfig::original_zcu102();
+        let g = geom(512, 32, 128, 1);
+        let space = enumerate(&cfg, g.mt(cfg.dim), g.kt(cfg.dim), g.nt(cfg.dim));
+        let full = rank(&cfg, &g, &space);
+        let top = shortlist(&cfg, &g, &space, 3);
+        assert_eq!(top.len(), 3.min(full.len()));
+        assert_eq!(&full[..top.len()], &top[..]);
+        // Best-first: estimates are non-decreasing.
+        for w in full.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+}

@@ -1,10 +1,13 @@
 //! Schedule search (the AutoTVM loop of Section V-A).
 //!
 //! Strategy: enumerate the valid space, rank every candidate with the
-//! analytic cost model, then *measure* the top `measure_k` candidates on
-//! the cycle-approximate simulator and keep the best measurement — the
-//! same explore-then-measure structure AutoTVM uses, with the simulator
-//! standing in for the FPGA (DESIGN.md §2).
+//! analytical pre-filter ([`super::prefilter`]), then *measure* the top
+//! `measure_k` candidates on the cycle-approximate simulator and keep
+//! the best measurement — the same explore-then-measure structure
+//! AutoTVM uses, with the simulator standing in for the FPGA
+//! (DESIGN.md §2). [`tune_layer_transfer`] is the transfer-tuning
+//! variant: the shortlist is seeded from a neighboring cached winner
+//! instead of the full top-k.
 
 use crate::gemmini::config::GemminiConfig;
 use crate::gemmini::memory::DramAllocator;
@@ -12,13 +15,14 @@ use crate::gemmini::sim::Simulator;
 use crate::util::json::Json;
 
 use super::codegen::{alloc_buffers, lower_cisc, lower_risc, ConvGeom};
-use super::cost_model::{estimate_cisc, estimate_risc};
+use super::prefilter;
 use super::space::{enumerate, RiscSchedule};
 
 /// Result of tuning one layer.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SearchResult {
-    /// Cycles of the CISC default schedule (measured).
+    /// Cycles of the CISC default schedule (measured, unless
+    /// `default_est` says otherwise).
     pub default_cycles: u64,
     /// Best tuned cycles (measured); equals `default_cycles` when the
     /// fallback wins (the paper: "when the schedule using RISC-type
@@ -31,6 +35,10 @@ pub struct SearchResult {
     pub measured: usize,
     /// Size of the enumerated space.
     pub space_size: usize,
+    /// `default_cycles` is a transfer-scaled *estimate* carried over from
+    /// the donor geometry, not a measurement ([`tune_layer_transfer`]'s
+    /// decisive-donor skip). Always `false` on the full-search path.
+    pub default_est: bool,
 }
 
 impl SearchResult {
@@ -56,6 +64,7 @@ impl SearchResult {
                     None => Json::Str("cisc-default".into()),
                 },
             ),
+            ("default_est", Json::Bool(self.default_est)),
         ])
     }
 }
@@ -124,12 +133,12 @@ pub fn tune_layer_with(
     let bufs = alloc_buffers(geom, &mut alloc);
     let default_cycles = ctx.measure(geom, &bufs, None);
     let dim = ctx.cfg.dim;
-    let space = enumerate(&ctx.cfg, geom.kt(dim), geom.nt(dim));
-    let mut ranked: Vec<(f64, RiscSchedule)> =
-        space.iter().map(|s| (estimate_risc(&ctx.cfg, geom, s), *s)).collect();
-    ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let space = enumerate(&ctx.cfg, geom.mt(dim), geom.kt(dim), geom.nt(dim));
+    // Rank the whole space through the hierarchy model (NaN-safe,
+    // tie-stable — see `prefilter::sort_ranked`).
+    let ranked = prefilter::rank(&ctx.cfg, geom, &space);
     // Skip measuring candidates the model says are far worse than CISC.
-    let cisc_est = estimate_cisc(&ctx.cfg, geom);
+    let cisc_est = prefilter::estimate_default(&ctx.cfg, geom);
     let mut best_cycles = default_cycles;
     let mut best_schedule = None;
     let mut measured = 0;
@@ -144,7 +153,143 @@ pub fn tune_layer_with(
             best_schedule = Some(*s);
         }
     }
-    SearchResult { default_cycles, best_cycles, best_schedule, measured, space_size: space.len() }
+    SearchResult {
+        default_cycles,
+        best_cycles,
+        best_schedule,
+        measured,
+        space_size: space.len(),
+        default_est: false,
+    }
+}
+
+/// A seed for transfer tuning: the cached result of the *donor* — the
+/// nearest previously-tuned neighbor of the target point (same
+/// [`super::cache::GeomKey`] modulo m-scaling on the same config, or the
+/// same geometry on a sibling config fingerprint).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferSeed {
+    /// The donor's winning RISC schedule (`None` when CISC won there).
+    pub schedule: Option<RiscSchedule>,
+    /// The donor's measured CISC default cycles.
+    pub donor_default: u64,
+    /// The donor's best measured cycles.
+    pub donor_best: u64,
+    /// The donor's GEMM m dimension (for m-scaling the default estimate).
+    pub donor_m: usize,
+    /// Donor differs from the target only in `m` on the same config —
+    /// its cycle counts scale with the m-tile count, so a decisively-won
+    /// donor lets us skip re-measuring the CISC default.
+    pub scalable: bool,
+}
+
+/// What [`tune_layer_transfer`] measured: the result plus the exact
+/// candidate shortlist, so the engine's audit mode can score whether the
+/// full-search winner was in it (the ranker hit-rate of `EngineStats`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransferOutcome {
+    pub result: SearchResult,
+    /// RISC candidates measured, in pre-filter rank order.
+    pub shortlist: Vec<RiscSchedule>,
+}
+
+/// How decisively the donor's RISC winner must have beaten its CISC
+/// default before we trust an m-scaled estimate instead of re-measuring
+/// the default at the target point.
+const TRANSFER_DECISIVE_MARGIN: f64 = 1.25;
+
+/// Transfer-tune one layer: instead of measuring the pre-filter's full
+/// top-k, measure a two-candidate shortlist — the pre-filter's top pick
+/// and the best-ranked schedule carrying the donor winner's
+/// double-buffering/loop-order combination (the target re-derives the
+/// block size from its own ranking) — and, when the donor won decisively
+/// on a same-config m-neighbor, skip re-measuring the CISC default and
+/// carry an m-scaled estimate (`SearchResult::default_est`).
+///
+/// Shortlist candidates are measured in pre-filter rank order with the
+/// same strict-improvement rule as [`tune_layer_with`], so whenever the
+/// shortlist contains the full search's winner the returned schedule
+/// (and its measured cycles) are byte-identical to the full path.
+pub fn tune_layer_transfer(
+    ctx: &mut MeasureCtx,
+    geom: &ConvGeom,
+    seed: &TransferSeed,
+) -> TransferOutcome {
+    let mut alloc = DramAllocator::new(MEASURE_DRAM_BYTES);
+    let bufs = alloc_buffers(geom, &mut alloc);
+    let dim = ctx.cfg.dim;
+    let (mt, kt, nt) = (geom.mt(dim), geom.kt(dim), geom.nt(dim));
+    let space = enumerate(&ctx.cfg, mt, kt, nt);
+    let ranked = prefilter::rank(&ctx.cfg, geom, &space);
+
+    // Candidate set: the pre-filter's top pick, plus the first ranked
+    // schedule sharing the donor winner's (double-buffer, loop-order)
+    // combination. The donor's literal block size is its *own* mt-cap
+    // and rarely exists in the target's mb palette; what transfers is
+    // the buffering/loop-order choice, and the target re-derives the
+    // block size from its own ranking (within a combination the ranking
+    // orders block sizes the same way the simulator does). Walking
+    // `ranked` keeps rank order and dedups when the top pick already
+    // carries the donor's combination.
+    let combo = |s: &RiscSchedule| (s.double_buffer_a, s.double_buffer_b, s.order);
+    let donor_combo = seed.schedule.map(|s| combo(&s));
+    let mut shortlist: Vec<RiscSchedule> = Vec::new();
+    let mut combo_taken = false;
+    for (i, (_, s)) in ranked.iter().enumerate() {
+        if i == 0 {
+            shortlist.push(*s);
+            combo_taken = donor_combo == Some(combo(s));
+        } else if !combo_taken && donor_combo == Some(combo(s)) {
+            shortlist.push(*s);
+            combo_taken = true;
+        }
+    }
+
+    let mut best_risc: Option<(u64, RiscSchedule)> = None;
+    let mut measured = 0;
+    for s in &shortlist {
+        let cycles = ctx.measure(geom, &bufs, Some(s));
+        measured += 1;
+        let better = match best_risc {
+            Some((b, _)) => cycles < b,
+            None => true,
+        };
+        if better {
+            best_risc = Some((cycles, *s));
+        }
+    }
+
+    // Decisive donor on a same-config m-neighbor: its default-vs-best
+    // ratio transfers, so estimate the target default by m-tile scaling
+    // instead of simulating the (expensive, ~3× a RISC stream) CISC
+    // expansion. The estimate is only trusted while it loses to the
+    // measured RISC winner — if it would *win*, fall back to measuring.
+    let donor_mt = seed.donor_m.div_ceil(dim).max(1);
+    let decisive = seed.scalable
+        && seed.schedule.is_some()
+        && seed.donor_default as f64 >= TRANSFER_DECISIVE_MARGIN * seed.donor_best as f64;
+    let est_default = (seed.donor_default as f64 * mt as f64 / donor_mt as f64).round() as u64;
+    let (default_cycles, default_est) = match (decisive, best_risc) {
+        (true, Some((best, _))) if best < est_default => (est_default, true),
+        _ => (ctx.measure(geom, &bufs, None), false),
+    };
+
+    // CISC fallback exactly as the full path: the default wins ties.
+    let (best_cycles, best_schedule) = match best_risc {
+        Some((cycles, s)) if cycles < default_cycles => (cycles, Some(s)),
+        _ => (default_cycles, None),
+    };
+    TransferOutcome {
+        result: SearchResult {
+            default_cycles,
+            best_cycles,
+            best_schedule,
+            measured,
+            space_size: space.len(),
+            default_est,
+        },
+        shortlist,
+    }
 }
 
 #[cfg(test)]
@@ -210,9 +355,73 @@ mod tests {
     fn search_result_serializes() {
         let cfg = small_cfg();
         let r = tune_layer(&cfg, &geom(32, 8, 16, 1), 3);
+        assert!(!r.default_est, "full search always measures the default");
         let j = r.to_json("conv_1");
         let s = j.dump();
         assert!(s.contains("conv_1"));
         assert!(Json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn transfer_matches_full_search_on_shortlist_hits() {
+        // Tune a donor, then transfer-tune an m-scaled sibling. Whenever
+        // the shortlist contains the full search's winner, the transfer
+        // result must be byte-identical to the full path's.
+        let cfg = small_cfg();
+        let donor_geom = geom(512, 16, 32, 3);
+        let donor = tune_layer(&cfg, &donor_geom, 8);
+        assert!(donor.best_schedule.is_some(), "{donor:?}");
+        let target = geom(1024, 16, 32, 3);
+        let seed = TransferSeed {
+            schedule: donor.best_schedule,
+            donor_default: donor.default_cycles,
+            donor_best: donor.best_cycles,
+            donor_m: donor_geom.m,
+            scalable: true,
+        };
+        let mut ctx = MeasureCtx::new(&cfg);
+        let out = tune_layer_transfer(&mut ctx, &target, &seed);
+        assert!(!out.shortlist.is_empty());
+        assert!(out.shortlist.len() <= 2, "{:?}", out.shortlist);
+        assert_eq!(out.result.measured, out.shortlist.len());
+        assert!(out.result.best_cycles <= out.result.default_cycles);
+        let full = tune_layer(&cfg, &target, 8);
+        if let Some(w) = full.best_schedule {
+            if out.shortlist.contains(&w) {
+                assert_eq!(out.result.best_schedule, full.best_schedule);
+                assert_eq!(out.result.best_cycles, full.best_cycles);
+            }
+        }
+        // A decisive donor skips the CISC default measurement and scales
+        // its estimate by the m-tile ratio instead.
+        if out.result.default_est {
+            assert!(donor.default_cycles as f64 >= 1.25 * donor.best_cycles as f64);
+            let scaled = (donor.default_cycles as f64 * target.mt(cfg.dim) as f64
+                / donor_geom.mt(cfg.dim) as f64)
+                .round() as u64;
+            assert_eq!(out.result.default_cycles, scaled);
+        }
+    }
+
+    #[test]
+    fn transfer_without_donor_schedule_measures_default() {
+        // A donor that fell back to CISC cannot seed a schedule; the
+        // transfer path must still measure the default and return a
+        // valid (possibly CISC-winning) result.
+        let cfg = small_cfg();
+        let target = geom(64, 16, 32, 1);
+        let seed = TransferSeed {
+            schedule: None,
+            donor_default: 10_000,
+            donor_best: 10_000,
+            donor_m: 64,
+            scalable: true,
+        };
+        let mut ctx = MeasureCtx::new(&cfg);
+        let out = tune_layer_transfer(&mut ctx, &target, &seed);
+        assert!(!out.result.default_est);
+        assert!(out.result.best_cycles <= out.result.default_cycles);
+        // Shortlist degrades to the pre-filter's top pick alone.
+        assert_eq!(out.shortlist.len(), 1);
     }
 }

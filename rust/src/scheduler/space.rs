@@ -55,11 +55,26 @@ impl RiscSchedule {
     }
 }
 
-/// Enumerate the valid schedule space for a layer (`kt` K-tiles,
-/// `nt` N-tiles). This is the space AutoTVM would search.
-pub fn enumerate(cfg: &GemminiConfig, kt: usize, nt: usize) -> Vec<RiscSchedule> {
+/// Enumerate the valid schedule space for a layer (`mt` m-tiles, `kt`
+/// K-tiles, `nt` N-tiles). This is the space AutoTVM would search.
+///
+/// Block sizes are capped at `mt`: an `mb > mt` candidate lowers to the
+/// exact same stream as `mb = mt` (the block loop clamps to the tiles
+/// that exist) but `sp_rows_needed` would charge scratchpad for the full
+/// phantom block — on small scratchpads that over-rejected the only
+/// whole-layer-in-one-block schedules a small-M layer has. Capping also
+/// admits non-power-of-two `mb = mt` blocks (e.g. 3 tiles) that the
+/// fixed palette never offered.
+pub fn enumerate(cfg: &GemminiConfig, mt: usize, kt: usize, nt: usize) -> Vec<RiscSchedule> {
+    let mt = mt.max(1);
     let mut out = Vec::new();
+    let mut prev_mb = 0usize;
     for &mb in &[1usize, 2, 4, 8, 16] {
+        let mb = mb.min(mt);
+        if mb == prev_mb {
+            continue; // capped duplicates collapse (palette is sorted)
+        }
+        prev_mb = mb;
         for &da in &[false, true] {
             for &db in &[false, true] {
                 for &order in &[LoopOrder::NOuter, LoopOrder::KOuter] {
@@ -81,8 +96,8 @@ mod tests {
     #[test]
     fn space_nonempty_for_typical_layers() {
         let cfg = GemminiConfig::ours_zcu102();
-        // 3×3×64→128 conv at 60×60: K=576→kt=18, N=128→nt=4.
-        let s = enumerate(&cfg, 18, 4);
+        // 3×3×64→128 conv at 60×60: M=3600→mt=113, K=576→kt=18, N=128→nt=4.
+        let s = enumerate(&cfg, 113, 18, 4);
         assert!(s.len() >= 8, "space size {}", s.len());
         // Always contains the trivial schedule.
         assert!(s.contains(&RiscSchedule {
@@ -97,12 +112,47 @@ mod tests {
     fn capacity_prunes_large_blocks() {
         let cfg = GemminiConfig::original_zcu102();
         // Huge K (first layers at 480²): kt = 64 → A blocks get big.
-        let all = enumerate(&cfg, 64, 2);
+        let all = enumerate(&cfg, 1000, 64, 2);
         let max_mb = all.iter().map(|s| s.mb).max().unwrap();
         assert!(max_mb <= 8, "mb {max_mb} should be capacity-limited");
         // Small K: bigger blocks allowed.
-        let small = enumerate(&cfg, 2, 2);
+        let small = enumerate(&cfg, 1000, 2, 2);
         assert!(small.iter().map(|s| s.mb).max().unwrap() >= max_mb);
+    }
+
+    #[test]
+    fn small_m_layers_keep_whole_layer_blocks() {
+        // dim=8, 8 KiB scratchpad → 1024 rows. A small-M layer (mt=3)
+        // with kt=20: a double-buffered whole-layer block needs
+        // 3·8·20·2 + 8 = 968 rows — it fits. The old fixed palette only
+        // offered mb=4 (1288 rows, rejected), so the space lost every
+        // double-buffered single-block candidate.
+        let cfg = GemminiConfig {
+            dim: 8,
+            scratchpad_kib: 8,
+            accumulator_kib: 16,
+            ..GemminiConfig::original_zcu102()
+        };
+        let (mt, kt, nt) = (3, 20, 2);
+        let phantom =
+            RiscSchedule { mb: 4, double_buffer_a: true, double_buffer_b: false, order: LoopOrder::NOuter };
+        assert!(!phantom.fits(&cfg, kt, nt), "uncapped mb=4 must overflow");
+        let space = enumerate(&cfg, mt, kt, nt);
+        // Every candidate respects the cap…
+        assert!(space.iter().all(|s| s.mb <= mt), "{space:?}");
+        // …and the capped mb=mt double-buffered block is back.
+        assert!(
+            space.contains(&RiscSchedule {
+                mb: mt,
+                double_buffer_a: true,
+                double_buffer_b: false,
+                order: LoopOrder::NOuter
+            }),
+            "{space:?}"
+        );
+        // No duplicate candidates from the capped palette.
+        let mut seen = std::collections::HashSet::new();
+        assert!(space.iter().all(|s| seen.insert(*s)), "{space:?}");
     }
 
     #[test]

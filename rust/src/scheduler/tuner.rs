@@ -16,7 +16,9 @@ use crate::util::json::Json;
 
 use super::cache::{CacheKey, GeomKey, TuningCache};
 use super::codegen::{layer_geometry, lower_move_op, ConvGeom};
-use super::search::{tune_layer_with, MeasureCtx, SearchResult};
+use super::search::{
+    tune_layer_transfer, tune_layer_with, MeasureCtx, SearchResult, TransferSeed,
+};
 
 /// Tuning outcome for one GEMM-shaped layer.
 #[derive(Debug, Clone)]
@@ -122,9 +124,31 @@ pub struct EngineStats {
     pub sim_instrs: u64,
     /// Worker threads the parallel search phase used.
     pub threads_used: usize,
+    /// Cold layers whose shortlist was transfer-seeded from a cached
+    /// donor instead of searched top-k
+    /// ([`TuningEngine::with_transfer`]).
+    pub transfer_seeded: usize,
+    /// Audited transfer layers whose shortlist contained the full
+    /// search's winner ([`TuningEngine::with_transfer_audit`]).
+    pub shortlist_hits: usize,
+    /// Audited transfer layers whose shortlist missed the full search's
+    /// winner (the transfer result may then differ from the full path).
+    pub shortlist_misses: usize,
+    /// Instructions the audit's reference full searches simulated —
+    /// kept out of `sim_instrs`, which accounts the serving path only.
+    pub audit_instrs: u64,
 }
 
 impl EngineStats {
+    /// The ranker hit-rate the ISSUE's transfer-tuning contract reports:
+    /// of the audited transfer-seeded layers, the fraction whose
+    /// shortlist contained the full search's winner. `None` until an
+    /// audited transfer run has scored at least one layer.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let scored = self.shortlist_hits + self.shortlist_misses;
+        (scored > 0).then(|| self.shortlist_hits as f64 / scored as f64)
+    }
+
     /// JSON object for the CLI's machine-readable report (`repro tune`
     /// prints it alongside the tuning result).
     pub fn to_json(&self) -> Json {
@@ -138,6 +162,17 @@ impl EngineStats {
             ("move_memo_hits", Json::Num(self.move_memo_hits as f64)),
             ("sim_instrs", Json::Num(self.sim_instrs as f64)),
             ("threads_used", Json::Num(self.threads_used as f64)),
+            ("transfer_seeded", Json::Num(self.transfer_seeded as f64)),
+            ("shortlist_hits", Json::Num(self.shortlist_hits as f64)),
+            ("shortlist_misses", Json::Num(self.shortlist_misses as f64)),
+            ("audit_instrs", Json::Num(self.audit_instrs as f64)),
+            (
+                "shortlist_hit_rate",
+                match self.hit_rate() {
+                    Some(r) => Json::Num(r),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -153,6 +188,10 @@ impl EngineStats {
         self.move_memo_hits += o.move_memo_hits;
         self.sim_instrs += o.sim_instrs;
         self.threads_used = self.threads_used.max(o.threads_used);
+        self.transfer_seeded += o.transfer_seeded;
+        self.shortlist_hits += o.shortlist_hits;
+        self.shortlist_misses += o.shortlist_misses;
+        self.audit_instrs += o.audit_instrs;
     }
 }
 
@@ -180,6 +219,12 @@ pub struct TuningEngine {
     config_fp: u64,
     memoize: bool,
     threads: usize,
+    /// Transfer tuning on cold layers (opt-in; see
+    /// [`with_transfer`](Self::with_transfer)).
+    transfer: bool,
+    /// Score transfer shortlists against reference full searches
+    /// ([`with_transfer_audit`](Self::with_transfer_audit)).
+    audit: bool,
     cache: TuningCache,
     /// One reused simulator for movement-op costing (satellite fix: the
     /// old path rebuilt a 64 MiB-DRAM simulator per movement op).
@@ -201,6 +246,8 @@ impl TuningEngine {
             config_fp,
             memoize: true,
             threads,
+            transfer: false,
+            audit: false,
             cache: TuningCache::in_memory(),
             move_sim: None,
             last: EngineStats::default(),
@@ -227,6 +274,33 @@ impl TuningEngine {
     /// scratch — the pre-engine behavior; used as the perf baseline).
     pub fn with_memoization(mut self, on: bool) -> Self {
         self.memoize = on;
+        self
+    }
+
+    /// Enable transfer tuning (default **off**, preserving the engine's
+    /// bit-exact-vs-reference contract): a cold layer whose cache lookup
+    /// misses but whose [`TuningCache::nearest_donor`] hits is tuned
+    /// through [`tune_layer_transfer`] — a two-candidate shortlist:
+    /// the pre-filter's top pick plus the best-ranked schedule carrying
+    /// the donor winner's double-buffer/loop-order combination —
+    /// instead of the full top-`measure_k` search. Donors are resolved
+    /// serially at triage time against the pre-call cache state, so
+    /// results stay byte-identical at any thread count. Requires
+    /// memoization (silently inert without it).
+    pub fn with_transfer(mut self, on: bool) -> Self {
+        self.transfer = on;
+        self
+    }
+
+    /// Audit transfer tuning (default off): every transfer-seeded layer
+    /// *also* runs the reference full search on a separate audit
+    /// simulator, scoring whether the shortlist contained the full
+    /// search's winner (`EngineStats::shortlist_hits`/`misses`, surfaced
+    /// as [`EngineStats::hit_rate`]). Served results still come from the
+    /// transfer path; the audit only measures. Audit simulation is
+    /// accounted in `audit_instrs`, not `sim_instrs`.
+    pub fn with_transfer_audit(mut self, on: bool) -> Self {
+        self.audit = on;
         self
     }
 
@@ -303,9 +377,13 @@ impl TuningEngine {
         // Phase 1 (memoized path): triage conv layers against the cache,
         // then tune the unique misses in parallel. First-seen order keeps
         // the job list — and therefore everything downstream — stable.
+        // Transfer donors are resolved here, serially, against the
+        // pre-call cache state: in-batch insertions only land after
+        // `tune_jobs`, so donor choice (and with it every result) is
+        // independent of worker scheduling and thread count.
         if self.memoize {
             let mut queued: HashSet<CacheKey> = HashSet::new();
-            let mut jobs: Vec<(CacheKey, ConvGeom)> = Vec::new();
+            let mut jobs: Vec<TuneJob> = Vec::new();
             for (_, w) in &work {
                 if let Work::Conv(geom) = w {
                     let key = self.layer_key(geom, measure_k);
@@ -314,15 +392,29 @@ impl TuningEngine {
                     } else if queued.contains(&key) {
                         stats.memo_hits += 1;
                     } else {
+                        let seed = if self.transfer {
+                            self.cache.nearest_donor(&key).map(|(dk, dr)| TransferSeed {
+                                schedule: dr.best_schedule,
+                                donor_default: dr.default_cycles,
+                                donor_best: dr.best_cycles,
+                                donor_m: dk.geom.m,
+                                scalable: dk.config_fp == key.config_fp,
+                            })
+                        } else {
+                            None
+                        };
+                        if seed.is_some() {
+                            stats.transfer_seeded += 1;
+                        }
                         queued.insert(key);
-                        jobs.push((key, geom.clone()));
+                        jobs.push(TuneJob { key, geom: geom.clone(), seed });
                     }
                 }
             }
             stats.tuned = jobs.len();
             let results = self.tune_jobs(&jobs, measure_k, &mut stats);
-            for ((key, _), result) in jobs.iter().zip(results) {
-                self.cache.insert_layer(*key, result);
+            for (job, result) in jobs.iter().zip(results) {
+                self.cache.insert_layer(job.key, result);
             }
         }
 
@@ -389,13 +481,14 @@ impl TuningEngine {
         res.cycles
     }
 
-    /// Tune `jobs` concurrently. Each worker owns a [`MeasureCtx`] and
-    /// pulls job indices from a shared counter; results land in the slot
-    /// of their job index, so the output order (and every result) is
-    /// independent of scheduling and thread count.
+    /// Tune `jobs` concurrently. Each worker owns a [`MeasureCtx`] (plus
+    /// a lazily-created audit context when auditing) and pulls job
+    /// indices from a shared counter; results land in the slot of their
+    /// job index, so the output order (and every result) is independent
+    /// of scheduling and thread count.
     fn tune_jobs(
         &self,
-        jobs: &[(CacheKey, ConvGeom)],
+        jobs: &[TuneJob],
         measure_k: usize,
         stats: &mut EngineStats,
     ) -> Vec<SearchResult> {
@@ -404,44 +497,112 @@ impl TuningEngine {
         }
         let threads = self.threads.min(jobs.len()).max(1);
         stats.threads_used = threads;
+        let audit = self.audit;
+        let cfg = &self.cfg;
         if threads == 1 {
-            let mut ctx = MeasureCtx::new(&self.cfg);
-            let out: Vec<SearchResult> =
-                jobs.iter().map(|(_, geom)| tune_layer_with(&mut ctx, geom, measure_k)).collect();
-            stats.sim_instrs += ctx.sim_instrs;
+            let mut worker = TuneWorker::new(cfg, audit, measure_k);
+            let out: Vec<SearchResult> = jobs.iter().map(|j| worker.run(j)).collect();
+            worker.account(stats);
             return out;
         }
         let next = AtomicUsize::new(0);
-        let cfg = &self.cfg;
         let mut slots: Vec<Option<SearchResult>> = vec![None; jobs.len()];
-        let mut total_instrs = 0u64;
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..threads)
                 .map(|_| {
                     scope.spawn(|| {
-                        let mut ctx = MeasureCtx::new(cfg);
+                        let mut worker = TuneWorker::new(cfg, audit, measure_k);
                         let mut mine = Vec::new();
                         loop {
                             let i = next.fetch_add(1, Ordering::Relaxed);
                             if i >= jobs.len() {
                                 break;
                             }
-                            mine.push((i, tune_layer_with(&mut ctx, &jobs[i].1, measure_k)));
+                            mine.push((i, worker.run(&jobs[i])));
                         }
-                        (mine, ctx.sim_instrs)
+                        (mine, worker)
                     })
                 })
                 .collect();
             for h in handles {
-                let (mine, instrs) = h.join().expect("tuning worker panicked");
-                total_instrs += instrs;
+                let (mine, worker) = h.join().expect("tuning worker panicked");
+                // Per-worker counters are order-independent sums, so the
+                // fold is deterministic regardless of scheduling.
+                worker.account(stats);
                 for (i, r) in mine {
                     slots[i] = Some(r);
                 }
             }
         });
-        stats.sim_instrs += total_instrs;
         slots.into_iter().map(|s| s.expect("every job index was claimed")).collect()
+    }
+}
+
+/// One unit of phase-1 tuning work: a cache-missed unique geometry,
+/// optionally carrying the transfer seed its donor lookup produced.
+struct TuneJob {
+    key: CacheKey,
+    geom: ConvGeom,
+    seed: Option<TransferSeed>,
+}
+
+/// Per-worker measurement state: the serving [`MeasureCtx`], plus a
+/// separate audit context (so audit simulation never perturbs the
+/// serving path's reused-simulator determinism) and the audit tallies.
+struct TuneWorker {
+    cfg: GemminiConfig,
+    ctx: MeasureCtx,
+    audit_ctx: Option<MeasureCtx>,
+    audit: bool,
+    measure_k: usize,
+    shortlist_hits: usize,
+    shortlist_misses: usize,
+}
+
+impl TuneWorker {
+    fn new(cfg: &GemminiConfig, audit: bool, measure_k: usize) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            ctx: MeasureCtx::new(cfg),
+            audit_ctx: None,
+            audit,
+            measure_k,
+            shortlist_hits: 0,
+            shortlist_misses: 0,
+        }
+    }
+
+    fn run(&mut self, job: &TuneJob) -> SearchResult {
+        let Some(seed) = &job.seed else {
+            return tune_layer_with(&mut self.ctx, &job.geom, self.measure_k);
+        };
+        let out = tune_layer_transfer(&mut self.ctx, &job.geom, seed);
+        if self.audit {
+            let actx =
+                self.audit_ctx.get_or_insert_with(|| MeasureCtx::new(&self.cfg));
+            let full = tune_layer_with(actx, &job.geom, self.measure_k);
+            // Hit = the transfer shortlist covered the full search's
+            // winner: its winning RISC schedule was measured, or — when
+            // CISC won the full search — the default was measured, not
+            // estimated.
+            let hit = match full.best_schedule {
+                Some(w) => out.shortlist.contains(&w),
+                None => !out.result.default_est,
+            };
+            if hit {
+                self.shortlist_hits += 1;
+            } else {
+                self.shortlist_misses += 1;
+            }
+        }
+        out.result
+    }
+
+    fn account(&self, stats: &mut EngineStats) {
+        stats.sim_instrs += self.ctx.sim_instrs;
+        stats.audit_instrs += self.audit_ctx.as_ref().map_or(0, |c| c.sim_instrs);
+        stats.shortlist_hits += self.shortlist_hits;
+        stats.shortlist_misses += self.shortlist_misses;
     }
 }
 
@@ -607,6 +768,45 @@ mod tests {
         assert_eq!(tot.conv_layers, s.conv_layers + s2.conv_layers);
         assert_eq!(tot.cache_hits, s.cache_hits + s2.cache_hits);
         assert_eq!(tot.sim_instrs, s.sim_instrs, "warm call added no instrs");
+    }
+
+    #[test]
+    fn transfer_engine_seeds_batch_scaled_geometries() {
+        let cfg = GemminiConfig::ours_zcu102();
+        let mut g = yolov7_tiny(160, ModelVariant::Pruned88, 8);
+        crate::passes::replace_activations(&mut g);
+        let mut e = TuningEngine::new(cfg)
+            .with_transfer(true)
+            .with_transfer_audit(true);
+        // Cold cache: nothing can donate, transfer is a no-op.
+        let t1 = e.tune_graph(&g, 4);
+        let s1 = e.last_stats();
+        assert_eq!(s1.transfer_seeded, 0, "{s1:?}");
+        assert_eq!(s1.audit_instrs, 0);
+        assert!(s1.hit_rate().is_none());
+        // Batch 2 scales every GEMM's m: each unique geometry now has an
+        // m-neighbor donor from the batch-1 call.
+        let t2 = e.tune_graph_batch(&g, 4, 2);
+        let s2 = e.last_stats();
+        assert!(s2.tuned > 0);
+        assert_eq!(s2.transfer_seeded, s2.tuned, "{s2:?}");
+        // Audit scored every seeded layer on a separate context.
+        assert_eq!(s2.shortlist_hits + s2.shortlist_misses, s2.transfer_seeded);
+        assert!(s2.audit_instrs > 0);
+        assert!(e.last_stats().hit_rate().is_some());
+        // The transfer path simulates much less than the audit's
+        // reference full searches over the same layers (moves included).
+        assert!(
+            s2.sim_instrs < s2.audit_instrs,
+            "transfer {} !< full-search {}",
+            s2.sim_instrs,
+            s2.audit_instrs
+        );
+        // Tuner invariants survive the seeded path.
+        assert_eq!(t2.layers.len(), t1.layers.len());
+        for l in &t2.layers {
+            assert!(l.result.best_cycles <= l.result.default_cycles, "{}", l.label);
+        }
     }
 
     #[test]

@@ -146,7 +146,10 @@ impl VariantLadder {
     /// operating point), and `Pruned88` at a 2/3-resolution input
     /// snapped to a multiple of 32 (Fig. 3 machinery). Replicas tuning
     /// through the same engine (or the same `--tuning-cache` file) are
-    /// warm hits, so a fleet of N ladders costs one search.
+    /// warm hits, so a fleet of N ladders costs one search. Each variant's
+    /// search rides the engine's analytical pre-filter ranking, and — when
+    /// the engine was armed with `with_transfer` — seeds its shortlist
+    /// from the neighboring variants already in the cache.
     pub fn paper_ladder(engine: &mut TuningEngine, size: usize, measure_k: usize) -> Self {
         use crate::workload::{yolov7_tiny, ModelVariant};
         let cfg = engine.config().clone();

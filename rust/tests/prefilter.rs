@@ -1,0 +1,245 @@
+//! Pre-filter + transfer-tuning contracts (ROADMAP item 4): the ranker's
+//! shortlist must contain the full search's winner on ≥ 90 % of the
+//! YOLOv7-tiny layer set on the primary config (the single-port original
+//! board gets a documented lower floor — see
+//! `shortlist_hit_rate_over_yolov7_geometries`), transfer-seeded cold
+//! tuning must be byte-identical to the full search wherever it does,
+//! results must be
+//! deterministic across thread counts, and the `make prefiltersmoke`
+//! gate: transfer-tuning a new `(config, batch)` point simulates ≤ 40 %
+//! of the cold full search's instructions.
+
+use std::collections::HashSet;
+
+use gemmini_edge::gemmini::config::GemminiConfig;
+use gemmini_edge::ir::{ActivationKind, Graph, GraphBuilder, Op, PaddingMode};
+use gemmini_edge::passes::replace_activations;
+use gemmini_edge::scheduler::{
+    layer_geometry, tune_layer_transfer, tune_layer_with, ConvGeom, EngineStats, GeomKey,
+    MeasureCtx, TransferSeed, TuningEngine, TuningResult,
+};
+use gemmini_edge::util::json::Json;
+use gemmini_edge::util::Rng;
+use gemmini_edge::workload::{yolov7_tiny, ModelVariant};
+
+/// The distinct conv/dense GEMM geometries of a graph, first-seen order.
+fn unique_geometries(g: &Graph) -> Vec<ConvGeom> {
+    let mut seen: HashSet<GeomKey> = HashSet::new();
+    let mut out = Vec::new();
+    for n in &g.nodes {
+        if matches!(n.op, Op::Conv2d { .. } | Op::Dense { .. }) {
+            let geom = layer_geometry(g, n.id).expect("geometry");
+            if seen.insert(geom.shape_key()) {
+                out.push(geom);
+            }
+        }
+    }
+    out
+}
+
+/// Per-geometry transfer-vs-full scoring at one `(config, size)` point:
+/// tune each unique geometry cold (the donor), transfer-tune its
+/// batch-2 sibling from that donor, run the reference full search on the
+/// sibling, and score a hit when the transfer shortlist covered the full
+/// search's winner — the same rule `TuningEngine::with_transfer_audit`
+/// applies. On every hit the contract is checked inline: the winning
+/// schedule and its measured cycles are byte-identical to the full
+/// path's. Returns `(hits, misses)` with miss labels for the report.
+fn score_point(cfg: &GemminiConfig, size: usize, measure_k: usize) -> (usize, Vec<String>) {
+    let mut g = yolov7_tiny(size, ModelVariant::Pruned88, 8);
+    replace_activations(&mut g);
+    let geoms = unique_geometries(&g);
+    assert!(geoms.len() >= 30, "YOLOv7-tiny layer set shrank: {} uniques", geoms.len());
+    let mut ctx = MeasureCtx::new(cfg);
+    let mut hits = 0usize;
+    let mut misses = Vec::new();
+    for geom in &geoms {
+        let donor = tune_layer_with(&mut ctx, geom, measure_k);
+        let target = ConvGeom { m: geom.m * 2, ..geom.clone() };
+        let seed = TransferSeed {
+            schedule: donor.best_schedule,
+            donor_default: donor.default_cycles,
+            donor_best: donor.best_cycles,
+            donor_m: geom.m,
+            scalable: true,
+        };
+        let out = tune_layer_transfer(&mut ctx, &target, &seed);
+        let full = tune_layer_with(&mut ctx, &target, measure_k);
+        match full.best_schedule {
+            Some(w) if out.shortlist.contains(&w) => {
+                // The hit contract: byte-identical winning schedule.
+                assert_eq!(out.result.best_schedule, full.best_schedule, "{}", geom.label);
+                assert_eq!(out.result.best_cycles, full.best_cycles, "{}", geom.label);
+                hits += 1;
+            }
+            None if !out.result.default_est => {
+                // CISC won the full search and the transfer path measured
+                // the same default; it may only improve on it.
+                assert!(out.result.best_cycles <= full.best_cycles, "{}", geom.label);
+                hits += 1;
+            }
+            _ => misses.push(format!(
+                "{} ({}x{}x{} k{})",
+                geom.label, target.m, target.n, target.k, target.kernel
+            )),
+        }
+    }
+    (hits, misses)
+}
+
+/// The headline ranker metric of the transfer-tuning contract: over the
+/// unique YOLOv7-tiny geometries, the transfer shortlist contains the
+/// full search's winner on ≥ 90 % of layers on the primary (`ours`)
+/// config. The single-port original board gets a 60 % floor: with one
+/// scratchpad port, which `(double-buffer, loop-order)` combination wins
+/// flips with the m-tile count (bank-interference lattice effects the
+/// analytical model deliberately does not chase), so the full search's
+/// rank-3/4 horizon finds winners no donor combination predicts. Those
+/// misses are exactly what the audit hit-rate exists to report — they
+/// are listed in the assertion message.
+#[test]
+fn shortlist_hit_rate_over_yolov7_geometries() {
+    for (cfg, floor) in [
+        (GemminiConfig::original_zcu102(), 60),
+        (GemminiConfig::ours_zcu102(), 90),
+    ] {
+        let (hits, misses) = score_point(&cfg, 160, 4);
+        let total = hits + misses.len();
+        assert!(
+            hits * 100 >= total * floor,
+            "hit-rate {hits}/{total} < {floor}% on fp {:#x}; misses: {misses:?}",
+            cfg.fingerprint()
+        );
+    }
+}
+
+/// The byte-identity contract at a second operating point (different
+/// resolution): wherever the shortlist contains the full-search winner,
+/// the transfer result is byte-identical (asserted inside
+/// `score_point`), and hits must actually occur.
+#[test]
+fn transfer_byte_identical_to_full_search_on_hit_set() {
+    let (hits, misses) = score_point(&GemminiConfig::ours_zcu102(), 128, 4);
+    assert!(hits > 0, "no hits to check the identity contract on; misses: {misses:?}");
+}
+
+/// Pre-filter ranking and transfer seeding are deterministic: over 5
+/// random small CNNs, a 1-thread and an 8-thread engine (transfer +
+/// audit armed, donor-warmed by a batch-1 call) produce byte-identical
+/// tuning JSON and identical accounting up to `threads_used`.
+#[test]
+fn prefilter_determinism_across_threads_and_seeds() {
+    fn small_graph(seed: u64) -> Graph {
+        let mut r = Rng::new(seed);
+        let mut b = GraphBuilder::new(format!("rand-{seed}"));
+        let mut x = b.input("x", vec![1, 32, 32, 8]);
+        for _ in 0..r.range(3, 7) {
+            let oc = 8 * r.range(1, 4);
+            let k = *r.choose(&[1usize, 3]);
+            x = b.conv2d(x, oc, k, 1, PaddingMode::Same, ActivationKind::Relu, None, None);
+            if b.shape(x)[1] >= 4 && r.chance(0.3) {
+                x = b.maxpool(x, 2, 2);
+            }
+        }
+        b.finish(&[x])
+    }
+    for seed in 0..5u64 {
+        let g = small_graph(seed + 500);
+        let cfg = GemminiConfig::ours_zcu102();
+        let run = |threads: usize| -> (String, String, EngineStats, EngineStats) {
+            let mut e = TuningEngine::new(cfg.clone())
+                .with_threads(threads)
+                .with_transfer(true)
+                .with_transfer_audit(true);
+            let t1 = e.tune_graph(&g, 3);
+            let s1 = e.last_stats();
+            let t2 = e.tune_graph_batch(&g, 3, 2);
+            (t1.to_json().dump(), t2.to_json().dump(), s1, e.last_stats())
+        };
+        let (a1, a2, sa1, sa2) = run(1);
+        let (b1, b2, sb1, sb2) = run(8);
+        assert_eq!(a1, b1, "seed {seed}: batch-1 JSON diverged");
+        assert_eq!(a2, b2, "seed {seed}: transfer-seeded batch-2 JSON diverged");
+        assert_eq!(
+            EngineStats { threads_used: 0, ..sa1 },
+            EngineStats { threads_used: 0, ..sb1 },
+            "seed {seed}"
+        );
+        assert_eq!(
+            EngineStats { threads_used: 0, ..sa2 },
+            EngineStats { threads_used: 0, ..sb2 },
+            "seed {seed}"
+        );
+        // The batch-2 call really exercised the transfer path.
+        assert_eq!(sa2.transfer_seeded, sa2.tuned, "seed {seed}: {sa2:?}");
+        assert_eq!(
+            sa2.shortlist_hits + sa2.shortlist_misses,
+            sa2.transfer_seeded,
+            "seed {seed}: {sa2:?}"
+        );
+    }
+}
+
+/// Winning schedules only — `default_cycles` may legitimately be a
+/// transfer-scaled estimate (`default_est`), so the smoke gate compares
+/// what actually ships: the per-layer winner and its measured cycles.
+fn winners_json(t: &TuningResult) -> String {
+    Json::Arr(
+        t.layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("layer", Json::Str(l.label.clone())),
+                    ("best_cycles", Json::Num(l.result.best_cycles as f64)),
+                    (
+                        "schedule",
+                        match &l.result.best_schedule {
+                            Some(s) => Json::Str(format!("{s:?}")),
+                            None => Json::Str("cisc-default".into()),
+                        },
+                    ),
+                ])
+            })
+            .collect(),
+    )
+    .dump()
+}
+
+/// The `make prefiltersmoke` gate (deterministic — counts simulated
+/// instructions, no wall clock): tuning a new `(config, batch)` point
+/// through the transfer-seeded pre-filter shortlist must simulate ≤ 40 %
+/// of the instructions of today's cold full search on that point, and
+/// ship the identical winning-schedule JSON.
+#[test]
+fn prefilter_smoke_instruction_budget() {
+    let cfg = GemminiConfig::ours_zcu102();
+    let mut g = yolov7_tiny(160, ModelVariant::Pruned88, 8);
+    replace_activations(&mut g);
+
+    // Warm the donor point (batch 1), then transfer-tune the new point.
+    let mut transfer = TuningEngine::new(cfg.clone()).with_transfer(true);
+    transfer.tune_graph(&g, 4);
+    let t_transfer = transfer.tune_graph_batch(&g, 4, 2);
+    let s = transfer.last_stats();
+    let transfer_instrs = s.sim_instrs;
+    assert!(s.tuned > 0 && s.transfer_seeded == s.tuned, "{s:?}");
+
+    // The reference: a cold full search of the same point.
+    let mut cold = TuningEngine::new(cfg);
+    let t_cold = cold.tune_graph_batch(&g, 4, 2);
+    let cold_instrs = cold.last_stats().sim_instrs;
+    assert!(cold_instrs > 0);
+
+    assert!(
+        transfer_instrs * 100 <= cold_instrs * 40,
+        "transfer {transfer_instrs} > 40% of cold {cold_instrs}"
+    );
+    assert_eq!(
+        winners_json(&t_transfer),
+        winners_json(&t_cold),
+        "transfer-seeded winners diverged from the full search's"
+    );
+    // The serving numbers agree wholesale too.
+    assert_eq!(t_transfer.tuned_conv_cycles(), t_cold.tuned_conv_cycles());
+    assert_eq!(t_transfer.move_cycles, t_cold.move_cycles);
+}
